@@ -1,0 +1,24 @@
+//! Regenerates paper Figure 6: objective gap vs wall-clock (simulated
+//! cluster) time for {FD-SVRG, DSVRG, SynSVRG, AsySVRG} on the four
+//! dataset profiles, λ = 1e-4. Series CSVs land in `results/`.
+//!
+//! ```sh
+//! cargo bench --bench bench_fig6            # all four datasets
+//! cargo bench --bench bench_fig6 -- news20  # one dataset
+//! ```
+
+use fdsvrg::bench::Bench;
+use fdsvrg::exp;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_args("fig6");
+    let ctx = exp::Ctx::bench(Path::new("results"));
+    std::fs::create_dir_all("results").ok();
+    for (profile, q) in exp::paper_grid() {
+        b.once(&format!("fig6/{profile}"), || {
+            exp::fig6_fig7(&ctx, &[(profile, q)]).expect("fig6 run");
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,57 @@
+//! Regenerates paper Figure 7: objective gap vs communicated scalars for
+//! the same grid as Figure 6. The trace CSVs carry both axes, so this
+//! bench re-runs the grid and reports the communication crossings (the
+//! quantity Figure 7 plots on x).
+//!
+//! ```sh
+//! cargo bench --bench bench_fig7 [-- <dataset-filter>]
+//! ```
+
+use fdsvrg::algs::Algorithm;
+use fdsvrg::bench::Bench;
+use fdsvrg::exp;
+use fdsvrg::metrics::TextTable;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_args("fig7");
+    let ctx = exp::Ctx::bench(Path::new("results"));
+    std::fs::create_dir_all("results").ok();
+    for (profile, q) in exp::paper_grid() {
+        b.once(&format!("fig7/{profile}"), || {
+            let problem = ctx.problem(profile, ctx.cfg.lambda).expect("profile");
+            let (_, f_opt) = ctx.optimum(&problem);
+            let mut table =
+                TextTable::new(vec!["algorithm", "scalars→1e-3", "scalars→1e-4", "total scalars"]);
+            for algo in Algorithm::ALL_DISTRIBUTED {
+                let mut params = ctx.cfg.run_params();
+                params.q = q;
+                let ps = matches!(algo, Algorithm::SynSvrg | Algorithm::AsySvrg);
+                params.outer = if ps {
+                    ((exp::default_epochs(algo) as f64) * ctx.ps_scale).round() as usize
+                } else {
+                    exp::default_epochs(algo)
+                };
+                params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
+                let res = algo.run(&problem, &params);
+                res.trace
+                    .write_csv(
+                        Path::new("results").join(format!("fig7_{profile}_{}.csv", algo.name())),
+                        f_opt,
+                    )
+                    .ok();
+                let fmt = |c: Option<u64>, total: u64| {
+                    c.map(|c| format!("{c}")).unwrap_or_else(|| format!(">{total}"))
+                };
+                table.row(vec![
+                    algo.name().to_string(),
+                    fmt(res.trace.comm_to_gap(f_opt, 1e-3), res.total_scalars),
+                    fmt(res.trace.comm_to_gap(f_opt, 1e-4), res.total_scalars),
+                    format!("{}", res.total_scalars),
+                ]);
+            }
+            println!("== Fig 7 :: {profile} (q={q}) — gap vs scalars ==\n{}", table.render());
+        });
+    }
+    b.finish();
+}

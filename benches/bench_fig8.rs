@@ -1,0 +1,21 @@
+//! Regenerates paper Figure 8: webspam with λ ∈ {1e-3, 1e-5} — the
+//! regularization-sensitivity check (FD-SVRG must stay the fastest under
+//! both better and worse conditioning).
+//!
+//! ```sh
+//! cargo bench --bench bench_fig8
+//! ```
+
+use fdsvrg::bench::Bench;
+use fdsvrg::exp;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_args("fig8");
+    let ctx = exp::Ctx::bench(Path::new("results"));
+    std::fs::create_dir_all("results").ok();
+    b.once("fig8/webspam lambda sweep", || {
+        exp::fig8(&ctx).expect("fig8 run");
+    });
+    b.finish();
+}

@@ -1,0 +1,29 @@
+//! Regenerates paper Figure 9: FD-SVRG speedup vs worker count
+//! q ∈ {1, 4, 8, 16} on webspam-sim, measured at the 1e-4 gap target.
+//! Expected shape: near-ideal (the paper reports close-to-linear scaling).
+//!
+//! ```sh
+//! cargo bench --bench bench_fig9
+//! ```
+
+use fdsvrg::bench::Bench;
+use fdsvrg::exp;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_args("fig9");
+    let ctx = exp::Ctx::bench(Path::new("results"));
+    std::fs::create_dir_all("results").ok();
+    b.once("fig9/speedup q in {1,4,8,16}", || {
+        let speedups = exp::fig9(&ctx).expect("fig9 run");
+        // sanity: speedup must grow with q
+        for w in speedups.windows(2) {
+            assert!(
+                w[1].1 > w[0].1 * 0.9,
+                "speedup should not collapse: {:?}",
+                speedups
+            );
+        }
+    });
+    b.finish();
+}

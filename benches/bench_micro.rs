@@ -1,0 +1,79 @@
+//! Micro-benchmarks of the L3 hot path primitives: CSC column kernels,
+//! dense axpy/axpby, the tree allreduce, and one FD-SVRG inner epoch.
+//! This is the §Perf profiling anchor — run `cargo bench micro` before and
+//! after every hot-path change.
+
+use fdsvrg::algs::{Algorithm, Problem, RunParams};
+use fdsvrg::bench::Bench;
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::net::topology::tree_allreduce;
+use fdsvrg::net::{build, SimParams};
+use fdsvrg::util::Pcg64;
+
+fn main() {
+    let mut b = Bench::from_args("micro").with_iters(3, 10);
+
+    // --- sparse kernels on a webspam-sim-like slab ---
+    let ds = generate(&GenSpec::new("micro", 50_000, 2_000, 200).with_seed(2));
+    let x = &ds.x;
+    let mut rng = Pcg64::seed_from_u64(1);
+    let w: Vec<f64> = (0..ds.d()).map(|_| rng.normal()).collect();
+    let mut out_n = vec![0.0f64; ds.n()];
+    let mut out_d = vec![0.0f64; ds.d()];
+
+    b.bench("csc/transpose_matvec (Dᵀw, 2k inst × 200nnz)", || {
+        x.transpose_matvec(&w, &mut out_n);
+        std::hint::black_box(&out_n);
+    });
+    b.bench("csc/col_dot x2000", || {
+        let mut acc = 0.0;
+        for i in 0..ds.n() {
+            acc += x.col_dot(i, &w);
+        }
+        std::hint::black_box(acc);
+    });
+    b.bench("csc/col_axpy x2000 (gradient scatter)", || {
+        out_d.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..ds.n() {
+            x.col_axpy(i, 1e-3, &mut out_d);
+        }
+        std::hint::black_box(&out_d);
+    });
+
+    // --- dense inner-loop update: the w̃ ← (1-ηλ)w̃ − ηz step ---
+    let z: Vec<f64> = (0..ds.d()).map(|_| rng.normal()).collect();
+    let mut wd = w.clone();
+    b.bench("linalg/axpby 50k (dense SVRG step)", || {
+        fdsvrg::linalg::axpby(-1e-3, &z, 1.0 - 1e-7, &mut wd);
+        std::hint::black_box(&wd);
+    });
+
+    // --- tree allreduce of 1 scalar and of an N-vector, q=16 ---
+    for (tag, len) in [("scalar", 1usize), ("N-vector(2k)", 2_000)] {
+        b.bench(&format!("net/tree_allreduce q=16 {tag}"), || {
+            let (mut eps, _) = build(17, SimParams::free());
+            let group: Vec<usize> = (0..17).collect();
+            std::thread::scope(|s| {
+                for ep in eps.iter_mut() {
+                    let group = group.clone();
+                    s.spawn(move || {
+                        let mut data = vec![1.0f64; len];
+                        tree_allreduce(ep, &group, &mut data);
+                        std::hint::black_box(&data);
+                    });
+                }
+            });
+        });
+    }
+
+    // --- one full FD-SVRG epoch, wall-clock (q=8, tiny) ---
+    let ds = generate(&GenSpec::new("epoch", 20_000, 1_000, 100).with_seed(3));
+    let problem = Problem::logistic_l2(ds, 1e-4);
+    b.bench("fdsvrg/one epoch (d=20k, N=1k, q=8)", || {
+        let params = RunParams { q: 8, outer: 1, sim: SimParams::free(), ..Default::default() };
+        let res = Algorithm::FdSvrg.run(&problem, &params);
+        std::hint::black_box(res.total_scalars);
+    });
+
+    b.finish();
+}

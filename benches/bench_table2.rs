@@ -1,0 +1,28 @@
+//! Regenerates paper Table 2: time-to-gap ≤ 1e-4 for DSVRG vs FD-SVRG on
+//! all four dataset profiles, with the speedup row. Expected shape:
+//! FD-SVRG wins everywhere, with the largest factors on the biggest /
+//! most feature-heavy profiles (paper: 4.16× → 29.9×).
+//!
+//! ```sh
+//! cargo bench --bench bench_table2
+//! ```
+
+use fdsvrg::bench::Bench;
+use fdsvrg::exp;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_args("table2");
+    let ctx = exp::Ctx::bench(Path::new("results"));
+    std::fs::create_dir_all("results").ok();
+    b.once("table2/dsvrg vs fdsvrg", || {
+        let rows = exp::table2(&ctx).expect("table2 run");
+        for (ds, t_dsvrg, t_fd) in &rows {
+            assert!(
+                t_fd < t_dsvrg,
+                "{ds}: FD-SVRG ({t_fd:.3}s) must beat DSVRG ({t_dsvrg:.3}s)"
+            );
+        }
+    });
+    b.finish();
+}

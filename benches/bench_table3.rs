@@ -1,0 +1,31 @@
+//! Regenerates paper Table 3: time-to-gap ≤ 1e-4 for PS-Lite-style
+//! asynchronous SGD vs FD-SVRG. Expected shape: SGD either needs orders of
+//! magnitude longer or never reaches the target within the cap (the
+//! paper's ">1000s" rows) — speedups in the 10²–10³ range.
+//!
+//! ```sh
+//! cargo bench --bench bench_table3
+//! ```
+
+use fdsvrg::bench::Bench;
+use fdsvrg::exp;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::from_args("table3");
+    let ctx = exp::Ctx::bench(Path::new("results"));
+    std::fs::create_dir_all("results").ok();
+    b.once("table3/pslite-sgd vs fdsvrg", || {
+        let rows = exp::table3(&ctx).expect("table3 run");
+        for (ds, t_sgd, t_fd) in &rows {
+            // SGD must be at least an order of magnitude slower (or capped)
+            if let Some(t) = t_sgd {
+                assert!(
+                    *t > 10.0 * t_fd,
+                    "{ds}: PS-Lite(SGD) {t:.3}s should trail FD-SVRG {t_fd:.3}s by ≥10×"
+                );
+            }
+        }
+    });
+    b.finish();
+}

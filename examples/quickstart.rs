@@ -1,0 +1,56 @@
+//! Quickstart: train a logistic-regression model with FD-SVRG on a small
+//! synthetic high-dimensional dataset and print the convergence trace.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 30-second tour of the public API: build a [`Problem`] from a
+//! dataset, pick [`RunParams`], call [`Algorithm::run`], read the trace.
+
+use fdsvrg::algs::{Algorithm, Problem, RunParams};
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::metrics::TextTable;
+
+fn main() {
+    // A d > N dataset — the regime the paper targets (d/N = 12.5 here).
+    let ds = generate(&GenSpec::new("quickstart", 10_000, 800, 50).with_seed(1));
+    let problem = Problem::logistic_l2(ds, 1e-4);
+    println!(
+        "dataset: d={} features, N={} instances (aspect d/N = {:.1})",
+        problem.d(),
+        problem.n(),
+        problem.d() as f64 / problem.n() as f64
+    );
+
+    // q=8 workers, 12 outer epochs, everything else at paper defaults
+    // (M = N inner steps, auto step size η = 0.1/L, binomial-tree reduce).
+    let params = RunParams { q: 8, outer: 12, ..Default::default() };
+    let res = Algorithm::FdSvrg.run(&problem, &params);
+
+    let mut table = TextTable::new(vec!["epoch", "objective", "sim time (s)", "Mscalars"]);
+    for p in &res.trace.points {
+        table.row(vec![
+            format!("{}", p.outer),
+            format!("{:.8}", p.objective),
+            format!("{:.4}", p.sim_time),
+            format!("{:.3}", p.scalars as f64 / 1e6),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "final: objective {:.6}, train accuracy {:.2}%, {} scalars moved ({}k per epoch)",
+        res.final_objective(),
+        100.0 * problem.accuracy(&res.w),
+        res.total_scalars,
+        res.total_scalars / (res.trace.points.len() as u64 - 1) / 1000,
+    );
+    println!(
+        "note: an instance-distributed method would move ≥ 2qd = {} scalars per epoch —\n\
+         FD-SVRG moved {} (the 4qN of §4.5), a {:.1}× reduction on this d/N.",
+        2 * params.q * problem.d(),
+        res.total_scalars / (res.trace.points.len() as u64 - 1),
+        (2 * params.q * problem.d()) as f64
+            / (res.total_scalars as f64 / (res.trace.points.len() as f64 - 1.0)),
+    );
+}

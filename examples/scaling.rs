@@ -1,0 +1,92 @@
+//! Worker-scaling study (paper Fig. 9): FD-SVRG speedup vs q, plus the
+//! mini-batch ablation of §4.4.1 (same scalar volume, fewer messages →
+//! lower latency share) and the tree-vs-star reduce ablation (Fig. 5).
+//!
+//! ```sh
+//! cargo run --release --example scaling [-- <profile>]
+//! ```
+
+use fdsvrg::algs::{serial, Algorithm, Problem, RunParams};
+use fdsvrg::data::profiles;
+use fdsvrg::metrics::TextTable;
+use std::path::Path;
+
+fn main() {
+    let profile = std::env::args().nth(1).unwrap_or_else(|| "webspam-sim".into());
+    let ds = profiles::load(&profile).expect("known dataset profile");
+    let problem = Problem::logistic_l2(ds, 1e-4);
+    let (_, f_opt) = serial::cached_optimum(&problem, Path::new("artifacts/optima"), 60);
+    println!("== scaling study on {profile} (d={}, N={}) ==", problem.d(), problem.n());
+
+    // ---- Fig. 9: speedup vs q ----
+    let mut t1 = 0.0;
+    let mut table = TextTable::new(vec!["q", "time→1e-4 (s)", "speedup", "ideal", "efficiency"]);
+    for q in [1usize, 4, 8, 16] {
+        let params = RunParams {
+            q,
+            outer: 40,
+            gap_stop: Some((f_opt, 1e-5)),
+            ..Default::default()
+        };
+        let res = Algorithm::FdSvrg.run(&problem, &params);
+        let t = res.trace.time_to_gap(f_opt, 1e-4).unwrap_or(res.total_sim_time);
+        if q == 1 {
+            t1 = t;
+        }
+        let s = t1 / t;
+        table.row(vec![
+            format!("{q}"),
+            format!("{t:.4}"),
+            format!("{s:.2}×"),
+            format!("{q}×"),
+            format!("{:.0}%", 100.0 * s / q as f64),
+        ]);
+    }
+    println!("-- Fig. 9: speedup vs worker count --\n{}", table.render());
+
+    // ---- §4.4.1: mini-batch ablation at q=8 ----
+    let mut table = TextTable::new(vec!["batch u", "messages", "scalars", "sim time (s)"]);
+    for u in [1usize, 4, 16, 64] {
+        let params = RunParams { q: 8, outer: 4, batch: u, ..Default::default() };
+        let res = Algorithm::FdSvrg.run(&problem, &params);
+        // messages ≈ allreduce rounds × links; recover rounds from scalars/u
+        table.row(vec![
+            format!("{u}"),
+            format!("{}", estimate_messages(problem.n(), 4, 8, u)),
+            format!("{}", res.total_scalars),
+            format!("{:.4}", res.total_sim_time),
+        ]);
+    }
+    println!(
+        "-- §4.4.1: mini-batch (same volume, fewer messages, less α-latency) --\n{}",
+        table.render()
+    );
+
+    // ---- Fig. 5 ablation: tree vs star reduce at q=16 ----
+    let mut table =
+        TextTable::new(vec!["reduce", "sim time (s)", "scalars", "busiest node", "result Δ²"]);
+    let base = RunParams { q: 16, outer: 4, ..Default::default() };
+    let tree = Algorithm::FdSvrg.run(&problem, &base);
+    let star = Algorithm::FdSvrg.run(
+        &problem,
+        &RunParams { star_reduce: true, ..base.clone() },
+    );
+    let delta = fdsvrg::linalg::dist2(&tree.w, &star.w);
+    for (name, res) in [("tree (Fig. 5)", &tree), ("star (naive)", &star)] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.4}", res.total_sim_time),
+            format!("{}", res.total_scalars),
+            format!("{}", res.busiest_node_scalars),
+            format!("{delta:.1e}"),
+        ]);
+    }
+    println!("-- Fig. 5: tree vs star global sum (identical numerics, different load) --\n{}", table.render());
+}
+
+/// Messages per run: each allreduce over a binomial tree of q workers costs
+/// 2q messages; an epoch does one N-vector reduce + ceil(M/u) batch reduces.
+fn estimate_messages(n: usize, epochs: usize, q: usize, u: usize) -> u64 {
+    let per_epoch = 2 * q as u64 * (1 + n.div_ceil(u)) as u64;
+    epochs as u64 * per_epoch
+}

@@ -1,0 +1,84 @@
+"""AOT lowering pipeline: JAX/Pallas model functions → HLO text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Each function in :data:`compile.model.ARTIFACTS` is jitted, lowered with
+its AOT-fixed example shapes, converted to an XlaComputation and dumped as
+HLO **text** under ``<out-dir>/<name>.hlo.txt``. The rust runtime
+(``rust/src/runtime``) parses the text with ``HloModuleProto::from_text_file``
+and compiles it on the PJRT CPU client.
+
+HLO text — not ``lowered.compile().serialize()`` nor the serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/skills/resources/aot_recipe.md and /opt/xla-example/load_hlo.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name: str) -> str:
+    fn = model.ARTIFACTS[name]
+    args = model.example_args(name)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", nargs="*", default=None, help="subset of artifact names"
+    )
+    opts = ap.parse_args(argv)
+
+    os.makedirs(opts.out_dir, exist_ok=True)
+    names = opts.only or list(model.ARTIFACTS)
+    manifest = {
+        "block_d": model.DL,
+        "block_n": model.NB,
+        "block_u": model.U,
+        "jax": jax.__version__,
+        "artifacts": {},
+    }
+    for name in names:
+        text = lower_artifact(name)
+        path = os.path.join(opts.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "chars": len(text),
+            "sha256_16": digest,
+        }
+        print(f"  {name:20s} -> {path}  ({len(text)} chars, {digest})")
+    with open(os.path.join(opts.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(names)} artifacts + manifest.json to {opts.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,164 @@
+"""Layer-1 Pallas kernels — the compute hot spots of FD-SVRG.
+
+The paper's per-worker hot spots are the two slab–vector products
+
+    s = D^(l)ᵀ w^(l)      (full-gradient phase, Alg. 1 line 3)
+    z = D^(l) c           (gradient accumulation, Alg. 1 line 5)
+
+plus the elementwise logistic derivative. On TPU these are expressed as
+tiled matmuls so the MXU does the work (see DESIGN.md §Hardware-Adaptation):
+
+* ``BLOCK = 128`` matches the 128×128 MXU systolic array and the (8,128)
+  VMEM lane layout;
+* the feature-tile of ``w`` stays resident in VMEM across the instance
+  grid axis (the Pallas analogue of "w^(l) never leaves the worker");
+* accumulation runs in f32 via ``preferred_element_type`` regardless of
+  the input dtype;
+* Pallas pipelines the HBM→VMEM streams of the data tiles across grid
+  steps automatically (double-buffering). VMEM footprint: 3 live tiles =
+  3·128·128·4 B ≈ 192 KiB ≪ 16 MiB, leaving headroom for deeper lookahead.
+
+Everything here lowers with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness (vs ``ref.py``) is the CI
+signal; TPU performance is estimated analytically in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tile edge.
+BLOCK = 128
+
+# interpret=True is mandatory on CPU PJRT — see module docstring.
+INTERPRET = True
+
+
+def _matvec_kernel(d_ref, w_ref, o_ref):
+    """One (BN, BD) tile of s = D @ w, accumulating over the BD grid axis."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BN, BD) @ (BD,) on the MXU, f32 accumulation
+    o_ref[...] += jnp.dot(
+        d_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def partial_products(d, w, *, block=BLOCK):
+    """s = D @ w with D of shape (NB, DL), instance-major.
+
+    Grid: (NB/block, DL/block); the w-tile index depends only on the k axis,
+    so each w-tile is fetched once and reused across the whole instance axis.
+    """
+    nb, dl = d.shape
+    assert nb % block == 0 and dl % block == 0, (nb, dl, block)
+    assert w.shape == (dl,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(nb // block, dl // block),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, k: (i, k)),
+            pl.BlockSpec((block,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=INTERPRET,
+    )(d, w)
+
+
+def _matvec_t_kernel(d_ref, c_ref, o_ref):
+    """One (BD,) tile of z = Dᵀ @ c, accumulating over the NB grid axis."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (BD, BN) @ (BN,) — the transpose is taken on the VMEM tile
+    o_ref[...] += jnp.dot(
+        d_ref[...].T, c_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def coef_matvec(d, c, *, block=BLOCK):
+    """z = Dᵀ @ c with D of shape (NB, DL): the full-gradient scatter."""
+    nb, dl = d.shape
+    assert nb % block == 0 and dl % block == 0, (nb, dl, block)
+    assert c.shape == (nb,)
+    return pl.pallas_call(
+        _matvec_t_kernel,
+        grid=(dl // block, nb // block),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda j, k: (k, j)),
+            pl.BlockSpec((block,), lambda j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda j, k: (j,)),
+        out_shape=jax.ShapeDtypeStruct((dl,), jnp.float32),
+        interpret=INTERPRET,
+    )(d, c)
+
+
+def _logistic_kernel(s_ref, y_ref, o_ref):
+    """c = -y · σ(-y·s), elementwise on the VPU."""
+    m = y_ref[...] * s_ref[...]
+    o_ref[...] = -y_ref[...] * (1.0 / (1.0 + jnp.exp(m)))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def logistic_coef(s, y, *, block=BLOCK):
+    """φ'(s_i, y_i) for the logistic loss over an instance block."""
+    (nb,) = s.shape
+    assert nb % block == 0
+    assert y.shape == (nb,)
+    return pl.pallas_call(
+        _logistic_kernel,
+        grid=(nb // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=INTERPRET,
+    )(s, y)
+
+
+def _hinge_kernel(s_ref, y_ref, gamma_ref, o_ref):
+    """Smoothed-hinge derivative on the VPU (see rust/src/loss):
+
+        phi'(s, y) = 0            if m >= 1
+                   = -y(1 - m)/g  if 1 - g < m < 1      (m = y*s)
+                   = -y           otherwise
+    """
+    m = y_ref[...] * s_ref[...]
+    g = gamma_ref[0]
+    mid = -y_ref[...] * (1.0 - m) / g
+    o_ref[...] = jnp.where(m >= 1.0, 0.0, jnp.where(m > 1.0 - g, mid, -y_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hinge_coef(s, y, gamma, *, block=BLOCK):
+    """phi'(s_i, y_i) for the quadratically-smoothed hinge (linear SVM)."""
+    (nb,) = s.shape
+    assert nb % block == 0
+    assert y.shape == (nb,)
+    return pl.pallas_call(
+        _hinge_kernel,
+        grid=(nb // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=INTERPRET,
+    )(s, y, gamma)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel and L2 model function.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret mode) and the lowered
+model functions match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def partial_products(w, d):
+    """s = Dᵀ w  — paper Alg. 1 line 3 (one worker's slab).
+
+    Args:
+      w: (DL,) parameter slab.
+      d: (NB, DL) dense slab, instance-major (row i = instance i's features).
+    Returns:
+      (NB,) partial inner products.
+    """
+    return d @ w
+
+
+def logistic_coef(s, y):
+    """c_i = φ'(s_i, y_i) for the logistic loss, numerically stable."""
+    m = y * s
+    # -y * sigmoid(-m)
+    return -y * (1.0 / (1.0 + jnp.exp(m)))
+
+
+def coef_matvec(d, c):
+    """z = Σ_i c_i x_i = Dᵀ... — with instance-major d: (NB, DL) → (DL,)."""
+    return d.T @ c
+
+
+def batch_dots(w, d, idx):
+    """Partial inner products for a sampled mini-batch (Alg. 1 line 9)."""
+    return d[idx] @ w
+
+
+def svrg_batch_update(w, z, d, idx, margins, y, c0, eta, lam):
+    """Fused inner-batch FD-SVRG update (Alg. 1 line 11), sequential over
+    the batch with margins taken before the batch (mini-batch semantics of
+    §4.4.1).
+
+    margins: summed (global) inner products w̃ᵀx_i for the batch.
+    c0:      φ'(w_tᵀx_i, y_i) for the batch (from the full-gradient phase).
+    """
+    for k in range(idx.shape[0]):
+        delta = logistic_coef(margins[k], y[k]) - c0[k]
+        w = (1.0 - eta * lam) * w - eta * z - eta * delta * d[idx[k]]
+    return w
+
+
+def hinge_coef(s, y, gamma):
+    """Smoothed-hinge derivative phi'(s, y) (see rust SmoothedHinge)."""
+    m = y * s
+    mid = -y * (1.0 - m) / gamma
+    return jnp.where(m >= 1.0, 0.0, jnp.where(m > 1.0 - gamma, mid, -y))

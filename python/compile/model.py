@@ -1,0 +1,115 @@
+"""Layer-2 JAX model: the per-worker FD-SVRG compute graph.
+
+Each function here is one AOT artifact (see ``aot.py``): it is lowered once
+at build time and executed from the rust coordinator via PJRT. The heavy
+matvecs inside call the Layer-1 Pallas kernels so they lower into the same
+HLO module; the light glue (gathers, the scanned inner-batch update) is
+plain jnp, which XLA fuses around the kernel calls.
+
+Shapes are fixed at lowering time (PJRT executables are shape-monomorphic):
+``DL`` = feature-block length, ``NB`` = instance-block length, ``U`` =
+inner mini-batch size. The rust side (``rust/src/runtime``) pads to these.
+The data slab is **instance-major** ``(NB, DL)`` — each row is one padded
+instance — matching the column-major ``(DL, NB)`` layout rust ships.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_matvec as kernels
+
+# Must mirror rust/src/runtime/mod.rs (BLOCK_D / BLOCK_N / BLOCK_U).
+DL = 256
+NB = 512
+U = 16
+
+
+def partial_products(w, d):
+    """s = D^(l)ᵀ w^(l) over one padded slab (Alg. 1 line 3).
+
+    w: (DL,) f32; d: (NB, DL) f32 → (NB,) f32.
+    """
+    return (kernels.partial_products(d, w),)
+
+
+def logistic_coef(s, y):
+    """c_i = φ'(s_i, y_i) (logistic). s, y: (NB,) → (NB,)."""
+    return (kernels.logistic_coef(s, y),)
+
+
+def hinge_coef(s, y, gamma):
+    """c_i = φ'(s_i, y_i) (smoothed hinge / linear SVM). s, y: (NB,)."""
+    return (kernels.hinge_coef(s, y, gamma),)
+
+
+def coef_matvec(d, c):
+    """z^(l) = D^(l) c over one padded slab (Alg. 1 line 5).
+
+    Zero-padding of c makes padded instances contribute nothing; the 1/N
+    normalization is folded into c by the caller.
+    """
+    return (kernels.coef_matvec(d, c),)
+
+
+def batch_dots(w, d, idx):
+    """Partial inner products for one sampled mini-batch (Alg. 1 line 9).
+
+    idx: (U,) i32 instance indices into the slab.
+    """
+    rows = jnp.take(d, idx, axis=0)  # (U, DL)
+    return (jnp.dot(rows, w, preferred_element_type=jnp.float32),)
+
+
+def batch_update(w, z, d, idx, margins, y, c0, eta, lam):
+    """Fused inner mini-batch update (Alg. 1 line 11, scanned over U).
+
+    margins are the tree-summed *global* inner products (the one value the
+    network moved); everything else is worker-local. Sequential semantics
+    within the batch with margins taken before the batch (§4.4.1).
+    """
+    rows = jnp.take(d, idx, axis=0)  # (U, DL)
+    deltas = kernels.logistic_coef(margins, y, block=U) - c0  # (U,)
+
+    def step(w, inp):
+        delta, x = inp
+        w = (1.0 - eta * lam) * w - eta * z - eta * delta * x
+        return w, ()
+
+    w_out, _ = jax.lax.scan(step, w, (deltas, rows))
+    return (w_out,)
+
+
+def example_args(name):
+    """ShapeDtypeStructs for lowering each artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "partial_products": (sds((DL,), f32), sds((NB, DL), f32)),
+        "logistic_coef": (sds((NB,), f32), sds((NB,), f32)),
+        "hinge_coef": (sds((NB,), f32), sds((NB,), f32), sds((1,), f32)),
+        "coef_matvec": (sds((NB, DL), f32), sds((NB,), f32)),
+        "batch_dots": (sds((DL,), f32), sds((NB, DL), f32), sds((U,), i32)),
+        "batch_update": (
+            sds((DL,), f32),
+            sds((DL,), f32),
+            sds((NB, DL), f32),
+            sds((U,), i32),
+            sds((U,), f32),
+            sds((U,), f32),
+            sds((U,), f32),
+            sds((), f32),
+            sds((), f32),
+        ),
+    }[name]
+
+
+# artifact name -> (function taking that artifact's inputs)
+ARTIFACTS = {
+    "partial_products": partial_products,
+    "logistic_coef": logistic_coef,
+    "hinge_coef": hinge_coef,
+    "coef_matvec": coef_matvec,
+    "batch_dots": batch_dots,
+    "batch_update": batch_update,
+}

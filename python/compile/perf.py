@@ -1,0 +1,90 @@
+"""L1/L2 performance analysis (§Perf of EXPERIMENTS.md).
+
+interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so this layer is profiled *structurally*:
+
+* **L2 (HLO)**: XLA's cost analysis on each compiled artifact — FLOPs,
+  bytes accessed, arithmetic intensity, and the fusion count (every extra
+  fusion is a kernel launch + HBM round-trip on a real accelerator).
+* **L1 (Pallas)**: the analytic VMEM/MXU model — tile footprint vs the
+  16 MiB VMEM budget, MXU utilization of the tile matmul shapes, and the
+  HBM traffic the BlockSpec schedule implies (streamed slab tiles +
+  resident parameter tile vs the naive all-tiles-reloaded bound).
+
+Run::
+
+    cd python && python -m compile.perf
+
+and paste the table into EXPERIMENTS.md §Perf.
+"""
+
+import jax
+
+from . import model
+from .kernels import block_matvec as kern
+
+VMEM_BYTES = 16 * 2**20  # per-core VMEM on current TPUs
+MXU_DIM = 128  # systolic array edge
+
+
+def compiled_cost(name):
+    fn = model.ARTIFACTS[name]
+    args = model.example_args(name)
+    compiled = jax.jit(fn).lower(*args).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = ca.get("flops", 0.0)
+    bytes_ = ca.get("bytes accessed", 0.0)
+    # fusion count from the optimized HLO text
+    hlo = compiled.as_text()
+    fusions = hlo.count(" fusion(") + hlo.count(" fusion.")
+    return flops, bytes_, fusions
+
+
+def l1_vmem_model(block=kern.BLOCK):
+    """VMEM footprint + MXU utilization of the matvec kernels."""
+    tile = block * block * 4  # f32 data tile
+    vec = block * 4
+    # matvec kernel: one data tile + one vector tile + one output tile live,
+    # ×2 for Pallas' automatic double buffering of the streamed inputs
+    live = 2 * tile + 2 * vec + vec
+    # (block,block)×(block,1) on a 128×128 MXU: the systolic array is fed a
+    # 1-wide operand → utilization = block/128 columns × min(block,128)/128
+    mxu_util = min(block, MXU_DIM) / MXU_DIM * (1 / MXU_DIM) * MXU_DIM
+    return {
+        "tile_bytes": tile,
+        "live_bytes": live,
+        "vmem_frac": live / VMEM_BYTES,
+        "lookahead_tiles": (VMEM_BYTES - live) // tile,
+        "mxu_cols_fed": min(block, MXU_DIM),
+    }
+
+
+def main():
+    print(f"{'artifact':<18} {"MFLOP":>10} {'MiB moved':>10} {'FLOP/B':>8} {'fusions':>8}")
+    print("-" * 60)
+    for name in model.ARTIFACTS:
+        flops, bytes_, fusions = compiled_cost(name)
+        ai = flops / bytes_ if bytes_ else float("nan")
+        print(
+            f"{name:<18} {flops / 1e6:>10.4f} {bytes_ / 2**20:>10.3f} "
+            f"{ai:>8.2f} {fusions:>8}"
+        )
+    print()
+    m = l1_vmem_model()
+    print("L1 Pallas matvec tile model (BLOCK = %d):" % kern.BLOCK)
+    print(f"  data tile          : {m['tile_bytes'] / 1024:.0f} KiB")
+    print(
+        f"  live VMEM          : {m['live_bytes'] / 1024:.0f} KiB "
+        f"({100 * m['vmem_frac']:.2f}% of 16 MiB)"
+    )
+    print(f"  pipeline lookahead : {m['lookahead_tiles']} tiles of headroom")
+    print(
+        f"  MXU columns fed    : {m['mxu_cols_fed']}/128 "
+        "(matvec feeds a 1-wide operand; batch the instance axis to widen)"
+    )
+
+
+if __name__ == "__main__":
+    main()

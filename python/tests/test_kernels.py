@@ -1,0 +1,174 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/values; every kernel must match ``ref.py``
+to float tolerance. These tests are the ground-truth gate for the HLO
+artifacts the rust runtime executes.
+"""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import block_matvec as kern
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+BLOCKS = st.sampled_from([64, 128, 256])
+MULT = st.integers(min_value=1, max_value=3)
+
+
+def finite_f32(shape):
+    return hnp.arrays(
+        np.float32,
+        shape,
+        elements=st.floats(
+            min_value=-4.0, max_value=4.0, width=32, allow_nan=False
+        ),
+    )
+
+
+@st.composite
+def matvec_case(draw):
+    block = draw(BLOCKS)
+    nb = block * draw(MULT)
+    dl = block * draw(MULT)
+    d = draw(finite_f32((nb, dl)))
+    w = draw(finite_f32((dl,)))
+    c = draw(finite_f32((nb,)))
+    return block, d, w, c
+
+
+class TestPartialProducts:
+    @hypothesis.given(matvec_case())
+    def test_matches_ref(self, case):
+        block, d, w, _ = case
+        got = kern.partial_products(jnp.asarray(d), jnp.asarray(w), block=block)
+        want = ref.partial_products(jnp.asarray(w), jnp.asarray(d))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_identity_slab(self):
+        d = np.eye(128, dtype=np.float32)
+        w = np.arange(128, dtype=np.float32)
+        got = kern.partial_products(jnp.asarray(d), jnp.asarray(w))
+        assert_allclose(np.asarray(got), w, rtol=0, atol=0)
+
+    def test_zero_w_gives_zero(self):
+        d = np.random.default_rng(0).normal(size=(256, 128)).astype(np.float32)
+        got = kern.partial_products(jnp.asarray(d), jnp.zeros(128, np.float32))
+        assert_allclose(np.asarray(got), np.zeros(256), atol=0)
+
+    def test_grid_accumulation_multiblock(self):
+        # dl = 3 blocks: exercises the k-axis accumulation path
+        rng = np.random.default_rng(1)
+        d = rng.normal(size=(128, 384)).astype(np.float32)
+        w = rng.normal(size=384).astype(np.float32)
+        got = kern.partial_products(jnp.asarray(d), jnp.asarray(w))
+        assert_allclose(np.asarray(got), d @ w, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_unaligned(self):
+        with pytest.raises(AssertionError):
+            kern.partial_products(
+                jnp.zeros((100, 128), jnp.float32), jnp.zeros(128, jnp.float32)
+            )
+
+
+class TestCoefMatvec:
+    @hypothesis.given(matvec_case())
+    def test_matches_ref(self, case):
+        block, d, _, c = case
+        got = kern.coef_matvec(jnp.asarray(d), jnp.asarray(c), block=block)
+        want = ref.coef_matvec(jnp.asarray(d), jnp.asarray(c))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_one_hot_c_selects_row(self):
+        rng = np.random.default_rng(2)
+        d = rng.normal(size=(256, 128)).astype(np.float32)
+        c = np.zeros(256, np.float32)
+        c[37] = 1.0
+        got = kern.coef_matvec(jnp.asarray(d), jnp.asarray(c))
+        assert_allclose(np.asarray(got), d[37], rtol=1e-6, atol=1e-6)
+
+    def test_padding_rows_contribute_nothing(self):
+        # zero-padded instances (c=0 there) must not change z
+        rng = np.random.default_rng(3)
+        d = rng.normal(size=(256, 128)).astype(np.float32)
+        c = rng.normal(size=256).astype(np.float32)
+        c[200:] = 0.0
+        d_garbage = d.copy()
+        d_garbage[200:] = 999.0
+        a = kern.coef_matvec(jnp.asarray(d), jnp.asarray(c))
+        b = kern.coef_matvec(jnp.asarray(d_garbage), jnp.asarray(c))
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-4)
+
+
+class TestLogisticCoef:
+    @hypothesis.given(
+        finite_f32((256,)),
+        hnp.arrays(np.float32, (256,), elements=st.sampled_from([-1.0, 1.0])),
+    )
+    def test_matches_ref(self, s, y):
+        got = kern.logistic_coef(jnp.asarray(s), jnp.asarray(y))
+        want = ref.logistic_coef(jnp.asarray(s), jnp.asarray(y))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    def test_at_zero_margin(self):
+        # φ'(0, y) = -y/2
+        s = np.zeros(128, np.float32)
+        y = np.ones(128, np.float32)
+        got = np.asarray(kern.logistic_coef(jnp.asarray(s), jnp.asarray(y)))
+        assert_allclose(got, -0.5 * y, rtol=1e-6)
+
+    def test_bounded_by_one(self):
+        rng = np.random.default_rng(4)
+        s = (rng.normal(size=128) * 50).astype(np.float32)
+        y = np.sign(rng.normal(size=128)).astype(np.float32)
+        got = np.asarray(kern.logistic_coef(jnp.asarray(s), jnp.asarray(y)))
+        assert np.all(np.abs(got) <= 1.0)
+        assert np.all(np.isfinite(got))
+
+    def test_saturation_signs(self):
+        # huge positive margin → derivative ~0; huge negative → ~ -y
+        s = np.array([40.0] * 64 + [-40.0] * 64, np.float32)
+        y = np.ones(128, np.float32)
+        got = np.asarray(kern.logistic_coef(jnp.asarray(s), jnp.asarray(y)))
+        assert_allclose(got[:64], 0.0, atol=1e-6)
+        assert_allclose(got[64:], -1.0, atol=1e-6)
+
+
+class TestHingeCoef:
+    @hypothesis.given(
+        finite_f32((256,)),
+        hnp.arrays(np.float32, (256,), elements=st.sampled_from([-1.0, 1.0])),
+        st.sampled_from([0.25, 0.5, 1.0]),
+    )
+    def test_matches_ref(self, s, y, gamma):
+        g = np.asarray([gamma], np.float32)
+        got = kern.hinge_coef(jnp.asarray(s), jnp.asarray(y), jnp.asarray(g))
+        want = ref.hinge_coef(jnp.asarray(s), jnp.asarray(y), gamma)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+    def test_three_regions(self):
+        # m >= 1 -> 0 ; 1-g < m < 1 -> linear ; m <= 1-g -> -y
+        y = np.ones(128, np.float32)
+        s = np.array([2.0] * 42 + [0.75] * 43 + [-3.0] * 43, np.float32)
+        g = np.asarray([0.5], np.float32)
+        got = np.asarray(kern.hinge_coef(jnp.asarray(s), jnp.asarray(y), jnp.asarray(g)))
+        assert_allclose(got[:42], 0.0)
+        assert_allclose(got[42:85], -(1.0 - 0.75) / 0.5, rtol=1e-6)
+        assert_allclose(got[85:], -1.0)
+
+    def test_bounded_by_one(self):
+        rng = np.random.default_rng(5)
+        s = (rng.normal(size=128) * 10).astype(np.float32)
+        y = np.sign(rng.normal(size=128)).astype(np.float32)
+        g = np.asarray([1.0], np.float32)
+        got = np.asarray(kern.hinge_coef(jnp.asarray(s), jnp.asarray(y), jnp.asarray(g)))
+        assert np.all(np.abs(got) <= 1.0)

@@ -1,0 +1,153 @@
+"""L2 correctness: model artifact functions vs the jnp oracle + shapes."""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+
+def rand(shape, seed=0, scale=1.0):
+    return (
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+        * scale
+    )
+
+
+class TestArtifactShapes:
+    @pytest.mark.parametrize("name", sorted(model.ARTIFACTS))
+    def test_example_args_trace(self, name):
+        """Every artifact traces at its AOT shapes and returns a 1-tuple."""
+        out = jax.eval_shape(model.ARTIFACTS[name], *model.example_args(name))
+        assert isinstance(out, tuple) and len(out) == 1
+
+    def test_block_constants_match_runtime(self):
+        # must mirror rust/src/runtime/mod.rs
+        assert (model.DL, model.NB, model.U) == (256, 512, 16)
+
+    @pytest.mark.parametrize("name", sorted(model.ARTIFACTS))
+    def test_output_dtype_f32(self, name):
+        out = jax.eval_shape(model.ARTIFACTS[name], *model.example_args(name))
+        assert out[0].dtype == jnp.float32
+
+
+class TestPartialProducts:
+    def test_matches_oracle(self):
+        w, d = rand(model.DL, 1), rand((model.NB, model.DL), 2)
+        (got,) = model.partial_products(jnp.asarray(w), jnp.asarray(d))
+        assert_allclose(np.asarray(got), d @ w, rtol=1e-4, atol=1e-4)
+
+
+class TestBatchDots:
+    @hypothesis.given(
+        st.lists(
+            st.integers(0, model.NB - 1),
+            min_size=model.U,
+            max_size=model.U,
+        )
+    )
+    def test_matches_gather(self, idx):
+        w, d = rand(model.DL, 3), rand((model.NB, model.DL), 4)
+        idx = np.asarray(idx, np.int32)
+        (got,) = model.batch_dots(
+            jnp.asarray(w), jnp.asarray(d), jnp.asarray(idx)
+        )
+        assert_allclose(np.asarray(got), d[idx] @ w, rtol=1e-4, atol=1e-4)
+
+    def test_repeated_index_ok(self):
+        w, d = rand(model.DL, 5), rand((model.NB, model.DL), 6)
+        idx = np.full(model.U, 7, np.int32)
+        (got,) = model.batch_dots(
+            jnp.asarray(w), jnp.asarray(d), jnp.asarray(idx)
+        )
+        assert_allclose(np.asarray(got), np.full(model.U, d[7] @ w), rtol=1e-4)
+
+
+class TestBatchUpdate:
+    def case(self, seed):
+        rng = np.random.default_rng(seed)
+        w = rand(model.DL, seed, 0.1)
+        z = rand(model.DL, seed + 1, 0.01)
+        d = rand((model.NB, model.DL), seed + 2)
+        idx = rng.integers(0, model.NB, size=model.U).astype(np.int32)
+        y = np.sign(rng.normal(size=model.U)).astype(np.float32)
+        margins = rand(model.U, seed + 3)
+        c0 = (rng.uniform(-1, 0, size=model.U)).astype(np.float32)
+        return w, z, d, idx, margins, y, c0
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_matches_sequential_oracle(self, seed):
+        w, z, d, idx, margins, y, c0 = self.case(seed)
+        eta, lam = np.float32(0.05), np.float32(1e-3)
+        (got,) = model.batch_update(
+            jnp.asarray(w),
+            jnp.asarray(z),
+            jnp.asarray(d),
+            jnp.asarray(idx),
+            jnp.asarray(margins),
+            jnp.asarray(y),
+            jnp.asarray(c0),
+            eta,
+            lam,
+        )
+        want = ref.svrg_batch_update(
+            w.astype(np.float64),
+            z.astype(np.float64),
+            d.astype(np.float64),
+            idx,
+            margins.astype(np.float64),
+            y.astype(np.float64),
+            c0.astype(np.float64),
+            float(eta),
+            float(lam),
+        )
+        assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_eta_is_identity(self):
+        w, z, d, idx, margins, y, c0 = self.case(9)
+        (got,) = model.batch_update(
+            jnp.asarray(w),
+            jnp.asarray(z),
+            jnp.asarray(d),
+            jnp.asarray(idx),
+            jnp.asarray(margins),
+            jnp.asarray(y),
+            jnp.asarray(c0),
+            np.float32(0.0),
+            np.float32(1e-3),
+        )
+        assert_allclose(np.asarray(got), w, atol=0)
+
+    def test_variance_term_cancels_at_snapshot(self):
+        """At w̃ = w_t the margins reproduce c0, so the stochastic term
+        vanishes and the update is plain gradient descent on z + reg."""
+        w, z, d, idx, _, y, _ = self.case(11)
+        margins = (d[idx] @ w).astype(np.float32)
+        c0 = np.asarray(
+            ref.logistic_coef(jnp.asarray(margins), jnp.asarray(y))
+        ).astype(np.float32)
+        eta, lam = np.float32(0.05), np.float32(0.0)
+        (got,) = model.batch_update(
+            jnp.asarray(w),
+            jnp.asarray(z),
+            jnp.asarray(d),
+            jnp.asarray(idx),
+            jnp.asarray(margins),
+            jnp.asarray(y),
+            jnp.asarray(c0),
+            eta,
+            lam,
+        )
+        want = w - model.U * float(eta) * z
+        assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,330 @@
+//! AsySVRG — asynchronous distributed SVRG on the Parameter-Server
+//! framework (paper Appendix B, Algorithms 5–6).
+//!
+//! The full-gradient phase is synchronous (identical to SynSVRG); the inner
+//! loop is a free-running pull/compute/push race: each worker repeatedly
+//! pulls the current `w̃` blocks, computes a variance-reduced stochastic
+//! gradient on one local instance, and pushes it; servers apply pushes in
+//! arrival order and stop accepting after `M` of them (Algorithm 5 line
+//! 16), then flag the end in their pull responses. Updates are therefore
+//! computed against **stale** parameters — the delay-tolerance that the
+//! AsySVRG literature (Reddi et al. 2015; Zhao & Li 2016) proves out.
+//!
+//! The run is intentionally *not* deterministic across repeats (it races by
+//! design); tests assert convergence and counter identities only.
+
+use super::ps::PsTopology;
+use super::{Problem, RunParams};
+use crate::cluster::run_cluster;
+use crate::linalg;
+use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::net::{tags, Endpoint};
+use crate::sparse::partition::{by_instances, InstanceShard};
+use crate::util::time::Stopwatch;
+use crate::util::Pcg64;
+use std::sync::Arc;
+
+enum NodeOut {
+    Monitor(Box<(Trace, Vec<f64>)>),
+    Other,
+}
+
+pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    let q = params.q.max(1);
+    let p = params.servers.max(1);
+    let d = problem.d();
+    let n = problem.n();
+    let eta = params.effective_eta(problem);
+    // total pushes per outer loop; paper setting = N (each worker performs
+    // ~N/q inner iterations)
+    let m_pushes = if params.m_inner == 0 { n } else { params.m_inner };
+    let topo = PsTopology::new(p, q, d);
+    let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
+    let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
+    let wall = Stopwatch::start();
+
+    let cluster = run_cluster(topo.n_nodes(), params.sim, |mut ep| {
+        if topo.is_server(ep.id()) {
+            match server(&mut ep, problem, params, topo, eta, m_pushes, &wall) {
+                Some(tw) => NodeOut::Monitor(Box::new(tw)),
+                None => NodeOut::Other,
+            }
+        } else {
+            worker(&mut ep, problem, params, topo, &shards, &y);
+            NodeOut::Other
+        }
+    });
+
+    let (trace, w) = cluster
+        .results
+        .into_iter()
+        .find_map(|r| match r {
+            NodeOut::Monitor(b) => Some(*b),
+            NodeOut::Other => None,
+        })
+        .expect("monitor result");
+    let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
+    RunResult {
+        algorithm: "asysvrg".into(),
+        dataset: problem.ds.name.clone(),
+        w,
+        trace,
+        total_sim_time,
+        total_wall_time: wall.seconds(),
+        total_scalars: cluster.stats.total_scalars(),
+        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
+    }
+}
+
+/// Server `k` (Algorithm 5): event loop over pull/push until `M` pushes.
+fn server(
+    ep: &mut Endpoint,
+    problem: &Problem,
+    params: &RunParams,
+    topo: PsTopology,
+    eta: f64,
+    m_pushes: usize,
+    wall: &Stopwatch,
+) -> Option<(Trace, Vec<f64>)> {
+    let k = ep.id();
+    let (lo, hi) = topo.key_range(k);
+    let dk = hi - lo;
+    let n = problem.n();
+    let q = topo.q;
+    let lambda = problem.reg.lambda();
+    let mut w_k = vec![0.0f64; dk];
+    let mut trace = Trace::default();
+    let mut grads = 0u64;
+    let mut full_w = vec![0.0f64; topo.d];
+    if k == 0 {
+        trace.push(TracePoint {
+            outer: 0,
+            sim_time: 0.0,
+            wall_time: wall.seconds(),
+            scalars: 0,
+            grads: 0,
+            objective: problem.objective(&full_w),
+        });
+        ep.discard_cpu();
+    }
+
+    for t in 0..params.outer {
+        // synchronous full-gradient phase (Algorithm 5 lines 3–6)
+        for l in 0..q {
+            ep.send(topo.worker_node(l), tags::BCAST, w_k.clone());
+        }
+        let mut z_k = vec![0.0f64; dk];
+        for l in 0..q {
+            let msg = ep.recv_from(topo.worker_node(l), tags::REDUCE);
+            linalg::axpy(1.0, &msg.data, &mut z_k);
+        }
+        linalg::scale(1.0 / n as f64, &mut z_k);
+        grads += n as u64;
+
+        // asynchronous inner phase: serve pulls, apply pushes, stop at M
+        let mut pushes = 0usize;
+        let mut done_workers = 0usize;
+        while done_workers < q {
+            let msg = ep.recv_any();
+            match msg.tag {
+                tags::PULL_REQ => {
+                    let flag = if pushes >= m_pushes { 1.0 } else { 0.0 };
+                    let mut resp = Vec::with_capacity(dk + 1);
+                    resp.push(flag);
+                    resp.extend_from_slice(&w_k);
+                    ep.send(msg.from, tags::PULL_RESP, resp);
+                }
+                tags::PUSH => {
+                    if pushes < m_pushes {
+                        // w̃ ← w̃ − η(∇ + z + ∇g(w̃)), Algorithm 5 line 13
+                        for i in 0..dk {
+                            w_k[i] -= eta * (msg.data[i] + z_k[i] + lambda * w_k[i]);
+                        }
+                        pushes += 1;
+                        grads += 1;
+                    } // late pushes past M are dropped (end-of-epoch race)
+                }
+                tags::CTRL => {
+                    done_workers += 1;
+                }
+                other => panic!("server {k}: unexpected tag {other}"),
+            }
+        }
+
+        // evaluation plane (same shape as SynSVRG)
+        let stop = if k == 0 {
+            full_w[lo..hi].copy_from_slice(&w_k);
+            for s in 1..topo.p {
+                let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
+                let (slo, shi) = topo.key_range(s);
+                full_w[slo..shi].copy_from_slice(&msg.data);
+            }
+            let objective = problem.objective(&full_w);
+            ep.discard_cpu();
+            let sim_time = ep.now();
+            trace.push(TracePoint {
+                outer: t + 1,
+                sim_time,
+                wall_time: wall.seconds(),
+                scalars: ep.stats().total_scalars(),
+                grads,
+                objective,
+            });
+            let gap_hit = match params.gap_stop {
+                Some((f_opt, target)) => objective - f_opt <= target,
+                None => false,
+            };
+            let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
+            let stop = gap_hit || time_hit || t + 1 == params.outer;
+            for node in 0..topo.n_nodes() {
+                if node != 0 {
+                    ep.send_eval(node, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
+                }
+            }
+            stop
+        } else {
+            ep.send_eval(0, tags::EVAL, w_k.clone());
+            let ctrl = ep.recv_eval_from(0, tags::CTRL);
+            ctrl.data[0] != 0.0
+        };
+        if stop {
+            break;
+        }
+    }
+    if k == 0 {
+        Some((trace, full_w))
+    } else {
+        None
+    }
+}
+
+/// Worker `l` (Algorithm 6): pull → compute → push until any server flags
+/// the end of the epoch.
+fn worker(
+    ep: &mut Endpoint,
+    problem: &Problem,
+    params: &RunParams,
+    topo: PsTopology,
+    shards: &[InstanceShard],
+    y: &[f64],
+) {
+    let l = ep.id() - topo.p;
+    let shard = &shards[l];
+    let n_local = shard.data.cols();
+    let loss = problem.build_loss();
+    let mut rng = Pcg64::seed_from_u64(params.seed ^ (0xA51 + l as u64));
+    let mut w_t = vec![0.0f64; topo.d];
+    let mut w_m = vec![0.0f64; topo.d];
+    let mut margins0 = vec![0.0f64; n_local];
+
+    loop {
+        // synchronous full-gradient phase
+        for k in 0..topo.p {
+            let msg = ep.recv_from(topo.server_node(k), tags::BCAST);
+            let (lo, hi) = topo.key_range(k);
+            w_t[lo..hi].copy_from_slice(&msg.data);
+        }
+        shard.data.transpose_matvec(&w_t, &mut margins0);
+        let mut zsum = vec![0.0f64; topo.d];
+        for i in 0..n_local {
+            let c = loss.derivative(margins0[i], y[shard.col_idx[i]]);
+            if c != 0.0 {
+                shard.data.col_axpy(i, c, &mut zsum);
+            }
+        }
+        for k in 0..topo.p {
+            let (lo, hi) = topo.key_range(k);
+            ep.send(topo.server_node(k), tags::REDUCE, zsum[lo..hi].to_vec());
+        }
+
+        // asynchronous inner loop
+        loop {
+            let mut ended = false;
+            for k in 0..topo.p {
+                ep.send(topo.server_node(k), tags::PULL_REQ, vec![0.0]);
+            }
+            for k in 0..topo.p {
+                let msg = ep.recv_from(topo.server_node(k), tags::PULL_RESP);
+                let (lo, hi) = topo.key_range(k);
+                if msg.data[0] != 0.0 {
+                    ended = true;
+                }
+                w_m[lo..hi].copy_from_slice(&msg.data[1..]);
+            }
+            if ended {
+                break;
+            }
+            let i = rng.below(n_local);
+            let yi = y[shard.col_idx[i]];
+            let delta =
+                loss.derivative(shard.data.col_dot(i, &w_m), yi) - loss.derivative(margins0[i], yi);
+            let mut grad = vec![0.0f64; topo.d];
+            shard.data.col_axpy(i, delta, &mut grad);
+            for k in 0..topo.p {
+                let (lo, hi) = topo.key_range(k);
+                ep.send(topo.server_node(k), tags::PUSH, grad[lo..hi].to_vec());
+            }
+        }
+        for k in 0..topo.p {
+            ep.send(topo.server_node(k), tags::CTRL, vec![1.0]);
+        }
+
+        let ctrl = ep.recv_eval_from(0, tags::CTRL);
+        if ctrl.data[0] != 0.0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, GenSpec};
+    use crate::net::SimParams;
+
+    fn tiny() -> Problem {
+        let ds = generate(&GenSpec::new("t", 120, 64, 10).with_seed(31));
+        Problem::logistic_l2(ds, 1e-2)
+    }
+
+    fn fast_params(q: usize, p: usize, outer: usize) -> RunParams {
+        RunParams { q, servers: p, outer, sim: SimParams::free(), ..Default::default() }
+    }
+
+    #[test]
+    fn converges_on_tiny_problem() {
+        let p = tiny();
+        let (_, f_opt) = crate::algs::serial::solve_optimum(&p, 40);
+        let res = run(&p, &fast_params(4, 2, 30));
+        let gap = res.final_objective() - f_opt;
+        assert!(gap < 5e-3, "gap {gap:.3e}");
+    }
+
+    #[test]
+    fn terminates_without_deadlock_many_shapes() {
+        let p = tiny();
+        for (q, srv) in [(1usize, 1usize), (2, 1), (3, 2), (4, 4)] {
+            let res = run(&p, &fast_params(q, srv, 2));
+            assert!(res.final_objective().is_finite(), "q={q} p={srv}");
+        }
+    }
+
+    #[test]
+    fn late_pushes_do_not_break_epochs() {
+        // small M forces the end-of-epoch race to happen constantly
+        let p = tiny();
+        let mut params = fast_params(4, 2, 5);
+        params.m_inner = 8;
+        let res = run(&p, &params);
+        assert_eq!(res.trace.points.len(), 6);
+    }
+
+    #[test]
+    fn objective_decreases_from_start() {
+        let p = tiny();
+        let res = run(&p, &fast_params(3, 2, 12));
+        let first = res.trace.points.first().unwrap().objective;
+        let last = res.final_objective();
+        assert!(last < first, "{last} !< {first}");
+    }
+}

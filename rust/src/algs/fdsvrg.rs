@@ -1,0 +1,435 @@
+//! **FD-SVRG** — the paper's contribution (Algorithm 1 + Fig. 4/5).
+//!
+//! Layout: node 0 is the coordinator, nodes 1..=q are workers. The data
+//! matrix is partitioned **by features** into row slabs `D^(l) ∈ R^{d_l×N}`
+//! (`sparse::partition::by_features`); worker `l` owns `D^(l)` and the
+//! matching parameter slab `w^(l)`. The full parameter vector never travels:
+//! the only counted traffic is
+//!
+//! * one allreduce of the N-vector of partial products `w^(l)ᵀD^(l)` per
+//!   outer iteration (full-gradient phase, Alg. 1 lines 3–4): `2qN` scalars;
+//! * one allreduce of `u` scalars per inner mini-batch (lines 9–10):
+//!   `2q` scalars per sampled instance, `M·2q` per outer iteration.
+//!
+//! Both use the Fig.-5 binomial tree rooted at the coordinator
+//! ([`crate::net::topology::tree_allreduce`]), so the counters reproduce the
+//! §4.5 accounting *exactly* — `comm_counters_match_paper_formula` below
+//! pins this.
+//!
+//! All workers draw the sampled index `i_m` from the same seeded PRNG
+//! stream, which makes the distributed update *exactly* the serial SVRG
+//! update (paper §4.3): bit-identical at q=1, and identical up to the FP
+//! reassociation of the cross-block margin sum `Σ_l w^(l)ᵀx^(l)` for q>1
+//! (parameter blocks are disjoint, so no other source of drift exists) —
+//! see `rust/tests/equivalence.rs`.
+
+use super::{Problem, RunParams};
+use crate::cluster::run_cluster;
+use crate::linalg;
+use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::net::topology::{star_allreduce, tree_allreduce};
+use crate::net::{tags, Endpoint, NodeId};
+use crate::sparse::partition::{by_features, by_features_rows, FeatureSlab};
+use crate::util::time::Stopwatch;
+use crate::util::Pcg64;
+use std::sync::Arc;
+
+fn allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, star: bool) {
+    if star {
+        star_allreduce(ep, group, data);
+    } else {
+        tree_allreduce(ep, group, data);
+    }
+}
+
+/// Outcome of the coordinator node.
+struct CoordOut {
+    trace: Trace,
+    w: Vec<f64>,
+}
+
+enum NodeOut {
+    Coord(Box<CoordOut>),
+    Worker,
+}
+
+/// Run FD-SVRG on a simulated cluster of `params.q` workers + coordinator.
+pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    let q = params.q.max(1);
+    let n = problem.n();
+    let d = problem.d();
+    let eta = params.effective_eta(problem);
+    let m_inner = if params.m_inner == 0 { n } else { params.m_inner };
+    let u = params.batch.max(1);
+    // Partition to balance the inner loop's dominant cost: the lazy path
+    // does O(nnz) work per step (nnz-balanced cut); the naive path does
+    // O(d_l) dense work per step (row-balanced cut) — see by_features_rows.
+    let slabs: Arc<Vec<FeatureSlab>> = Arc::new(if params.lazy {
+        by_features(&problem.ds.x, q)
+    } else {
+        by_features_rows(&problem.ds.x, q)
+    });
+    let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
+    let group: Vec<NodeId> = (0..=q).collect();
+    let wall = Stopwatch::start();
+
+    let cluster = run_cluster(q + 1, params.sim, |mut ep| {
+        if ep.id() == 0 {
+            NodeOut::Coord(Box::new(coordinator(
+                &mut ep, problem, params, &group, n, d, m_inner, u, &slabs, &wall,
+            )))
+        } else {
+            worker(&mut ep, problem, params, &group, eta, m_inner, u, &slabs, &y);
+            NodeOut::Worker
+        }
+    });
+
+    let coord = cluster
+        .results
+        .into_iter()
+        .find_map(|r| match r {
+            NodeOut::Coord(c) => Some(*c),
+            NodeOut::Worker => None,
+        })
+        .expect("coordinator result");
+    let total_sim_time = coord.trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
+    RunResult {
+        algorithm: "fdsvrg".into(),
+        dataset: problem.ds.name.clone(),
+        w: coord.w,
+        trace: coord.trace,
+        total_sim_time,
+        total_wall_time: wall.seconds(),
+        total_scalars: cluster.stats.total_scalars(),
+        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn coordinator(
+    ep: &mut Endpoint,
+    problem: &Problem,
+    params: &RunParams,
+    group: &[NodeId],
+    n: usize,
+    d: usize,
+    m_inner: usize,
+    u: usize,
+    slabs: &[FeatureSlab],
+    wall: &Stopwatch,
+) -> CoordOut {
+    let q = group.len() - 1;
+    let mut trace = Trace::default();
+    let mut grads = 0u64;
+    let mut w = vec![0.0f64; d];
+    trace.push(TracePoint {
+        outer: 0,
+        sim_time: 0.0,
+        wall_time: wall.seconds(),
+        scalars: 0,
+        grads: 0,
+        objective: problem.objective(&w),
+    });
+    ep.discard_cpu(); // objective eval is off the critical path
+
+    for t in 0..params.outer {
+        // --- full-gradient phase: allreduce of partial products (root) ---
+        let mut margins = vec![0.0f64; n];
+        allreduce(ep, group, &mut margins, params.star_reduce);
+        grads += n as u64;
+
+        // --- inner loop: one scalar-batch allreduce per mini-batch ---
+        let mut m = 0usize;
+        while m < m_inner {
+            let b = u.min(m_inner - m);
+            let mut partial = vec![0.0f64; b];
+            allreduce(ep, group, &mut partial, params.star_reduce);
+            grads += b as u64;
+            m += b;
+        }
+
+        // --- evaluation plane: collect w slabs, decide stop ---
+        for (l, slab) in slabs.iter().enumerate() {
+            let msg = ep.recv_eval_from(l + 1, tags::EVAL);
+            w[slab.row_lo..slab.row_hi].copy_from_slice(&msg.data);
+        }
+        let objective = problem.objective(&w);
+        ep.discard_cpu();
+        let sim_time = ep.now();
+        trace.push(TracePoint {
+            outer: t + 1,
+            sim_time,
+            wall_time: wall.seconds(),
+            scalars: ep.stats().total_scalars(),
+            grads,
+            objective,
+        });
+        let gap_hit = match params.gap_stop {
+            Some((f_opt, target)) => objective - f_opt <= target,
+            None => false,
+        };
+        let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
+        let stop = gap_hit || time_hit || t + 1 == params.outer;
+        for l in 1..=q {
+            ep.send_eval(l, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
+        }
+        if stop {
+            break;
+        }
+    }
+    CoordOut { trace, w }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    ep: &mut Endpoint,
+    problem: &Problem,
+    params: &RunParams,
+    group: &[NodeId],
+    eta: f64,
+    m_inner: usize,
+    u: usize,
+    slabs: &[FeatureSlab],
+    y: &[f64],
+) {
+    let l = ep.id() - 1;
+    let slab = &slabs[l];
+    let dl = slab.dim();
+    let n = problem.n();
+    let loss = problem.build_loss();
+    let lambda = match problem.reg {
+        crate::loss::Regularizer::L2 { lambda } => lambda,
+        _ => 0.0,
+    };
+    let use_l2_fast_path = matches!(problem.reg, crate::loss::Regularizer::L2 { .. });
+
+    // worker state: parameter slab + reusable buffers
+    let mut w_l = vec![0.0f64; dl];
+    let mut z_l = vec![0.0f64; dl];
+    let mut c0 = vec![0.0f64; n];
+    // shared sampling stream — identical on every worker (paper §4.3:
+    // "make the parameter identical for different machines")
+    let mut sample_rng = Pcg64::seed_from_u64(params.seed);
+
+    loop {
+        // --- full gradient phase (Alg. 1 lines 3–5) ---
+        let mut margins = vec![0.0f64; n];
+        slab.data.transpose_matvec(&w_l, &mut margins);
+        allreduce(ep, group, &mut margins, params.star_reduce);
+        for i in 0..n {
+            c0[i] = loss.derivative(margins[i], y[i]);
+        }
+        z_l.iter_mut().for_each(|v| *v = 0.0);
+        let inv_n = 1.0 / n as f64;
+        for i in 0..n {
+            if c0[i] != 0.0 {
+                slab.data.col_axpy(i, c0[i] * inv_n, &mut z_l);
+            }
+        }
+
+        // --- inner loop (Alg. 1 lines 7–12) ---
+        if params.lazy && use_l2_fast_path {
+            // §Perf lazy path: w̃ = α·v + γ·z with v aliasing w_l updated
+            // sparsely; per-step cost drops from O(d_l) to O(nnz_l(i)).
+            // Partial margins come from α·(vᵀx) + γ·(zᵀx) with zᵀx
+            // precomputed once per outer iteration (one O(nnz_l) pass).
+            let mut zx = vec![0.0f64; n];
+            slab.data.transpose_matvec(&z_l, &mut zx);
+            let beta = 1.0 - eta * lambda;
+            let mut alpha = 1.0f64;
+            let mut gamma = 0.0f64;
+            let mut m = 0usize;
+            let mut batch_idx = Vec::with_capacity(u);
+            while m < m_inner {
+                let b = u.min(m_inner - m);
+                batch_idx.clear();
+                for _ in 0..b {
+                    batch_idx.push(sample_rng.below(n));
+                }
+                let mut partial: Vec<f64> = batch_idx
+                    .iter()
+                    .map(|&i| alpha * slab.data.col_dot(i, &w_l) + gamma * zx[i])
+                    .collect();
+                allreduce(ep, group, &mut partial, params.star_reduce);
+                for (k, &i) in batch_idx.iter().enumerate() {
+                    let delta = loss.derivative(partial[k], y[i]) - c0[i];
+                    alpha *= beta;
+                    gamma = beta * gamma - eta;
+                    slab.data.col_axpy(i, -eta * delta / alpha, &mut w_l);
+                }
+                if alpha < 1e-150 {
+                    linalg::scale(alpha, &mut w_l);
+                    alpha = 1.0;
+                }
+                m += b;
+            }
+            // materialize w̃ = α·v + γ·z
+            for (wi, zi) in w_l.iter_mut().zip(z_l.iter()) {
+                *wi = alpha * *wi + gamma * zi;
+            }
+        } else {
+            let mut m = 0usize;
+            let mut batch_idx = Vec::with_capacity(u);
+            while m < m_inner {
+                let b = u.min(m_inner - m);
+                batch_idx.clear();
+                for _ in 0..b {
+                    batch_idx.push(sample_rng.below(n));
+                }
+                // u partial inner products, communicated together (§4.4.1)
+                let mut partial: Vec<f64> =
+                    batch_idx.iter().map(|&i| slab.data.col_dot(i, &w_l)).collect();
+                allreduce(ep, group, &mut partial, params.star_reduce);
+                // apply the b variance-reduced updates (line 11), each using
+                // the margin taken before this batch's updates
+                for (k, &i) in batch_idx.iter().enumerate() {
+                    let delta = loss.derivative(partial[k], y[i]) - c0[i];
+                    if use_l2_fast_path {
+                        linalg::axpby(-eta, &z_l, 1.0 - eta * lambda, &mut w_l);
+                    } else {
+                        for (wi, zi) in w_l.iter_mut().zip(z_l.iter()) {
+                            let g = problem.reg.grad_coord(*wi);
+                            *wi -= eta * (*zi + g);
+                        }
+                    }
+                    slab.data.col_axpy(i, -eta * delta, &mut w_l);
+                }
+                m += b;
+            }
+        }
+
+        // --- evaluation plane: ship the slab, await continue/stop ---
+        ep.send_eval(0, tags::EVAL, w_l.clone());
+        let ctrl = ep.recv_eval_from(0, tags::CTRL);
+        if ctrl.data[0] != 0.0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, GenSpec};
+    use crate::net::SimParams;
+
+    fn tiny() -> Problem {
+        let ds = generate(&GenSpec::new("t", 150, 60, 10).with_seed(17));
+        Problem::logistic_l2(ds, 1e-2)
+    }
+
+    fn fast_params(q: usize, outer: usize) -> RunParams {
+        RunParams { q, outer, sim: SimParams::free(), ..Default::default() }
+    }
+
+    #[test]
+    fn converges_on_tiny_problem() {
+        let p = tiny();
+        let res = run(&p, &fast_params(4, 10));
+        let f0 = p.objective(&vec![0.0; p.d()]);
+        assert!(res.final_objective() < f0 - 1e-2);
+    }
+
+    #[test]
+    fn comm_counters_match_paper_formula() {
+        // per outer iteration: allreduce of N scalars (2qN) + M allreduces
+        // of 1 scalar (2qM); with M = N (default) => 4qN per epoch.
+        let p = tiny();
+        let q = 4;
+        let outer = 3;
+        let res = run(&p, &fast_params(q, outer));
+        let n = p.n() as u64;
+        let expect = outer as u64 * (2 * q as u64 * n + 2 * q as u64 * n);
+        assert_eq!(res.total_scalars, expect);
+    }
+
+    #[test]
+    fn minibatch_same_scalars_fewer_messages() {
+        let p = tiny();
+        let mut a = fast_params(4, 2);
+        a.batch = 1;
+        let mut b = fast_params(4, 2);
+        b.batch = 8;
+        let ra = run(&p, &a);
+        let rb = run(&p, &b);
+        assert_eq!(ra.total_scalars, rb.total_scalars, "batching must not change volume");
+    }
+
+    #[test]
+    fn star_ablation_same_result_same_volume() {
+        let p = tiny();
+        let mut params = fast_params(4, 3);
+        let r_tree = run(&p, &params);
+        params.star_reduce = true;
+        let r_star = run(&p, &params);
+        assert_eq!(r_tree.total_scalars, r_star.total_scalars);
+        // identical numerics: same sampling stream, same arithmetic
+        assert!(crate::linalg::dist2(&r_tree.w, &r_star.w) < 1e-12);
+        // but the tree spreads load off the hub
+        assert!(r_star.busiest_node_scalars >= r_tree.busiest_node_scalars);
+    }
+
+    #[test]
+    fn q1_matches_serial_exactly() {
+        let p = tiny();
+        let params = fast_params(1, 4);
+        let res = run(&p, &params);
+        let (w_serial, _) = crate::algs::serial::svrg(
+            &p,
+            params.effective_eta(&p),
+            4,
+            0,
+            params.seed,
+            crate::algs::serial::SvrgOption::I,
+            None,
+        );
+        assert!(
+            crate::linalg::dist2(&res.w, &w_serial) < 1e-12,
+            "q=1 FD-SVRG must equal serial SVRG bit-for-bit"
+        );
+    }
+
+    #[test]
+    fn gap_stop_halts_early() {
+        let p = tiny();
+        let f_opt = crate::algs::serial::solve_optimum(&p, 30).1;
+        let mut params = fast_params(4, 50);
+        params.gap_stop = Some((f_opt, 1e-3));
+        let res = run(&p, &params);
+        assert!(res.trace.points.len() < 50, "should stop well before 50 epochs");
+        assert!(res.final_objective() - f_opt <= 1e-3);
+    }
+
+    #[test]
+    fn lazy_matches_naive_to_roundoff() {
+        let p = tiny();
+        let naive = run(&p, &fast_params(4, 5));
+        let lazy = run(&p, &RunParams { lazy: true, ..fast_params(4, 5) });
+        let rel = crate::linalg::dist2(&naive.w, &lazy.w)
+            / (1.0 + crate::linalg::nrm2(&naive.w).powi(2));
+        assert!(rel < 1e-12, "lazy vs naive relative dist2 {rel:.3e}");
+        // identical communication pattern
+        assert_eq!(naive.total_scalars, lazy.total_scalars);
+    }
+
+    #[test]
+    fn lazy_converges_with_minibatch() {
+        let p = tiny();
+        let (_, f_opt) = crate::algs::serial::solve_optimum(&p, 60);
+        let mut params = fast_params(4, 25);
+        params.lazy = true;
+        params.batch = 4;
+        let res = run(&p, &params);
+        assert!(res.final_objective() - f_opt < 1e-3);
+    }
+
+    #[test]
+    fn trace_sim_time_monotone() {
+        let p = tiny();
+        let res = run(&p, &fast_params(3, 4));
+        for w in res.trace.points.windows(2) {
+            assert!(w[1].sim_time >= w[0].sim_time);
+            assert!(w[1].scalars >= w[0].scalars);
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! Optimization algorithms: the paper's FD-SVRG plus every baseline it is
+//! evaluated against, all built on the same [`crate::net`]/[`crate::cluster`]
+//! substrate so their communication counters and simulated clocks are
+//! directly comparable.
+//!
+//! | module | algorithm | framework | paper reference |
+//! |--------|-----------|-----------|-----------------|
+//! | [`serial`] | SVRG (Options I & II), SGD | single node | Appendix A |
+//! | [`fdsvrg`] | **FD-SVRG** (+ mini-batch) | coordinator + q workers, feature-distributed | Algorithm 1 |
+//! | [`fdsgd`]  | FD-SGD (framework extension) | coordinator + q workers, feature-distributed | §1 ("also applicable to SGD") |
+//! | [`fdsaga`] | FD-SAGA (framework extension) | coordinator + q workers, feature-distributed | §1 ("and other variants") |
+//! | [`dsvrg`]  | DSVRG | decentralized ring, instance-distributed | Lee et al. 2017, §4.5 |
+//! | [`dpsgd`]  | D-PSGD | decentralized ring, instance-distributed | Lian et al. 2017, §3.2 |
+//! | [`ps`]     | Parameter-Server framework | p servers + q workers | §3.1 |
+//! | [`synsvrg`]| SynSVRG on PS | PS | Algorithms 3–4 |
+//! | [`asysvrg`]| AsySVRG on PS | PS | Algorithms 5–6 |
+//! | [`pslite_sgd`] | asynchronous SGD on PS | PS | §5.3, Table 3 |
+
+pub mod asysvrg;
+pub mod dpsgd;
+pub mod dsvrg;
+pub mod fdsaga;
+pub mod fdsgd;
+pub mod fdsvrg;
+pub mod ps;
+pub mod pslite_sgd;
+pub mod serial;
+pub mod synsvrg;
+
+use crate::loss::{Loss, LossKind, Regularizer};
+use crate::net::SimParams;
+use crate::sparse::libsvm::Dataset;
+use std::sync::Arc;
+
+/// The optimization problem (paper eq. 1): dataset + loss + regularizer.
+#[derive(Clone)]
+pub struct Problem {
+    pub ds: Arc<Dataset>,
+    pub loss: LossKind,
+    pub reg: Regularizer,
+}
+
+impl Problem {
+    pub fn new(ds: Dataset, loss: LossKind, reg: Regularizer) -> Self {
+        Problem { ds: Arc::new(ds), loss, reg }
+    }
+
+    /// Standard experimental setup of the paper: logistic loss + L2.
+    pub fn logistic_l2(ds: Dataset, lambda: f64) -> Self {
+        Problem::new(ds, LossKind::Logistic, Regularizer::L2 { lambda })
+    }
+
+    pub fn d(&self) -> usize {
+        self.ds.d()
+    }
+
+    pub fn n(&self) -> usize {
+        self.ds.n()
+    }
+
+    /// Objective `f(w) = (1/N) Σ φ(wᵀx_i, y_i) + g(w)`.
+    pub fn objective(&self, w: &[f64]) -> f64 {
+        let loss = self.loss.build();
+        let n = self.n();
+        let mut acc = 0.0;
+        for i in 0..n {
+            let z = self.ds.x.col_dot(i, w);
+            acc += loss.value(z, self.ds.y[i]);
+        }
+        acc / n as f64 + self.reg.value(w)
+    }
+
+    /// Full gradient `∇f(w)` written into `out`.
+    pub fn full_gradient(&self, w: &[f64], out: &mut [f64]) {
+        let loss = self.loss.build();
+        let n = self.n();
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..n {
+            let z = self.ds.x.col_dot(i, w);
+            let c = loss.derivative(z, self.ds.y[i]) / n as f64;
+            self.ds.x.col_axpy(i, c, out);
+        }
+        self.reg.add_grad(w, out);
+    }
+
+    /// Classification accuracy of `sign(wᵀx)` on this dataset.
+    pub fn accuracy(&self, w: &[f64]) -> f64 {
+        let n = self.n();
+        let correct = (0..n)
+            .filter(|&i| (self.ds.x.col_dot(i, w) >= 0.0) == (self.ds.y[i] > 0.0))
+            .count();
+        correct as f64 / n as f64
+    }
+
+    /// Smoothness constant `L ≤ φ''_max · max_i ‖x_i‖² + λ` (instances are
+    /// unit-normalized by the generators, but compute the max anyway).
+    pub fn smoothness(&self) -> f64 {
+        let loss = self.loss.build();
+        let max_sq = (0..self.n())
+            .map(|i| self.ds.x.col_nrm2_sq(i))
+            .fold(0.0f64, f64::max);
+        loss.curvature_bound() * max_sq + self.reg.lambda()
+    }
+
+    /// Strong-convexity modulus `μ` (the L2 coefficient).
+    pub fn strong_convexity(&self) -> f64 {
+        self.reg.strong_convexity()
+    }
+
+    /// Step size heuristic `η = c/L` with the paper-standard `c = 0.1`.
+    pub fn default_eta(&self) -> f64 {
+        0.1 / self.smoothness()
+    }
+
+    pub fn build_loss(&self) -> Box<dyn Loss> {
+        self.loss.build()
+    }
+}
+
+/// Parameters shared by all distributed runs.
+#[derive(Clone, Debug)]
+pub struct RunParams {
+    /// Step size η (fixed during training, as in the paper §5.2).
+    pub eta: f64,
+    /// Number of outer iterations (epochs).
+    pub outer: usize,
+    /// Inner-loop length M; `0` = each algorithm's paper default
+    /// (FD-SVRG: N, DSVRG: N/q, SynSVRG: N/q rounds, AsySVRG: N updates).
+    pub m_inner: usize,
+    /// Mini-batch size `u` (paper §4.4.1); 1 = the plain algorithm.
+    pub batch: usize,
+    /// Worker count q.
+    pub q: usize,
+    /// Server count p (parameter-server algorithms only).
+    pub servers: usize,
+    /// Shared RNG seed (drives the instance-sampling sequence).
+    pub seed: u64,
+    /// Network cost model.
+    pub sim: SimParams,
+    /// Early stop once `objective − f_opt ≤ target`: `(f_opt, target)`.
+    pub gap_stop: Option<(f64, f64)>,
+    /// Give up once the simulated clock passes this many seconds (the
+    /// ">1000s" rows of the paper's Table 3).
+    pub sim_time_cap: Option<f64>,
+    /// Ablation: replace the Fig.-5 tree with a naive star reduce.
+    pub star_reduce: bool,
+    /// FD-SVRG inner loop implementation: lazy `w̃ = α·v + γ·z`
+    /// representation (O(nnz) per step, L2 only) instead of the naive
+    /// O(d_l)-per-step dense update. Numerically equal up to roundoff;
+    /// the §Perf optimization of EXPERIMENTS.md.
+    pub lazy: bool,
+}
+
+impl Default for RunParams {
+    fn default() -> Self {
+        RunParams {
+            eta: 0.0, // 0 = problem.default_eta()
+            outer: 10,
+            m_inner: 0,
+            batch: 1,
+            q: 4,
+            servers: 2,
+            seed: 42,
+            sim: SimParams::default(),
+            gap_stop: None,
+            sim_time_cap: None,
+            star_reduce: false,
+            lazy: false,
+        }
+    }
+}
+
+impl RunParams {
+    pub fn effective_eta(&self, p: &Problem) -> f64 {
+        if self.eta > 0.0 {
+            self.eta
+        } else {
+            p.default_eta()
+        }
+    }
+}
+
+/// Algorithm selector used by the CLI and the experiment drivers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    FdSvrg,
+    FdSgd,
+    FdSaga,
+    Dsvrg,
+    DPsgd,
+    SynSvrg,
+    AsySvrg,
+    PsLiteSgd,
+    SerialSvrg,
+    SerialSgd,
+}
+
+impl Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::FdSvrg => "fdsvrg",
+            Algorithm::FdSgd => "fdsgd",
+            Algorithm::FdSaga => "fdsaga",
+            Algorithm::Dsvrg => "dsvrg",
+            Algorithm::DPsgd => "dpsgd",
+            Algorithm::SynSvrg => "synsvrg",
+            Algorithm::AsySvrg => "asysvrg",
+            Algorithm::PsLiteSgd => "pslite-sgd",
+            Algorithm::SerialSvrg => "serial-svrg",
+            Algorithm::SerialSgd => "serial-sgd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "fdsvrg" | "fd-svrg" => Some(Algorithm::FdSvrg),
+            "fdsgd" | "fd-sgd" => Some(Algorithm::FdSgd),
+            "fdsaga" | "fd-saga" => Some(Algorithm::FdSaga),
+            "dsvrg" => Some(Algorithm::Dsvrg),
+            "dpsgd" | "d-psgd" => Some(Algorithm::DPsgd),
+            "synsvrg" => Some(Algorithm::SynSvrg),
+            "asysvrg" => Some(Algorithm::AsySvrg),
+            "pslite-sgd" | "pslite" | "ps-sgd" => Some(Algorithm::PsLiteSgd),
+            "serial-svrg" | "svrg" => Some(Algorithm::SerialSvrg),
+            "serial-sgd" | "sgd" => Some(Algorithm::SerialSgd),
+            _ => None,
+        }
+    }
+
+    pub const ALL_DISTRIBUTED: [Algorithm; 4] =
+        [Algorithm::FdSvrg, Algorithm::Dsvrg, Algorithm::SynSvrg, Algorithm::AsySvrg];
+
+    /// Dispatch a run.
+    pub fn run(&self, problem: &Problem, params: &RunParams) -> crate::metrics::RunResult {
+        match self {
+            Algorithm::FdSvrg => fdsvrg::run(problem, params),
+            Algorithm::FdSgd => fdsgd::run(problem, params),
+            Algorithm::FdSaga => fdsaga::run(problem, params),
+            Algorithm::Dsvrg => dsvrg::run(problem, params),
+            Algorithm::DPsgd => dpsgd::run(problem, params),
+            Algorithm::SynSvrg => synsvrg::run(problem, params),
+            Algorithm::AsySvrg => asysvrg::run(problem, params),
+            Algorithm::PsLiteSgd => pslite_sgd::run(problem, params),
+            Algorithm::SerialSvrg => serial::run_svrg_result(problem, params),
+            Algorithm::SerialSgd => serial::run_sgd_result(problem, params),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, GenSpec};
+
+    fn tiny_problem() -> Problem {
+        let ds = generate(&GenSpec::new("t", 200, 80, 10).with_seed(3));
+        Problem::logistic_l2(ds, 1e-3)
+    }
+
+    #[test]
+    fn objective_at_zero_is_ln2_plus_zero_reg() {
+        let p = tiny_problem();
+        let w = vec![0.0; p.d()];
+        assert!((p.objective(&w) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_gradient_matches_finite_difference() {
+        let p = tiny_problem();
+        let mut rng = crate::util::Pcg64::seed_from_u64(5);
+        let w: Vec<f64> = (0..p.d()).map(|_| 0.1 * rng.normal()).collect();
+        let mut g = vec![0.0; p.d()];
+        p.full_gradient(&w, &mut g);
+        let h = 1e-6;
+        for &coord in &[0usize, 3, 17, 100] {
+            let mut wp = w.clone();
+            wp[coord] += h;
+            let mut wm = w.clone();
+            wm[coord] -= h;
+            let num = (p.objective(&wp) - p.objective(&wm)) / (2.0 * h);
+            assert!(
+                (num - g[coord]).abs() < 1e-5,
+                "coord {coord}: fd {num} vs analytic {}",
+                g[coord]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_near_zero_at_converged_point() {
+        let p = tiny_problem();
+        // run a crude gradient descent; gradient norm must shrink
+        let mut w = vec![0.0; p.d()];
+        let mut g = vec![0.0; p.d()];
+        let eta = p.default_eta() * 5.0;
+        for _ in 0..300 {
+            p.full_gradient(&w, &mut g);
+            crate::linalg::axpy(-eta, &g, &mut w);
+        }
+        p.full_gradient(&w, &mut g);
+        assert!(crate::linalg::nrm2(&g) < 1e-2);
+    }
+
+    #[test]
+    fn smoothness_sane_for_normalized_data() {
+        let p = tiny_problem();
+        let l = p.smoothness();
+        assert!(l > 0.25 && l < 0.26, "L = {l}");
+    }
+
+    #[test]
+    fn algorithm_parse_round_trip() {
+        for a in [
+            Algorithm::FdSvrg,
+            Algorithm::FdSgd,
+            Algorithm::FdSaga,
+            Algorithm::Dsvrg,
+            Algorithm::DPsgd,
+            Algorithm::SynSvrg,
+            Algorithm::AsySvrg,
+            Algorithm::PsLiteSgd,
+            Algorithm::SerialSvrg,
+            Algorithm::SerialSgd,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()), Some(a), "{}", a.name());
+        }
+        assert_eq!(Algorithm::parse("nope"), None);
+    }
+}

@@ -1,0 +1,144 @@
+//! Parameter-Server framework substrate (paper §3.1, Fig. 1).
+//!
+//! Stands in for PS-Lite/Petuum: `p` servers each own a contiguous key
+//! (feature) range of the parameter vector; `q` workers own instance
+//! shards and talk to servers with pull/push. SynSVRG, AsySVRG and
+//! PS-Lite(SGD) are built on this module.
+//!
+//! Node numbering: servers are nodes `0..p`, workers are nodes `p..p+q`.
+//! Server 0 doubles as the monitor that assembles evaluation snapshots
+//! (evaluation uses the uncounted plane, so this does not distort the
+//! counters the paper's figures read).
+
+use crate::net::NodeId;
+
+/// Static cluster shape for a parameter-server run.
+#[derive(Clone, Copy, Debug)]
+pub struct PsTopology {
+    /// Number of servers `p`.
+    pub p: usize,
+    /// Number of workers `q`.
+    pub q: usize,
+    /// Parameter dimension `d`.
+    pub d: usize,
+}
+
+impl PsTopology {
+    pub fn new(p: usize, q: usize, d: usize) -> Self {
+        assert!(p > 0 && q > 0);
+        PsTopology { p, q, d }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.p + self.q
+    }
+
+    pub fn server_node(&self, k: usize) -> NodeId {
+        debug_assert!(k < self.p);
+        k
+    }
+
+    pub fn worker_node(&self, l: usize) -> NodeId {
+        debug_assert!(l < self.q);
+        self.p + l
+    }
+
+    pub fn is_server(&self, node: NodeId) -> bool {
+        node < self.p
+    }
+
+    /// Key range `[lo, hi)` owned by server `k` (contiguous blocks, the
+    /// PS-Lite default for dense parameters).
+    pub fn key_range(&self, k: usize) -> (usize, usize) {
+        let base = self.d / self.p;
+        let rem = self.d % self.p;
+        let lo = k * base + k.min(rem);
+        let hi = lo + base + usize::from(k < rem);
+        (lo, hi)
+    }
+
+    /// Which server owns key (feature) `key`.
+    pub fn server_of_key(&self, key: usize) -> usize {
+        debug_assert!(key < self.d);
+        let base = self.d / self.p;
+        let rem = self.d % self.p;
+        let boundary = rem * (base + 1);
+        if key < boundary {
+            key / (base + 1)
+        } else {
+            rem + (key - boundary) / base.max(1)
+        }
+    }
+
+    /// Split a dense d-vector into per-server blocks.
+    pub fn split_dense(&self, v: &[f64]) -> Vec<Vec<f64>> {
+        assert_eq!(v.len(), self.d);
+        (0..self.p)
+            .map(|k| {
+                let (lo, hi) = self.key_range(k);
+                v[lo..hi].to_vec()
+            })
+            .collect()
+    }
+
+    /// Assemble per-server blocks back into a dense vector.
+    pub fn join_dense(&self, blocks: &[Vec<f64>]) -> Vec<f64> {
+        assert_eq!(blocks.len(), self.p);
+        let mut out = vec![0.0; self.d];
+        for (k, b) in blocks.iter().enumerate() {
+            let (lo, hi) = self.key_range(k);
+            assert_eq!(b.len(), hi - lo, "block {k} size");
+            out[lo..hi].copy_from_slice(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_ranges_cover_disjointly() {
+        for (p, d) in [(1usize, 10usize), (3, 10), (4, 7), (7, 7), (5, 23)] {
+            let t = PsTopology::new(p, 2, d);
+            let mut covered = 0usize;
+            for k in 0..p {
+                let (lo, hi) = t.key_range(k);
+                assert_eq!(lo, covered, "p={p} d={d} k={k}");
+                covered = hi;
+            }
+            assert_eq!(covered, d);
+        }
+    }
+
+    #[test]
+    fn server_of_key_matches_ranges() {
+        for (p, d) in [(1usize, 10usize), (3, 10), (4, 7), (5, 23), (2, 1000)] {
+            let t = PsTopology::new(p, 2, d);
+            for key in 0..d {
+                let k = t.server_of_key(key);
+                let (lo, hi) = t.key_range(k);
+                assert!(key >= lo && key < hi, "p={p} d={d} key={key} -> server {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_join_round_trip() {
+        let t = PsTopology::new(3, 2, 11);
+        let v: Vec<f64> = (0..11).map(|i| i as f64).collect();
+        let blocks = t.split_dense(&v);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(t.join_dense(&blocks), v);
+    }
+
+    #[test]
+    fn node_numbering() {
+        let t = PsTopology::new(2, 3, 10);
+        assert_eq!(t.n_nodes(), 5);
+        assert_eq!(t.server_node(1), 1);
+        assert_eq!(t.worker_node(0), 2);
+        assert!(t.is_server(0) && t.is_server(1) && !t.is_server(2));
+    }
+}

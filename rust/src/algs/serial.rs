@@ -1,0 +1,509 @@
+//! Non-distributed (serial) SVRG — paper Appendix A, Algorithm 2 — plus
+//! serial SGD and the reference-optimum solver used for gap plots.
+//!
+//! The serial inner update is written in the *same algebraic form* as
+//! FD-SVRG Algorithm 1 line 11:
+//!
+//! ```text
+//! w̃_{m+1} = w̃_m − η( (φ'(w̃_mᵀx) − φ'(w̃_0ᵀx))·x + z_φ + ∇g(w̃_m) )
+//! ```
+//!
+//! where `z_φ = (1/N) Σ φ'(w̃_0ᵀx_i)·x_i` is the *loss part* of the full
+//! gradient. This equals textbook SVRG because the `∇g(w̃_0)` terms of
+//! `∇f_i(w̃_m) − ∇f_i(w̃_0) + ∇f(w̃_0)` cancel. Keeping both codebases in
+//! this form makes the FD-SVRG ≡ serial-SVRG equivalence exact (it is the
+//! same floating-point computation, merely partitioned by feature blocks).
+
+use super::{Problem, RunParams};
+use crate::linalg;
+use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::util::time::Stopwatch;
+use crate::util::Pcg64;
+
+/// Which `w_{t+1}` rule to use (paper Algorithm 2, line 9–10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SvrgOption {
+    /// `w_{t+1} = w̃_M` — what FD-SVRG uses; convergence proved by Theorem 1.
+    I,
+    /// `w_{t+1} = w̃_m`, random `m` — the Johnson & Zhang analyzed variant.
+    II,
+}
+
+/// Serial SVRG. Returns final `w` and, when `snapshots` is non-null, pushes
+/// a copy of `w_t` after every outer iteration (equivalence tests).
+pub fn svrg(
+    problem: &Problem,
+    eta: f64,
+    outer: usize,
+    m_inner: usize,
+    seed: u64,
+    option: SvrgOption,
+    mut snapshots: Option<&mut Vec<Vec<f64>>>,
+) -> (Vec<f64>, Trace) {
+    let d = problem.d();
+    let n = problem.n();
+    let loss = problem.build_loss();
+    let x = &problem.ds.x;
+    let y = &problem.ds.y;
+    let m_inner = if m_inner == 0 { n } else { m_inner };
+    // sampling stream: shared layout with FD-SVRG (one `below(n)` per inner
+    // step, option-II snapshot draws come from a separate stream so both
+    // options consume identical sampling sequences)
+    let mut sample_rng = Pcg64::seed_from_u64(seed);
+    let mut option_rng = Pcg64::seed_from_u64(seed ^ 0x5eed_0011);
+
+    let mut w = vec![0.0f64; d];
+    let mut trace = Trace::default();
+    let wall = Stopwatch::start();
+    let mut grads = 0u64;
+    trace.push(TracePoint {
+        outer: 0,
+        sim_time: 0.0,
+        wall_time: 0.0,
+        scalars: 0,
+        grads: 0,
+        objective: problem.objective(&w),
+    });
+
+    let mut margins = vec![0.0f64; n];
+    let mut c0 = vec![0.0f64; n];
+    let mut z = vec![0.0f64; d];
+    let mut w_snapshot_m: Vec<f64> = Vec::new();
+
+    for t in 0..outer {
+        // full (loss-part) gradient at w_t. The arithmetic is kept
+        // operation-for-operation identical to the FD-SVRG worker
+        // (store φ' undivided, scale by 1/N inside the scatter) so the
+        // q=1 equivalence test can demand bitwise equality.
+        x.transpose_matvec(&w, &mut margins);
+        for i in 0..n {
+            c0[i] = loss.derivative(margins[i], y[i]);
+        }
+        z.iter_mut().for_each(|v| *v = 0.0);
+        let inv_n = 1.0 / n as f64;
+        for i in 0..n {
+            if c0[i] != 0.0 {
+                x.col_axpy(i, c0[i] * inv_n, &mut z);
+            }
+        }
+        grads += n as u64;
+
+        // inner loop on w̃ (= w, updated in place)
+        let snapshot_at = match option {
+            SvrgOption::I => m_inner, // never triggers
+            SvrgOption::II => 1 + option_rng.below(m_inner),
+        };
+        for m in 0..m_inner {
+            let i = sample_rng.below(n);
+            let zi = x.col_dot(i, &w);
+            let delta = loss.derivative(zi, y[i]) - c0[i];
+            // dense part: w̃ −= η (z + ∇g(w̃))
+            match problem.reg {
+                crate::loss::Regularizer::L2 { lambda } => {
+                    linalg::axpby(-eta, &z, 1.0 - eta * lambda, &mut w);
+                }
+                _ => {
+                    for (wi, zi) in w.iter_mut().zip(z.iter()) {
+                        let g = problem.reg.grad_coord(*wi);
+                        *wi -= eta * (*zi + g);
+                    }
+                }
+            }
+            // sparse part: w̃ −= η Δφ x_i
+            x.col_axpy(i, -eta * delta, &mut w);
+            grads += 1;
+            if m + 1 == snapshot_at {
+                w_snapshot_m = w.clone();
+            }
+        }
+        if option == SvrgOption::II {
+            w = w_snapshot_m.clone();
+        }
+
+        let objective = problem.objective(&w);
+        trace.push(TracePoint {
+            outer: t + 1,
+            sim_time: 0.0,
+            wall_time: wall.seconds(),
+            scalars: 0,
+            grads,
+            objective,
+        });
+        if let Some(s) = snapshots.as_deref_mut() {
+            s.push(w.clone());
+        }
+    }
+    (w, trace)
+}
+
+/// Serial SGD with `1/(1 + t·decay)` step decay (`decay=0` = fixed step).
+pub fn sgd(
+    problem: &Problem,
+    eta0: f64,
+    epochs: usize,
+    decay: f64,
+    seed: u64,
+) -> (Vec<f64>, Trace) {
+    let d = problem.d();
+    let n = problem.n();
+    let loss = problem.build_loss();
+    let x = &problem.ds.x;
+    let y = &problem.ds.y;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut w = vec![0.0f64; d];
+    let mut trace = Trace::default();
+    let wall = Stopwatch::start();
+    trace.push(TracePoint {
+        outer: 0,
+        sim_time: 0.0,
+        wall_time: 0.0,
+        scalars: 0,
+        grads: 0,
+        objective: problem.objective(&w),
+    });
+    let mut step = 0u64;
+    for t in 0..epochs {
+        for _ in 0..n {
+            let i = rng.below(n);
+            let zi = x.col_dot(i, &w);
+            let g = loss.derivative(zi, y[i]);
+            let eta = eta0 / (1.0 + step as f64 * decay);
+            match problem.reg {
+                crate::loss::Regularizer::L2 { lambda } => {
+                    linalg::scale(1.0 - eta * lambda, &mut w);
+                }
+                _ => {
+                    for wi in w.iter_mut() {
+                        let gr = problem.reg.grad_coord(*wi);
+                        *wi -= eta * gr;
+                    }
+                }
+            }
+            x.col_axpy(i, -eta * g, &mut w);
+            step += 1;
+        }
+        trace.push(TracePoint {
+            outer: t + 1,
+            sim_time: 0.0,
+            wall_time: wall.seconds(),
+            scalars: 0,
+            grads: step,
+            objective: problem.objective(&w),
+        });
+    }
+    (w, trace)
+}
+
+/// Lazy-update serial SVRG for **L2-regularized** problems: algebraically
+/// identical to [`svrg`] with Option I, but each inner step costs
+/// `O(nnz(x_i))` instead of `O(d)`.
+///
+/// The dense part of the update, `w̃ ← (1−ηλ)w̃ − ηz`, is tracked in closed
+/// form through the representation `w̃ = α·v + γ·z`:
+///
+/// ```text
+/// α ← (1−ηλ)·α          γ ← (1−ηλ)·γ − η          v ← v − (ηΔ/α)·x_i
+/// ```
+///
+/// and the needed margins come from `w̃ᵀx_i = α·(vᵀx_i) + γ·(zᵀx_i)` with
+/// `zᵀx_i` precomputed once per outer loop. This is the §Perf optimization
+/// of EXPERIMENTS.md; `lazy_matches_naive_svrg` pins the equivalence.
+pub fn svrg_lazy(
+    problem: &Problem,
+    eta: f64,
+    outer: usize,
+    m_inner: usize,
+    seed: u64,
+) -> (Vec<f64>, Trace) {
+    let lambda = match problem.reg {
+        crate::loss::Regularizer::L2 { lambda } => lambda,
+        _ => panic!("svrg_lazy requires an L2 regularizer"),
+    };
+    let d = problem.d();
+    let n = problem.n();
+    let loss = problem.build_loss();
+    let x = &problem.ds.x;
+    let y = &problem.ds.y;
+    let m_inner = if m_inner == 0 { n } else { m_inner };
+    let mut sample_rng = Pcg64::seed_from_u64(seed);
+
+    let mut w = vec![0.0f64; d];
+    let mut trace = Trace::default();
+    let wall = Stopwatch::start();
+    let mut grads = 0u64;
+    trace.push(TracePoint {
+        outer: 0,
+        sim_time: 0.0,
+        wall_time: 0.0,
+        scalars: 0,
+        grads: 0,
+        objective: problem.objective(&w),
+    });
+
+    let mut margins = vec![0.0f64; n];
+    let mut zx = vec![0.0f64; n];
+    let mut c0 = vec![0.0f64; n];
+    let mut z = vec![0.0f64; d];
+    let beta = 1.0 - eta * lambda;
+
+    for t in 0..outer {
+        x.transpose_matvec(&w, &mut margins);
+        for i in 0..n {
+            c0[i] = loss.derivative(margins[i], y[i]);
+        }
+        z.iter_mut().for_each(|v| *v = 0.0);
+        let inv_n = 1.0 / n as f64;
+        for i in 0..n {
+            if c0[i] != 0.0 {
+                x.col_axpy(i, c0[i] * inv_n, &mut z);
+            }
+        }
+        grads += n as u64;
+        // precompute zᵀx_i (one extra sparse pass, O(nnz))
+        x.transpose_matvec(&z, &mut zx);
+
+        // lazy representation w̃ = α·v + γ·z ; v aliases w (updated sparsely)
+        let mut alpha = 1.0f64;
+        let mut gamma = 0.0f64;
+        for _ in 0..m_inner {
+            let i = sample_rng.below(n);
+            let vx = x.col_dot(i, &w);
+            let zi = alpha * vx + gamma * zx[i];
+            let delta = loss.derivative(zi, y[i]) - c0[i];
+            alpha *= beta;
+            gamma = beta * gamma - eta;
+            x.col_axpy(i, -eta * delta / alpha, &mut w);
+            grads += 1;
+            if alpha < 1e-150 {
+                // renormalize to dodge underflow (rare; λη is tiny)
+                linalg::scale(alpha, &mut w);
+                alpha = 1.0;
+            }
+        }
+        // materialize w = α·v + γ·z
+        for j in 0..d {
+            w[j] = alpha * w[j] + gamma * z[j];
+        }
+
+        trace.push(TracePoint {
+            outer: t + 1,
+            sim_time: 0.0,
+            wall_time: wall.seconds(),
+            scalars: 0,
+            grads,
+            objective: problem.objective(&w),
+        });
+    }
+    (w, trace)
+}
+
+/// Reference optimum: run lazy SVRG far past the experiment horizon and
+/// return `(w*, f(w*))`. Converges linearly (Theorem 1), so 60–100 outer
+/// epochs reach machine-precision neighborhoods on the experiment problems.
+pub fn solve_optimum(problem: &Problem, outer: usize) -> (Vec<f64>, f64) {
+    let eta = problem.default_eta();
+    let (w, _) = if matches!(problem.reg, crate::loss::Regularizer::L2 { .. }) {
+        svrg_lazy(problem, eta, outer, 2 * problem.n(), 0xF00D)
+    } else {
+        svrg(problem, eta, outer, 2 * problem.n(), 0xF00D, SvrgOption::I, None)
+    };
+    let f = problem.objective(&w);
+    (w, f)
+}
+
+/// Disk cache for reference optima (`artifacts/optima/<name>.f64`): the
+/// experiment drivers share one `w*` per (dataset, λ) pair. Format: raw
+/// little-endian f64s, `[f_opt, w...]`.
+pub fn cached_optimum(problem: &Problem, cache_dir: &std::path::Path, outer: usize) -> (Vec<f64>, f64) {
+    let key = format!(
+        "{}_{}_{:.0e}.f64",
+        problem.ds.name,
+        problem.loss.build().name(),
+        problem.reg.lambda()
+    );
+    let path = cache_dir.join(key);
+    if let Ok(bytes) = std::fs::read(&path) {
+        if bytes.len() == 8 * (problem.d() + 1) {
+            let vals: Vec<f64> = bytes
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            return (vals[1..].to_vec(), vals[0]);
+        }
+    }
+    let (w, f) = solve_optimum(problem, outer);
+    let mut bytes = Vec::with_capacity(8 * (w.len() + 1));
+    bytes.extend_from_slice(&f.to_le_bytes());
+    for v in &w {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::create_dir_all(cache_dir).ok();
+    std::fs::write(&path, bytes).ok();
+    (w, f)
+}
+
+/// [`RunResult`] adapters so the serial algorithms fit the [`super::Algorithm`] dispatch.
+pub fn run_svrg_result(problem: &Problem, params: &RunParams) -> RunResult {
+    let eta = params.effective_eta(problem);
+    let wall = Stopwatch::start();
+    let (w, trace) =
+        svrg(problem, eta, params.outer, params.m_inner, params.seed, SvrgOption::I, None);
+    RunResult {
+        algorithm: "serial-svrg".into(),
+        dataset: problem.ds.name.clone(),
+        w,
+        trace,
+        total_sim_time: 0.0,
+        total_wall_time: wall.seconds(),
+        total_scalars: 0,
+        busiest_node_scalars: 0,
+    }
+}
+
+pub fn run_sgd_result(problem: &Problem, params: &RunParams) -> RunResult {
+    let eta = params.effective_eta(problem);
+    let wall = Stopwatch::start();
+    let (w, trace) = sgd(problem, eta, params.outer, 1.0 / problem.n() as f64, params.seed);
+    RunResult {
+        algorithm: "serial-sgd".into(),
+        dataset: problem.ds.name.clone(),
+        w,
+        trace,
+        total_sim_time: 0.0,
+        total_wall_time: wall.seconds(),
+        total_scalars: 0,
+        busiest_node_scalars: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, GenSpec};
+
+    fn tiny() -> Problem {
+        let ds = generate(&GenSpec::new("t", 120, 60, 8).with_seed(21));
+        Problem::logistic_l2(ds, 1e-2)
+    }
+
+    #[test]
+    fn svrg_decreases_objective() {
+        let p = tiny();
+        let f0 = p.objective(&vec![0.0; p.d()]);
+        let (_, trace) = svrg(&p, p.default_eta(), 8, 0, 1, SvrgOption::I, None);
+        let f_end = trace.last_objective().unwrap();
+        assert!(f_end < f0 - 1e-3, "f0={f0} f_end={f_end}");
+    }
+
+    #[test]
+    fn svrg_linear_convergence_toward_optimum() {
+        let p = tiny();
+        let (_, f_opt) = solve_optimum(&p, 40);
+        let (_, trace) = svrg(&p, p.default_eta(), 20, 0, 1, SvrgOption::I, None);
+        let g5 = trace.points[5].objective - f_opt;
+        let g20 = trace.points[20].objective - f_opt;
+        assert!(g20 < g5 * 0.01, "gap at 20 ({g20:.3e}) should crush gap at 5 ({g5:.3e})");
+        assert!(g20 >= -1e-10, "objective below reference optimum: {g20:.3e}");
+    }
+
+    #[test]
+    fn option_ii_also_converges() {
+        // Option II returns a uniformly random inner iterate, so it carries
+        // more per-epoch variance than Option I — test at a looser target.
+        let p = tiny();
+        let (_, f_opt) = solve_optimum(&p, 40);
+        let (_, trace) = svrg(&p, p.default_eta(), 25, 0, 2, SvrgOption::II, None);
+        let g = trace.last_objective().unwrap() - f_opt;
+        assert!(g < 1e-3, "option II gap {g:.3e}");
+    }
+
+    #[test]
+    fn theorem1_contraction_bound_holds() {
+        // Theorem 1: E‖w̃_M − w*‖² ≤ (a^M + b/(1−a)) ‖w̃_0 − w*‖²,
+        // a = 1 − μη + 2L²η², b = 2L²η². Check the *measured* per-epoch
+        // contraction of ‖w_t − w*‖² stays below the bound (generously,
+        // since we observe one sample path, not the expectation).
+        let p = tiny();
+        let (w_star, _) = solve_optimum(&p, 60);
+        let mu = p.strong_convexity();
+        let l = p.smoothness();
+        let eta = 0.05 / l; // small enough that a^M + b/(1-a) < 1
+        let m = 4 * p.n();
+        let a = 1.0 - mu * eta + 2.0 * l * l * eta * eta;
+        let b = 2.0 * l * l * eta * eta;
+        let rho = a.powi(m as i32) + b / (1.0 - a);
+        assert!(rho < 1.0, "test setup: rho={rho} must contract");
+        let mut snaps = Vec::new();
+        let (_, _) = svrg(&p, eta, 6, m, 3, SvrgOption::I, Some(&mut snaps));
+        let d0 = {
+            let zero = vec![0.0; p.d()];
+            crate::linalg::dist2(&zero, &w_star).powi(2)
+        };
+        let mut prev = d0;
+        for (t, w) in snaps.iter().enumerate() {
+            let dist = crate::linalg::dist2(w, &w_star).powi(2);
+            // single sample path: allow 3x slack over the expectation bound
+            assert!(
+                dist <= 3.0 * rho * prev + 1e-12,
+                "epoch {t}: ‖w−w*‖²={dist:.3e} vs bound {:.3e}",
+                rho * prev
+            );
+            prev = dist;
+        }
+    }
+
+    #[test]
+    fn sgd_converges_slower_than_svrg() {
+        let p = tiny();
+        let (_, f_opt) = solve_optimum(&p, 40);
+        let epochs = 12;
+        let (_, sgd_trace) = sgd(&p, 1.0, epochs, 1.0 / p.n() as f64, 1);
+        let (_, svrg_trace) = svrg(&p, p.default_eta(), epochs, 0, 1, SvrgOption::I, None);
+        let g_sgd = sgd_trace.last_objective().unwrap() - f_opt;
+        let g_svrg = svrg_trace.last_objective().unwrap() - f_opt;
+        assert!(
+            g_svrg < g_sgd,
+            "SVRG gap {g_svrg:.3e} should beat SGD gap {g_sgd:.3e} at equal epochs"
+        );
+    }
+
+    #[test]
+    fn snapshots_are_one_per_outer() {
+        let p = tiny();
+        let mut snaps = Vec::new();
+        let _ = svrg(&p, p.default_eta(), 5, 0, 1, SvrgOption::I, Some(&mut snaps));
+        assert_eq!(snaps.len(), 5);
+    }
+
+    #[test]
+    fn lazy_matches_naive_svrg() {
+        let p = tiny();
+        let eta = p.default_eta();
+        let (w_naive, _) = svrg(&p, eta, 5, 0, 7, SvrgOption::I, None);
+        let (w_lazy, _) = svrg_lazy(&p, eta, 5, 0, 7);
+        let dist = crate::linalg::dist2(&w_naive, &w_lazy);
+        assert!(dist < 1e-9, "lazy vs naive distance {dist:.3e}");
+    }
+
+    #[test]
+    fn cached_optimum_round_trips() {
+        let p = tiny();
+        let dir = std::env::temp_dir().join("fdsvrg_optima_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let (w1, f1) = cached_optimum(&p, &dir, 30);
+        let (w2, f2) = cached_optimum(&p, &dir, 30); // second call hits disk
+        assert_eq!(f1, f2);
+        assert_eq!(w1, w2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = tiny();
+        let (w1, _) = svrg(&p, 0.1, 3, 0, 9, SvrgOption::I, None);
+        let (w2, _) = svrg(&p, 0.1, 3, 0, 9, SvrgOption::I, None);
+        assert_eq!(w1, w2);
+        let (w3, _) = svrg(&p, 0.1, 3, 0, 10, SvrgOption::I, None);
+        assert_ne!(w1, w3);
+    }
+}

@@ -1,0 +1,156 @@
+//! Benchmark harness (criterion-lite; `criterion` is unavailable offline).
+//!
+//! Cargo benches (`benches/*.rs`, `harness = false`) build a [`Bench`],
+//! register closures, and get warmup + repeated timing with mean / median /
+//! stddev reporting. End-to-end paper-table benches use [`Bench::once`]
+//! (long-running convergence runs are measured once and reported as-is;
+//! their interesting output is the table itself, not nanosecond noise).
+//!
+//! `cargo bench -- <filter>` runs only matching entries, like criterion.
+
+use crate::util::time::Stopwatch;
+use crate::util::{mean, median, stddev};
+
+/// Measured timings of one benchmark entry.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+}
+
+pub struct Bench {
+    suite: String,
+    filter: Option<String>,
+    warmup_iters: usize,
+    measure_iters: usize,
+    samples: Vec<Sample>,
+}
+
+impl Bench {
+    /// Build from process args (`cargo bench -- <filter>`).
+    pub fn from_args(suite: &str) -> Bench {
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        Bench {
+            suite: suite.to_string(),
+            filter,
+            warmup_iters: 2,
+            measure_iters: 5,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, measure: usize) -> Bench {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
+    }
+
+    /// Timed micro-benchmark: warmup + N measured iterations.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.measure_iters);
+        for _ in 0..self.measure_iters {
+            let sw = Stopwatch::start();
+            f();
+            times.push(sw.seconds());
+        }
+        let s = Sample {
+            name: name.to_string(),
+            iters: self.measure_iters,
+            mean_s: mean(&times),
+            median_s: median(&times),
+            stddev_s: stddev(&times),
+        };
+        println!(
+            "{:<44} {:>12.6}s mean  {:>12.6}s median  ±{:>10.6}s  (n={})",
+            s.name, s.mean_s, s.median_s, s.stddev_s, s.iters
+        );
+        self.samples.push(s);
+    }
+
+    /// One-shot measurement for long end-to-end runs (paper tables).
+    pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let sw = Stopwatch::start();
+        f();
+        let t = sw.seconds();
+        println!("{:<44} {:>12.3}s (single run)", name, t);
+        self.samples.push(Sample {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: t,
+            median_s: t,
+            stddev_s: 0.0,
+        });
+    }
+
+    /// Print the suite footer; call at the end of main().
+    pub fn finish(self) {
+        println!("── {} : {} entries ──", self.suite, self.samples.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bench {
+            suite: "t".into(),
+            filter: None,
+            warmup_iters: 1,
+            measure_iters: 3,
+            samples: vec![],
+        };
+        let mut count = 0;
+        b.bench("noop", || count += 1);
+        assert_eq!(count, 4); // 1 warmup + 3 measured
+        assert_eq!(b.samples.len(), 1);
+        assert_eq!(b.samples[0].iters, 3);
+    }
+
+    #[test]
+    fn filter_skips_nonmatching() {
+        let mut b = Bench {
+            suite: "t".into(),
+            filter: Some("keep".into()),
+            warmup_iters: 0,
+            measure_iters: 1,
+            samples: vec![],
+        };
+        let mut ran = false;
+        b.bench("skip_this", || ran = true);
+        assert!(!ran);
+        b.bench("keep_this", || ran = true);
+        assert!(ran);
+    }
+
+    #[test]
+    fn once_runs_exactly_once() {
+        let mut b = Bench {
+            suite: "t".into(),
+            filter: None,
+            warmup_iters: 5,
+            measure_iters: 5,
+            samples: vec![],
+        };
+        let mut count = 0;
+        b.once("single", || count += 1);
+        assert_eq!(count, 1);
+    }
+}

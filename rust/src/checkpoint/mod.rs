@@ -1,0 +1,223 @@
+//! Model checkpointing: save/restore a trained parameter vector with
+//! enough metadata to validate it against the problem it is loaded into.
+//!
+//! Format (version 1, little-endian):
+//!
+//! ```text
+//! magic   8 B  "FDSVRGCK"
+//! version u32
+//! d       u64          parameter dimension
+//! algo    u32 + bytes  algorithm name
+//! dataset u32 + bytes  dataset name
+//! lambda  f64
+//! w       d × f64
+//! crc     u64          FNV-1a over everything above
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"FDSVRGCK";
+const VERSION: u32 = 1;
+
+/// A saved model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub algorithm: String,
+    pub dataset: String,
+    pub lambda: f64,
+    pub w: Vec<f64>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_u32(bytes: &[u8], at: &mut usize) -> Result<u32> {
+    let end = *at + 4;
+    if end > bytes.len() {
+        bail!("truncated checkpoint");
+    }
+    let v = u32::from_le_bytes(bytes[*at..end].try_into().unwrap());
+    *at = end;
+    Ok(v)
+}
+
+fn get_u64(bytes: &[u8], at: &mut usize) -> Result<u64> {
+    let end = *at + 8;
+    if end > bytes.len() {
+        bail!("truncated checkpoint");
+    }
+    let v = u64::from_le_bytes(bytes[*at..end].try_into().unwrap());
+    *at = end;
+    Ok(v)
+}
+
+fn get_str(bytes: &[u8], at: &mut usize) -> Result<String> {
+    let len = get_u32(bytes, at)? as usize;
+    let end = *at + len;
+    if end > bytes.len() {
+        bail!("truncated checkpoint string");
+    }
+    let s = std::str::from_utf8(&bytes[*at..end]).context("checkpoint string not utf-8")?;
+    *at = end;
+    Ok(s.to_string())
+}
+
+impl Checkpoint {
+    pub fn new(algorithm: &str, dataset: &str, lambda: f64, w: Vec<f64>) -> Checkpoint {
+        Checkpoint { algorithm: algorithm.into(), dataset: dataset.into(), lambda, w }
+    }
+
+    /// Serialize to the version-1 binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(64 + 8 * self.w.len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.w.len() as u64).to_le_bytes());
+        put_str(&mut buf, &self.algorithm);
+        put_str(&mut buf, &self.dataset);
+        buf.extend_from_slice(&self.lambda.to_le_bytes());
+        for v in &self.w {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Parse + verify a version-1 checkpoint.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < MAGIC.len() + 12 + 8 {
+            bail!("checkpoint too short ({} bytes)", bytes.len());
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(crc_bytes.try_into().unwrap());
+        let got = fnv1a(body);
+        if want != got {
+            bail!("checkpoint CRC mismatch (corrupted file)");
+        }
+        let mut at = 8usize;
+        let version = get_u32(bytes, &mut at)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let d = get_u64(bytes, &mut at)? as usize;
+        let algorithm = get_str(bytes, &mut at)?;
+        let dataset = get_str(bytes, &mut at)?;
+        let lambda = f64::from_bits(get_u64(bytes, &mut at)?);
+        if body.len() - at != 8 * d {
+            bail!("checkpoint dim {d} disagrees with payload");
+        }
+        let w = bytes[at..at + 8 * d]
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Checkpoint { algorithm, dataset, lambda, w })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Checkpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        Checkpoint::from_bytes(&bytes).with_context(|| format!("parse {}", path.as_ref().display()))
+    }
+
+    /// Validate against a problem before warm-starting it.
+    pub fn check_compatible(&self, d: usize) -> Result<()> {
+        if self.w.len() != d {
+            bail!(
+                "checkpoint dim {} does not match problem dim {d}",
+                self.w.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Checkpoint {
+        Checkpoint::new("fdsvrg", "webspam-sim", 1e-4, vec![0.5, -1.5, 0.0, 3.25])
+    }
+
+    #[test]
+    fn round_trip() {
+        let c = demo();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("fdsvrg_ckpt_test");
+        let path = dir.join("m.ckpt");
+        demo().save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, demo());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut bytes = demo().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = demo().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut bytes = demo().to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn dim_check() {
+        let c = demo();
+        assert!(c.check_compatible(4).is_ok());
+        assert!(c.check_compatible(5).is_err());
+    }
+
+    #[test]
+    fn empty_w_round_trips() {
+        let c = Checkpoint::new("a", "b", 0.0, vec![]);
+        assert_eq!(Checkpoint::from_bytes(&c.to_bytes()).unwrap(), c);
+    }
+}

@@ -1,0 +1,161 @@
+//! Command-line argument parser substrate (`clap` is unavailable offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches
+//! and positional arguments, with generated usage text. Declarative enough
+//! for the launcher and the examples:
+//!
+//! ```
+//! use fdsvrg::cli::Args;
+//! let args = Args::parse_from(["train", "--algo", "fdsvrg", "-q", "8", "--star"]);
+//! assert_eq!(args.subcommand(), Some("train"));
+//! assert_eq!(args.get("algo"), Some("fdsvrg"));
+//! assert_eq!(args.get_or("q", 4usize), 8);
+//! assert!(args.flag("star"));
+//! ```
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Parse from an explicit token stream. The first non-flag token is the
+    /// subcommand; `--key value`, `--key=value` and `-k value` become
+    /// options; `--key` followed by another flag (or nothing) is a switch.
+    pub fn parse_from<I, S>(tokens: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--").or_else(|| t.strip_prefix('-')) {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with('-') {
+                    args.options.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Raw option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Debug,
+    {
+        match self.options.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{key}={v}: parse error {e:?}")),
+            None => default,
+        }
+    }
+
+    /// Typed option, `None` when absent.
+    pub fn get_opt<T: FromStr>(&self, key: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Debug,
+    {
+        self.options
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|e| panic!("--{key}={v}: parse error {e:?}")))
+    }
+
+    /// Boolean switch (present without value).
+    pub fn flag(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse_from(["train", "--algo", "fdsvrg", "--q=8", "extra"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("algo"), Some("fdsvrg"));
+        assert_eq!(a.get_or("q", 0usize), 8);
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn switches_vs_options() {
+        let a = Args::parse_from(["x", "--verbose", "--eta", "0.5", "--star"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("star"));
+        assert!(!a.flag("eta"));
+        assert_eq!(a.get_or("eta", 0.0f64), 0.5);
+    }
+
+    #[test]
+    fn short_flags() {
+        let a = Args::parse_from(["run", "-q", "16"]);
+        assert_eq!(a.get_or("q", 0usize), 16);
+    }
+
+    #[test]
+    fn negative_number_values_need_equals() {
+        let a = Args::parse_from(["run", "--eta=-0.5"]);
+        assert_eq!(a.get_or("eta", 0.0f64), -0.5);
+    }
+
+    #[test]
+    fn typed_default_on_missing() {
+        let a = Args::parse_from(["run"]);
+        assert_eq!(a.get_or("missing", 7i32), 7);
+        assert_eq!(a.get_opt::<f64>("missing"), None);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_parse_panics() {
+        let a = Args::parse_from(["run", "--q", "abc"]);
+        let _: usize = a.get_or("q", 0);
+    }
+
+    #[test]
+    fn empty_input() {
+        let a = Args::parse_from(Vec::<String>::new());
+        assert_eq!(a.subcommand(), None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Cluster runtime: spawns one OS thread per simulated node and wires the
+//! endpoints. Owns process topology and deterministic teardown; algorithms
+//! only see their [`Endpoint`] plus whatever state the launcher hands them.
+
+use crate::net::{build, CommStats, Endpoint, SimParams};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Clock-synchronizing barrier: all participants wait, and every clock is
+/// advanced to the maximum over the group (plus nothing — barrier traffic
+/// is negligible next to the collectives and the paper does not count it).
+pub struct SimBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    waiting: usize,
+    generation: u64,
+    max_clock: f64,
+    release_clock: f64,
+}
+
+impl SimBarrier {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(SimBarrier {
+            n,
+            state: Mutex::new(BarrierState {
+                waiting: 0,
+                generation: 0,
+                max_clock: 0.0,
+                release_clock: 0.0,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Wait for all `n` nodes; returns the synchronized (max) clock.
+    pub fn wait(&self, ep: &mut Endpoint) -> f64 {
+        let my_clock = ep.now();
+        let mut st = self.state.lock().unwrap();
+        let gen = st.generation;
+        st.max_clock = st.max_clock.max(my_clock);
+        st.waiting += 1;
+        if st.waiting == self.n {
+            st.waiting = 0;
+            st.generation += 1;
+            st.release_clock = st.max_clock;
+            st.max_clock = 0.0;
+            self.cv.notify_all();
+        } else {
+            while st.generation == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+        let release = st.release_clock;
+        drop(st);
+        ep.discard_cpu(); // waiting time is not compute
+        ep.advance_to(release);
+        release
+    }
+}
+
+/// Outcome of a cluster run: per-node return values plus the comm counters.
+pub struct ClusterRun<T> {
+    pub results: Vec<T>,
+    pub stats: Arc<CommStats>,
+}
+
+/// Run `f(endpoint)` on `n_nodes` threads. Node 0 is the coordinator by
+/// convention; `f` receives each node's endpoint (id = index). A panic in
+/// any node fails the whole run loudly (rather than deadlocking the
+/// others): the panicking node's channel drops, peers blocked on it panic
+/// on `recv`, and the launcher re-raises.
+pub fn run_cluster<T, F>(n_nodes: usize, params: SimParams, f: F) -> ClusterRun<T>
+where
+    T: Send,
+    F: Fn(Endpoint) -> T + Send + Sync,
+{
+    let (eps, stats) = build(n_nodes, params);
+    let f = &f;
+    let results: Vec<T> = std::thread::scope(|scope| {
+        let handles: Vec<_> = eps.into_iter().map(|ep| scope.spawn(move || f(ep))).collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => {
+                    let msg = e
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| e.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "<non-string payload>".into());
+                    panic!("node panicked: {msg}");
+                }
+            })
+            .collect()
+    });
+    ClusterRun { results, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_in_order() {
+        let out = run_cluster(4, SimParams::free(), |ep| ep.id() * 10);
+        assert_eq!(out.results, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn barrier_syncs_clocks() {
+        let barrier = SimBarrier::new(3);
+        let out = run_cluster(3, SimParams { latency: 1.0, per_msg: 0.0, sec_per_scalar: 0.0 }, {
+            let barrier = barrier.clone();
+            move |mut ep| {
+                if ep.id() == 2 {
+                    // node 2 is "slow": pretend it received a late message
+                    ep.advance_to(5.0);
+                }
+                barrier.wait(&mut ep)
+            }
+        });
+        for t in out.results {
+            assert!(t >= 5.0, "barrier must release at the max clock, got {t}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "node panicked")]
+    fn node_panic_propagates() {
+        run_cluster(2, SimParams::free(), |ep| {
+            if ep.id() == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

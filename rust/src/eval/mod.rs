@@ -1,0 +1,198 @@
+//! Model evaluation: train/test splits and classification metrics.
+//!
+//! The paper reports objective-gap curves; a framework user also wants
+//! held-out quality. This module provides deterministic splits and the
+//! standard binary metrics (accuracy, precision/recall/F1, ROC-AUC)
+//! computed from margins `wᵀx`.
+
+use crate::sparse::libsvm::Dataset;
+use crate::util::Pcg64;
+
+/// Deterministic shuffled split: `test_frac` of instances go to the test
+/// set, the rest to train. Instances keep their column order within each
+/// side.
+pub fn train_test_split(ds: &Dataset, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let n = ds.n();
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::seed_from_u64(seed);
+    // Fisher–Yates
+    for i in (1..n).rev() {
+        let j = rng.below(i + 1);
+        idx.swap(i, j);
+    }
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let mut test_idx = test_idx.to_vec();
+    let mut train_idx = train_idx.to_vec();
+    test_idx.sort_unstable();
+    train_idx.sort_unstable();
+    let subset = |name: &str, which: &[usize]| Dataset {
+        name: format!("{}_{name}", ds.name),
+        x: ds.x.select_columns(which),
+        y: which.iter().map(|&i| ds.y[i]).collect(),
+    };
+    (subset("train", &train_idx), subset("test", &test_idx))
+}
+
+/// Binary classification metrics at threshold 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Metrics {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    pub auc: f64,
+    pub n: usize,
+}
+
+/// Compute metrics of `sign(wᵀx)` (and AUC of the margin ranking) on `ds`.
+pub fn evaluate(ds: &Dataset, w: &[f64]) -> Metrics {
+    let n = ds.n();
+    let margins: Vec<f64> = (0..n).map(|i| ds.x.col_dot(i, w)).collect();
+    let (mut tp, mut fp, mut tn, mut fn_) = (0usize, 0usize, 0usize, 0usize);
+    for i in 0..n {
+        let pred_pos = margins[i] >= 0.0;
+        let is_pos = ds.y[i] > 0.0;
+        match (pred_pos, is_pos) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, false) => tn += 1,
+            (false, true) => fn_ += 1,
+        }
+    }
+    let div = |a: usize, b: usize| if b == 0 { 0.0 } else { a as f64 / b as f64 };
+    let precision = div(tp, tp + fp);
+    let recall = div(tp, tp + fn_);
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    Metrics {
+        accuracy: div(tp + tn, n),
+        precision,
+        recall,
+        f1,
+        auc: auc(&margins, &ds.y),
+        n,
+    }
+}
+
+/// ROC-AUC by the rank statistic (ties get the midrank).
+pub fn auc(scores: &[f64], labels: &[f64]) -> f64 {
+    let n = scores.len();
+    assert_eq!(labels.len(), n);
+    let n_pos = labels.iter().filter(|&&y| y > 0.0).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // midrank assignment over tie groups
+    let mut rank = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            rank[order[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 =
+        (0..n).filter(|&i| labels[i] > 0.0).map(|i| rank[i]).sum();
+    let u = rank_sum_pos - (n_pos as f64) * (n_pos as f64 + 1.0) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, GenSpec};
+
+    fn ds() -> Dataset {
+        generate(&GenSpec::new("eval", 300, 200, 15).with_seed(13))
+    }
+
+    #[test]
+    fn split_covers_and_is_disjoint() {
+        let d = ds();
+        let (train, test) = train_test_split(&d, 0.25, 1);
+        assert_eq!(train.n() + test.n(), d.n());
+        assert_eq!(test.n(), 50);
+        assert_eq!(train.x.nnz() + test.x.nnz(), d.x.nnz());
+    }
+
+    #[test]
+    fn split_deterministic_per_seed() {
+        let d = ds();
+        let (a, _) = train_test_split(&d, 0.3, 7);
+        let (b, _) = train_test_split(&d, 0.3, 7);
+        assert_eq!(a.y, b.y);
+        let (c, _) = train_test_split(&d, 0.3, 8);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn perfect_classifier_metrics() {
+        let d = ds();
+        // build w that classifies via the labels themselves: w = Σ y_i x_i
+        // scaled (works because instances are near-orthogonal in high dim)
+        let mut w = vec![0.0; d.d()];
+        for i in 0..d.n() {
+            d.x.col_axpy(i, d.y[i], &mut w);
+        }
+        let m = evaluate(&d, &w);
+        // power-law features are heavily shared across instances, so the
+        // prototype classifier is good but not perfect
+        assert!(m.accuracy > 0.8, "{m:?}");
+        assert!(m.auc > 0.95, "{m:?}");
+        assert!(m.f1 > 0.8, "{m:?}");
+    }
+
+    #[test]
+    fn random_scores_auc_half() {
+        let mut rng = crate::util::Pcg64::seed_from_u64(3);
+        let scores: Vec<f64> = (0..4000).map(|_| rng.normal()).collect();
+        let labels: Vec<f64> =
+            (0..4000).map(|_| if rng.next_f64() < 0.5 { 1.0 } else { -1.0 }).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.03, "auc {a}");
+    }
+
+    #[test]
+    fn auc_handles_ties_and_degenerate_labels() {
+        // all-equal scores → midranks → AUC exactly 0.5
+        let scores = vec![1.0; 10];
+        let labels = vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        assert_eq!(auc(&scores, &labels), 0.5);
+        // single-class labels → defined as 0.5
+        assert_eq!(auc(&[0.3, 0.7], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn inverted_classifier_auc_below_half() {
+        let d = ds();
+        let mut w = vec![0.0; d.d()];
+        for i in 0..d.n() {
+            d.x.col_axpy(i, -d.y[i], &mut w); // anti-signal
+        }
+        let m = evaluate(&d, &w);
+        assert!(m.auc < 0.2, "{m:?}");
+    }
+
+    #[test]
+    fn metrics_consistency() {
+        let d = ds();
+        let w = vec![0.0; d.d()]; // all margins 0 → everything predicted +
+        let m = evaluate(&d, &w);
+        let pos_frac = d.y.iter().filter(|&&v| v > 0.0).count() as f64 / d.n() as f64;
+        assert!((m.accuracy - pos_frac).abs() < 1e-12);
+        assert!((m.recall - 1.0).abs() < 1e-12); // all positives caught
+    }
+}

@@ -1,0 +1,45 @@
+//! # FD-SVRG — Feature-Distributed SVRG for High-Dimensional Linear Classification
+//!
+//! A full reproduction of Zhang, Zhao, Gao & Li (2018). The library is the
+//! Layer-3 coordinator of a three-layer rust + JAX + Pallas stack:
+//!
+//! * [`algs::fdsvrg`] — the paper's contribution: a feature-distributed SVRG
+//!   coordinator where workers hold feature *slabs* of the data matrix and
+//!   exchange only scalars through a tree-structured reduce/broadcast.
+//! * [`algs`] — every baseline the paper evaluates against, built on the same
+//!   substrate: serial SVRG/SGD, DSVRG (decentralized ring), a
+//!   Parameter-Server framework hosting SynSVRG, AsySVRG and PS-Lite-style
+//!   asynchronous SGD.
+//! * [`net`] / [`cluster`] — an in-process multi-node cluster simulator with
+//!   exact communication accounting (scalars per link) and a
+//!   latency/bandwidth simulated clock, standing in for the paper's
+//!   16-node 10GbE testbed.
+//! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled HLO
+//!   artifacts produced by the JAX/Pallas build layer (`python/compile/`)
+//!   and serves them to the hot path; python never runs at training time.
+//! * [`sparse`] / [`linalg`] / [`loss`] / [`data`] — the data-plane
+//!   substrates: CSC/CSR sparse matrices, the LibSVM text format, dense
+//!   kernels, the paper's loss functions, and synthetic dataset generators
+//!   matched to the paper's four benchmark datasets.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod algs;
+pub mod bench;
+pub mod checkpoint;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod loss;
+pub mod metrics;
+pub mod multiclass;
+pub mod net;
+pub mod runtime;
+pub mod sparse;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,305 @@
+//! Loss functions and regularizers for the linear-classification objective
+//! (paper eq. 1–2):
+//!
+//! ```text
+//! min_w f(w) = (1/N) Σ_i φ_i(wᵀx_i, y_i) + g(w)
+//! ```
+//!
+//! All losses are exposed through their scalar margin form: the algorithms
+//! only ever need `φ(z, y)` and `∂φ/∂z` at `z = wᵀx_i`, which is exactly why
+//! feature distribution works — the cross-worker coupling is one scalar.
+
+/// Scalar loss `φ(z, y)` with `z = wᵀx`, `y ∈ {-1, +1}`.
+pub trait Loss: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Loss value.
+    fn value(&self, z: f64, y: f64) -> f64;
+    /// Derivative w.r.t. the margin input `z`.
+    fn derivative(&self, z: f64, y: f64) -> f64;
+    /// Upper bound on `φ''` w.r.t. `z` — enters the smoothness constant
+    /// `L ≤ φ''_max · max_i ‖x_i‖² + λ` used for step-size selection and the
+    /// Theorem-1 bound check.
+    fn curvature_bound(&self) -> f64;
+}
+
+/// Logistic loss `log(1 + e^{-y z})` — the paper's experimental choice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Logistic;
+
+impl Loss for Logistic {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    fn value(&self, z: f64, y: f64) -> f64 {
+        let m = y * z;
+        // numerically stable log(1 + e^{-m})
+        if m > 0.0 {
+            (-m).exp().ln_1p()
+        } else {
+            -m + m.exp().ln_1p()
+        }
+    }
+
+    fn derivative(&self, z: f64, y: f64) -> f64 {
+        let m = y * z;
+        // -y σ(-m) computed stably
+        let s = if m > 0.0 { (-m).exp() / (1.0 + (-m).exp()) } else { 1.0 / (1.0 + m.exp()) };
+        -y * s
+    }
+
+    fn curvature_bound(&self) -> f64 {
+        0.25
+    }
+}
+
+/// Smoothed (quadratically-smoothed) hinge, the L-smooth stand-in for the
+/// linear SVM loss `max{0, 1 − yz}` the paper mentions in §2. The plain
+/// hinge is not L-smooth, so SVRG theory (and Theorem 1) needs this form:
+///
+/// ```text
+/// φ(z,y) = 0                    if yz ≥ 1
+///        = (1 − yz)² / (2γ)     if 1 − γ < yz < 1
+///        = 1 − yz − γ/2         otherwise
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct SmoothedHinge {
+    pub gamma: f64,
+}
+
+impl Default for SmoothedHinge {
+    fn default() -> Self {
+        SmoothedHinge { gamma: 1.0 }
+    }
+}
+
+impl Loss for SmoothedHinge {
+    fn name(&self) -> &'static str {
+        "smoothed_hinge"
+    }
+
+    fn value(&self, z: f64, y: f64) -> f64 {
+        let m = y * z;
+        if m >= 1.0 {
+            0.0
+        } else if m > 1.0 - self.gamma {
+            (1.0 - m) * (1.0 - m) / (2.0 * self.gamma)
+        } else {
+            1.0 - m - self.gamma / 2.0
+        }
+    }
+
+    fn derivative(&self, z: f64, y: f64) -> f64 {
+        let m = y * z;
+        if m >= 1.0 {
+            0.0
+        } else if m > 1.0 - self.gamma {
+            -y * (1.0 - m) / self.gamma
+        } else {
+            -y
+        }
+    }
+
+    fn curvature_bound(&self) -> f64 {
+        1.0 / self.gamma
+    }
+}
+
+/// Squared loss `(z − y)²/2` — makes the objective a ridge regression;
+/// used by tests because its optimum is available in closed form on tiny
+/// problems.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Squared;
+
+impl Loss for Squared {
+    fn name(&self) -> &'static str {
+        "squared"
+    }
+
+    fn value(&self, z: f64, y: f64) -> f64 {
+        0.5 * (z - y) * (z - y)
+    }
+
+    fn derivative(&self, z: f64, y: f64) -> f64 {
+        z - y
+    }
+
+    fn curvature_bound(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Regularizer `g(w)`. The paper's experiments use L2; L1 is supported via
+/// subgradient (the paper's framework statement allows both — §4.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Regularizer {
+    None,
+    L2 { lambda: f64 },
+    L1 { lambda: f64 },
+}
+
+impl Regularizer {
+    pub fn value(&self, w: &[f64]) -> f64 {
+        match *self {
+            Regularizer::None => 0.0,
+            Regularizer::L2 { lambda } => 0.5 * lambda * crate::linalg::dot(w, w),
+            Regularizer::L1 { lambda } => lambda * w.iter().map(|x| x.abs()).sum::<f64>(),
+        }
+    }
+
+    /// Gradient (or subgradient) contribution for coordinate value `wi`.
+    #[inline]
+    pub fn grad_coord(&self, wi: f64) -> f64 {
+        match *self {
+            Regularizer::None => 0.0,
+            Regularizer::L2 { lambda } => lambda * wi,
+            Regularizer::L1 { lambda } => lambda * wi.signum() * if wi == 0.0 { 0.0 } else { 1.0 },
+        }
+    }
+
+    /// Add ∇g(w) into `out`.
+    pub fn add_grad(&self, w: &[f64], out: &mut [f64]) {
+        match *self {
+            Regularizer::None => {}
+            Regularizer::L2 { lambda } => crate::linalg::axpy(lambda, w, out),
+            Regularizer::L1 { lambda } => {
+                for (o, &wi) in out.iter_mut().zip(w.iter()) {
+                    if wi != 0.0 {
+                        *o += lambda * wi.signum();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Strong-convexity modulus contributed by the regularizer.
+    pub fn strong_convexity(&self) -> f64 {
+        match *self {
+            Regularizer::L2 { lambda } => lambda,
+            _ => 0.0,
+        }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        match *self {
+            Regularizer::None => 0.0,
+            Regularizer::L2 { lambda } | Regularizer::L1 { lambda } => lambda,
+        }
+    }
+}
+
+/// Which loss to instantiate — config-level enum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    Logistic,
+    SmoothedHinge,
+    Squared,
+}
+
+impl LossKind {
+    pub fn build(self) -> Box<dyn Loss> {
+        match self {
+            LossKind::Logistic => Box::new(Logistic),
+            LossKind::SmoothedHinge => Box::new(SmoothedHinge::default()),
+            LossKind::Squared => Box::new(Squared),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "logistic" | "lr" => Some(LossKind::Logistic),
+            "hinge" | "svm" | "smoothed_hinge" => Some(LossKind::SmoothedHinge),
+            "squared" | "ridge" => Some(LossKind::Squared),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_derivative(loss: &dyn Loss, z: f64, y: f64) {
+        let h = 1e-6;
+        let num = (loss.value(z + h, y) - loss.value(z - h, y)) / (2.0 * h);
+        let ana = loss.derivative(z, y);
+        assert!(
+            (num - ana).abs() < 1e-5 * (1.0 + ana.abs()),
+            "{}: z={z} y={y}: numeric {num} vs analytic {ana}",
+            loss.name()
+        );
+    }
+
+    #[test]
+    fn logistic_derivative_matches_numeric() {
+        for &z in &[-30.0, -2.0, -0.1, 0.0, 0.1, 2.0, 30.0] {
+            for &y in &[-1.0, 1.0] {
+                check_derivative(&Logistic, z, y);
+            }
+        }
+    }
+
+    #[test]
+    fn logistic_extreme_margins_stable() {
+        let l = Logistic;
+        assert!(l.value(1000.0, 1.0).is_finite());
+        assert!(l.value(-1000.0, 1.0).is_finite());
+        assert!((l.value(-1000.0, 1.0) - 1000.0).abs() < 1e-9);
+        assert!(l.derivative(1000.0, 1.0).abs() < 1e-12);
+        assert!((l.derivative(-1000.0, 1.0) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logistic_value_at_zero() {
+        assert!((Logistic.value(0.0, 1.0) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smoothed_hinge_regions_and_derivative() {
+        let h = SmoothedHinge { gamma: 0.5 };
+        assert_eq!(h.value(2.0, 1.0), 0.0);
+        assert!(h.value(0.0, 1.0) > 0.0);
+        for &z in &[-2.0, 0.2, 0.6, 0.74, 0.9, 1.5] {
+            for &y in &[-1.0, 1.0] {
+                check_derivative(&h, z, y);
+            }
+        }
+    }
+
+    #[test]
+    fn squared_derivative() {
+        for &z in &[-3.0, 0.0, 2.0] {
+            check_derivative(&Squared, z, 1.0);
+        }
+    }
+
+    #[test]
+    fn l2_regularizer_grad_and_value() {
+        let r = Regularizer::L2 { lambda: 0.1 };
+        let w = [1.0, -2.0, 0.0];
+        assert!((r.value(&w) - 0.05 * 5.0).abs() < 1e-12);
+        let mut g = vec![0.0; 3];
+        r.add_grad(&w, &mut g);
+        assert_eq!(g, vec![0.1, -0.2, 0.0]);
+        assert_eq!(r.strong_convexity(), 0.1);
+    }
+
+    #[test]
+    fn l1_regularizer_subgradient() {
+        let r = Regularizer::L1 { lambda: 2.0 };
+        let w = [3.0, -1.0, 0.0];
+        assert_eq!(r.value(&w), 8.0);
+        let mut g = vec![0.0; 3];
+        r.add_grad(&w, &mut g);
+        assert_eq!(g, vec![2.0, -2.0, 0.0]);
+        assert_eq!(r.strong_convexity(), 0.0);
+    }
+
+    #[test]
+    fn loss_kind_parse() {
+        assert_eq!(LossKind::parse("logistic"), Some(LossKind::Logistic));
+        assert_eq!(LossKind::parse("svm"), Some(LossKind::SmoothedHinge));
+        assert_eq!(LossKind::parse("ridge"), Some(LossKind::Squared));
+        assert_eq!(LossKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,155 @@
+//! Minimal JSON writer for run results (`serde` is unavailable offline).
+//!
+//! Emits one self-describing document per run — enough for downstream
+//! notebooks to ingest `results/*.json` without parsing our CSV dialect.
+
+use super::RunResult;
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Escape a string for a JSON literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON-safe float (JSON has no NaN/Inf).
+fn num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Serialize a [`RunResult`] (trace included) as JSON.
+pub fn run_result_to_json(res: &RunResult, f_opt: Option<f64>) -> String {
+    let mut s = String::with_capacity(4096);
+    s.push_str("{\n");
+    s.push_str(&format!("  \"algorithm\": \"{}\",\n", esc(&res.algorithm)));
+    s.push_str(&format!("  \"dataset\": \"{}\",\n", esc(&res.dataset)));
+    s.push_str(&format!("  \"total_sim_time\": {},\n", num(res.total_sim_time)));
+    s.push_str(&format!("  \"total_wall_time\": {},\n", num(res.total_wall_time)));
+    s.push_str(&format!("  \"total_scalars\": {},\n", res.total_scalars));
+    s.push_str(&format!(
+        "  \"busiest_node_scalars\": {},\n",
+        res.busiest_node_scalars
+    ));
+    s.push_str(&format!(
+        "  \"f_opt\": {},\n",
+        f_opt.map(num).unwrap_or_else(|| "null".into())
+    ));
+    s.push_str(&format!("  \"dim\": {},\n", res.w.len()));
+    s.push_str("  \"trace\": [\n");
+    for (i, p) in res.trace.points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"outer\": {}, \"sim_time\": {}, \"wall_time\": {}, \
+             \"scalars\": {}, \"grads\": {}, \"objective\": {}{}}}{}\n",
+            p.outer,
+            num(p.sim_time),
+            num(p.wall_time),
+            p.scalars,
+            p.grads,
+            num(p.objective),
+            f_opt
+                .map(|f| format!(", \"gap\": {}", num(p.objective - f)))
+                .unwrap_or_default(),
+            if i + 1 == res.trace.points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Write a run result as `<dir>/<tag>.json`.
+pub fn write_json<P: AsRef<Path>>(res: &RunResult, f_opt: Option<f64>, path: P) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    f.write_all(run_result_to_json(res, f_opt).as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{Trace, TracePoint};
+
+    fn demo() -> RunResult {
+        let mut trace = Trace::default();
+        trace.push(TracePoint {
+            outer: 0,
+            sim_time: 0.0,
+            wall_time: 0.0,
+            scalars: 0,
+            grads: 0,
+            objective: 0.7,
+        });
+        trace.push(TracePoint {
+            outer: 1,
+            sim_time: 0.5,
+            wall_time: 1.0,
+            scalars: 640,
+            grads: 80,
+            objective: 0.3,
+        });
+        RunResult {
+            algorithm: "fdsvrg".into(),
+            dataset: "tiny \"quoted\"".into(),
+            w: vec![0.0; 4],
+            trace,
+            total_sim_time: 0.5,
+            total_wall_time: 1.0,
+            total_scalars: 640,
+            busiest_node_scalars: 160,
+        }
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let j = run_result_to_json(&demo(), Some(0.25));
+        assert!(j.contains("\"algorithm\": \"fdsvrg\""));
+        assert!(j.contains("tiny \\\"quoted\\\""));
+        assert!(j.contains("\"gap\": 0.04999999999999999") || j.contains("\"gap\": 0.05"));
+        // structurally: balanced braces/brackets
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_without_fopt_has_no_gap() {
+        let j = run_result_to_json(&demo(), None);
+        assert!(j.contains("\"f_opt\": null"));
+        assert!(!j.contains("\"gap\""));
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(num(f64::NAN), "null");
+        assert_eq!(num(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn write_json_creates_file() {
+        let dir = std::env::temp_dir().join("fdsvrg_json_test");
+        let path = dir.join("run.json");
+        write_json(&demo(), Some(0.2), &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with('{'));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,243 @@
+//! Convergence traces, counters and result writers.
+//!
+//! Every algorithm run produces a [`Trace`]: one [`TracePoint`] per outer
+//! iteration carrying the three axes the paper plots — simulated cluster
+//! time (Fig. 6/8/9), communicated scalars (Fig. 7) and the objective gap.
+//! Writers emit CSV that the experiment drivers collect into `results/`.
+
+pub mod json;
+pub mod plot;
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// One sampled point of a run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Outer-loop (epoch) index, 0 = before the first epoch.
+    pub outer: usize,
+    /// Simulated cluster time, seconds.
+    pub sim_time: f64,
+    /// Real wall-clock of the host process, seconds (reported alongside;
+    /// contention-polluted, not used for figures).
+    pub wall_time: f64,
+    /// Total scalars communicated so far (all links).
+    pub scalars: u64,
+    /// Stochastic gradient evaluations so far (N per full-gradient pass +
+    /// 1 per inner step), the paper's §4.5 normalization.
+    pub grads: u64,
+    /// Objective value f(w).
+    pub objective: f64,
+}
+
+/// A full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    pub fn last_objective(&self) -> Option<f64> {
+        self.points.last().map(|p| p.objective)
+    }
+
+    /// First simulated time at which the gap `f(w) − f_opt` drops below
+    /// `target` (linear interpolation between trace points, like reading a
+    /// convergence plot). `None` if never reached.
+    pub fn time_to_gap(&self, f_opt: f64, target: f64) -> Option<f64> {
+        self.crossing(f_opt, target).map(|(_, t)| t)
+    }
+
+    /// Scalars communicated when the gap first drops below `target`.
+    pub fn comm_to_gap(&self, f_opt: f64, target: f64) -> Option<u64> {
+        self.crossing(f_opt, target).map(|(i, _)| self.points[i].scalars)
+    }
+
+    fn crossing(&self, f_opt: f64, target: f64) -> Option<(usize, f64)> {
+        for (i, p) in self.points.iter().enumerate() {
+            let gap = p.objective - f_opt;
+            if gap <= target {
+                if i == 0 {
+                    return Some((0, p.sim_time));
+                }
+                let prev = &self.points[i - 1];
+                let g0 = prev.objective - f_opt;
+                let g1 = gap;
+                // log-linear interpolation on the gap (convergence is
+                // roughly geometric, so interpolate in log space)
+                let frac = if g0 > 0.0 && g1 > 0.0 && g0 != g1 {
+                    ((g0.ln() - target.max(1e-300).ln()) / (g0.ln() - g1.ln())).clamp(0.0, 1.0)
+                } else {
+                    1.0
+                };
+                return Some((i, prev.sim_time + frac * (p.sim_time - prev.sim_time)));
+            }
+        }
+        None
+    }
+
+    /// Write `outer,sim_time,wall_time,scalars,grads,objective,gap` CSV.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P, f_opt: f64) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        writeln!(f, "outer,sim_time,wall_time,scalars,grads,objective,gap")?;
+        for p in &self.points {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{},{},{:.12},{:.6e}",
+                p.outer,
+                p.sim_time,
+                p.wall_time,
+                p.scalars,
+                p.grads,
+                p.objective,
+                p.objective - f_opt
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Result of a complete algorithm run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algorithm: String,
+    pub dataset: String,
+    pub w: Vec<f64>,
+    pub trace: Trace,
+    pub total_sim_time: f64,
+    pub total_wall_time: f64,
+    pub total_scalars: u64,
+    pub busiest_node_scalars: u64,
+}
+
+impl RunResult {
+    pub fn final_objective(&self) -> f64 {
+        self.trace.last_objective().unwrap_or(f64::NAN)
+    }
+}
+
+/// Simple aligned-text table writer for the CLI/bench reports.
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        TextTable { header: header.into_iter().map(|s| s.into()).collect(), rows: vec![] }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(|s| s.into()).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for c in 0..ncol {
+            width[c] = self.header[c].len();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}  ", cell, w = width[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace_with_gaps(gaps: &[f64]) -> Trace {
+        let mut t = Trace::default();
+        for (i, &g) in gaps.iter().enumerate() {
+            t.push(TracePoint {
+                outer: i,
+                sim_time: i as f64,
+                wall_time: i as f64 * 2.0,
+                scalars: (i as u64) * 100,
+                grads: (i as u64) * 10,
+                objective: 1.0 + g, // f_opt = 1.0
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn time_to_gap_interpolates() {
+        let t = trace_with_gaps(&[1.0, 0.1, 0.001]);
+        let hit = t.time_to_gap(1.0, 0.01).unwrap();
+        assert!(hit > 1.0 && hit <= 2.0, "{hit}");
+        // exact hit at a point
+        let hit = t.time_to_gap(1.0, 0.1).unwrap();
+        assert!((hit - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_to_gap_unreached() {
+        let t = trace_with_gaps(&[1.0, 0.5]);
+        assert!(t.time_to_gap(1.0, 1e-4).is_none());
+    }
+
+    #[test]
+    fn comm_to_gap_reads_scalars() {
+        let t = trace_with_gaps(&[1.0, 0.1, 0.001]);
+        assert_eq!(t.comm_to_gap(1.0, 0.01), Some(200));
+    }
+
+    #[test]
+    fn csv_round_shape() {
+        let t = trace_with_gaps(&[1.0, 0.1]);
+        let dir = std::env::temp_dir().join("fdsvrg_test_csv");
+        let path = dir.join("t.csv");
+        t.write_csv(&path, 1.0).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("outer,"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn text_table_alignment() {
+        let mut t = TextTable::new(vec!["a", "long_header"]);
+        t.row(vec!["xxxxx", "1"]);
+        let s = t.render();
+        assert!(s.contains("a      long_header"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = TextTable::new(vec!["a"]);
+        t.row(vec!["1", "2"]);
+    }
+}

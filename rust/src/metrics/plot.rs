@@ -1,0 +1,205 @@
+//! ASCII convergence plots — terminal renderings of the paper's figures.
+//!
+//! The experiment drivers print one [`AsciiPlot`] per figure panel so the
+//! "who wins, by what factor, where curves cross" shape is visible
+//! directly in CI logs and EXPERIMENTS.md without a plotting stack. The
+//! y axis is the objective gap on a log₁₀ scale (as in the paper's
+//! Figures 6–8); the x axis is time or communicated scalars.
+
+use super::Trace;
+
+/// One labelled series: (x, gap) points, gap > 0.
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Build a time-axis series from a trace (Fig. 6/8/9 style).
+    pub fn gap_vs_time(label: &str, trace: &Trace, f_opt: f64) -> Series {
+        Series {
+            label: label.to_string(),
+            points: trace
+                .points
+                .iter()
+                .filter(|p| p.objective - f_opt > 0.0)
+                .map(|p| (p.sim_time, p.objective - f_opt))
+                .collect(),
+        }
+    }
+
+    /// Build a communication-axis series (Fig. 7 style).
+    pub fn gap_vs_comm(label: &str, trace: &Trace, f_opt: f64) -> Series {
+        Series {
+            label: label.to_string(),
+            points: trace
+                .points
+                .iter()
+                .filter(|p| p.objective - f_opt > 0.0)
+                .map(|p| (p.scalars as f64, p.objective - f_opt))
+                .collect(),
+        }
+    }
+}
+
+/// Log-y scatter plot rendered with one glyph per series.
+pub struct AsciiPlot {
+    pub title: String,
+    pub x_label: String,
+    pub width: usize,
+    pub height: usize,
+    series: Vec<Series>,
+}
+
+const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+
+impl AsciiPlot {
+    pub fn new(title: &str, x_label: &str) -> AsciiPlot {
+        AsciiPlot {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            width: 72,
+            height: 20,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Series) {
+        if !s.points.is_empty() {
+            self.series.push(s);
+        }
+    }
+
+    /// Render the plot. Returns an empty string when no series has points.
+    pub fn render(&self) -> String {
+        if self.series.is_empty() {
+            return String::new();
+        }
+        let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut g_min, mut g_max) = (f64::INFINITY, f64::NEG_INFINITY);
+        for s in &self.series {
+            for &(x, g) in &s.points {
+                x_min = x_min.min(x);
+                x_max = x_max.max(x);
+                g_min = g_min.min(g);
+                g_max = g_max.max(g);
+            }
+        }
+        if !(x_max > x_min) {
+            x_max = x_min + 1.0;
+        }
+        let (ly_min, mut ly_max) = (g_min.log10(), g_max.log10());
+        if !(ly_max > ly_min) {
+            ly_max = ly_min + 1.0;
+        }
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, s) in self.series.iter().enumerate() {
+            let glyph = GLYPHS[si % GLYPHS.len()];
+            for &(x, g) in &s.points {
+                let cx = ((x - x_min) / (x_max - x_min) * (self.width - 1) as f64).round()
+                    as usize;
+                let cy = ((ly_max - g.log10()) / (ly_max - ly_min)
+                    * (self.height - 1) as f64)
+                    .round() as usize;
+                grid[cy.min(self.height - 1)][cx.min(self.width - 1)] = glyph;
+            }
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!("  {}\n", self.title));
+        for (r, row) in grid.iter().enumerate() {
+            let ly = ly_max - (ly_max - ly_min) * r as f64 / (self.height - 1) as f64;
+            let label = if r % 4 == 0 { format!("1e{ly:+.0}") } else { String::new() };
+            out.push_str(&format!("{label:>7} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{:>7}  {:<w$.3}{:>12.3}\n",
+            "",
+            x_min,
+            x_max,
+            w = self.width - 10
+        ));
+        out.push_str(&format!("{:>9}gap vs {}   ", "", self.x_label));
+        for (si, s) in self.series.iter().enumerate() {
+            out.push_str(&format!("[{}] {}  ", GLYPHS[si % GLYPHS.len()], s.label));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TracePoint;
+
+    fn demo_trace(rate: f64) -> Trace {
+        let mut t = Trace::default();
+        for i in 0..10 {
+            t.push(TracePoint {
+                outer: i,
+                sim_time: i as f64,
+                wall_time: i as f64,
+                scalars: 100 * i as u64,
+                grads: 10 * i as u64,
+                objective: 1.0 + rate.powi(i as i32),
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn plot_renders_all_series() {
+        let mut plot = AsciiPlot::new("demo", "time (s)");
+        plot.add(Series::gap_vs_time("fast", &demo_trace(0.3), 1.0));
+        plot.add(Series::gap_vs_time("slow", &demo_trace(0.8), 1.0));
+        let s = plot.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("[*] fast"));
+        assert!(s.contains("[o] slow"));
+        assert!(s.contains('*'), "{s}");
+        assert!(s.lines().count() > 20);
+    }
+
+    #[test]
+    fn empty_plot_renders_empty() {
+        let plot = AsciiPlot::new("empty", "x");
+        assert!(plot.render().is_empty());
+    }
+
+    #[test]
+    fn comm_axis_uses_scalars() {
+        let s = Series::gap_vs_comm("c", &demo_trace(0.5), 1.0);
+        assert_eq!(s.points[1].0, 100.0);
+    }
+
+    #[test]
+    fn zero_gap_points_are_dropped() {
+        // the final point may hit f_opt exactly; log scale must not panic
+        let mut t = demo_trace(0.5);
+        let last = t.points.last_mut().unwrap();
+        last.objective = 1.0;
+        let s = Series::gap_vs_time("z", &t, 1.0);
+        assert_eq!(s.points.len(), 9);
+        let mut plot = AsciiPlot::new("t", "x");
+        plot.add(s);
+        assert!(!plot.render().is_empty());
+    }
+
+    #[test]
+    fn single_point_series_renders() {
+        let mut t = Trace::default();
+        t.push(TracePoint {
+            outer: 0,
+            sim_time: 0.0,
+            wall_time: 0.0,
+            scalars: 0,
+            grads: 0,
+            objective: 2.0,
+        });
+        let mut plot = AsciiPlot::new("one", "x");
+        plot.add(Series::gap_vs_time("p", &t, 1.0));
+        assert!(!plot.render().is_empty());
+    }
+}

@@ -1,0 +1,444 @@
+//! In-process cluster network simulator.
+//!
+//! Stands in for the paper's testbed (machines on 10GbE). Every simulated
+//! node runs on its own OS thread and owns an [`Endpoint`]; endpoints
+//! exchange [`Msg`]s over channels. Two things make this a *simulator*
+//! rather than just a thread pool:
+//!
+//! 1. **Exact communication accounting.** Every payload scalar is counted
+//!    (a `d`-vector costs `d`, matching the paper's Fig. 7 axis), per
+//!    sender, in [`CommStats`]. The counters are what Figure 7 and the
+//!    §4.5 complexity table read out, and they are independent of how the
+//!    simulation is scheduled.
+//! 2. **A simulated clock.** Each node accumulates (a) its own compute,
+//!    measured on the per-thread CPU clock so co-scheduled sibling nodes
+//!    don't pollute it, and (b) message delays `α + len·β` (latency +
+//!    scalar transfer time). A receive advances the receiver to
+//!    `max(own_clock, sender_send_time + delay)` — the standard
+//!    happens-before rule of a distributed-event simulation. Reported
+//!    times are therefore the schedule a real cluster would follow, even
+//!    though all nodes share one machine.
+//!
+//! Evaluation traffic (objective snapshots) uses the `send_eval`/`recv_eval`
+//! pair which bypasses both the counters and the clock.
+
+pub mod topology;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use crate::util::time::ThreadCpuTimer;
+
+pub type NodeId = usize;
+
+/// Message tags: algorithm phases use distinct tags so selective receive
+/// can't mismatch messages that race on the same link.
+pub type Tag = u32;
+
+pub mod tags {
+    use super::Tag;
+    pub const REDUCE: Tag = 1;
+    pub const BCAST: Tag = 2;
+    pub const PULL_REQ: Tag = 3;
+    pub const PULL_RESP: Tag = 4;
+    pub const PUSH: Tag = 5;
+    pub const CTRL: Tag = 6;
+    pub const RING: Tag = 7;
+    pub const EVAL: Tag = 100;
+}
+
+/// Network cost model (LogP-flavoured):
+///
+/// * `latency` — wire/switch latency; parallel across links (two messages
+///   on different links overlap fully).
+/// * `per_msg` — per-message *endpoint* overhead (NIC + kernel stack);
+///   serializes at each node, once on send and once on receive. This is
+///   what makes a star hub a hot-spot and the paper's Fig.-5 tree faster:
+///   the hub must process `q` messages one after another while tree nodes
+///   each handle `O(log q)`.
+/// * `sec_per_scalar` — transfer time per payload scalar (8-byte f64 over
+///   the link bandwidth); serializes with `per_msg` at the endpoints.
+#[derive(Clone, Copy, Debug)]
+pub struct SimParams {
+    /// Wire latency in seconds. Default 40 µs (10GbE switch + propagation).
+    pub latency: f64,
+    /// Per-message endpoint processing. Default 10 µs.
+    pub per_msg: f64,
+    /// Seconds per payload scalar. Default: 8 bytes over 10 Gb/s.
+    pub sec_per_scalar: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams { latency: 40e-6, per_msg: 10e-6, sec_per_scalar: 8.0 * 8.0 / 10e9 }
+    }
+}
+
+impl SimParams {
+    /// Endpoint occupancy of one message (applied on both ends).
+    pub fn occupancy(&self, scalars: usize) -> f64 {
+        self.per_msg + scalars as f64 * self.sec_per_scalar
+    }
+
+    /// An idealized zero-cost network (used by equivalence tests where only
+    /// the numerics matter).
+    pub fn free() -> Self {
+        SimParams { latency: 0.0, per_msg: 0.0, sec_per_scalar: 0.0 }
+    }
+}
+
+/// Global communication counters (scalars & messages per sending node).
+#[derive(Debug)]
+pub struct CommStats {
+    scalars: Vec<AtomicU64>,
+    messages: Vec<AtomicU64>,
+}
+
+impl CommStats {
+    pub fn new(n_nodes: usize) -> Arc<Self> {
+        Arc::new(CommStats {
+            scalars: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
+            messages: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    pub fn total_scalars(&self) -> u64 {
+        self.scalars.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.messages.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn node_scalars(&self, id: NodeId) -> u64 {
+        self.scalars[id].load(Ordering::Relaxed)
+    }
+
+    /// Scalars sent by the busiest single node — the paper's argument
+    /// against centralized frameworks is about exactly this number.
+    pub fn busiest_node_scalars(&self) -> u64 {
+        self.scalars.iter().map(|a| a.load(Ordering::Relaxed)).max().unwrap_or(0)
+    }
+
+    fn record(&self, from: NodeId, scalars: usize) {
+        self.scalars[from].fetch_add(scalars as u64, Ordering::Relaxed);
+        self.messages[from].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// A network message. `send_time` is the sender's simulated clock at the
+/// moment of sending; `counted=false` marks evaluation traffic.
+pub struct Msg {
+    pub from: NodeId,
+    pub tag: Tag,
+    pub data: Vec<f64>,
+    pub send_time: f64,
+    counted: bool,
+}
+
+/// One node's handle on the network.
+pub struct Endpoint {
+    id: NodeId,
+    n_nodes: usize,
+    senders: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    stash: VecDeque<Msg>,
+    clock: f64,
+    /// NIC occupancy horizons: outgoing/incoming messages serialize here.
+    nic_out: f64,
+    nic_in: f64,
+    cpu: ThreadCpuTimer,
+    params: SimParams,
+    stats: Arc<CommStats>,
+}
+
+impl Endpoint {
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn params(&self) -> SimParams {
+        self.params
+    }
+
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
+    }
+
+    /// Charge the thread CPU time burned since the last network operation
+    /// to this node's simulated clock.
+    #[inline]
+    pub fn tick(&mut self) {
+        self.clock += self.cpu.lap();
+    }
+
+    /// Discard CPU time burned since the last network op (evaluation /
+    /// bookkeeping that a real deployment would do off the critical path).
+    pub fn discard_cpu(&mut self) {
+        let _ = self.cpu.lap();
+    }
+
+    /// Current simulated time at this node.
+    pub fn now(&mut self) -> f64 {
+        self.tick();
+        self.clock
+    }
+
+    /// Force the clock forward (barrier synchronization).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.clock {
+            self.clock = t;
+        }
+    }
+
+    /// Send `data` to node `to`; counts scalars, serializes on this node's
+    /// outgoing NIC and stamps the on-the-wire time.
+    pub fn send(&mut self, to: NodeId, tag: Tag, data: Vec<f64>) {
+        self.tick();
+        self.stats.record(self.id, data.len());
+        let wire_time = self.clock.max(self.nic_out) + self.params.occupancy(data.len());
+        self.nic_out = wire_time;
+        let msg = Msg { from: self.id, tag, data, send_time: wire_time, counted: true };
+        // A disconnected peer means the run is being torn down (e.g. a
+        // worker panicked); panicking here unwinds this node too.
+        self.senders[to].send(msg).expect("peer endpoint disconnected");
+    }
+
+    /// Evaluation-plane send: not counted, no clock effect on either side.
+    pub fn send_eval(&mut self, to: NodeId, tag: Tag, data: Vec<f64>) {
+        self.discard_cpu();
+        let msg = Msg { from: self.id, tag, data, send_time: 0.0, counted: false };
+        self.senders[to].send(msg).expect("peer endpoint disconnected");
+    }
+
+    fn deliver(&mut self, msg: &Msg) {
+        if msg.counted {
+            let at_nic = msg.send_time + self.params.latency;
+            let done = at_nic.max(self.nic_in) + self.params.occupancy(msg.data.len());
+            self.nic_in = done;
+            if done > self.clock {
+                self.clock = done;
+            }
+        }
+    }
+
+    /// Blocking selective receive: first message matching `from` and `tag`.
+    pub fn recv_from(&mut self, from: NodeId, tag: Tag) -> Msg {
+        self.tick();
+        if let Some(pos) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
+            let msg = self.stash.remove(pos).unwrap();
+            self.deliver(&msg);
+            return msg;
+        }
+        loop {
+            let msg = self.rx.recv().expect("all peers disconnected while receiving");
+            if msg.from == from && msg.tag == tag {
+                self.deliver(&msg);
+                return msg;
+            }
+            self.stash.push_back(msg);
+        }
+    }
+
+    /// Blocking receive of any message with the given tag.
+    pub fn recv_tag(&mut self, tag: Tag) -> Msg {
+        self.tick();
+        if let Some(pos) = self.stash.iter().position(|m| m.tag == tag) {
+            let msg = self.stash.remove(pos).unwrap();
+            self.deliver(&msg);
+            return msg;
+        }
+        loop {
+            let msg = self.rx.recv().expect("all peers disconnected while receiving");
+            if msg.tag == tag {
+                self.deliver(&msg);
+                return msg;
+            }
+            self.stash.push_back(msg);
+        }
+    }
+
+    /// Blocking receive of any message at all (parameter-server event loop).
+    pub fn recv_any(&mut self) -> Msg {
+        self.tick();
+        if let Some(msg) = self.stash.pop_front() {
+            self.deliver(&msg);
+            return msg;
+        }
+        let msg = self.rx.recv().expect("all peers disconnected while receiving");
+        self.deliver(&msg);
+        msg
+    }
+
+    /// Evaluation-plane receive (no clock effect).
+    pub fn recv_eval_from(&mut self, from: NodeId, tag: Tag) -> Msg {
+        self.discard_cpu();
+        if let Some(pos) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
+            return self.stash.remove(pos).unwrap();
+        }
+        loop {
+            let msg = self.rx.recv().expect("all peers disconnected while receiving");
+            if msg.from == from && msg.tag == tag {
+                return msg;
+            }
+            self.stash.push_back(msg);
+        }
+    }
+}
+
+/// Build a fully-connected network of `n_nodes` endpoints.
+pub fn build(n_nodes: usize, params: SimParams) -> (Vec<Endpoint>, Arc<CommStats>) {
+    let stats = CommStats::new(n_nodes);
+    let mut txs = Vec::with_capacity(n_nodes);
+    let mut rxs = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let (tx, rx) = channel::<Msg>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let endpoints = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(id, rx)| {
+            let mut senders = txs.clone();
+            // Replace the self-sender with a disconnected one: nodes never
+            // send to themselves, and holding a live self-sender would keep
+            // a node's own receive channel open forever — turning a peer
+            // panic into a deadlock instead of a clean cascade failure.
+            let (dead_tx, _) = channel::<Msg>();
+            senders[id] = dead_tx;
+            Endpoint {
+                id,
+                n_nodes,
+                senders,
+                rx,
+                stash: VecDeque::new(),
+                clock: 0.0,
+                nic_out: 0.0,
+                nic_in: 0.0,
+                cpu: ThreadCpuTimer::start(),
+                params,
+                stats: stats.clone(),
+            }
+        })
+        .collect();
+    (endpoints, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_counts_scalars() {
+        let (mut eps, stats) = build(2, SimParams::default());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            a.send(1, tags::CTRL, vec![1.0, 2.0, 3.0]);
+        });
+        let msg = b.recv_from(0, tags::CTRL);
+        h.join().unwrap();
+        assert_eq!(msg.data, vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.total_scalars(), 3);
+        assert_eq!(stats.total_messages(), 1);
+        assert_eq!(stats.node_scalars(0), 3);
+        assert_eq!(stats.node_scalars(1), 0);
+    }
+
+    #[test]
+    fn receive_applies_latency_and_bandwidth() {
+        let params = SimParams { latency: 1.0, per_msg: 0.0, sec_per_scalar: 0.5 };
+        let (mut eps, _) = build(2, params);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            // sender occupancy 4*0.5=2, wire latency 1, receiver occupancy 2
+            a.send(1, tags::CTRL, vec![0.0; 4]);
+        });
+        b.recv_from(0, tags::CTRL);
+        h.join().unwrap();
+        let t = b.now();
+        assert!(t >= 5.0, "receiver clock {t} should be >= 5.0");
+        assert!(t < 5.5, "receiver clock {t} should not include wall noise");
+    }
+
+    #[test]
+    fn eval_plane_is_free() {
+        let (mut eps, stats) = build(2, SimParams { latency: 1.0, per_msg: 1.0, sec_per_scalar: 1.0 });
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            a.send_eval(1, tags::EVAL, vec![0.0; 100]);
+        });
+        b.recv_eval_from(0, tags::EVAL);
+        h.join().unwrap();
+        assert_eq!(stats.total_scalars(), 0);
+        assert!(b.now() < 0.5);
+    }
+
+    #[test]
+    fn selective_receive_reorders() {
+        let (mut eps, _) = build(2, SimParams::free());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            a.send(1, tags::PUSH, vec![1.0]);
+            a.send(1, tags::REDUCE, vec![2.0]);
+        });
+        // ask for the REDUCE first even though PUSH arrives first
+        let m2 = b.recv_from(0, tags::REDUCE);
+        let m1 = b.recv_from(0, tags::PUSH);
+        h.join().unwrap();
+        assert_eq!(m2.data, vec![2.0]);
+        assert_eq!(m1.data, vec![1.0]);
+    }
+
+    #[test]
+    fn clock_happens_before_chain() {
+        // a -> b -> c: c's clock must reflect both hops' latency
+        let params = SimParams { latency: 1.0, per_msg: 0.0, sec_per_scalar: 0.0 };
+        let (eps, _) = build(3, params);
+        let mut it = eps.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let mut c = it.next().unwrap();
+        let ha = thread::spawn(move || a.send(1, tags::CTRL, vec![1.0]));
+        let hb = thread::spawn(move || {
+            let m = b.recv_from(0, tags::CTRL);
+            b.send(2, tags::CTRL, m.data);
+        });
+        let m = c.recv_from(1, tags::CTRL);
+        ha.join().unwrap();
+        hb.join().unwrap();
+        assert_eq!(m.data, vec![1.0]);
+        assert!(c.now() >= 2.0, "two hops of 1s latency");
+    }
+
+    #[test]
+    fn busiest_node_tracking() {
+        let (mut eps, stats) = build(3, SimParams::free());
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h1 = thread::spawn(move || {
+            a.send(2, tags::CTRL, vec![0.0; 10]);
+            a.send(2, tags::CTRL, vec![0.0; 10]);
+        });
+        let h2 = thread::spawn(move || b.send(2, tags::CTRL, vec![0.0; 5]));
+        for _ in 0..3 {
+            c.recv_tag(tags::CTRL);
+        }
+        h1.join().unwrap();
+        h2.join().unwrap();
+        assert_eq!(stats.busiest_node_scalars(), 20);
+        assert_eq!(stats.total_scalars(), 25);
+    }
+}

@@ -1,0 +1,256 @@
+//! Communication topologies.
+//!
+//! The centerpiece is the paper's **tree-structured global sum** (Fig. 5):
+//! the coordinator (node 0) and `q` workers form a binomial tree; a reduce
+//! climbs the tree pairing workers so disjoint pairs combine
+//! *simultaneously*, and the broadcast walks the reverse tree. For one
+//! reduced+broadcast vector of length `L` over `q` workers the total
+//! traffic is exactly `2·q·L` scalars — the paper's `2q` per scalar — in
+//! `2·⌈log₂(q+1)⌉` latency rounds instead of the `2q` rounds of a naive
+//! star. [`star_allreduce`] implements that naive strategy for the
+//! tree-vs-flat ablation.
+//!
+//! Node ids: the *cluster* numbering used by every algorithm is
+//! `0 = coordinator, 1..=q = workers`. The binomial tree is built over all
+//! `q+1` nodes with the coordinator as root.
+
+use super::{tags, Endpoint, NodeId};
+
+/// Reduce (elementwise sum) of `data` from all nodes in `group` to
+/// `group[0]`, using a binomial tree. Every node in `group` must call this
+/// with its own contribution in `data`; on return, `group[0]`'s `data`
+/// holds the sum (other nodes' buffers hold partial sums).
+pub fn tree_reduce(ep: &mut Endpoint, group: &[NodeId], data: &mut [f64]) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    let q = group.len();
+    let mut mask = 1usize;
+    while mask < q {
+        if rank & (mask - 1) == 0 {
+            if rank & mask != 0 {
+                // sender: pass partial sum down to (rank - mask), then leave
+                ep.send(group[rank - mask], tags::REDUCE, data.to_vec());
+                break;
+            } else if rank + mask < q {
+                let msg = ep.recv_from(group[rank + mask], tags::REDUCE);
+                for (d, m) in data.iter_mut().zip(msg.data.iter()) {
+                    *d += *m;
+                }
+            }
+        }
+        mask <<= 1;
+    }
+}
+
+/// Broadcast `data` from `group[0]` to all nodes of `group` along the
+/// reverse binomial tree. On non-root nodes `data` is overwritten.
+pub fn tree_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    let q = group.len();
+    let mut mask = 1usize;
+    while mask < q {
+        mask <<= 1;
+    }
+    mask >>= 1;
+    // receive once from the parent, then forward to children in reverse order
+    let mut received = rank == 0;
+    while mask >= 1 {
+        if rank & (mask - 1) == 0 {
+            if !received && rank & mask != 0 {
+                let msg = ep.recv_from(group[rank - mask], tags::BCAST);
+                *data = msg.data;
+                received = true;
+            } else if received && rank & mask == 0 && rank + mask < q {
+                ep.send(group[rank + mask], tags::BCAST, data.clone());
+            }
+        }
+        if mask == 1 {
+            break;
+        }
+        mask >>= 1;
+    }
+}
+
+/// Allreduce = tree reduce to `group[0]` + reverse-tree broadcast.
+/// After return every node holds the elementwise sum.
+pub fn tree_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+    tree_reduce(ep, group, data);
+    tree_broadcast(ep, group, data);
+}
+
+/// Naive star allreduce (ablation baseline): all nodes send to `group[0]`,
+/// which sums and sends the result back to each. Same scalar volume as the
+/// tree but `2(q−1)` sequential rounds at the hub and a hub hot-spot.
+pub fn star_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    if rank == 0 {
+        for &peer in &group[1..] {
+            let msg = ep.recv_from(peer, tags::REDUCE);
+            for (d, m) in data.iter_mut().zip(msg.data.iter()) {
+                *d += *m;
+            }
+        }
+        for &peer in &group[1..] {
+            ep.send(peer, tags::BCAST, data.to_vec());
+        }
+    } else {
+        ep.send(group[0], tags::REDUCE, data.to_vec());
+        let msg = ep.recv_from(group[0], tags::BCAST);
+        *data = msg.data;
+    }
+}
+
+/// Ring neighbors for DSVRG's decentralized layout over `n` workers.
+pub fn ring_next(id: NodeId, n: usize) -> NodeId {
+    (id + 1) % n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{build, SimParams};
+    use std::thread;
+
+    /// Run `f(endpoint, rank)` on `n` nodes, return per-rank results.
+    fn run_group<T: Send + 'static>(
+        n: usize,
+        params: SimParams,
+        f: impl Fn(&mut Endpoint, usize) -> T + Send + Sync + Copy + 'static,
+    ) -> (Vec<T>, std::sync::Arc<crate::net::CommStats>) {
+        let (eps, stats) = build(n, params);
+        let mut handles = Vec::new();
+        for (rank, mut ep) in eps.into_iter().enumerate() {
+            handles.push(thread::spawn(move || f(&mut ep, rank)));
+        }
+        (handles.into_iter().map(|h| h.join().unwrap()).collect(), stats)
+    }
+
+    #[test]
+    fn allreduce_sums_for_many_group_sizes() {
+        for n in [1usize, 2, 3, 4, 5, 8, 9, 16, 17] {
+            let group: Vec<NodeId> = (0..n).collect();
+            let (results, _) = run_group(n, SimParams::free(), move |ep, rank| {
+                let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                let mut data = vec![rank as f64, 1.0];
+                tree_allreduce(ep, &group, &mut data);
+                data
+            });
+            let want = vec![(0..n).sum::<usize>() as f64, n as f64];
+            for (rank, r) in results.iter().enumerate() {
+                assert_eq!(r, &want, "n={n} rank={rank}");
+            }
+            let _ = group;
+        }
+    }
+
+    #[test]
+    fn allreduce_traffic_is_2q_scalars() {
+        // paper Fig. 5: coordinator + q workers, one scalar => 2q scalars total
+        for q in [1usize, 2, 3, 4, 7, 8, 15, 16] {
+            let n = q + 1;
+            let (_, stats) = run_group(n, SimParams::free(), |ep, rank| {
+                let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                let mut data = vec![rank as f64];
+                tree_allreduce(ep, &group, &mut data);
+            });
+            assert_eq!(
+                stats.total_scalars(),
+                2 * q as u64,
+                "q={q}: tree allreduce of 1 scalar must cost 2q"
+            );
+        }
+    }
+
+    #[test]
+    fn star_same_volume_more_hub_load() {
+        let q = 8usize;
+        let (_, tree_stats) = run_group(q + 1, SimParams::free(), |ep, _| {
+            let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+            let mut data = vec![1.0];
+            tree_allreduce(ep, &group, &mut data);
+        });
+        let (_, star_stats) = run_group(q + 1, SimParams::free(), |ep, _| {
+            let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+            let mut data = vec![1.0];
+            star_allreduce(ep, &group, &mut data);
+        });
+        assert_eq!(star_stats.total_scalars(), tree_stats.total_scalars());
+        assert!(star_stats.node_scalars(0) > tree_stats.node_scalars(0));
+    }
+
+    #[test]
+    fn tree_latency_beats_star() {
+        // With per-message endpoint cost 1 and 16+1 nodes, the star hub
+        // must serialize 16 receives + 16 sends (≥32 time units); the tree
+        // hub handles only ⌈log₂ 17⌉ messages per direction. This is the
+        // paper's Fig.-5 argument.
+        let n = 17usize;
+        let params = SimParams { latency: 0.0, per_msg: 1.0, sec_per_scalar: 0.0 };
+        let (results, _) = run_group(n, params, |ep, _| {
+            let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+            let mut data = vec![1.0];
+            tree_allreduce(ep, &group, &mut data);
+            ep.now()
+        });
+        let t_tree = results.iter().cloned().fold(0.0, f64::max);
+
+        let (results, _) = run_group(n, params, |ep, _| {
+            let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+            let mut data = vec![1.0];
+            star_allreduce(ep, &group, &mut data);
+            ep.now()
+        });
+        let t_star = results.iter().cloned().fold(0.0, f64::max);
+        assert!(t_star >= 32.0, "star hub must serialize 2q messages, got {t_star}");
+        assert!(
+            t_star > 1.5 * t_tree,
+            "star ({t_star}) should be well beyond tree ({t_tree})"
+        );
+    }
+
+    #[test]
+    fn broadcast_delivers_root_value() {
+        for n in [2usize, 3, 5, 8, 13] {
+            let (results, _) = run_group(n, SimParams::free(), |ep, rank| {
+                let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                let mut data = if rank == 0 { vec![42.0, 7.0] } else { vec![0.0, 0.0] };
+                tree_broadcast(ep, &group, &mut data);
+                data
+            });
+            for r in &results {
+                assert_eq!(r, &vec![42.0, 7.0], "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn subgroup_allreduce_ignores_outsiders() {
+        // nodes 1..=3 allreduce while node 0 stays idle
+        let (eps, _) = build(4, SimParams::free());
+        let mut handles = Vec::new();
+        for (rank, mut ep) in eps.into_iter().enumerate() {
+            handles.push(thread::spawn(move || {
+                if rank == 0 {
+                    return vec![];
+                }
+                let group = vec![1, 2, 3];
+                let mut data = vec![rank as f64];
+                tree_allreduce(ep_ref(&mut ep), &group, &mut data);
+                data
+            }));
+        }
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for r in &results[1..] {
+            assert_eq!(r, &vec![6.0]);
+        }
+    }
+
+    fn ep_ref(ep: &mut Endpoint) -> &mut Endpoint {
+        ep
+    }
+
+    #[test]
+    fn ring_next_wraps() {
+        assert_eq!(ring_next(0, 4), 1);
+        assert_eq!(ring_next(3, 4), 0);
+    }
+}

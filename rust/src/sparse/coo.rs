@@ -1,0 +1,135 @@
+//! COO (triplet) assembly format.
+
+use super::csc::CscMatrix;
+
+/// Mutable triplet builder; the generators and parsers accumulate entries
+/// here and finish with [`CooBuilder::to_csc`].
+#[derive(Clone, Debug, Default)]
+pub struct CooBuilder {
+    pub rows: usize,
+    pub cols: usize,
+    entries: Vec<(u32, u32, f64)>, // (row, col, value)
+}
+
+impl CooBuilder {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        CooBuilder { rows, cols, entries: Vec::new() }
+    }
+
+    /// Add a triplet. Duplicate (row, col) entries are *summed* at
+    /// conversion time (standard COO semantics).
+    pub fn push(&mut self, row: usize, col: usize, value: f64) {
+        assert!(row < self.rows, "row {row} out of bounds {}", self.rows);
+        assert!(col < self.cols, "col {col} out of bounds {}", self.cols);
+        if value != 0.0 {
+            self.entries.push((row as u32, col as u32, value));
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSC: counting sort by column, then per-column sort by row
+    /// with duplicate coalescing.
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut col_counts = vec![0usize; self.cols + 1];
+        for &(_, c, _) in &self.entries {
+            col_counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            col_counts[i + 1] += col_counts[i];
+        }
+        let col_ptr_raw = col_counts.clone();
+        let mut row_idx = vec![0u32; self.entries.len()];
+        let mut values = vec![0f64; self.entries.len()];
+        let mut cursor = col_counts;
+        for &(r, c, v) in &self.entries {
+            let p = cursor[c as usize];
+            row_idx[p] = r;
+            values[p] = v;
+            cursor[c as usize] += 1;
+        }
+        // per-column: sort by row, coalesce duplicates
+        let mut out_ptr = vec![0usize; self.cols + 1];
+        let mut out_rows: Vec<u32> = Vec::with_capacity(row_idx.len());
+        let mut out_vals: Vec<f64> = Vec::with_capacity(values.len());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for c in 0..self.cols {
+            let (s, e) = (col_ptr_raw[c], col_ptr_raw[c + 1]);
+            scratch.clear();
+            scratch.extend(row_idx[s..e].iter().copied().zip(values[s..e].iter().copied()));
+            scratch.sort_unstable_by_key(|&(r, _)| r);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (r, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == r {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                if v != 0.0 {
+                    out_rows.push(r);
+                    out_vals.push(v);
+                }
+                i = j;
+            }
+            out_ptr[c + 1] = out_rows.len();
+        }
+        CscMatrix::from_parts(self.rows, self.cols, out_ptr, out_rows, out_vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_small() {
+        let mut b = CooBuilder::new(3, 2);
+        b.push(0, 0, 1.0);
+        b.push(2, 0, 2.0);
+        b.push(1, 1, 3.0);
+        let m = b.to_csc();
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.to_dense(), vec![vec![1.0, 0.0], vec![0.0, 3.0], vec![2.0, 0.0]]);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 1, 1.5);
+        b.push(0, 1, 2.5);
+        let m = b.to_csc();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn zeros_are_dropped() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 0, 0.0);
+        b.push(1, 1, 1.0);
+        b.push(1, 1, -1.0); // cancels to zero
+        let m = b.to_csc();
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn unsorted_insertion_order_ok() {
+        let mut b = CooBuilder::new(4, 1);
+        b.push(3, 0, 3.0);
+        b.push(0, 0, 1.0);
+        b.push(2, 0, 2.0);
+        let m = b.to_csc();
+        let col: Vec<(u32, f64)> = m.col_iter(0).map(|(r, v)| (r, v)).collect();
+        assert_eq!(col, vec![(0, 1.0), (2, 2.0), (3, 3.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_panics() {
+        let mut b = CooBuilder::new(2, 2);
+        b.push(2, 0, 1.0);
+    }
+}

@@ -1,0 +1,374 @@
+//! CSC matrix — the canonical storage for the data matrix `D ∈ R^{d×N}`
+//! (features × instances, instance `i` = column `i`).
+
+use crate::linalg;
+
+/// Compressed sparse column matrix over `f64` values with `u32` row indices
+/// (the paper's largest dataset has d ≈ 3·10⁷ features, well within u32).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    col_ptr: Vec<usize>, // len cols+1
+    row_idx: Vec<u32>,   // len nnz, sorted within each column
+    values: Vec<f64>,    // len nnz
+}
+
+impl CscMatrix {
+    /// Assemble from raw parts, validating the CSC invariants.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(col_ptr.len(), cols + 1, "col_ptr length");
+        assert_eq!(col_ptr[0], 0, "col_ptr[0]");
+        assert_eq!(*col_ptr.last().unwrap(), row_idx.len(), "col_ptr[-1] != nnz");
+        assert_eq!(row_idx.len(), values.len(), "row_idx/values length");
+        for c in 0..cols {
+            assert!(col_ptr[c] <= col_ptr[c + 1], "col_ptr not monotone at {c}");
+            let seg = &row_idx[col_ptr[c]..col_ptr[c + 1]];
+            for w in seg.windows(2) {
+                assert!(w[0] < w[1], "row indices not strictly sorted in column {c}");
+            }
+            if let Some(&last) = seg.last() {
+                assert!((last as usize) < rows, "row index out of bounds in column {c}");
+            }
+        }
+        CscMatrix { rows, cols, col_ptr, row_idx, values }
+    }
+
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        CscMatrix { rows, cols, col_ptr: vec![0; cols + 1], row_idx: vec![], values: vec![] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    pub fn col_nnz(&self, col: usize) -> usize {
+        self.col_ptr[col + 1] - self.col_ptr[col]
+    }
+
+    /// Iterate the nonzeros of a column as `(row, value)` pairs.
+    pub fn col_iter(&self, col: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let (s, e) = (self.col_ptr[col], self.col_ptr[col + 1]);
+        self.row_idx[s..e].iter().copied().zip(self.values[s..e].iter().copied())
+    }
+
+    /// Raw slices of a column's nonzeros (hot-path access, no iterator).
+    #[inline]
+    pub fn col(&self, col: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.col_ptr[col], self.col_ptr[col + 1]);
+        (&self.row_idx[s..e], &self.values[s..e])
+    }
+
+    /// Random access (O(log nnz_col)); for tests and small tools only.
+    pub fn get(&self, row: usize, col: usize) -> f64 {
+        let (rows, vals) = self.col(col);
+        match rows.binary_search(&(row as u32)) {
+            Ok(p) => vals[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Sparse dot of column `col` against a dense vector: `x_colᵀ w`.
+    ///
+    /// This is the per-instance hot operation of the FD-SVRG inner loop
+    /// (paper Alg. 1 line 9).
+    #[inline]
+    pub fn col_dot(&self, col: usize, w: &[f64]) -> f64 {
+        debug_assert_eq!(w.len(), self.rows);
+        let (rows, vals) = self.col(col);
+        let mut acc = 0.0;
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            acc += w[*r as usize] * *v;
+        }
+        acc
+    }
+
+    /// `out += alpha * x_col` (scatter-add of one instance).
+    #[inline]
+    pub fn col_axpy(&self, col: usize, alpha: f64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows);
+        let (rows, vals) = self.col(col);
+        for (r, v) in rows.iter().zip(vals.iter()) {
+            out[*r as usize] += alpha * *v;
+        }
+    }
+
+    /// `Dᵀ w` — the partial-products vector `s` with `s_i = x_iᵀ w`.
+    ///
+    /// This is the full-gradient-phase hot operation (paper Alg. 1 line 3).
+    pub fn transpose_matvec(&self, w: &[f64], out: &mut [f64]) {
+        assert_eq!(w.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for c in 0..self.cols {
+            out[c] = self.col_dot(c, w);
+        }
+    }
+
+    /// `D c` — accumulate `Σ_i c_i x_i` into `out` (caller zeroes `out`).
+    pub fn matvec_accumulate(&self, c: &[f64], out: &mut [f64]) {
+        assert_eq!(c.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for col in 0..self.cols {
+            let ci = c[col];
+            if ci != 0.0 {
+                self.col_axpy(col, ci, out);
+            }
+        }
+    }
+
+    /// Squared Euclidean norm of column `col`.
+    pub fn col_nrm2_sq(&self, col: usize) -> f64 {
+        let (_, vals) = self.col(col);
+        linalg::dot(vals, vals)
+    }
+
+    /// Dense `rows × cols` copy (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut dense = vec![vec![0.0; self.cols]; self.rows];
+        for c in 0..self.cols {
+            for (r, v) in self.col_iter(c) {
+                dense[r as usize][c] = v;
+            }
+        }
+        dense
+    }
+
+    /// Dense column-major flattening of a *row slab* `[row_lo, row_hi)` of
+    /// this matrix, in f32 — the layout the XLA dense engine consumes.
+    pub fn dense_slab_f32(&self, row_lo: usize, row_hi: usize) -> Vec<f32> {
+        assert!(row_lo <= row_hi && row_hi <= self.rows);
+        let dl = row_hi - row_lo;
+        let mut out = vec![0f32; dl * self.cols];
+        for c in 0..self.cols {
+            for (r, v) in self.col_iter(c) {
+                let r = r as usize;
+                if r >= row_lo && r < row_hi {
+                    out[c * dl + (r - row_lo)] = v as f32;
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a subset of columns (instance partition). Row dimension is
+    /// kept; `cols` become `idx.len()` in the given order.
+    pub fn select_columns(&self, idx: &[usize]) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(idx.len() + 1);
+        col_ptr.push(0usize);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        for &c in idx {
+            assert!(c < self.cols);
+            let (rs, vs) = self.col(c);
+            row_idx.extend_from_slice(rs);
+            values.extend_from_slice(vs);
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { rows: self.rows, cols: idx.len(), col_ptr, row_idx, values }
+    }
+
+    /// Extract the row slab `[row_lo, row_hi)` with row indices remapped to
+    /// the slab-local range — the feature-partition primitive (paper Fig. 3,
+    /// upper right). Rows within each column stay sorted, so the result is a
+    /// valid CSC.
+    pub fn slice_rows(&self, row_lo: usize, row_hi: usize) -> CscMatrix {
+        assert!(row_lo <= row_hi && row_hi <= self.rows);
+        let mut col_ptr = Vec::with_capacity(self.cols + 1);
+        col_ptr.push(0usize);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        for c in 0..self.cols {
+            let (rs, vs) = self.col(c);
+            // binary-search the [row_lo, row_hi) window inside the sorted rows
+            let lo = rs.partition_point(|&r| (r as usize) < row_lo);
+            let hi = rs.partition_point(|&r| (r as usize) < row_hi);
+            for p in lo..hi {
+                row_idx.push(rs[p] - row_lo as u32);
+                values.push(vs[p]);
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { rows: row_hi - row_lo, cols: self.cols, col_ptr, row_idx, values }
+    }
+
+    /// Transpose into CSR-of-the-same-matrix, i.e. a `cols × rows` CSC.
+    pub fn transpose(&self) -> CscMatrix {
+        let mut row_counts = vec![0usize; self.rows + 1];
+        for &r in &self.row_idx {
+            row_counts[r as usize + 1] += 1;
+        }
+        for i in 0..self.rows {
+            row_counts[i + 1] += row_counts[i];
+        }
+        let mut cursor = row_counts.clone();
+        let mut t_rows = vec![0u32; self.nnz()];
+        let mut t_vals = vec![0f64; self.nnz()];
+        for c in 0..self.cols {
+            for (r, v) in self.col_iter(c) {
+                let p = cursor[r as usize];
+                t_rows[p] = c as u32;
+                t_vals[p] = v;
+                cursor[r as usize] += 1;
+            }
+        }
+        // columns were visited in increasing order, so each new column
+        // (= old row) has sorted indices already
+        CscMatrix {
+            rows: self.cols,
+            cols: self.rows,
+            col_ptr: row_counts,
+            row_idx: t_rows,
+            values: t_vals,
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        linalg::dot(&self.values, &self.values).sqrt()
+    }
+
+    /// Total bytes of the raw arrays (capacity planning / stats).
+    pub fn storage_bytes(&self) -> usize {
+        self.col_ptr.len() * 8 + self.row_idx.len() * 4 + self.values.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooBuilder;
+
+    fn sample() -> CscMatrix {
+        // 4x3:
+        // [1 0 4]
+        // [0 2 0]
+        // [3 0 5]
+        // [0 0 6]
+        let mut b = CooBuilder::new(4, 3);
+        b.push(0, 0, 1.0);
+        b.push(2, 0, 3.0);
+        b.push(1, 1, 2.0);
+        b.push(0, 2, 4.0);
+        b.push(2, 2, 5.0);
+        b.push(3, 2, 6.0);
+        b.to_csc()
+    }
+
+    #[test]
+    fn col_dot_matches_dense() {
+        let m = sample();
+        let w = [1.0, 10.0, 100.0, 1000.0];
+        assert_eq!(m.col_dot(0, &w), 301.0);
+        assert_eq!(m.col_dot(1, &w), 20.0);
+        assert_eq!(m.col_dot(2, &w), 4.0 + 500.0 + 6000.0);
+    }
+
+    #[test]
+    fn transpose_matvec_matches_per_column() {
+        let m = sample();
+        let w = [1.0, -1.0, 2.0, 0.5];
+        let mut s = vec![0.0; 3];
+        m.transpose_matvec(&w, &mut s);
+        for c in 0..3 {
+            assert_eq!(s[c], m.col_dot(c, &w));
+        }
+    }
+
+    #[test]
+    fn matvec_accumulate_matches_dense() {
+        let m = sample();
+        let c = [2.0, -1.0, 0.5];
+        let mut out = vec![0.0; 4];
+        m.matvec_accumulate(&c, &mut out);
+        // dense: D c
+        let d = m.to_dense();
+        for r in 0..4 {
+            let want: f64 = (0..3).map(|j| d[r][j] * c[j]).sum();
+            assert!((out[r] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn slice_rows_remaps() {
+        let m = sample();
+        let s = m.slice_rows(1, 3); // rows 1..3 => [[0 2 0],[3 0 5]]
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.to_dense(), vec![vec![0.0, 2.0, 0.0], vec![3.0, 0.0, 5.0]]);
+    }
+
+    #[test]
+    fn slice_rows_partition_reassembles() {
+        let m = sample();
+        let a = m.slice_rows(0, 2);
+        let b = m.slice_rows(2, 4);
+        assert_eq!(a.nnz() + b.nnz(), m.nnz());
+        let w = [1.0, 2.0, 3.0, 4.0];
+        for c in 0..3 {
+            let partial = a.col_dot(c, &w[0..2]) + b.col_dot(c, &w[2..4]);
+            assert!((partial - m.col_dot(c, &w)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_columns_subset() {
+        let m = sample();
+        let s = m.select_columns(&[2, 0]);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.get(3, 0), 6.0); // old col 2
+        assert_eq!(s.get(0, 1), 1.0); // old col 0
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.cols(), 4);
+        assert_eq!(t.get(2, 3), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn dense_slab_layout() {
+        let m = sample();
+        let slab = m.dense_slab_f32(2, 4); // rows 2..4, col-major dl=2
+        // col0: rows2..4 = [3,0]; col1: [0,0]; col2: [5,6]
+        assert_eq!(slab, vec![3.0, 0.0, 0.0, 0.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let z = CscMatrix::zero(5, 4);
+        assert_eq!(z.nnz(), 0);
+        let mut out = vec![1.0; 4];
+        z.transpose_matvec(&[0.0; 5], &mut out);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_parts_validates_sorted_rows() {
+        CscMatrix::from_parts(3, 1, vec![0, 2], vec![2, 1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn col_nrm2_sq_sample() {
+        let m = sample();
+        assert!((m.col_nrm2_sq(2) - (16.0 + 25.0 + 36.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,176 @@
+//! LibSVM text format (`label idx:val idx:val ...`, 1-based indices).
+//!
+//! The paper's four datasets (news20.binary, url, webspam, kdd2010) ship in
+//! this format on the LibSVM site. The reader accepts those files unchanged;
+//! the writer is used by the synthetic generators so the `-sim` datasets are
+//! byte-compatible with external tools.
+
+use crate::sparse::{CooBuilder, CscMatrix};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// A labelled sparse dataset: `x` is `d × N` (instances as columns),
+/// `y ∈ {-1, +1}^N`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: CscMatrix,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn d(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.x.nnz()
+    }
+
+    /// Mean nonzeros per instance.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.n() as f64
+    }
+}
+
+/// Parse LibSVM text. `min_dim` lets callers force the paper's published
+/// feature count even if the tail features never occur in the sample.
+pub fn read<R: BufRead>(reader: R, name: &str, min_dim: usize) -> Result<Dataset> {
+    let mut labels = Vec::new();
+    let mut triples: Vec<(u32, u32, f64)> = Vec::new();
+    let mut max_feat = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.context("read line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label_tok = parts.next().context("missing label")?;
+        let label: f64 = label_tok
+            .parse()
+            .with_context(|| format!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        // normalize {0,1}, {1,2}, {-1,+1} labelings to {-1,+1}
+        let y = if label > 0.0 && label < 1.5 { 1.0 } else if label > 1.5 { -1.0 } else { -1.0 };
+        let col = labels.len() as u32;
+        labels.push(y);
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad token {tok:?}", lineno + 1))?;
+            let idx: usize = idx_s.parse().with_context(|| format!("bad index {idx_s:?}"))?;
+            if idx == 0 {
+                bail!("line {}: LibSVM indices are 1-based, got 0", lineno + 1);
+            }
+            let val: f64 = val_s.parse().with_context(|| format!("bad value {val_s:?}"))?;
+            max_feat = max_feat.max(idx);
+            triples.push(((idx - 1) as u32, col, val));
+        }
+    }
+    let d = max_feat.max(min_dim);
+    let n = labels.len();
+    let mut b = CooBuilder::new(d, n);
+    for (r, c, v) in triples {
+        b.push(r as usize, c as usize, v);
+    }
+    Ok(Dataset { name: name.to_string(), x: b.to_csc(), y: labels })
+}
+
+pub fn read_file<P: AsRef<Path>>(path: P, min_dim: usize) -> Result<Dataset> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    read(BufReader::new(f), &name, min_dim)
+}
+
+/// Write in LibSVM text format (1-based indices, `%.6g`-style values).
+pub fn write<W: Write>(ds: &Dataset, out: W) -> Result<()> {
+    let mut w = BufWriter::new(out);
+    for i in 0..ds.n() {
+        if ds.y[i] > 0.0 {
+            write!(w, "+1")?;
+        } else {
+            write!(w, "-1")?;
+        }
+        for (r, v) in ds.x.col_iter(i) {
+            write!(w, " {}:{}", r + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn write_file<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    write(ds, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.5
+-1 2:2.0
++1 1:1.0 2:1.0 3:1.0
+";
+
+    #[test]
+    fn parse_sample() {
+        let ds = read(Cursor::new(SAMPLE), "sample", 0).unwrap();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0, 1.0]);
+        assert_eq!(ds.x.get(0, 0), 0.5);
+        assert_eq!(ds.x.get(2, 0), 1.5);
+        assert_eq!(ds.x.get(1, 1), 2.0);
+        assert_eq!(ds.nnz(), 6);
+    }
+
+    #[test]
+    fn min_dim_pads_features() {
+        let ds = read(Cursor::new(SAMPLE), "s", 10).unwrap();
+        assert_eq!(ds.d(), 10);
+    }
+
+    #[test]
+    fn zero_one_labels_normalized() {
+        let ds = read(Cursor::new("1 1:1\n0 2:1\n"), "s", 0).unwrap();
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let ds = read(Cursor::new(SAMPLE), "rt", 0).unwrap();
+        let mut buf = Vec::new();
+        write(&ds, &mut buf).unwrap();
+        let ds2 = read(Cursor::new(buf), "rt", 0).unwrap();
+        assert_eq!(ds.x, ds2.x);
+        assert_eq!(ds.y, ds2.y);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(read(Cursor::new("+1 0:1.0\n"), "s", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read(Cursor::new("+1 abc\n"), "s", 0).is_err());
+        assert!(read(Cursor::new("xyz 1:1\n"), "s", 0).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = read(Cursor::new("# hi\n\n+1 1:1\n"), "s", 0).unwrap();
+        assert_eq!(ds.n(), 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! Sparse-matrix substrate.
+//!
+//! The paper's data matrix is `D ∈ R^{d×N}` with **instances as columns**
+//! (`x_i` is column `i`). Every algorithm in this crate touches data through
+//! one of two access patterns:
+//!
+//! * per-instance column access (`x_i` given `i`) — sampling in the inner
+//!   loop, full-gradient scatter;
+//! * column-wise matvecs (`D^T w` and `D c`).
+//!
+//! Both favour **CSC** (compressed sparse column), so [`CscMatrix`] is the
+//! canonical storage. [`CsrMatrix`] and dense conversions exist for tests
+//! and for the CSR-oriented kernels in the XLA path. [`CooBuilder`] is the
+//! mutable assembly format used by the generators and the LibSVM reader.
+//!
+//! Partitioners implement the paper's two data layouts (Fig. 3):
+//! [`partition::by_features`] (horizontal slabs — FD-SVRG) and
+//! [`partition::by_instances`] (vertical slices — every baseline).
+
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod hashing;
+pub mod libsvm;
+pub mod partition;
+
+pub use coo::CooBuilder;
+pub use csc::CscMatrix;
+pub use csr::CsrMatrix;

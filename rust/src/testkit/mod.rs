@@ -1,0 +1,147 @@
+//! Property-testing mini-framework (`proptest` is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` seeded inputs; on failure it
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```
+//! use fdsvrg::testkit::{check, Gen};
+//! check("sum is commutative", 64, |g| {
+//!     let a = g.f64_in(-10.0, 10.0);
+//!     let b = g.f64_in(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Set `FDSVRG_PROP_SEED=<n>` to replay one particular case and
+//! `FDSVRG_PROP_CASES=<n>` to crank the case count in long CI runs.
+
+use crate::util::Pcg64;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Pcg64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::seed_from_u64(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        assert!(hi_inclusive >= lo);
+        lo + self.rng.below(hi_inclusive - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    /// A random sparse matrix (rows × cols CSC with ~`nnz` entries).
+    pub fn sparse(&mut self, rows: usize, cols: usize, nnz: usize) -> crate::sparse::CscMatrix {
+        let mut b = crate::sparse::CooBuilder::new(rows, cols);
+        for _ in 0..nnz {
+            b.push(self.rng.below(rows), self.rng.below(cols), self.f64_in(-2.0, 2.0));
+        }
+        b.to_csc()
+    }
+}
+
+/// Run `prop` over `default_cases` generated cases (override with
+/// `FDSVRG_PROP_CASES`; pin one case with `FDSVRG_PROP_SEED`).
+pub fn check<F: Fn(&mut Gen)>(name: &str, default_cases: usize, prop: F) {
+    if let Ok(seed) = std::env::var("FDSVRG_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("FDSVRG_PROP_SEED must be a u64");
+        let mut g = Gen::new(seed);
+        prop(&mut g);
+        return;
+    }
+    let cases = std::env::var("FDSVRG_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases);
+    for case in 0..cases {
+        // derive per-case seeds from the property name so adding properties
+        // doesn't shift existing ones
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV offset
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        let seed = h ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| e.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {case} (replay with \
+                 FDSVRG_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 16, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-fails", 4, |_| panic!("intentional"));
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("FDSVRG_PROP_SEED="), "{msg}");
+        assert!(msg.contains("intentional"), "{msg}");
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::new(9);
+        let mut b = Gen::new(9);
+        assert_eq!(a.vec_f64(8, -1.0, 1.0), b.vec_f64(8, -1.0, 1.0));
+        assert_eq!(a.usize_in(3, 17), b.usize_in(3, 17));
+    }
+
+    #[test]
+    fn sparse_gen_valid() {
+        let mut g = Gen::new(4);
+        let m = g.sparse(20, 10, 50);
+        assert_eq!(m.rows(), 20);
+        assert_eq!(m.cols(), 10);
+        assert!(m.nnz() <= 50);
+    }
+}

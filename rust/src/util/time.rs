@@ -1,0 +1,94 @@
+//! Clocks.
+//!
+//! The cluster simulator charges each node for *its own* compute using the
+//! per-thread CPU clock (`CLOCK_THREAD_CPUTIME_ID`), not wall time: all
+//! simulated nodes share one physical machine, so wall time would include
+//! scheduler contention from the *other* nodes and corrupt the simulated
+//! schedule. Thread CPU time is what this node would have spent had it run
+//! alone, which is exactly the quantity the simulated cluster clock needs.
+
+use std::time::Instant;
+
+/// Seconds of CPU time consumed by the calling thread.
+pub fn thread_cpu_now() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain syscall writing into a stack-allocated timespec.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    assert_eq!(rc, 0, "clock_gettime(CLOCK_THREAD_CPUTIME_ID) failed");
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Incremental thread-CPU-time meter: `lap()` returns seconds since the
+/// previous lap (or construction) on this thread's CPU clock.
+pub struct ThreadCpuTimer {
+    last: f64,
+}
+
+impl ThreadCpuTimer {
+    pub fn start() -> Self {
+        ThreadCpuTimer { last: thread_cpu_now() }
+    }
+
+    /// Seconds of thread CPU time since the last lap; resets the mark.
+    pub fn lap(&mut self) -> f64 {
+        let now = thread_cpu_now();
+        let dt = (now - self.last).max(0.0);
+        self.last = now;
+        dt
+    }
+}
+
+/// Wall-clock stopwatch (for end-to-end timings reported next to the
+/// simulated clock).
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { t0: Instant::now() }
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_monotone() {
+        let a = thread_cpu_now();
+        // burn a little CPU
+        let mut acc = 0u64;
+        for i in 0..200_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let b = thread_cpu_now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn timer_laps_positive_under_work() {
+        let mut t = ThreadCpuTimer::start();
+        let mut acc = 0f64;
+        for i in 0..500_000 {
+            acc += (i as f64).sqrt();
+        }
+        std::hint::black_box(acc);
+        assert!(t.lap() >= 0.0);
+        // second lap with no work should be ~0 (allow scheduling noise)
+        assert!(t.lap() < 0.05);
+    }
+
+    #[test]
+    fn cpu_time_excludes_sleep() {
+        let mut t = ThreadCpuTimer::start();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let dt = t.lap();
+        assert!(dt < 0.02, "sleep leaked into thread CPU time: {dt}");
+    }
+}

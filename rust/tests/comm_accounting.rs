@@ -1,0 +1,180 @@
+//! §4.5 complexity analysis, pinned exactly: the communication counters of
+//! every algorithm must reproduce the paper's closed forms, and the
+//! FD-SVRG/DSVRG ratio must track N/d — the quantity the whole paper
+//! turns on.
+
+use fdsvrg::algs::{Algorithm, Problem, RunParams};
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::net::SimParams;
+use fdsvrg::testkit::check;
+
+fn problem(d: usize, n: usize, seed: u64) -> Problem {
+    Problem::logistic_l2(generate(&GenSpec::new("comm", d, n, 10).with_seed(seed)), 1e-3)
+}
+
+fn params(q: usize, outer: usize) -> RunParams {
+    RunParams { q, outer, sim: SimParams::free(), ..Default::default() }
+}
+
+/// FD-SVRG: one N-scalar allreduce (2qN) + M=N single-scalar allreduces
+/// (2qN) per outer iteration → 4qN.
+#[test]
+fn fdsvrg_scalars_4qn_per_epoch() {
+    check("fdsvrg comm = 4qN·T", 8, |g| {
+        let n = g.usize_in(20, 150);
+        let d = g.usize_in(50, 500);
+        let q = g.usize_in(1, 10);
+        let outer = g.usize_in(1, 4);
+        let p = problem(d, n, g.rng().next_u64());
+        let res = Algorithm::FdSvrg.run(&p, &params(q, outer));
+        assert_eq!(
+            res.total_scalars,
+            4 * (q * n * outer) as u64,
+            "d={d} n={n} q={q} T={outer}"
+        );
+    });
+}
+
+/// DSVRG: 2qd (full gradient fan-out/in) + 2d (inner hand-off) per epoch.
+#[test]
+fn dsvrg_scalars_2qd_plus_2d_per_epoch() {
+    check("dsvrg comm = (2qd+2d)·T", 8, |g| {
+        let n = g.usize_in(40, 150);
+        let d = g.usize_in(50, 400);
+        let q = g.usize_in(1, 8);
+        let outer = g.usize_in(1, 3);
+        let p = problem(d, n, g.rng().next_u64());
+        let res = Algorithm::Dsvrg.run(&p, &params(q, outer));
+        assert_eq!(
+            res.total_scalars,
+            ((2 * q * d + 2 * d) * outer) as u64,
+            "d={d} n={n} q={q} T={outer}"
+        );
+    });
+}
+
+/// The crossover: FD-SVRG wins comm iff (roughly) 2N < d(1 + 1/q).
+#[test]
+fn fd_vs_dsvrg_crossover_tracks_aspect_ratio() {
+    let q = 4;
+    // d >> N : FD wins big
+    let p_wide = problem(4000, 100, 1);
+    let fd = Algorithm::FdSvrg.run(&p_wide, &params(q, 2)).total_scalars;
+    let ds = Algorithm::Dsvrg.run(&p_wide, &params(q, 2)).total_scalars;
+    assert!(fd * 5 < ds, "d≫N: FD {fd} should be ≪ DSVRG {ds}");
+    // N >> d : DSVRG wins
+    let p_tall = problem(100, 4000, 2);
+    let fd = Algorithm::FdSvrg.run(&p_tall, &params(q, 2)).total_scalars;
+    let ds = Algorithm::Dsvrg.run(&p_tall, &params(q, 2)).total_scalars;
+    assert!(ds * 5 < fd, "N≫d: DSVRG {ds} should be ≪ FD {fd}");
+}
+
+/// The measured FD/DSVRG scalar ratio equals the §4.5 prediction
+/// 4qN / (2qd + 2d) = 2qN / (d(q+1)) exactly.
+#[test]
+fn ratio_matches_closed_form() {
+    check("fd/dsvrg ratio closed form", 6, |g| {
+        let n = g.usize_in(30, 120);
+        let d = g.usize_in(60, 400);
+        let q = g.usize_in(2, 8);
+        let p = problem(d, n, g.rng().next_u64());
+        let fd = Algorithm::FdSvrg.run(&p, &params(q, 1)).total_scalars as f64;
+        let ds = Algorithm::Dsvrg.run(&p, &params(q, 1)).total_scalars as f64;
+        let predicted = (4 * q * n) as f64 / ((2 * q * d + 2 * d) as f64);
+        let measured = fd / ds;
+        assert!(
+            (measured / predicted - 1.0).abs() < 1e-12,
+            "measured {measured} vs predicted {predicted}"
+        );
+    });
+}
+
+/// Parameter-server SVRG moves Θ(d)-sized vectors every inner round — its
+/// per-epoch traffic must dwarf both FD-SVRG and DSVRG on d > N problems.
+#[test]
+fn ps_svrg_traffic_is_vector_bound() {
+    let p = problem(2000, 80, 3);
+    let mut ps_params = params(4, 2);
+    ps_params.servers = 2;
+    let syn = Algorithm::SynSvrg.run(&p, &ps_params).total_scalars;
+    let fd = Algorithm::FdSvrg.run(&p, &params(4, 2)).total_scalars;
+    let ds = Algorithm::Dsvrg.run(&p, &params(4, 2)).total_scalars;
+    assert!(syn > 3 * fd, "SynSVRG {syn} vs FD {fd}");
+    assert!(syn > ds, "SynSVRG {syn} vs DSVRG {ds}");
+}
+
+/// Mini-batching must not change total volume (§4.4.1), for any u.
+#[test]
+fn minibatch_volume_invariant() {
+    check("minibatch volume invariant", 6, |g| {
+        let p = problem(g.usize_in(100, 400), g.usize_in(30, 100), g.rng().next_u64());
+        let mut a = params(g.usize_in(1, 6), 2);
+        let mut b = a.clone();
+        a.batch = 1;
+        b.batch = g.usize_in(2, 64);
+        let ra = Algorithm::FdSvrg.run(&p, &a).total_scalars;
+        let rb = Algorithm::FdSvrg.run(&p, &b).total_scalars;
+        assert_eq!(ra, rb, "u={} changed scalar volume", b.batch);
+    });
+}
+
+/// Tree vs star: identical total volume; the tree's *busiest node* carries
+/// at most ~2/q of the star hub's load for the same collective.
+#[test]
+fn tree_spreads_busiest_node_load() {
+    let p = problem(800, 200, 5);
+    let mut tree = params(16, 2);
+    let star = RunParams { star_reduce: true, ..tree.clone() };
+    let rt = Algorithm::FdSvrg.run(&p, &tree);
+    let rs = Algorithm::FdSvrg.run(&p, &star);
+    assert_eq!(rt.total_scalars, rs.total_scalars);
+    assert!(
+        rt.busiest_node_scalars * 2 <= rs.busiest_node_scalars,
+        "tree busiest {} vs star busiest {}",
+        rt.busiest_node_scalars,
+        rs.busiest_node_scalars
+    );
+    // The paper's "tree is faster" claim (§4.2) is about the hub
+    // serialization at the coordinator: in a bandwidth/occupancy-bound
+    // regime the star hub receives q full payloads back-to-back while the
+    // tree pipelines them across log₂(q) levels. (With 1-scalar payloads
+    // on a latency-dominated network the comparison can flip — that regime
+    // is covered by the ablation bench, not asserted here.)
+    tree.sim = SimParams { latency: 0.0, per_msg: 50e-6, sec_per_scalar: 1e-6 };
+    let mut star = tree.clone();
+    star.star_reduce = true;
+    let t_tree = Algorithm::FdSvrg.run(&p, &tree).total_sim_time;
+    let t_star = Algorithm::FdSvrg.run(&p, &star).total_sim_time;
+    assert!(
+        t_tree < t_star,
+        "tree {t_tree:.4}s should beat star {t_star:.4}s at q=16 (occupancy-bound)"
+    );
+}
+
+/// The simulated clock must increase with network cost and stay zero on a
+/// free network.
+#[test]
+fn sim_clock_scales_with_network_params() {
+    let p = problem(500, 100, 6);
+    let free = Algorithm::FdSvrg.run(&p, &params(4, 2));
+    assert!(free.total_sim_time > 0.0, "compute time still accrues");
+    let mut slow = params(4, 2);
+    slow.sim = SimParams { latency: 1e-3, per_msg: 1e-4, sec_per_scalar: 1e-6 };
+    let slow_run = Algorithm::FdSvrg.run(&p, &slow);
+    assert!(
+        slow_run.total_sim_time > free.total_sim_time * 10.0,
+        "slow net {:.4}s vs free {:.4}s",
+        slow_run.total_sim_time,
+        free.total_sim_time
+    );
+}
+
+/// grads counter: N per full-gradient pass + M per inner loop (paper §4.5
+/// normalization used for the "compute N gradients" accounting).
+#[test]
+fn gradient_counter_matches_paper() {
+    let p = problem(300, 77, 7);
+    let res = Algorithm::FdSvrg.run(&p, &params(3, 2));
+    let last = res.trace.points.last().unwrap();
+    assert_eq!(last.grads, 2 * 2 * 77);
+}

@@ -1,0 +1,178 @@
+//! Every algorithm in the suite must actually optimize (1): reach a small
+//! objective gap on well-conditioned synthetic problems, with sane traces.
+
+use fdsvrg::algs::{serial, Algorithm, Problem, RunParams};
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::net::SimParams;
+
+fn problem() -> Problem {
+    Problem::logistic_l2(
+        generate(&GenSpec::new("conv", 400, 150, 12).with_seed(21)),
+        1e-2,
+    )
+}
+
+fn f_opt(p: &Problem) -> f64 {
+    serial::solve_optimum(p, 80).1
+}
+
+fn base(q: usize, outer: usize) -> RunParams {
+    RunParams { q, outer, sim: SimParams::free(), ..Default::default() }
+}
+
+fn gap_after(algo: Algorithm, params: &RunParams) -> f64 {
+    let p = problem();
+    let fo = f_opt(&p);
+    let res = algo.run(&p, params);
+    res.final_objective() - fo
+}
+
+#[test]
+fn fdsvrg_reaches_tight_gap() {
+    assert!(gap_after(Algorithm::FdSvrg, &base(4, 30)) < 1e-6);
+}
+
+#[test]
+fn dsvrg_reaches_gap() {
+    assert!(gap_after(Algorithm::Dsvrg, &base(4, 60)) < 1e-4);
+}
+
+#[test]
+fn synsvrg_reaches_gap() {
+    let mut params = base(4, 40);
+    params.servers = 2;
+    assert!(gap_after(Algorithm::SynSvrg, &params) < 1e-4);
+}
+
+#[test]
+fn asysvrg_reaches_gap() {
+    let mut params = base(4, 40);
+    params.servers = 2;
+    assert!(gap_after(Algorithm::AsySvrg, &params) < 1e-4);
+}
+
+#[test]
+fn pslite_sgd_converges_slowly() {
+    // SGD makes progress but, unlike SVRG, nowhere near a tight gap in
+    // the same budget — the Table-3 phenomenon (its 1/t step decay stalls
+    // it at a loose neighbourhood).
+    let p = problem();
+    let fo = f_opt(&p);
+    let gap0 = p.objective(&vec![0.0; p.d()]) - fo;
+    let mut params = base(4, 60);
+    params.servers = 2;
+    // pslite_sgd doubles the base step internally (its 1/t decay needs a
+    // hot start on the λ=1e-4 profiles); on this well-conditioned λ=1e-2
+    // problem that overshoots, so hand it the plain default step
+    params.eta = 0.5 * problem().default_eta();
+    let loose = gap_after(Algorithm::PsLiteSgd, &params);
+    assert!(
+        loose < 0.9 * gap0,
+        "SGD should make progress: gap {loose:.2e} vs initial {gap0:.2e}"
+    );
+    let svrg_gap = gap_after(Algorithm::FdSvrg, &base(4, 60));
+    assert!(
+        svrg_gap < loose / 100.0,
+        "SVRG ({svrg_gap:.2e}) must dominate SGD ({loose:.2e})"
+    );
+}
+
+#[test]
+fn serial_sgd_and_svrg_run_via_dispatch() {
+    assert!(gap_after(Algorithm::SerialSvrg, &base(1, 30)) < 1e-6);
+    assert!(gap_after(Algorithm::SerialSgd, &base(1, 60)) < 1e-2);
+}
+
+#[test]
+fn traces_are_monotone_in_time_and_comm() {
+    let p = problem();
+    for algo in Algorithm::ALL_DISTRIBUTED {
+        let mut params = base(3, 5);
+        params.servers = 2;
+        let res = algo.run(&p, &params);
+        assert!(!res.trace.points.is_empty(), "{}", algo.name());
+        for w in res.trace.points.windows(2) {
+            assert!(w[1].sim_time >= w[0].sim_time, "{} time", algo.name());
+            assert!(w[1].scalars >= w[0].scalars, "{} comm", algo.name());
+            assert!(w[1].grads >= w[0].grads, "{} grads", algo.name());
+        }
+        assert!(res.final_objective().is_finite());
+    }
+}
+
+#[test]
+fn objective_strictly_decreases_early() {
+    // with the conservative auto step size, the first epochs of every SVRG
+    // variant must descend
+    let p = problem();
+    for algo in [Algorithm::FdSvrg, Algorithm::Dsvrg, Algorithm::SynSvrg] {
+        let mut params = base(4, 3);
+        params.servers = 2;
+        let res = algo.run(&p, &params);
+        let pts = &res.trace.points;
+        assert!(
+            pts.last().unwrap().objective < pts[0].objective - 1e-3,
+            "{} did not descend: {} -> {}",
+            algo.name(),
+            pts[0].objective,
+            pts.last().unwrap().objective
+        );
+    }
+}
+
+#[test]
+fn accuracy_improves_over_training() {
+    let p = problem();
+    let res = Algorithm::FdSvrg.run(&p, &base(4, 20));
+    let acc = p.accuracy(&res.w);
+    // generator flips 5% of labels, so ~0.95 is the ceiling; λ=1e-2 keeps
+    // the model small which costs a couple more points
+    assert!(acc > 0.85, "train accuracy {acc}");
+}
+
+#[test]
+fn gap_stop_and_time_cap_halt_runs() {
+    let p = problem();
+    let fo = f_opt(&p);
+    let mut params = base(4, 200);
+    params.gap_stop = Some((fo, 1e-4));
+    let res = Algorithm::FdSvrg.run(&p, &params);
+    assert!(res.trace.points.len() < 100, "gap stop ignored");
+
+    let mut params = base(4, 200);
+    params.sim = SimParams::default();
+    params.sim_time_cap = Some(1e-6); // absurdly small: stop after 1 epoch
+    let res = Algorithm::PsLiteSgd.run(&p, &params);
+    assert!(res.trace.points.len() <= 3, "time cap ignored");
+}
+
+#[test]
+fn eta_zero_uses_problem_default() {
+    let p = problem();
+    let mut params = base(2, 2);
+    params.eta = 0.0;
+    assert!(params.effective_eta(&p) > 0.0);
+    assert_eq!(params.effective_eta(&p), p.default_eta());
+}
+
+#[test]
+fn larger_lambda_converges_faster_per_epoch() {
+    // conditioning improves with λ: gap after fixed epochs must be smaller
+    let ds = generate(&GenSpec::new("cond", 400, 150, 12).with_seed(22));
+    let mk = |lambda| Problem::logistic_l2(ds.clone(), lambda);
+    let gaps: Vec<f64> = [1e-1, 1e-3]
+        .iter()
+        .map(|&lam| {
+            let p = mk(lam);
+            let fo = serial::solve_optimum(&p, 80).1;
+            let res = Algorithm::FdSvrg.run(&p, &base(4, 8));
+            (res.final_objective() - fo) / (p.objective(&vec![0.0; p.d()]) - fo)
+        })
+        .collect();
+    assert!(
+        gaps[0] < gaps[1],
+        "relative gap λ=1e-1 ({:.2e}) should beat λ=1e-3 ({:.2e})",
+        gaps[0],
+        gaps[1]
+    );
+}

@@ -1,0 +1,199 @@
+//! Failure injection and input-validation behaviour: worker panics must
+//! fail runs loudly (not deadlock), malformed inputs must error cleanly,
+//! and the data plane must round-trip.
+
+use fdsvrg::algs::Problem;
+use fdsvrg::cluster::run_cluster;
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::net::SimParams;
+use fdsvrg::sparse::libsvm;
+use fdsvrg::sparse::partition::{by_features, by_instances};
+use fdsvrg::testkit::check;
+
+// ---------- cluster failure injection ----------
+
+#[test]
+#[should_panic(expected = "node panicked")]
+fn worker_panic_fails_run_loudly() {
+    run_cluster(4, SimParams::free(), |mut ep| {
+        if ep.id() == 2 {
+            panic!("injected worker fault");
+        }
+        // the others block on the dead peer and must be torn down, not hang
+        if ep.id() == 1 {
+            let _ = ep.recv_from(2, fdsvrg::net::tags::REDUCE);
+        }
+    });
+}
+
+#[test]
+#[should_panic(expected = "node panicked")]
+fn coordinator_panic_fails_run_loudly() {
+    run_cluster(3, SimParams::free(), |ep| {
+        if ep.id() == 0 {
+            panic!("injected coordinator fault");
+        }
+    });
+}
+
+// ---------- libsvm format ----------
+
+#[test]
+fn libsvm_round_trip_preserves_dataset() {
+    let ds = generate(&GenSpec::new("rt", 300, 120, 15).with_seed(31));
+    let dir = std::env::temp_dir().join("fdsvrg_it_libsvm");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("rt.libsvm");
+    libsvm::write_file(&ds, &path).unwrap();
+    let back = libsvm::read_file(&path, ds.d()).unwrap();
+    assert_eq!(back.n(), ds.n());
+    assert_eq!(back.d(), ds.d());
+    assert_eq!(back.y, ds.y);
+    assert_eq!(back.x.nnz(), ds.x.nnz());
+    // spot-check values to printed precision
+    for i in [0usize, 57, 119] {
+        let a: Vec<(u32, f64)> = ds.x.col_iter(i).collect();
+        let b: Vec<(u32, f64)> = back.x.col_iter(i).collect();
+        assert_eq!(a.len(), b.len());
+        for ((ra, va), (rb, vb)) in a.iter().zip(b.iter()) {
+            assert_eq!(ra, rb);
+            assert!((va - vb).abs() < 1e-9, "col {i}: {va} vs {vb}");
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn libsvm_rejects_garbage() {
+    let dir = std::env::temp_dir().join("fdsvrg_it_garbage");
+    std::fs::create_dir_all(&dir).unwrap();
+    for (name, body) in [
+        ("bad_label", "banana 1:0.5\n"),
+        ("bad_pair", "+1 15\n"),
+        ("bad_value", "+1 3:xyz\n"),
+        ("bad_index", "+1 0:1.0\n"), // libsvm indices are 1-based
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, body).unwrap();
+        assert!(
+            libsvm::read_file(&path, 0).is_err(),
+            "{name} should fail to parse"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn libsvm_missing_file_errors() {
+    assert!(libsvm::read_file("/no/such/file.libsvm", 0).is_err());
+}
+
+// ---------- partition invariants ----------
+
+#[test]
+fn feature_partition_is_disjoint_cover() {
+    check("feature partition covers", 16, |g| {
+        let rows = g.usize_in(3, 200);
+        let cols = g.usize_in(1, 40);
+        let q = g.usize_in(1, 12);
+        let nnz = g.usize_in(0, 300);
+        let m = g.sparse(rows, cols, nnz);
+        let slabs = by_features(&m, q);
+        assert_eq!(slabs.len(), q, "exactly q slabs, empties allowed");
+        // contiguous, disjoint, covering
+        assert_eq!(slabs[0].row_lo, 0);
+        for w in slabs.windows(2) {
+            assert_eq!(w[0].row_hi, w[1].row_lo);
+        }
+        assert_eq!(slabs.last().unwrap().row_hi, rows);
+        let nnz_total: usize = slabs.iter().map(|s| s.data.nnz()).sum();
+        assert_eq!(nnz_total, m.nnz(), "nnz must be partitioned exactly");
+    });
+}
+
+#[test]
+fn instance_partition_is_disjoint_cover() {
+    check("instance partition covers", 16, |g| {
+        let rows = g.usize_in(3, 100);
+        let cols = g.usize_in(2, 150);
+        let q = g.usize_in(1, 10);
+        let nnz = g.usize_in(0, 200);
+        let m = g.sparse(rows, cols, nnz);
+        let shards = by_instances(&m, q);
+        let covered: usize = shards.iter().map(|s| s.data.cols()).sum();
+        assert_eq!(covered, cols);
+        let nnz_total: usize = shards.iter().map(|s| s.data.nnz()).sum();
+        assert_eq!(nnz_total, m.nnz());
+    });
+}
+
+#[test]
+fn partition_reassembles_matvec() {
+    // Σ_l D^(l)ᵀ w^(l) == Dᵀ w — the identity FD-SVRG is built on
+    check("blockwise margins reassemble", 12, |g| {
+        let rows = g.usize_in(4, 150);
+        let cols = g.usize_in(2, 60);
+        let q = g.usize_in(1, 8);
+        let nnz = g.usize_in(1, 250);
+        let m = g.sparse(rows, cols, nnz);
+        let w = g.vec_f64(rows, -2.0, 2.0);
+        let mut want = vec![0.0; cols];
+        m.transpose_matvec(&w, &mut want);
+        let mut got = vec![0.0; cols];
+        for slab in by_features(&m, q) {
+            let mut part = vec![0.0; cols];
+            slab.data.transpose_matvec(&w[slab.row_lo..slab.row_hi], &mut part);
+            for (gv, pv) in got.iter_mut().zip(part.iter()) {
+                *gv += pv;
+            }
+        }
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    });
+}
+
+// ---------- degenerate problems ----------
+
+#[test]
+fn single_instance_dataset_trains() {
+    let ds = generate(&GenSpec::new("one", 50, 1, 5).with_seed(3));
+    let p = Problem::logistic_l2(ds, 1e-2);
+    let params = fdsvrg::algs::RunParams {
+        q: 2,
+        outer: 2,
+        sim: SimParams::free(),
+        ..Default::default()
+    };
+    let res = fdsvrg::algs::Algorithm::FdSvrg.run(&p, &params);
+    assert!(res.final_objective().is_finite());
+}
+
+#[test]
+fn more_workers_than_features_is_clamped() {
+    let ds = generate(&GenSpec::new("narrow", 5, 40, 3).with_seed(4));
+    let p = Problem::logistic_l2(ds, 1e-2);
+    let params = fdsvrg::algs::RunParams {
+        q: 16, // > d = 5
+        outer: 2,
+        sim: SimParams::free(),
+        ..Default::default()
+    };
+    let res = fdsvrg::algs::Algorithm::FdSvrg.run(&p, &params);
+    assert!(res.final_objective().is_finite());
+}
+
+#[test]
+fn zero_lambda_still_optimizes() {
+    let ds = generate(&GenSpec::new("nolam", 200, 80, 10).with_seed(5));
+    let p = Problem::logistic_l2(ds, 0.0);
+    let params = fdsvrg::algs::RunParams {
+        q: 3,
+        outer: 10,
+        sim: SimParams::free(),
+        ..Default::default()
+    };
+    let res = fdsvrg::algs::Algorithm::FdSvrg.run(&p, &params);
+    let f0 = p.objective(&vec![0.0; p.d()]);
+    assert!(res.final_objective() < f0 - 1e-2);
+}

@@ -1,0 +1,278 @@
+//! Engine-level integration: load the AOT artifacts on the PJRT CPU
+//! client and check every kernel against the native (f64 CSC) path.
+//! These need `make artifacts`; they panic with a clear message if the
+//! artifacts are missing (CI builds them first).
+
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::loss::{Logistic, Loss};
+use fdsvrg::runtime::{pad_slab, pad_vec, Engine, BLOCK_D, BLOCK_N, BLOCK_U};
+use fdsvrg::util::Pcg64;
+use std::path::Path;
+
+// The PJRT client is Rc-based (not Sync), so each test builds its own
+// Engine; compilation of the 5 artifacts takes ~0.3 s.
+fn engine() -> Engine {
+    Engine::load(Path::new("artifacts"))
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+struct Case {
+    dl: usize,
+    n: usize,
+    d_block: Vec<f32>,
+    w_pad: Vec<f32>,
+    y_pad: Vec<f32>,
+    w64: Vec<f64>,
+    ds: fdsvrg::sparse::libsvm::Dataset,
+}
+
+fn case(seed: u64) -> Case {
+    let dl = BLOCK_D;
+    let n = BLOCK_N - 13;
+    let ds = generate(&GenSpec::new("xla-test", dl, n, 48).with_seed(seed));
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0xfeed);
+    let w64: Vec<f64> = (0..dl).map(|_| 0.1 * rng.normal()).collect();
+    let w32: Vec<f32> = w64.iter().map(|&v| v as f32).collect();
+    let y32: Vec<f32> = ds.y.iter().map(|&v| v as f32).collect();
+    Case {
+        dl,
+        n,
+        d_block: pad_slab(&ds.x.dense_slab_f32(0, dl), dl, n),
+        w_pad: pad_vec(&w32, BLOCK_D),
+        y_pad: pad_vec(&y32, BLOCK_N),
+        w64,
+        ds,
+    }
+}
+
+fn max_err(a: &[f32], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| (x as f64 - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn partial_products_matches_native() {
+    let c = case(1);
+    let s = engine().partial_products(&c.w_pad, &c.d_block).unwrap();
+    let mut s_native = vec![0.0f64; c.n];
+    c.ds.x.transpose_matvec(&c.w64, &mut s_native);
+    assert!(max_err(&s[..c.n], &s_native) < 1e-4);
+    // padded instances must read exactly zero
+    assert!(s[c.n..].iter().all(|&v| v == 0.0), "padding leaked");
+}
+
+#[test]
+fn logistic_coef_matches_native() {
+    let c = case(2);
+    let s = engine().partial_products(&c.w_pad, &c.d_block).unwrap();
+    let coef = engine().logistic_coef(&s, &c.y_pad).unwrap();
+    let loss = Logistic;
+    for i in 0..c.n {
+        let want = loss.derivative(s[i] as f64, c.ds.y[i]);
+        assert!(
+            (coef[i] as f64 - want).abs() < 1e-6,
+            "i={i}: {} vs {want}",
+            coef[i]
+        );
+    }
+}
+
+#[test]
+fn coef_matvec_matches_native() {
+    let c = case(3);
+    let loss = Logistic;
+    let mut s_native = vec![0.0f64; c.n];
+    c.ds.x.transpose_matvec(&c.w64, &mut s_native);
+    let inv_n = 1.0 / c.n as f64;
+    let mut cvec = vec![0f32; BLOCK_N];
+    let mut z_native = vec![0.0f64; c.dl];
+    for i in 0..c.n {
+        let ci = loss.derivative(s_native[i], c.ds.y[i]) * inv_n;
+        cvec[i] = ci as f32;
+        c.ds.x.col_axpy(i, ci, &mut z_native);
+    }
+    let z = engine().coef_matvec(&c.d_block, &cvec).unwrap();
+    assert!(max_err(&z[..c.dl], &z_native) < 1e-5);
+}
+
+#[test]
+fn batch_dots_gathers_correctly() {
+    let c = case(4);
+    let mut rng = Pcg64::seed_from_u64(77);
+    let idx: Vec<i32> = (0..BLOCK_U).map(|_| rng.below(c.n) as i32).collect();
+    let dots = engine().batch_dots(&c.w_pad, &c.d_block, &idx).unwrap();
+    for (k, &i) in idx.iter().enumerate() {
+        let want = c.ds.x.col_dot(i as usize, &c.w64);
+        assert!(
+            (dots[k] as f64 - want).abs() < 1e-4,
+            "k={k}: {} vs {want}",
+            dots[k]
+        );
+    }
+}
+
+#[test]
+fn batch_update_matches_sequential_reference() {
+    let c = case(5);
+    let loss = Logistic;
+    let mut rng = Pcg64::seed_from_u64(99);
+    let idx: Vec<i32> = (0..BLOCK_U).map(|_| rng.below(c.n) as i32).collect();
+
+    // inputs mirroring one FD-SVRG inner batch
+    let mut s_native = vec![0.0f64; c.n];
+    c.ds.x.transpose_matvec(&c.w64, &mut s_native);
+    let z32: Vec<f32> = (0..BLOCK_D).map(|j| (j as f32) * 1e-5).collect();
+    let margins: Vec<f32> =
+        idx.iter().map(|&i| s_native[i as usize] as f32 * 1.01).collect();
+    let yb: Vec<f32> = idx.iter().map(|&i| c.ds.y[i as usize] as f32).collect();
+    let c0b: Vec<f32> = idx
+        .iter()
+        .map(|&i| loss.derivative(s_native[i as usize], c.ds.y[i as usize]) as f32)
+        .collect();
+    let (eta, lam) = (0.03f32, 1e-3f32);
+
+    let got = engine()
+        .batch_update(&c.w_pad, &z32, &c.d_block, &idx, &margins, &yb, &c0b, eta, lam)
+        .unwrap();
+
+    // f64 sequential reference
+    let mut w_ref = c.w64.clone();
+    for (k, &i) in idx.iter().enumerate() {
+        let delta = loss.derivative(margins[k] as f64, yb[k] as f64) - c0b[k] as f64;
+        for (j, wv) in w_ref.iter_mut().enumerate() {
+            *wv = (1.0 - eta as f64 * lam as f64) * *wv - eta as f64 * z32[j] as f64;
+        }
+        c.ds.x.col_axpy(i as usize, -(eta as f64) * delta, &mut w_ref);
+    }
+    assert!(max_err(&got[..c.dl], &w_ref) < 1e-4);
+}
+
+#[test]
+fn full_gradient_pipeline_composes() {
+    // partial_products → logistic_coef → coef_matvec chained end to end
+    let c = case(6);
+    let e = engine();
+    let s = e.partial_products(&c.w_pad, &c.d_block).unwrap();
+    let coef = e.logistic_coef(&s, &c.y_pad).unwrap();
+    let inv_n = 1.0 / c.n as f64;
+    let coef_scaled: Vec<f32> = coef
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| if i < c.n { (v as f64 * inv_n) as f32 } else { 0.0 })
+        .collect();
+    let z = e.coef_matvec(&c.d_block, &coef_scaled).unwrap();
+
+    let loss = Logistic;
+    let mut s_native = vec![0.0f64; c.n];
+    c.ds.x.transpose_matvec(&c.w64, &mut s_native);
+    let mut z_native = vec![0.0f64; c.dl];
+    for i in 0..c.n {
+        c.ds.x.col_axpy(i, loss.derivative(s_native[i], c.ds.y[i]) * inv_n, &mut z_native);
+    }
+    assert!(max_err(&z[..c.dl], &z_native) < 1e-5, "three-kernel pipeline drifted");
+}
+
+#[test]
+fn engine_load_missing_dir_errors_cleanly() {
+    let msg = match Engine::load(Path::new("/nonexistent-artifacts-dir")) {
+        Ok(_) => panic!("load must fail on a missing dir"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn kernels_are_deterministic_across_calls() {
+    let c = case(7);
+    let a = engine().partial_products(&c.w_pad, &c.d_block).unwrap();
+    let b = engine().partial_products(&c.w_pad, &c.d_block).unwrap();
+    assert_eq!(a, b);
+}
+
+// ---------- whole-loop engine agreement ----------
+
+#[test]
+fn xla_trainer_full_gradient_matches_native_first_epoch() {
+    // The full-gradient phase is deterministic: after epoch 1 with M=0
+    // inner steps the XLA trainer must match the native objective to f32.
+    use fdsvrg::algs::{Algorithm, Problem, RunParams};
+    use fdsvrg::data::{generate, GenSpec};
+    use fdsvrg::net::SimParams;
+
+    let ds = generate(&GenSpec::new("agree", 700, 900, 40).with_seed(41));
+    let p = Problem::logistic_l2(ds, 1e-3);
+    let mut params = RunParams {
+        q: 3,
+        outer: 1,
+        m_inner: 16, // one inner batch in the XLA path (BLOCK_U = 16)
+        batch: 16,
+        sim: SimParams::free(),
+        ..Default::default()
+    };
+    let native = Algorithm::FdSvrg.run(&p, &params);
+    params.q = 3; // XLA path derives its own slab count; q only affects native
+    let xla = fdsvrg::runtime::trainer::run(&p, &params, &engine()).unwrap();
+    // Same sampling stream? No — block-local sampling differs, so compare
+    // the *full-gradient* effect: objectives after the snapshot epoch agree
+    // to f32 + one stochastic batch of 16 (tiny perturbation).
+    let gap = (native.final_objective() - xla.final_objective()).abs();
+    assert!(
+        gap < 5e-3,
+        "native {} vs xla {}",
+        native.final_objective(),
+        xla.final_objective()
+    );
+}
+
+#[test]
+fn xla_trainer_converges_on_dense_profile() {
+    use fdsvrg::algs::{Problem, RunParams};
+    use fdsvrg::data::profiles;
+
+    let ds = profiles::load("dense-xla").unwrap();
+    let p = Problem::logistic_l2(ds, 1e-3);
+    let params = RunParams { outer: 6, ..Default::default() };
+    let res = fdsvrg::runtime::trainer::run(&p, &params, &engine()).unwrap();
+    let f0 = p.objective(&vec![0.0; p.d()]);
+    assert!(
+        res.final_objective() < f0 - 0.05,
+        "objective {} vs initial {f0}",
+        res.final_objective()
+    );
+    // comm accounting mirrors the paper formula with q = ⌈d/256⌉ = 4 slabs
+    let epochs = res.trace.points.len() as u64 - 1;
+    let q = 4u64;
+    let n = p.n() as u64;
+    // full-grad allreduce (2qN) + per-batch allreduces (2q·16·⌈M/16⌉ = 2qN)
+    assert_eq!(res.total_scalars, epochs * 4 * q * n);
+}
+
+#[test]
+fn xla_trainer_rejects_non_l2() {
+    use fdsvrg::algs::{Problem, RunParams};
+    use fdsvrg::data::{generate, GenSpec};
+    use fdsvrg::loss::{LossKind, Regularizer};
+
+    let ds = generate(&GenSpec::new("l1", 100, 60, 8).with_seed(2));
+    let p = Problem::new(ds, LossKind::Logistic, Regularizer::L1 { lambda: 1e-3 });
+    let err = fdsvrg::runtime::trainer::run(&p, &RunParams::default(), &engine());
+    assert!(err.is_err());
+}
+
+#[test]
+fn hinge_coef_matches_native() {
+    use fdsvrg::loss::SmoothedHinge;
+    let c = case(8);
+    let s = engine().partial_products(&c.w_pad, &c.d_block).unwrap();
+    for gamma in [0.25f32, 1.0] {
+        let coef = engine().hinge_coef(&s, &c.y_pad, gamma).unwrap();
+        let loss = SmoothedHinge { gamma: gamma as f64 };
+        for i in 0..c.n {
+            let want = loss.derivative(s[i] as f64, c.ds.y[i]);
+            assert!(
+                (coef[i] as f64 - want).abs() < 1e-5,
+                "γ={gamma} i={i}: {} vs {want}",
+                coef[i]
+            );
+        }
+    }
+}
