@@ -1,39 +1,55 @@
-//! XLA/PJRT engine demo — proves the three layers compose: the rust
-//! coordinator drives the AOT-compiled JAX/Pallas artifacts through PJRT
-//! and reproduces the native path's numbers on a dense slab.
+//! Blocked compute-engine demo — proves the engine layers compose: the
+//! rust coordinator drives the [`ComputeEngine`] kernels and reproduces
+//! the f64 CSC reference numbers on a dense slab.
 //!
-//! Requires `make artifacts` (python runs once at build time, never here).
+//! On the default build this runs the pure-Rust native backend and needs
+//! nothing else:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example xla_engine
+//! cargo run --release --example xla_engine
+//! ```
+//!
+//! Under `--features xla` the same flow runs through the PJRT CPU client
+//! on the AOT-compiled JAX/Pallas artifacts (python runs once at build
+//! time, never here):
+//!
+//! ```sh
+//! make artifacts && cargo run --release --features xla --example xla_engine
 //! ```
 //!
 //! The demo runs one FD-SVRG worker's full-gradient phase (Alg. 1 lines
-//! 3–5) and a sampled inner batch (lines 9–11) through both engines:
-//!   native : rust CSC kernels (f64)
-//!   xla    : Pallas-built HLO on the PJRT CPU client (f32)
+//! 3–5) and a sampled inner batch (lines 9–11) through both paths:
+//!   reference : rust CSC kernels (f64)
+//!   engine    : the selected ComputeEngine backend (f32)
 //! and checks agreement to f32 tolerance.
 
 use fdsvrg::data::{generate, GenSpec};
 use fdsvrg::loss::{Logistic, Loss};
-use fdsvrg::runtime::{pad_slab, pad_vec, Engine, BLOCK_D, BLOCK_N, BLOCK_U};
+use fdsvrg::runtime::{
+    build_engine, pad_slab, pad_vec, EngineKind, BLOCK_D, BLOCK_N, BLOCK_U,
+};
 use fdsvrg::util::Pcg64;
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    println!("loading + compiling artifacts from {dir}/ ...");
-    let engine = Engine::load(Path::new(&dir))?;
-    println!("compiled {} PJRT executables", fdsvrg::runtime::ARTIFACTS.len());
+    let kind = EngineKind::default_for_build();
+    println!("building `{}` engine (artifacts dir: {dir}/) ...", kind.name());
+    let engine = build_engine(kind, Path::new(&dir))?;
+    println!(
+        "engine `{}` ready: {} kernels in the contract",
+        engine.name(),
+        fdsvrg::runtime::ARTIFACTS.len()
+    );
 
     // One worker's slab: dl ≤ BLOCK_D features of a dense-ish dataset,
     // n ≤ BLOCK_N instances.
-    let ds = generate(&GenSpec::new("xla-demo", BLOCK_D, BLOCK_N - 37, 64).with_seed(5));
+    let ds = generate(&GenSpec::new("engine-demo", BLOCK_D, BLOCK_N - 37, 64).with_seed(5));
     let (dl, n) = (ds.d(), ds.n());
     let mut rng = Pcg64::seed_from_u64(9);
     let w: Vec<f64> = (0..dl).map(|_| 0.05 * rng.normal()).collect();
 
-    // densify the slab column-major (dl × n), then pad to the AOT block
+    // densify the slab column-major (dl × n), then pad to the block grid
     let slab = ds.x.dense_slab_f32(0, dl);
     let d_block = pad_slab(&slab, dl, n);
     let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
@@ -41,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     let y32: Vec<f32> = ds.y.iter().map(|&v| v as f32).collect();
     let y_pad = pad_vec(&y32, BLOCK_N);
 
-    // ---- full-gradient phase through the XLA path ----
+    // ---- full-gradient phase through the engine ----
     let s = engine.partial_products(&w_pad, &d_block)?;
     let c = engine.logistic_coef(&s, &y_pad)?;
     let inv_n = 1.0 / n as f32;
@@ -49,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         c.iter().enumerate().map(|(i, &v)| if i < n { v * inv_n } else { 0.0 }).collect();
     let z = engine.coef_matvec(&d_block, &c_scaled)?;
 
-    // ---- same numbers through the native path ----
+    // ---- same numbers through the f64 reference path ----
     let loss = Logistic;
     let mut s_native = vec![0.0f64; n];
     ds.x.transpose_matvec(&w, &mut s_native);
@@ -62,9 +78,9 @@ fn main() -> anyhow::Result<()> {
     let err_s = max_abs_err(&s[..n], &s_native);
     let err_z = max_abs_err(&z[..dl], &z_native);
     println!("full-gradient phase: max |Δs| = {err_s:.2e}, max |Δz| = {err_z:.2e}");
-    anyhow::ensure!(err_s < 1e-4 && err_z < 1e-5, "XLA/native disagreement");
+    anyhow::ensure!(err_s < 1e-4 && err_z < 1e-5, "engine/reference disagreement");
 
-    // ---- one inner mini-batch through the fused update artifact ----
+    // ---- one inner mini-batch through the fused update kernel ----
     let idx: Vec<i32> = (0..BLOCK_U).map(|_| rng.below(n) as i32).collect();
     let dots = engine.batch_dots(&w_pad, &d_block, &idx)?;
     let margins: Vec<f32> = dots;
@@ -76,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         &w_pad, &z, &d_block, &idx, &margins, &yb, &c0b, eta, lambda,
     )?;
 
-    // native replica of the same fused update (sequential over the batch)
+    // reference replica of the same fused update (sequential over the batch)
     let mut w_ref: Vec<f64> = w.clone();
     let z64: Vec<f64> = z_native.clone();
     for (k, &i) in idx.iter().enumerate() {
@@ -90,7 +106,11 @@ fn main() -> anyhow::Result<()> {
     println!("fused inner-batch update: max |Δw| = {err_w:.2e}");
     anyhow::ensure!(err_w < 1e-4, "batch_update disagreement");
 
-    println!("OK — rust (L3) → HLO artifacts (L2) → Pallas kernels (L1) compose end-to-end.");
+    println!(
+        "OK — coordinator (L3) → `{}` engine kernels compose end-to-end \
+         against the f64 reference.",
+        engine.name()
+    );
     Ok(())
 }
 

@@ -255,11 +255,18 @@ fn worker(
                     let delta = loss.derivative(partial[k], y[i]) - c0[i];
                     alpha *= beta;
                     gamma = beta * gamma - eta;
+                    // Renormalize (v ← α·v, α ← 1; preserves w̃ = α·v + γ·z)
+                    // per *step* and BEFORE the division. The old per-batch
+                    // guard at 1e-150 let −ηδ/α overflow to ±inf mid-batch
+                    // under an aggressive η·λ, and at ηλ = 1 exactly
+                    // (β = 0 ⇒ α = 0) the division is NaN however late the
+                    // guard fires — folding the renorm in first makes even
+                    // that boundary exact: v ← 0, then v ← −ηδ·x.
+                    if alpha < 1e-100 {
+                        linalg::scale(alpha, &mut w_l);
+                        alpha = 1.0;
+                    }
                     slab.data.col_axpy(i, -eta * delta / alpha, &mut w_l);
-                }
-                if alpha < 1e-150 {
-                    linalg::scale(alpha, &mut w_l);
-                    alpha = 1.0;
                 }
                 m += b;
             }
@@ -410,6 +417,44 @@ mod tests {
         assert!(rel < 1e-12, "lazy vs naive relative dist2 {rel:.3e}");
         // identical communication pattern
         assert_eq!(naive.total_scalars, lazy.total_scalars);
+    }
+
+    #[test]
+    fn lazy_renormalization_survives_aggressive_step() {
+        // Regression: η·λ = 0.99 ⇒ β = 0.01, so α decays 100× per inner
+        // step and crosses any renorm threshold mid-batch. The old guard
+        // (per-batch, 1e-150) let −ηδ/α blow up to ±inf before firing;
+        // the per-step 1e-100 guard must keep every coordinate finite.
+        let p = tiny(); // λ = 1e-2
+        let mut params = fast_params(2, 2);
+        params.lazy = true;
+        params.eta = 99.0; // deliberately divergent step — only finiteness matters
+        params.m_inner = 120; // α would reach 1e-240 unguarded within one epoch
+        params.batch = 16; // threshold crossing happens inside a batch
+        let res = run(&p, &params);
+        assert!(
+            res.w.iter().all(|v| v.is_finite()),
+            "lazy renormalization produced non-finite coordinates"
+        );
+        assert!(res.final_objective().is_finite());
+    }
+
+    #[test]
+    fn lazy_survives_eta_lambda_exactly_one() {
+        // Boundary: η·λ = 1 exactly ⇒ β = 0 ⇒ α collapses to literal 0 on
+        // the first decay. The guard must fold the renorm in before the
+        // −ηδ/α division or every coordinate goes NaN (0/0).
+        let ds = generate(&GenSpec::new("beta0", 150, 60, 10).with_seed(17));
+        let p = Problem::logistic_l2(ds, 0.25);
+        let mut params = fast_params(2, 2);
+        params.lazy = true;
+        params.eta = 4.0; // 4.0 * 0.25 == 1.0 exactly in f64
+        params.m_inner = 40;
+        let res = run(&p, &params);
+        assert!(
+            res.w.iter().all(|v| v.is_finite()),
+            "β = 0 boundary produced non-finite coordinates"
+        );
     }
 
     #[test]

@@ -230,6 +230,24 @@ impl Algorithm {
     pub const ALL_DISTRIBUTED: [Algorithm; 4] =
         [Algorithm::FdSvrg, Algorithm::Dsvrg, Algorithm::SynSvrg, Algorithm::AsySvrg];
 
+    /// Run through the blocked dense engine ([`crate::runtime::trainer`])
+    /// instead of the sparse CSC path. Only FD-SVRG has a blocked trainer;
+    /// the backend (native f32 or PJRT) is the caller's choice via
+    /// [`crate::runtime::build_engine`].
+    pub fn run_blocked(
+        &self,
+        problem: &Problem,
+        params: &RunParams,
+        engine: &dyn crate::runtime::ComputeEngine,
+    ) -> anyhow::Result<crate::metrics::RunResult> {
+        anyhow::ensure!(
+            *self == Algorithm::FdSvrg,
+            "the blocked engine implements FD-SVRG only (got {})",
+            self.name()
+        );
+        crate::runtime::trainer::run(problem, params, engine)
+    }
+
     /// Dispatch a run.
     pub fn run(&self, problem: &Problem, params: &RunParams) -> crate::metrics::RunResult {
         match self {

@@ -272,13 +272,17 @@ pub fn svrg_lazy(
             let delta = loss.derivative(zi, y[i]) - c0[i];
             alpha *= beta;
             gamma = beta * gamma - eta;
-            x.col_axpy(i, -eta * delta / alpha, &mut w);
-            grads += 1;
-            if alpha < 1e-150 {
-                // renormalize to dodge underflow (rare; λη is tiny)
+            // Renormalize (v ← α·v, α ← 1) BEFORE the division: at the old
+            // 1e-150 threshold a large η could push −ηδ/α past f64::MAX to
+            // ±inf before the guard fired, and at ηλ = 1 exactly (β = 0 ⇒
+            // α = 0) the division is NaN however late the guard runs (see
+            // the FD-SVRG lazy path, which shares this representation).
+            if alpha < 1e-100 {
                 linalg::scale(alpha, &mut w);
                 alpha = 1.0;
             }
+            x.col_axpy(i, -eta * delta / alpha, &mut w);
+            grads += 1;
         }
         // materialize w = α·v + γ·z
         for j in 0..d {

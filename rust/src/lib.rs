@@ -14,16 +14,19 @@
 //!   exact communication accounting (scalars per link) and a
 //!   latency/bandwidth simulated clock, standing in for the paper's
 //!   16-node 10GbE testbed.
-//! * [`runtime`] — a PJRT CPU client that loads the AOT-compiled HLO
-//!   artifacts produced by the JAX/Pallas build layer (`python/compile/`)
-//!   and serves them to the hot path; python never runs at training time.
+//! * [`runtime`] — the blocked dense trainer behind the backend-agnostic
+//!   [`runtime::ComputeEngine`] trait: a pure-Rust f32 backend (the
+//!   default; fully offline) and a PJRT backend (`--features xla`) that
+//!   loads the AOT-compiled HLO artifacts produced by the JAX/Pallas
+//!   build layer (`python/compile/`); python never runs at training time.
 //! * [`sparse`] / [`linalg`] / [`loss`] / [`data`] — the data-plane
 //!   substrates: CSC/CSR sparse matrices, the LibSVM text format, dense
 //!   kernels, the paper's loss functions, and synthetic dataset generators
 //!   matched to the paper's four benchmark datasets.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the three-layer architecture, the module
+//! inventory, the engine feature matrix, and how to run the tier-1
+//! checks.
 
 pub mod algs;
 pub mod bench;

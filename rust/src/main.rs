@@ -6,7 +6,7 @@
 //!              [--config exp.toml] [--out results] [--star]
 //! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
-//! fdsvrg check-artifacts   # verify the AOT artifacts load + execute
+//! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -32,7 +32,7 @@ fn real_main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("exp") => cmd_exp(&args),
         Some("data") => cmd_data(&args),
-        Some("check-artifacts") => cmd_check_artifacts(&args),
+        Some("check-engine") | Some("check-artifacts") => cmd_check_engine(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
             println!("{USAGE}");
@@ -45,10 +45,15 @@ const USAGE: &str = "usage:
   fdsvrg train --algo <fdsvrg|dsvrg|synsvrg|asysvrg|pslite-sgd|serial-svrg|serial-sgd>
                --dataset <profile|path.libsvm> [--q N] [--servers P] [--lambda L]
                [--eta E] [--outer T] [--batch U] [--seed S] [--config file.toml]
-               [--out dir] [--star] [--lazy] [--gap-target G] [--engine native|xla]
+               [--out dir] [--star] [--lazy] [--gap-target G]
+               [--engine native|block|xla]   (native = sparse CSC path,
+               block = dense blocked trainer on the pure-Rust engine,
+               xla = dense blocked trainer on PJRT, needs --features xla)
   fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|all> [--out dir] [--quick]
   fdsvrg data <stats|gen> [--profile name] [--out file]
-  fdsvrg check-artifacts [--dir artifacts]";
+  fdsvrg check-engine [--dir artifacts] [--engine block|xla]
+               (default: the build's own backend — xla when compiled in,
+               the pure-Rust block engine otherwise)";
 
 fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     let mut cfg = match args.get("config") {
@@ -113,19 +118,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         if cfg.eta > 0.0 { format!("{}", cfg.eta) } else { format!("auto={:.3}", problem.default_eta()) },
     );
     let res = match engine_kind {
+        // "native" keeps its historical meaning: the sparse CSC algorithms
         "native" => algo.run(&problem, &params),
-        "xla" => {
-            anyhow::ensure!(
-                algo == Algorithm::FdSvrg,
-                "--engine xla implements FD-SVRG only (got {})",
-                algo.name()
-            );
-            let engine = fdsvrg::runtime::Engine::load(Path::new(
-                args.get("artifacts").unwrap_or("artifacts"),
-            ))?;
-            fdsvrg::runtime::trainer::run(&problem, &params, &engine)?
+        other => {
+            let kind = fdsvrg::runtime::EngineKind::parse(other)
+                .with_context(|| format!("unknown engine {other:?} (native|block|xla)"))?;
+            let engine = fdsvrg::runtime::build_engine(
+                kind,
+                Path::new(args.get("artifacts").unwrap_or("artifacts")),
+            )?;
+            algo.run_blocked(&problem, &params, engine.as_ref())?
         }
-        other => bail!("unknown engine {other:?} (native|xla)"),
     };
 
     let mut table =
@@ -212,9 +215,17 @@ fn cmd_data(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_check_artifacts(args: &Args) -> Result<()> {
+fn cmd_check_engine(args: &Args) -> Result<()> {
     let dir = args.get("dir").unwrap_or("artifacts");
-    let engine = fdsvrg::runtime::Engine::load(Path::new(dir))?;
+    // default backend of this build: xla when compiled in, else native.
+    // (Unlike `train`, there is no sparse path here — "block" is the
+    // canonical name for the pure-Rust backend.)
+    let kind = match args.get("engine") {
+        Some(s) => fdsvrg::runtime::EngineKind::parse(s)
+            .with_context(|| format!("unknown engine {s:?} (block|xla)"))?,
+        None => fdsvrg::runtime::EngineKind::default_for_build(),
+    };
+    let engine = fdsvrg::runtime::build_engine(kind, Path::new(dir))?;
     // smoke: run a partial-products call on a simple pattern
     use fdsvrg::runtime::{BLOCK_D, BLOCK_N};
     let w = vec![1f32; BLOCK_D];
@@ -223,6 +234,10 @@ fn cmd_check_artifacts(args: &Args) -> Result<()> {
     let s = engine.partial_products(&w, &d_block)?;
     anyhow::ensure!((s[0] - 2.0).abs() < 1e-6, "partial_products smoke failed: {}", s[0]);
     anyhow::ensure!(s[1].abs() < 1e-6, "padding must contribute zero");
-    println!("artifacts OK: {} kernels loaded and executing", fdsvrg::runtime::ARTIFACTS.len());
+    println!(
+        "engine `{}` OK: {} kernels responding",
+        engine.name(),
+        fdsvrg::runtime::ARTIFACTS.len()
+    );
     Ok(())
 }

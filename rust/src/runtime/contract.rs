@@ -1,0 +1,153 @@
+//! Engine-agnostic artifact contract of the blocked dense trainer.
+//!
+//! The trainer ([`super::trainer`]) executes FD-SVRG on an AOT-fixed grid
+//! of zero-padded dense tiles; *which substrate* evaluates each kernel is
+//! behind [`ComputeEngine`]. Two implementations exist:
+//!
+//! * [`super::native`] — pure-Rust f32 (the default; fully offline);
+//! * [`super::xla_engine`] — PJRT executables compiled from the HLO-text
+//!   artifacts `python/compile/aot.py` emits (`--features xla`).
+//!
+//! ## Artifact contract (shapes are AOT-fixed; rust pads)
+//!
+//! | artifact | signature | role |
+//! |----------|-----------|------|
+//! | `partial_products` | `(w[DL], D[DL,NB]) → s[NB]`  | `D^(l)ᵀ w^(l)` (Alg. 1 line 3) |
+//! | `logistic_coef`    | `(s[NB], y[NB]) → c[NB]`     | `φ'(s_i, y_i)` (logistic) |
+//! | `hinge_coef`       | `(s[NB], y[NB], γ[1]) → c[NB]` | `φ'(s_i, y_i)` (smoothed hinge) |
+//! | `coef_matvec`      | `(D[DL,NB], c[NB]) → z[DL]`  | `D^(l) c` (full gradient, line 5) |
+//! | `batch_dots`       | `(w[DL], D[DL,NB], idx[U]) → p[U]` | inner-batch partial products (line 9) |
+//! | `batch_update`     | `(w[DL], z[DL], D[DL,NB], idx[U], m[U], y[U], c0[U], η, λ) → w'[DL]` | fused inner-batch update (line 11) |
+//!
+//! `DL`=[`BLOCK_D`], `NB`=[`BLOCK_N`], `U`=[`BLOCK_U`]; all tensors f32
+//! except `idx` (i32). Tiles are column-major: instance `j` of a tile
+//! occupies `tile[j·BLOCK_D .. (j+1)·BLOCK_D]`. Padding is provably inert:
+//! padded instances are all-zero columns with `y = 0` (for which both loss
+//! derivatives vanish), and padded feature rows never mix into real ones.
+
+use anyhow::Result;
+
+/// Feature-block length every worker slab is padded to.
+pub const BLOCK_D: usize = 256;
+/// Instance-block length the dense engine pads N to.
+pub const BLOCK_N: usize = 512;
+/// Inner mini-batch size of the fused update artifact.
+pub const BLOCK_U: usize = 16;
+
+/// One kernel of the AOT artifact set: its name (also the `<name>.hlo.txt`
+/// file stem `aot.py` emits) and its shape signature, for diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernel {
+    pub name: &'static str,
+    pub signature: &'static str,
+}
+
+/// All kernels the contract comprises (and `aot.py` emits).
+pub const ARTIFACTS: [Kernel; 6] = [
+    Kernel { name: "partial_products", signature: "(w[DL], D[DL,NB]) -> s[NB]" },
+    Kernel { name: "logistic_coef", signature: "(s[NB], y[NB]) -> c[NB]" },
+    Kernel { name: "hinge_coef", signature: "(s[NB], y[NB], gamma[1]) -> c[NB]" },
+    Kernel { name: "coef_matvec", signature: "(D[DL,NB], c[NB]) -> z[DL]" },
+    Kernel { name: "batch_dots", signature: "(w[DL], D[DL,NB], idx[U]) -> p[U]" },
+    Kernel {
+        name: "batch_update",
+        signature: "(w[DL], z[DL], D[DL,NB], idx[U], m[U], y[U], c0[U], eta, lambda) -> w'[DL]",
+    },
+];
+
+/// The six typed kernel entry points of the blocked trainer. Every
+/// implementation must honour the padded-block shapes above and keep
+/// padding inert (zero contributions from padded rows/instances).
+pub trait ComputeEngine {
+    /// Short backend identifier (`"native"`, `"xla"`), used in run labels.
+    fn name(&self) -> &'static str;
+
+    /// `s = Dᵀ w` over one padded block.
+    fn partial_products(&self, w: &[f32], d_block: &[f32]) -> Result<Vec<f32>>;
+
+    /// `c_i = φ'(s_i, y_i)` (logistic).
+    fn logistic_coef(&self, s: &[f32], y: &[f32]) -> Result<Vec<f32>>;
+
+    /// `c_i = φ'(s_i, y_i)` (smoothed hinge, linear SVM).
+    fn hinge_coef(&self, s: &[f32], y: &[f32], gamma: f32) -> Result<Vec<f32>>;
+
+    /// `z = D c` over one padded block.
+    fn coef_matvec(&self, d_block: &[f32], c: &[f32]) -> Result<Vec<f32>>;
+
+    /// Partial inner products for one sampled mini-batch.
+    fn batch_dots(&self, w: &[f32], d_block: &[f32], idx: &[i32]) -> Result<Vec<f32>>;
+
+    /// Fused inner-batch SVRG update (Alg. 1 line 11, scanned over the
+    /// batch): for each k, `w ← (1−ηλ)w − ηz − η(φ'(m_k, y_k) − c0_k)·x_k`.
+    #[allow(clippy::too_many_arguments)]
+    fn batch_update(
+        &self,
+        w: &[f32],
+        z: &[f32],
+        d_block: &[f32],
+        idx: &[i32],
+        margins: &[f32],
+        y: &[f32],
+        c0: &[f32],
+        eta: f32,
+        lambda: f32,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Pad a dense column-major slab `(dl × n)` to `(BLOCK_D × BLOCK_N)`.
+pub fn pad_slab(slab: &[f32], dl: usize, n: usize) -> Vec<f32> {
+    assert!(dl <= BLOCK_D && n <= BLOCK_N, "slab {dl}x{n} exceeds block");
+    assert_eq!(slab.len(), dl * n);
+    let mut out = vec![0f32; BLOCK_D * BLOCK_N];
+    for c in 0..n {
+        out[c * BLOCK_D..c * BLOCK_D + dl].copy_from_slice(&slab[c * dl..(c + 1) * dl]);
+    }
+    out
+}
+
+/// Pad a vector with zeros to `len`.
+pub fn pad_vec(v: &[f32], len: usize) -> Vec<f32> {
+    assert!(v.len() <= len);
+    let mut out = vec![0f32; len];
+    out[..v.len()].copy_from_slice(v);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_slab_layout() {
+        // 2x2 slab [[1,3],[2,4]] col-major = [1,2,3,4]
+        let padded = pad_slab(&[1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(padded.len(), BLOCK_D * BLOCK_N);
+        assert_eq!(padded[0], 1.0);
+        assert_eq!(padded[1], 2.0);
+        assert_eq!(padded[BLOCK_D], 3.0);
+        assert_eq!(padded[BLOCK_D + 1], 4.0);
+        assert_eq!(padded[2], 0.0);
+    }
+
+    #[test]
+    fn pad_vec_zero_fills() {
+        let v = pad_vec(&[1.0, 2.0], 5);
+        assert_eq!(v, vec![1.0, 2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_slab_rejects_oversize() {
+        pad_slab(&vec![0f32; (BLOCK_D + 1) * 2], BLOCK_D + 1, 2);
+    }
+
+    #[test]
+    fn artifact_names_are_unique() {
+        for (i, a) in ARTIFACTS.iter().enumerate() {
+            for b in &ARTIFACTS[i + 1..] {
+                assert_ne!(a.name, b.name);
+            }
+        }
+        assert_eq!(ARTIFACTS.len(), 6);
+    }
+}

@@ -1,214 +1,88 @@
-//! PJRT runtime — the L3↔L2 bridge.
+//! Blocked dense compute runtime — the L3↔L2 bridge.
 //!
-//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
-//! (`make artifacts`), compiles each once on the PJRT CPU client, and
-//! exposes typed wrappers the coordinator's hot path calls. Python never
-//! runs at training time; after `make artifacts` the rust binary is
-//! self-contained.
+//! [`trainer`] runs the full FD-SVRG loop (Algorithm 1) on an AOT-fixed
+//! grid of zero-padded dense tiles. All FLOPs go through the
+//! [`ComputeEngine`] trait ([`contract`]), so the algorithm layer is
+//! independent of the execution substrate:
 //!
-//! ## Artifact contract (shapes are AOT-fixed; rust pads)
+//! | backend | module | availability |
+//! |---------|--------|--------------|
+//! | `native` | [`native`] — pure-Rust f32 | always (default build, offline) |
+//! | `xla`    | [`xla_engine`] — PJRT + AOT HLO artifacts | `--features xla` |
 //!
-//! | artifact | signature | role |
-//! |----------|-----------|------|
-//! | `partial_products.hlo.txt` | `(w[DL], D[DL,NB]) → s[NB]`  | `D^(l)ᵀ w^(l)` (Alg. 1 line 3) |
-//! | `logistic_coef.hlo.txt`    | `(s[NB], y[NB]) → c[NB]`     | `φ'(s_i, y_i)` (logistic) |
-//! | `hinge_coef.hlo.txt`       | `(s[NB], y[NB], γ[1]) → c[NB]` | `φ'(s_i, y_i)` (smoothed hinge) |
-//! | `coef_matvec.hlo.txt`      | `(D[DL,NB], c[NB]) → z[DL]`  | `D^(l) c` (full gradient, line 5) |
-//! | `batch_dots.hlo.txt`       | `(w[DL], D[DL,NB], idx[U]) → p[U]` | inner-batch partial products (line 9) |
-//! | `batch_update.hlo.txt`     | `(w[DL], z[DL], D[DL,NB], idx[U], m[U], y[U], c0[U], η, λ) → w'[DL]` | fused inner-batch update (line 11) |
-//!
-//! `DL`=[`BLOCK_D`], `NB`=[`BLOCK_N`], `U`=[`BLOCK_U`]; all tensors f32
-//! except `idx` (i32). The matmul hot spots inside these graphs are Pallas
-//! kernels (interpret-mode) — see `python/compile/kernels/`.
+//! The artifact contract (block shapes, kernel signatures, padding rules)
+//! lives in [`contract`]; both backends implement it and are validated by
+//! the same integration suite (`rust/tests/xla_runtime.rs`).
 
+pub mod contract;
+pub mod native;
 pub mod trainer;
+#[cfg(feature = "xla")]
+pub mod xla_engine;
 
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+pub use contract::{
+    pad_slab, pad_vec, ComputeEngine, Kernel, ARTIFACTS, BLOCK_D, BLOCK_N, BLOCK_U,
+};
+pub use native::NativeEngine;
+#[cfg(feature = "xla")]
+pub use xla_engine::XlaEngine;
 
-/// Feature-block length every worker slab is padded to.
-pub const BLOCK_D: usize = 256;
-/// Instance-block length the dense engine pads N to.
-pub const BLOCK_N: usize = 512;
-/// Inner mini-batch size of the fused update artifact.
-pub const BLOCK_U: usize = 16;
+use anyhow::Result;
+use std::path::Path;
 
-/// Names of all artifacts the runtime expects (and `aot.py` emits).
-pub const ARTIFACTS: [&str; 6] = [
-    "partial_products",
-    "logistic_coef",
-    "hinge_coef",
-    "coef_matvec",
-    "batch_dots",
-    "batch_update",
-];
-
-/// A compiled PJRT executable with its artifact name.
-pub struct Kernel {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+/// Which backend the blocked trainer should run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust f32 backend (always available).
+    Native,
+    /// PJRT + AOT artifacts (requires the `xla` cargo feature).
+    Xla,
 }
 
-impl Kernel {
-    fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(args)
-            .with_context(|| format!("execute {}", self.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("sync {}", self.name))?;
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        Ok(tuple.to_tuple1().with_context(|| format!("untuple {}", self.name))?)
-    }
-}
-
-/// The PJRT client plus the compiled kernel set.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    kernels: HashMap<String, Kernel>,
-}
-
-fn f32_input(values: &[f32], shape: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(values).reshape(shape)?)
-}
-
-fn i32_input(values: &[i32], shape: &[i64]) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(values).reshape(shape)?)
-}
-
-impl Engine {
-    /// Load and compile every artifact under `dir` (typically `artifacts/`).
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let mut kernels = HashMap::new();
-        for name in ARTIFACTS {
-            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
-            if !path.exists() {
-                bail!(
-                    "missing artifact {} — run `make artifacts` first",
-                    path.display()
-                );
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .with_context(|| format!("parse HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
-            kernels.insert(name.to_string(), Kernel { name: name.to_string(), exe });
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" | "block" => Some(EngineKind::Native),
+            "xla" | "pjrt" => Some(EngineKind::Xla),
+            _ => None,
         }
-        Ok(Engine { client, kernels })
     }
 
-    fn kernel(&self, name: &str) -> &Kernel {
-        self.kernels.get(name).unwrap_or_else(|| panic!("kernel {name} not loaded"))
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+        }
     }
 
-    /// `s = Dᵀ w` over one padded block.
-    pub fn partial_products(&self, w: &[f32], d_block: &[f32]) -> Result<Vec<f32>> {
-        assert_eq!(w.len(), BLOCK_D);
-        assert_eq!(d_block.len(), BLOCK_D * BLOCK_N);
-        let out = self.kernel("partial_products").execute(&[
-            f32_input(w, &[BLOCK_D as i64])?,
-            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
-        ])?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// `c_i = φ'(s_i, y_i)` (logistic).
-    pub fn logistic_coef(&self, s: &[f32], y: &[f32]) -> Result<Vec<f32>> {
-        assert_eq!(s.len(), BLOCK_N);
-        assert_eq!(y.len(), BLOCK_N);
-        let out = self.kernel("logistic_coef").execute(&[
-            f32_input(s, &[BLOCK_N as i64])?,
-            f32_input(y, &[BLOCK_N as i64])?,
-        ])?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// `c_i = φ'(s_i, y_i)` (smoothed hinge, linear SVM).
-    pub fn hinge_coef(&self, s: &[f32], y: &[f32], gamma: f32) -> Result<Vec<f32>> {
-        assert_eq!(s.len(), BLOCK_N);
-        assert_eq!(y.len(), BLOCK_N);
-        let out = self.kernel("hinge_coef").execute(&[
-            f32_input(s, &[BLOCK_N as i64])?,
-            f32_input(y, &[BLOCK_N as i64])?,
-            f32_input(&[gamma], &[1])?,
-        ])?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// `z = D c` over one padded block.
-    pub fn coef_matvec(&self, d_block: &[f32], c: &[f32]) -> Result<Vec<f32>> {
-        assert_eq!(d_block.len(), BLOCK_D * BLOCK_N);
-        assert_eq!(c.len(), BLOCK_N);
-        let out = self.kernel("coef_matvec").execute(&[
-            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
-            f32_input(c, &[BLOCK_N as i64])?,
-        ])?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Partial inner products for one sampled mini-batch.
-    pub fn batch_dots(&self, w: &[f32], d_block: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
-        assert_eq!(idx.len(), BLOCK_U);
-        let out = self.kernel("batch_dots").execute(&[
-            f32_input(w, &[BLOCK_D as i64])?,
-            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
-            i32_input(idx, &[BLOCK_U as i64])?,
-        ])?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    /// Fused inner-batch SVRG update (Alg. 1 line 11, scanned over the batch).
-    #[allow(clippy::too_many_arguments)]
-    pub fn batch_update(
-        &self,
-        w: &[f32],
-        z: &[f32],
-        d_block: &[f32],
-        idx: &[i32],
-        margins: &[f32],
-        y: &[f32],
-        c0: &[f32],
-        eta: f32,
-        lambda: f32,
-    ) -> Result<Vec<f32>> {
-        let out = self.kernel("batch_update").execute(&[
-            f32_input(w, &[BLOCK_D as i64])?,
-            f32_input(z, &[BLOCK_D as i64])?,
-            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
-            i32_input(idx, &[BLOCK_U as i64])?,
-            f32_input(margins, &[BLOCK_U as i64])?,
-            f32_input(y, &[BLOCK_U as i64])?,
-            f32_input(c0, &[BLOCK_U as i64])?,
-            xla::Literal::from(eta),
-            xla::Literal::from(lambda),
-        ])?;
-        Ok(out.to_vec::<f32>()?)
+    /// The backend this build executes by default: XLA when the feature is
+    /// compiled in (it is the accelerated path), native otherwise.
+    pub fn default_for_build() -> EngineKind {
+        if cfg!(feature = "xla") {
+            EngineKind::Xla
+        } else {
+            EngineKind::Native
+        }
     }
 }
 
-/// Pad a dense column-major slab `(dl × n)` to `(BLOCK_D × BLOCK_N)`.
-pub fn pad_slab(slab: &[f32], dl: usize, n: usize) -> Vec<f32> {
-    assert!(dl <= BLOCK_D && n <= BLOCK_N, "slab {dl}x{n} exceeds block");
-    assert_eq!(slab.len(), dl * n);
-    let mut out = vec![0f32; BLOCK_D * BLOCK_N];
-    for c in 0..n {
-        out[c * BLOCK_D..c * BLOCK_D + dl].copy_from_slice(&slab[c * dl..(c + 1) * dl]);
+/// Construct a compute engine. `artifacts_dir` is only read by the XLA
+/// backend (the native engine needs no artifacts).
+pub fn build_engine(kind: EngineKind, artifacts_dir: &Path) -> Result<Box<dyn ComputeEngine>> {
+    match kind {
+        EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+        #[cfg(feature = "xla")]
+        EngineKind::Xla => Ok(Box::new(XlaEngine::load(artifacts_dir)?)),
+        #[cfg(not(feature = "xla"))]
+        EngineKind::Xla => {
+            let _ = artifacts_dir;
+            anyhow::bail!(
+                "this binary was built without the `xla` feature; rebuild with \
+                 `cargo build --features xla` (and provide the PJRT toolchain) \
+                 or use `--engine native`"
+            )
+        }
     }
-    out
-}
-
-/// Pad a vector with zeros to `len`.
-pub fn pad_vec(v: &[f32], len: usize) -> Vec<f32> {
-    assert!(v.len() <= len);
-    let mut out = vec![0f32; len];
-    out[..v.len()].copy_from_slice(v);
-    out
 }
 
 #[cfg(test)]
@@ -216,29 +90,24 @@ mod tests {
     use super::*;
 
     #[test]
-    fn pad_slab_layout() {
-        // 2x2 slab [[1,3],[2,4]] col-major = [1,2,3,4]
-        let padded = pad_slab(&[1.0, 2.0, 3.0, 4.0], 2, 2);
-        assert_eq!(padded.len(), BLOCK_D * BLOCK_N);
-        assert_eq!(padded[0], 1.0);
-        assert_eq!(padded[1], 2.0);
-        assert_eq!(padded[BLOCK_D], 3.0);
-        assert_eq!(padded[BLOCK_D + 1], 4.0);
-        assert_eq!(padded[2], 0.0);
+    fn engine_kind_parses_cli_names() {
+        assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("block"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Xla));
+        assert_eq!(EngineKind::parse("gpu"), None);
     }
 
     #[test]
-    fn pad_vec_zero_fills() {
-        let v = pad_vec(&[1.0, 2.0], 5);
-        assert_eq!(v, vec![1.0, 2.0, 0.0, 0.0, 0.0]);
+    fn native_engine_always_builds() {
+        let e = build_engine(EngineKind::Native, Path::new("unused")).unwrap();
+        assert_eq!(e.name(), "native");
     }
 
+    #[cfg(not(feature = "xla"))]
     #[test]
-    #[should_panic]
-    fn pad_slab_rejects_oversize() {
-        pad_slab(&vec![0f32; (BLOCK_D + 1) * 2], BLOCK_D + 1, 2);
+    fn xla_engine_unavailable_without_feature() {
+        let err = build_engine(EngineKind::Xla, Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--features xla"), "{msg}");
     }
-
-    // Engine-level tests live in rust/tests/xla_runtime.rs (they need the
-    // artifacts built by `make artifacts`).
 }

@@ -1,0 +1,255 @@
+//! Pure-Rust f32 backend of the [`ComputeEngine`] contract — the default
+//! engine, available offline with no PJRT toolchain.
+//!
+//! Implements the same padded-block semantics as the AOT Pallas kernels:
+//! column-major `(BLOCK_D × BLOCK_N)` tiles, f32 arithmetic throughout,
+//! loss derivatives matching [`crate::loss`] evaluated in f32. Padding is
+//! inert by construction: padded instances are zero columns with `y = 0`,
+//! for which both derivative kernels return exactly `0.0`, and zero tile
+//! entries contribute exactly nothing to every dot/scatter.
+//!
+//! The integration suite (`rust/tests/xla_runtime.rs`) checks every kernel
+//! of this engine against the f64 CSC reference path to f32 tolerance; the
+//! same tests run against the PJRT engine under `--features xla`.
+
+use super::contract::{ComputeEngine, BLOCK_D, BLOCK_N, BLOCK_U};
+use anyhow::{ensure, Result};
+
+/// f32 logistic derivative `φ'(z, y) = −y·σ(−yz)`, the single-precision
+/// mirror of [`crate::loss::Logistic::derivative`] (same stable form).
+#[inline]
+fn logistic_deriv(z: f32, y: f32) -> f32 {
+    let m = y * z;
+    let s = if m > 0.0 {
+        let e = (-m).exp();
+        e / (1.0 + e)
+    } else {
+        1.0 / (1.0 + m.exp())
+    };
+    -y * s
+}
+
+/// f32 smoothed-hinge derivative, mirroring
+/// [`crate::loss::SmoothedHinge::derivative`].
+#[inline]
+fn hinge_deriv(z: f32, y: f32, gamma: f32) -> f32 {
+    let m = y * z;
+    if m >= 1.0 {
+        0.0
+    } else if m > 1.0 - gamma {
+        -y * (1.0 - m) / gamma
+    } else {
+        -y
+    }
+}
+
+/// Dot of `w` against tile column `j` (instance `j` of the block).
+#[inline]
+fn col_dot(w: &[f32], d_block: &[f32], j: usize) -> f32 {
+    let col = &d_block[j * BLOCK_D..(j + 1) * BLOCK_D];
+    let mut acc = 0f32;
+    for (a, b) in w.iter().zip(col.iter()) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// The pure-Rust compute engine. Stateless; construction never fails.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine
+    }
+}
+
+impl ComputeEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn partial_products(&self, w: &[f32], d_block: &[f32]) -> Result<Vec<f32>> {
+        ensure!(w.len() == BLOCK_D, "partial_products: w len {}", w.len());
+        ensure!(d_block.len() == BLOCK_D * BLOCK_N, "partial_products: tile len {}", d_block.len());
+        let mut s = vec![0f32; BLOCK_N];
+        for (j, sv) in s.iter_mut().enumerate() {
+            *sv = col_dot(w, d_block, j);
+        }
+        Ok(s)
+    }
+
+    fn logistic_coef(&self, s: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        ensure!(s.len() == BLOCK_N && y.len() == BLOCK_N, "logistic_coef: bad lengths");
+        Ok(s.iter().zip(y.iter()).map(|(&z, &yi)| logistic_deriv(z, yi)).collect())
+    }
+
+    fn hinge_coef(&self, s: &[f32], y: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        ensure!(s.len() == BLOCK_N && y.len() == BLOCK_N, "hinge_coef: bad lengths");
+        ensure!(gamma > 0.0, "hinge_coef: gamma must be positive, got {gamma}");
+        Ok(s.iter().zip(y.iter()).map(|(&z, &yi)| hinge_deriv(z, yi, gamma)).collect())
+    }
+
+    fn coef_matvec(&self, d_block: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        ensure!(d_block.len() == BLOCK_D * BLOCK_N, "coef_matvec: tile len {}", d_block.len());
+        ensure!(c.len() == BLOCK_N, "coef_matvec: c len {}", c.len());
+        let mut z = vec![0f32; BLOCK_D];
+        for (j, &cj) in c.iter().enumerate() {
+            if cj != 0.0 {
+                let col = &d_block[j * BLOCK_D..(j + 1) * BLOCK_D];
+                for (zv, &dv) in z.iter_mut().zip(col.iter()) {
+                    *zv += cj * dv;
+                }
+            }
+        }
+        Ok(z)
+    }
+
+    fn batch_dots(&self, w: &[f32], d_block: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+        ensure!(w.len() == BLOCK_D, "batch_dots: w len {}", w.len());
+        ensure!(d_block.len() == BLOCK_D * BLOCK_N, "batch_dots: tile len {}", d_block.len());
+        ensure!(idx.len() == BLOCK_U, "batch_dots: idx len {}", idx.len());
+        let mut p = vec![0f32; BLOCK_U];
+        for (pv, &i) in p.iter_mut().zip(idx.iter()) {
+            let j = i as usize;
+            ensure!(j < BLOCK_N, "batch_dots: index {i} out of block");
+            *pv = col_dot(w, d_block, j);
+        }
+        Ok(p)
+    }
+
+    fn batch_update(
+        &self,
+        w: &[f32],
+        z: &[f32],
+        d_block: &[f32],
+        idx: &[i32],
+        margins: &[f32],
+        y: &[f32],
+        c0: &[f32],
+        eta: f32,
+        lambda: f32,
+    ) -> Result<Vec<f32>> {
+        ensure!(w.len() == BLOCK_D && z.len() == BLOCK_D, "batch_update: w/z lengths");
+        ensure!(d_block.len() == BLOCK_D * BLOCK_N, "batch_update: tile len {}", d_block.len());
+        ensure!(
+            idx.len() == BLOCK_U && margins.len() == BLOCK_U && y.len() == BLOCK_U && c0.len() == BLOCK_U,
+            "batch_update: batch lengths"
+        );
+        let shrink = 1.0 - eta * lambda;
+        let mut out = w.to_vec();
+        for (k, &ik) in idx.iter().enumerate() {
+            let j = ik as usize;
+            ensure!(j < BLOCK_N, "batch_update: index {ik} out of block");
+            // variance-reduced coefficient from the *pre-batch* margin
+            let delta = logistic_deriv(margins[k], y[k]) - c0[k];
+            // dense part: w ← (1−ηλ)·w − η·z
+            for (wv, &zv) in out.iter_mut().zip(z.iter()) {
+                *wv = shrink * *wv - eta * zv;
+            }
+            // sparse part: w ← w − ηδ·x_j (dense column; zero padding inert)
+            let col = &d_block[j * BLOCK_D..(j + 1) * BLOCK_D];
+            let step = eta * delta;
+            for (wv, &dv) in out.iter_mut().zip(col.iter()) {
+                *wv -= step * dv;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::contract::pad_vec;
+    use super::*;
+    use crate::loss::{Logistic, Loss, SmoothedHinge};
+
+    #[test]
+    fn logistic_deriv_matches_f64_loss() {
+        let loss = Logistic;
+        for &z in &[-30.0f32, -2.0, -0.1, 0.0, 0.1, 2.0, 30.0] {
+            for &y in &[-1.0f32, 1.0] {
+                let want = loss.derivative(z as f64, y as f64);
+                let got = logistic_deriv(z, y) as f64;
+                assert!((got - want).abs() < 1e-6, "z={z} y={y}: {got} vs {want}");
+            }
+        }
+        // padded instances (y = 0) must produce exactly zero
+        assert_eq!(logistic_deriv(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn hinge_deriv_matches_f64_loss() {
+        for gamma in [0.25f32, 1.0] {
+            let loss = SmoothedHinge { gamma: gamma as f64 };
+            for &z in &[-2.0f32, 0.2, 0.74, 0.9, 1.5] {
+                for &y in &[-1.0f32, 1.0] {
+                    let want = loss.derivative(z as f64, y as f64);
+                    let got = hinge_deriv(z, y, gamma) as f64;
+                    assert!((got - want).abs() < 1e-6, "γ={gamma} z={z} y={y}");
+                }
+            }
+            assert_eq!(hinge_deriv(0.0, 0.0, gamma), 0.0, "padding must be inert");
+        }
+    }
+
+    #[test]
+    fn partial_products_padding_reads_zero() {
+        let e = NativeEngine::new();
+        let w = pad_vec(&[1.0, -2.0], BLOCK_D);
+        let mut tile = vec![0f32; BLOCK_D * BLOCK_N];
+        tile[0] = 3.0; // instance 0, feature 0
+        tile[1] = 0.5; // instance 0, feature 1
+        let s = e.partial_products(&w, &tile).unwrap();
+        assert_eq!(s[0], 3.0 - 1.0);
+        assert!(s[1..].iter().all(|&v| v == 0.0), "padding leaked");
+    }
+
+    #[test]
+    fn coef_matvec_is_transpose_of_partial_products() {
+        // z = D c and s = Dᵀ w satisfy ⟨w, Dc⟩ = ⟨Dᵀw, c⟩
+        let e = NativeEngine::new();
+        let mut rng = crate::util::Pcg64::seed_from_u64(12);
+        let w: Vec<f32> = (0..BLOCK_D).map(|_| rng.normal() as f32).collect();
+        let c: Vec<f32> = (0..BLOCK_N).map(|_| rng.normal() as f32 * 0.01).collect();
+        let tile: Vec<f32> =
+            (0..BLOCK_D * BLOCK_N).map(|_| if rng.next_f64() < 0.05 { rng.normal() as f32 } else { 0.0 }).collect();
+        let s = e.partial_products(&w, &tile).unwrap();
+        let z = e.coef_matvec(&tile, &c).unwrap();
+        let lhs: f64 = w.iter().zip(z.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = s.iter().zip(c.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn batch_update_zero_delta_is_pure_shrink() {
+        // margins chosen so φ'(m, y) == c0 → δ = 0 → w' = (1−ηλ)w − ηz
+        let e = NativeEngine::new();
+        let w = vec![1.0f32; BLOCK_D];
+        let z = vec![0.5f32; BLOCK_D];
+        let tile = vec![0f32; BLOCK_D * BLOCK_N];
+        let idx = vec![0i32; BLOCK_U];
+        let margins = vec![0.3f32; BLOCK_U];
+        let y = vec![1.0f32; BLOCK_U];
+        let c0: Vec<f32> = margins.iter().map(|&m| logistic_deriv(m, 1.0)).collect();
+        let (eta, lambda) = (0.1f32, 0.01f32);
+        let got = e.batch_update(&w, &z, &tile, &idx, &margins, &y, &c0, eta, lambda).unwrap();
+        let mut want = 1.0f32;
+        for _ in 0..BLOCK_U {
+            want = (1.0 - eta * lambda) * want - eta * 0.5;
+        }
+        for &v in &got {
+            assert!((v - want).abs() < 1e-6, "{v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn out_of_block_index_is_rejected() {
+        let e = NativeEngine::new();
+        let w = vec![0f32; BLOCK_D];
+        let tile = vec![0f32; BLOCK_D * BLOCK_N];
+        let mut idx = vec![0i32; BLOCK_U];
+        idx[3] = BLOCK_N as i32; // one past the end
+        assert!(e.batch_dots(&w, &tile, &idx).is_err());
+    }
+}

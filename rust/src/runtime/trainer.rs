@@ -1,22 +1,23 @@
-//! Dense-engine FD-SVRG: the full Algorithm-1 loop executed through the
-//! AOT-compiled JAX/Pallas artifacts (`--engine xla` on the CLI).
+//! Blocked dense FD-SVRG: the full Algorithm-1 loop executed through a
+//! [`ComputeEngine`] backend (`--engine block|xla` on the CLI).
 //!
-//! This is the accelerated path of the three-layer stack: every FLOP of
-//! the training loop — partial products, logistic coefficients, gradient
-//! scatter, the fused inner-batch update — runs inside PJRT executables
-//! whose hot spots are Pallas kernels; rust only orchestrates buffers and
-//! does the (free) scalar reductions a real multi-node deployment would
-//! tree-allreduce.
+//! Every FLOP of the training loop — partial products, logistic
+//! coefficients, gradient scatter, the fused inner-batch update — runs
+//! inside the engine's kernels (pure-Rust f32 by default, PJRT/Pallas
+//! executables under `--features xla`); rust only orchestrates buffers
+//! and does the (free) scalar reductions a real multi-node deployment
+//! would tree-allreduce.
 //!
 //! ## Blocking
 //!
-//! PJRT executables are shape-monomorphic, so the data is laid out on an
-//! AOT-fixed grid: features in `⌈d / BLOCK_D⌉` slabs (the "workers" of the
-//! paper's Fig. 4), instances in `⌈N / BLOCK_N⌉` column blocks, inner
-//! mini-batches of exactly `BLOCK_U` (the §4.4.1 variant with `u = 16`).
-//! Everything is zero-padded to block shape; padding is provably inert
-//! (`coef` is zeroed on padded instances, padded feature rows never mix
-//! into real ones).
+//! The kernel contract is shape-monomorphic (PJRT executables are AOT
+//! compiled), so the data is laid out on a fixed grid: features in
+//! `⌈d / BLOCK_D⌉` slabs (the "workers" of the paper's Fig. 4), instances
+//! in `⌈N / BLOCK_N⌉` column blocks, inner mini-batches of exactly
+//! `BLOCK_U` (the §4.4.1 variant with `u = 16`). Everything is
+//! zero-padded to block shape; padding is provably inert (`coef` is
+//! zeroed on padded instances, padded feature rows never mix into real
+//! ones).
 //!
 //! ## Accounting
 //!
@@ -26,7 +27,7 @@
 //! socket — the numbers a q-worker deployment of this engine would move.
 //! `sim_time` is the measured wall time of the engine loop.
 
-use super::{Engine, BLOCK_D, BLOCK_N, BLOCK_U};
+use super::{ComputeEngine, BLOCK_D, BLOCK_N, BLOCK_U};
 use crate::algs::{Problem, RunParams};
 use crate::loss::Regularizer;
 use crate::metrics::{RunResult, Trace, TracePoint};
@@ -59,7 +60,7 @@ impl BlockedData {
         let bytes = n_slabs * n_blocks * BLOCK_D * BLOCK_N * 4;
         ensure!(
             bytes <= 2 << 30,
-            "dense XLA engine would need {bytes} bytes; use the native sparse engine"
+            "blocked dense engine would need {bytes} bytes; use the sparse CSC path"
         );
         let mut blocks = Vec::with_capacity(n_slabs);
         for l in 0..n_slabs {
@@ -94,18 +95,18 @@ impl BlockedData {
     }
 }
 
-/// Run FD-SVRG through the XLA engine. Mini-batch size is pinned to the
-/// artifact's `BLOCK_U`; `params.batch` is ignored.
-pub fn run(problem: &Problem, params: &RunParams, engine: &Engine) -> Result<RunResult> {
+/// Run FD-SVRG through a blocked compute engine. Mini-batch size is
+/// pinned to the contract's `BLOCK_U`; `params.batch` is ignored.
+pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) -> Result<RunResult> {
     let lambda = match problem.reg {
         Regularizer::L2 { lambda } => lambda as f32,
-        _ => anyhow::bail!("XLA engine supports L2 regularization only"),
+        _ => anyhow::bail!("the blocked engine supports L2 regularization only"),
     };
     ensure!(
         problem.loss == crate::loss::LossKind::Logistic,
-        "XLA engine artifacts are compiled for the logistic loss"
+        "the blocked engine kernels implement the logistic loss"
     );
-    let data = BlockedData::build(problem).context("blocking dataset for the XLA engine")?;
+    let data = BlockedData::build(problem).context("blocking dataset for the dense engine")?;
     let (d, n) = (data.d, data.n);
     let q = data.n_slabs; // the "workers" of the accounting
     let eta = params.effective_eta(problem) as f32;
@@ -238,7 +239,7 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &Engine) -> Result<Run
     let w_final = assemble(&w);
     let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
     Ok(RunResult {
-        algorithm: "fdsvrg-xla".into(),
+        algorithm: format!("fdsvrg-{}", engine.name()),
         dataset: problem.ds.name.clone(),
         w: w_final,
         trace,

@@ -1,0 +1,191 @@
+//! PJRT backend of the [`ComputeEngine`] contract (`--features xla`).
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`), compiles each once on the PJRT CPU client, and
+//! serves the typed kernel wrappers to the blocked trainer. Python never
+//! runs at training time; after `make artifacts` the rust binary is
+//! self-contained. The matmul hot spots inside these graphs are Pallas
+//! kernels (interpret-mode) — see `python/compile/kernels/`.
+//!
+//! Offline builds resolve the `xla` dependency to the vendored type-stub
+//! (`third_party/xla-stub`), which keeps this module compiling but makes
+//! [`XlaEngine::load`] return an error; swap in the real `xla` crate to
+//! execute artifacts.
+
+use super::contract::{ComputeEngine, ARTIFACTS, BLOCK_D, BLOCK_N, BLOCK_U};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled PJRT executable with its artifact name.
+struct CompiledKernel {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledKernel {
+    fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("sync {}", self.name))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        tuple.to_tuple1().with_context(|| format!("untuple {}", self.name))
+    }
+}
+
+/// The PJRT client plus the compiled kernel set.
+pub struct XlaEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    kernels: HashMap<String, CompiledKernel>,
+}
+
+fn f32_input(values: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(values).reshape(shape)?)
+}
+
+fn i32_input(values: &[i32], shape: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(values).reshape(shape)?)
+}
+
+impl XlaEngine {
+    /// Load and compile every artifact under `dir` (typically `artifacts/`).
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut kernels = HashMap::new();
+        for k in ARTIFACTS {
+            let path: PathBuf = dir.join(format!("{}.hlo.txt", k.name));
+            if !path.exists() {
+                bail!(
+                    "missing artifact {} — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", k.name))?;
+            kernels.insert(
+                k.name.to_string(),
+                CompiledKernel { name: k.name.to_string(), exe },
+            );
+        }
+        Ok(XlaEngine { client, kernels })
+    }
+
+    fn kernel(&self, name: &str) -> &CompiledKernel {
+        self.kernels.get(name).unwrap_or_else(|| panic!("kernel {name} not loaded"))
+    }
+}
+
+impl ComputeEngine for XlaEngine {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn partial_products(&self, w: &[f32], d_block: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(w.len(), BLOCK_D);
+        assert_eq!(d_block.len(), BLOCK_D * BLOCK_N);
+        let out = self.kernel("partial_products").execute(&[
+            f32_input(w, &[BLOCK_D as i64])?,
+            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
+        ])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn logistic_coef(&self, s: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(s.len(), BLOCK_N);
+        assert_eq!(y.len(), BLOCK_N);
+        let out = self.kernel("logistic_coef").execute(&[
+            f32_input(s, &[BLOCK_N as i64])?,
+            f32_input(y, &[BLOCK_N as i64])?,
+        ])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn hinge_coef(&self, s: &[f32], y: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        assert_eq!(s.len(), BLOCK_N);
+        assert_eq!(y.len(), BLOCK_N);
+        let out = self.kernel("hinge_coef").execute(&[
+            f32_input(s, &[BLOCK_N as i64])?,
+            f32_input(y, &[BLOCK_N as i64])?,
+            f32_input(&[gamma], &[1])?,
+        ])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn coef_matvec(&self, d_block: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(d_block.len(), BLOCK_D * BLOCK_N);
+        assert_eq!(c.len(), BLOCK_N);
+        let out = self.kernel("coef_matvec").execute(&[
+            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
+            f32_input(c, &[BLOCK_N as i64])?,
+        ])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn batch_dots(&self, w: &[f32], d_block: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+        assert_eq!(idx.len(), BLOCK_U);
+        let out = self.kernel("batch_dots").execute(&[
+            f32_input(w, &[BLOCK_D as i64])?,
+            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
+            i32_input(idx, &[BLOCK_U as i64])?,
+        ])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    fn batch_update(
+        &self,
+        w: &[f32],
+        z: &[f32],
+        d_block: &[f32],
+        idx: &[i32],
+        margins: &[f32],
+        y: &[f32],
+        c0: &[f32],
+        eta: f32,
+        lambda: f32,
+    ) -> Result<Vec<f32>> {
+        let out = self.kernel("batch_update").execute(&[
+            f32_input(w, &[BLOCK_D as i64])?,
+            f32_input(z, &[BLOCK_D as i64])?,
+            f32_input(d_block, &[BLOCK_N as i64, BLOCK_D as i64])?,
+            i32_input(idx, &[BLOCK_U as i64])?,
+            f32_input(margins, &[BLOCK_U as i64])?,
+            f32_input(y, &[BLOCK_U as i64])?,
+            f32_input(c0, &[BLOCK_U as i64])?,
+            xla::Literal::from(eta),
+            xla::Literal::from(lambda),
+        ])?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine-level tests live in rust/tests/xla_runtime.rs; against the
+    // offline stub the only testable behaviour is the load-failure path.
+    #[test]
+    fn load_missing_dir_errors_cleanly() {
+        let msg = match XlaEngine::load(Path::new("/nonexistent-artifacts-dir")) {
+            Ok(_) => panic!("load must fail on a missing dir"),
+            Err(e) => format!("{e:#}"),
+        };
+        // stub build: PJRT client creation fails first; real build: the
+        // missing-artifact message. Both must name an actionable fix.
+        assert!(
+            msg.contains("make artifacts") || msg.contains("stub"),
+            "unhelpful error: {msg}"
+        );
+    }
+}

@@ -16,6 +16,13 @@ pub struct CscMatrix {
 
 impl CscMatrix {
     /// Assemble from raw parts, validating the CSC invariants.
+    ///
+    /// Cheap shape checks (lengths, `col_ptr` monotonicity — O(cols)) run
+    /// in every profile. The O(nnz) content checks (per-column strict row
+    /// sorting, row bounds) run under `debug_assertions` only: every slab
+    /// build in the partitioners funnels through here, and re-scanning all
+    /// nonzeros on each release-mode bench run is pure overhead for inputs
+    /// our own builders already produce sorted.
     pub fn from_parts(
         rows: usize,
         cols: usize,
@@ -29,6 +36,9 @@ impl CscMatrix {
         assert_eq!(row_idx.len(), values.len(), "row_idx/values length");
         for c in 0..cols {
             assert!(col_ptr[c] <= col_ptr[c + 1], "col_ptr not monotone at {c}");
+        }
+        #[cfg(debug_assertions)]
+        for c in 0..cols {
             let seg = &row_idx[col_ptr[c]..col_ptr[c + 1]];
             for w in seg.windows(2) {
                 assert!(w[0] < w[1], "row indices not strictly sorted in column {c}");
@@ -360,10 +370,27 @@ mod tests {
         assert_eq!(out, vec![0.0; 4]);
     }
 
+    // The O(nnz) content checks are compiled out in release, so these two
+    // pins run in debug only (which is what `cargo test` builds).
+    #[cfg(debug_assertions)]
     #[test]
-    #[should_panic]
-    fn from_parts_validates_sorted_rows() {
+    #[should_panic(expected = "not strictly sorted")]
+    fn from_parts_validates_sorted_rows_in_debug() {
         CscMatrix::from_parts(3, 1, vec![0, 2], vec![2, 1], vec![1.0, 2.0]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_parts_validates_row_bounds_in_debug() {
+        CscMatrix::from_parts(3, 1, vec![0, 1], vec![7], vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "col_ptr")]
+    fn from_parts_shape_checks_run_in_every_profile() {
+        // monotonicity is a cheap shape check: always validated
+        CscMatrix::from_parts(3, 2, vec![0, 2, 1], vec![0], vec![1.0]);
     }
 
     #[test]

@@ -63,11 +63,28 @@ pub fn read<R: BufRead>(reader: R, name: &str, min_dim: usize) -> Result<Dataset
             let (idx_s, val_s) = tok
                 .split_once(':')
                 .with_context(|| format!("line {}: bad token {tok:?}", lineno + 1))?;
-            let idx: usize = idx_s.parse().with_context(|| format!("bad index {idx_s:?}"))?;
+            let idx: usize = idx_s
+                .parse()
+                .with_context(|| format!("line {}: bad index {idx_s:?}", lineno + 1))?;
+            // Validate BEFORE the 0-based conversion: `(idx - 1) as u32`
+            // on a malformed `0:val` token would underflow (wrapping to
+            // u32::MAX in release, panicking in debug), and an index past
+            // u32::MAX would silently truncate the row id.
             if idx == 0 {
-                bail!("line {}: LibSVM indices are 1-based, got 0", lineno + 1);
+                bail!(
+                    "line {}: LibSVM indices are 1-based, got 0 in token {tok:?}",
+                    lineno + 1
+                );
             }
-            let val: f64 = val_s.parse().with_context(|| format!("bad value {val_s:?}"))?;
+            if idx > u32::MAX as usize {
+                bail!(
+                    "line {}: feature index {idx} exceeds the u32 row-index range",
+                    lineno + 1
+                );
+            }
+            let val: f64 = val_s
+                .parse()
+                .with_context(|| format!("line {}: bad value {val_s:?}", lineno + 1))?;
             max_feat = max_feat.max(idx);
             triples.push(((idx - 1) as u32, col, val));
         }
@@ -160,6 +177,23 @@ mod tests {
     #[test]
     fn rejects_zero_index() {
         assert!(read(Cursor::new("+1 0:1.0\n"), "s", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_index_with_line_context() {
+        let err = read(Cursor::new("+1 1:1\n+1 0:1.0\n"), "s", 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("1-based"), "{msg}");
+        assert!(msg.contains("0:1.0"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_index_beyond_u32_range() {
+        // u32::MAX itself is the largest representable 1-based index
+        assert!(read(Cursor::new("+1 4294967295:1.0\n"), "s", 0).is_ok());
+        let err = read(Cursor::new("+1 4294967296:1.0\n"), "s", 0).unwrap_err();
+        assert!(format!("{err:#}").contains("u32"), "{err:#}");
     }
 
     #[test]

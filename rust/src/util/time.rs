@@ -9,13 +9,58 @@
 
 use std::time::Instant;
 
+/// Minimal `clock_gettime` FFI — the crate keeps `anyhow` as its only
+/// dependency, so the `libc` crate is not available; `clock_gettime`
+/// itself is in the C library these targets already link. Scoped to the
+/// platforms whose clock id and `timespec` layout we actually know
+/// (64-bit Linux and macOS); everything else takes the wall-clock
+/// fallback below rather than guessing ABI constants.
+#[cfg(all(
+    any(target_os = "linux", target_os = "macos"),
+    target_pointer_width = "64"
+))]
+mod sys {
+    // 64-bit linux-gnu/musl and macOS: { time_t: i64, long: i64 }
+    #[repr(C)]
+    pub struct Timespec {
+        pub tv_sec: i64,
+        pub tv_nsec: i64,
+    }
+
+    #[cfg(target_os = "linux")]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    #[cfg(target_os = "macos")]
+    pub const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+
+    extern "C" {
+        pub fn clock_gettime(clock_id: i32, tp: *mut Timespec) -> i32;
+    }
+}
+
 /// Seconds of CPU time consumed by the calling thread.
+#[cfg(all(
+    any(target_os = "linux", target_os = "macos"),
+    target_pointer_width = "64"
+))]
 pub fn thread_cpu_now() -> f64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let mut ts = sys::Timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: plain syscall writing into a stack-allocated timespec.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    let rc = unsafe { sys::clock_gettime(sys::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     assert_eq!(rc, 0, "clock_gettime(CLOCK_THREAD_CPUTIME_ID) failed");
     ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Fallback for targets without the FFI above: a process-wide wall
+/// clock. The simulated schedule loses its contention immunity there,
+/// but the build stays portable.
+#[cfg(not(all(
+    any(target_os = "linux", target_os = "macos"),
+    target_pointer_width = "64"
+)))]
+pub fn thread_cpu_now() -> f64 {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
 /// Incremental thread-CPU-time meter: `lap()` returns seconds since the
@@ -84,6 +129,12 @@ mod tests {
         assert!(t.lap() < 0.05);
     }
 
+    // only meaningful where the thread-CPU FFI (not the wall-clock
+    // fallback) is compiled in
+    #[cfg(all(
+        any(target_os = "linux", target_os = "macos"),
+        target_pointer_width = "64"
+    ))]
     #[test]
     fn cpu_time_excludes_sleep() {
         let mut t = ThreadCpuTimer::start();

@@ -169,6 +169,59 @@ fn sim_clock_scales_with_network_params() {
     );
 }
 
+/// The §4.5 accounting leans on both collectives moving exactly `2q`
+/// scalars per reduced scalar for *any* group size, not just the powers
+/// of two the binomial tree is usually drawn with. Property-check tree vs
+/// star over awkward (non-power-of-two) groups: identical elementwise
+/// sums on every node and identical `total_scalars`.
+#[test]
+fn tree_and_star_allreduce_agree_on_non_power_of_two_groups() {
+    use fdsvrg::net::topology::{star_allreduce, tree_allreduce};
+    use fdsvrg::net::{build, NodeId};
+
+    for (n, len) in [(3usize, 1usize), (5, 2), (6, 3), (7, 5), (9, 4)] {
+        let mut totals = Vec::new();
+        for star in [false, true] {
+            let (eps, stats) = build(n, SimParams::free());
+            let mut handles = Vec::new();
+            for (rank, mut ep) in eps.into_iter().enumerate() {
+                handles.push(std::thread::spawn(move || {
+                    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                    // distinct per-rank payload so a dropped or duplicated
+                    // contribution cannot cancel out
+                    let mut data: Vec<f64> =
+                        (0..len).map(|j| ((rank + 1) * (j + 2)) as f64).collect();
+                    if star {
+                        star_allreduce(&mut ep, &group, &mut data);
+                    } else {
+                        tree_allreduce(&mut ep, &group, &mut data);
+                    }
+                    data
+                }));
+            }
+            let results: Vec<Vec<f64>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            let want: Vec<f64> = (0..len)
+                .map(|j| (0..n).map(|r| ((r + 1) * (j + 2)) as f64).sum())
+                .collect();
+            for (rank, r) in results.iter().enumerate() {
+                assert_eq!(r, &want, "n={n} len={len} star={star} rank={rank}");
+            }
+            totals.push(stats.total_scalars());
+        }
+        assert_eq!(
+            totals[0], totals[1],
+            "n={n} len={len}: tree and star must move identical scalar volume"
+        );
+        // coordinator + q workers ⇒ q = n−1; 2q scalars per reduced scalar
+        assert_eq!(
+            totals[0],
+            2 * (n as u64 - 1) * len as u64,
+            "n={n} len={len}: volume must match the paper's 2q·L form"
+        );
+    }
+}
+
 /// grads counter: N per full-gradient pass + M per inner loop (paper §4.5
 /// normalization used for the "compute N gradients" accounting).
 #[test]

@@ -1,0 +1,198 @@
+//! Offline stub of the `xla` crate's PJRT surface.
+//!
+//! The real `xla` crate (PJRT bindings over libxla) is unavailable in the
+//! offline build environment, but `runtime::xla_engine` must still
+//! *type-check* under `--features xla` so the PJRT path cannot bit-rot.
+//! This crate mirrors exactly the API surface the engine consumes:
+//!
+//! * [`PjRtClient::cpu`] / [`PjRtClient::compile`]
+//! * [`PjRtLoadedExecutable::execute`] returning per-device
+//!   [`PjRtBuffer`]s with [`PjRtBuffer::to_literal_sync`]
+//! * [`Literal`] construction ([`Literal::vec1`], `From<f32>`,
+//!   [`Literal::reshape`]) and readback ([`Literal::to_vec`],
+//!   [`Literal::to_tuple1`])
+//! * [`HloModuleProto::from_text_file`] / [`XlaComputation::from_proto`]
+//!
+//! Every entry point that would need a live PJRT runtime returns
+//! [`Error`] instead of executing, so a binary built against the stub
+//! fails loudly (and helpfully) at `XlaEngine::load` rather than
+//! producing wrong numbers. To run the real path, replace the
+//! `third_party/xla-stub` path dependency in the workspace manifest with
+//! the actual `xla` crate; no engine code changes are required.
+
+use std::fmt;
+
+/// Error type matching the real bindings' shape (`std::error::Error +
+/// Send + Sync`), so `anyhow` context chains work identically against
+/// stub and real crate.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (linked against the \
+         offline xla stub); swap third_party/xla-stub for the real `xla` \
+         crate to execute artifacts"
+    ))
+}
+
+/// Element types the [`Literal`] conversions accept.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host-side tensor. The stub carries no data — construction succeeds
+/// (it is pure host bookkeeping in the real crate too) but readback
+/// errors.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reinterpret with the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    /// Copy the elements back to a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Unwrap a 1-tuple literal (lowering with `return_tuple=True`).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Literal {
+        Literal { _private: () }
+    }
+}
+
+impl From<f64> for Literal {
+    fn from(_v: f64) -> Literal {
+        Literal { _private: () }
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(_v: i32) -> Literal {
+        Literal { _private: () }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// A device-resident buffer returned by an executable.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// The PJRT client; owns the device plugin.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU plugin client — errors in the stub (no plugin to load).
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled, device-loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device output
+    /// buffers (`result[device][output]`).
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Parsed HLO module (text or proto form).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_entry_points_error_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("xla"), "{msg}");
+    }
+
+    #[test]
+    fn host_side_construction_succeeds() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err(), "readback must not fabricate data");
+        let _scalar: Literal = 0.5f32.into();
+        let proto_err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(std::error::Error::source(&proto_err).is_none());
+    }
+}
