@@ -8,6 +8,8 @@
 //!    Theorem 1 newly proves vs the Johnson–Zhang analyzed one.
 //! 4. network sensitivity: SimParams α/β sweep — where does the
 //!    tree's log₂(q) depth matter?
+//! 5. wire formats (`--wire`): f64 vs f32 vs sparse payload codecs,
+//!    objective gap vs bytes on the wire (see `exp::wire_ablation`).
 //!
 //! ```sh
 //! cargo bench --bench bench_ablations [-- <filter>]
@@ -16,6 +18,7 @@
 use fdsvrg::algs::{serial, Algorithm, Problem, RunParams};
 use fdsvrg::bench::Bench;
 use fdsvrg::data::profiles;
+use fdsvrg::exp;
 use fdsvrg::metrics::TextTable;
 use fdsvrg::net::SimParams;
 use std::path::Path;
@@ -160,7 +163,7 @@ fn main() {
         for (alpha_us, gbps) in [(5.0, 40.0), (40.0, 10.0), (500.0, 1.0)] {
             let sim = SimParams {
                 latency: alpha_us * 1e-6,
-                sec_per_scalar: 8.0 * 8.0 / (gbps * 1e9), // 8 B scalars over gbps
+                sec_per_byte: 8.0 / (gbps * 1e9), // gbps link, charged per byte
                 ..SimParams::default()
             };
             let mut t = [0.0f64; 2];
@@ -183,6 +186,12 @@ fn main() {
             ]);
         }
         println!("== ablation: network cost model sensitivity ==\n{}", table.render());
+    });
+
+    // --- 5. wire formats: payload codec sweep on url-sim/news20-sim ---
+    b.once("ablation/wire formats", || {
+        let ctx = exp::Ctx::bench(Path::new("results"));
+        exp::wire_ablation(&ctx).expect("wire ablation run");
     });
 
     b.finish();

@@ -6,9 +6,45 @@
 use fdsvrg::algs::{Algorithm, Problem, RunParams};
 use fdsvrg::bench::Bench;
 use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::net::collectives;
 use fdsvrg::net::topology::tree_allreduce;
-use fdsvrg::net::{build, SimParams};
+use fdsvrg::net::{build, tags, Endpoint, NodeId, SimParams, WireFmt};
 use fdsvrg::util::Pcg64;
+
+/// The pre-payload broadcast: one deep copy of the full vector per child
+/// send (what `tree_broadcast` did before `Arc` payloads). Kept here as
+/// the baseline half of the zero-copy before/after comparison.
+fn clone_per_hop_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    let q = group.len();
+    let mut mask = 1usize;
+    while mask < q {
+        mask <<= 1;
+    }
+    mask >>= 1;
+    let mut received = rank == 0;
+    while mask >= 1 {
+        if rank & (mask - 1) == 0 {
+            if !received && rank & mask != 0 {
+                let msg = ep.recv_from(group[rank - mask], tags::BCAST);
+                msg.payload.decode_resize(data);
+                received = true;
+            } else if received && rank & mask == 0 && rank + mask < q {
+                // fresh encode per child — the per-hop O(d) deep copy
+                ep.send(group[rank + mask], tags::BCAST, WireFmt::F64.encode(data));
+            }
+        }
+        if mask == 1 {
+            break;
+        }
+        mask >>= 1;
+    }
+}
+
+fn clone_per_hop_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+    collectives::tree_reduce(ep, group, data, WireFmt::F64);
+    clone_per_hop_broadcast(ep, group, data);
+}
 
 fn main() {
     let mut b = Bench::from_args("micro").with_iters(3, 10);
@@ -58,6 +94,42 @@ fn main() {
                     let group = group.clone();
                     s.spawn(move || {
                         let mut data = vec![1.0f64; len];
+                        tree_allreduce(ep, &group, &mut data);
+                        std::hint::black_box(&data);
+                    });
+                }
+            });
+        });
+    }
+
+    // --- zero-copy broadcast before/after: d = 1M allreduce, q ∈ {8, 32}.
+    // "clone-per-hop" re-encodes the 8 MB payload for every child send
+    // (the pre-payload wire); "zero-copy" is the production path — the
+    // root encodes once and every hop forwards the same Arc buffer.
+    for q in [8usize, 32] {
+        let d = 1_000_000usize;
+        b.bench(&format!("net/allreduce d=1M q={q} clone-per-hop (before)"), || {
+            let (mut eps, _) = build(q + 1, SimParams::free());
+            let group: Vec<usize> = (0..=q).collect();
+            std::thread::scope(|s| {
+                for ep in eps.iter_mut() {
+                    let group = group.clone();
+                    s.spawn(move || {
+                        let mut data = vec![1.0f64; d];
+                        clone_per_hop_allreduce(ep, &group, &mut data);
+                        std::hint::black_box(&data);
+                    });
+                }
+            });
+        });
+        b.bench(&format!("net/allreduce d=1M q={q} zero-copy (after)"), || {
+            let (mut eps, _) = build(q + 1, SimParams::free());
+            let group: Vec<usize> = (0..=q).collect();
+            std::thread::scope(|s| {
+                for ep in eps.iter_mut() {
+                    let group = group.clone();
+                    s.spawn(move || {
+                        let mut data = vec![1.0f64; d];
                         tree_allreduce(ep, &group, &mut data);
                         std::hint::black_box(&data);
                     });

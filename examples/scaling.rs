@@ -45,15 +45,20 @@ fn main() {
     println!("-- Fig. 9: speedup vs worker count --\n{}", table.render());
 
     // ---- §4.4.1: mini-batch ablation at q=8 ----
-    let mut table = TextTable::new(vec!["batch u", "messages", "scalars", "sim time (s)"]);
+    let mut table =
+        TextTable::new(vec!["batch u", "messages", "scalars", "bytes", "sim time (s)"]);
     for u in [1usize, 4, 16, 64] {
         let params = RunParams { q: 8, outer: 4, batch: u, ..Default::default() };
         let res = Algorithm::FdSvrg.run(&problem, &params);
-        // messages ≈ allreduce rounds × links; recover rounds from scalars/u
+        // the wire layer counts messages exactly; the closed-form estimate
+        // (2q per allreduce, one N-vector + ceil(M/u) batch reduces per
+        // epoch) must agree with it
+        debug_assert_eq!(res.total_messages, estimate_messages(problem.n(), 4, 8, u));
         table.row(vec![
             format!("{u}"),
-            format!("{}", estimate_messages(problem.n(), 4, 8, u)),
+            format!("{}", res.total_messages),
             format!("{}", res.total_scalars),
+            format!("{}", res.total_bytes),
             format!("{:.4}", res.total_sim_time),
         ]);
     }

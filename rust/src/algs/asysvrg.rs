@@ -63,17 +63,7 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Other => None,
         })
         .expect("monitor result");
-    let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    RunResult {
-        algorithm: "asysvrg".into(),
-        dataset: problem.ds.name.clone(),
-        w,
-        trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+    RunResult::from_cluster("asysvrg", &problem.ds.name, w, trace, wall.seconds(), &cluster.stats)
 }
 
 /// Server `k` (Algorithm 5): event loop over pull/push until `M` pushes.
@@ -91,6 +81,7 @@ fn server(
     let dk = hi - lo;
     let n = problem.n();
     let q = topo.q;
+    let comm = params.comm();
     let lambda = problem.reg.lambda();
     let mut w_k = vec![0.0f64; dk];
     let mut trace = Trace::default();
@@ -102,6 +93,7 @@ fn server(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads: 0,
             objective: problem.objective(&full_w),
         });
@@ -110,13 +102,11 @@ fn server(
 
     for t in 0..params.outer {
         // synchronous full-gradient phase (Algorithm 5 lines 3–6)
-        for l in 0..q {
-            ep.send(topo.worker_node(l), tags::BCAST, w_k.clone());
-        }
+        comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::BCAST, &w_k);
         let mut z_k = vec![0.0f64; dk];
         for l in 0..q {
             let msg = ep.recv_from(topo.worker_node(l), tags::REDUCE);
-            linalg::axpy(1.0, &msg.data, &mut z_k);
+            msg.add_into(&mut z_k);
         }
         linalg::scale(1.0 / n as f64, &mut z_k);
         grads += n as u64;
@@ -124,6 +114,7 @@ fn server(
         // asynchronous inner phase: serve pulls, apply pushes, stop at M
         let mut pushes = 0usize;
         let mut done_workers = 0usize;
+        let mut push_buf = vec![0.0f64; dk];
         while done_workers < q {
             let msg = ep.recv_any();
             match msg.tag {
@@ -132,13 +123,16 @@ fn server(
                     let mut resp = Vec::with_capacity(dk + 1);
                     resp.push(flag);
                     resp.extend_from_slice(&w_k);
-                    ep.send(msg.from, tags::PULL_RESP, resp);
+                    // [flag, w_k...] carries a structural header, so it
+                    // travels exact like the other structured payloads
+                    comm.send_exact(ep, msg.from, tags::PULL_RESP, resp);
                 }
                 tags::PUSH => {
                     if pushes < m_pushes {
                         // w̃ ← w̃ − η(∇ + z + ∇g(w̃)), Algorithm 5 line 13
+                        msg.decode_into(&mut push_buf);
                         for i in 0..dk {
-                            w_k[i] -= eta * (msg.data[i] + z_k[i] + lambda * w_k[i]);
+                            w_k[i] -= eta * (push_buf[i] + z_k[i] + lambda * w_k[i]);
                         }
                         pushes += 1;
                         grads += 1;
@@ -157,7 +151,7 @@ fn server(
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
                 let (slo, shi) = topo.key_range(s);
-                full_w[slo..shi].copy_from_slice(&msg.data);
+                msg.decode_into(&mut full_w[slo..shi]);
             }
             let objective = problem.objective(&full_w);
             ep.discard_cpu();
@@ -167,6 +161,7 @@ fn server(
                 sim_time,
                 wall_time: wall.seconds(),
                 scalars: ep.stats().total_scalars(),
+                bytes: ep.stats().total_bytes(),
                 grads,
                 objective,
             });
@@ -185,7 +180,7 @@ fn server(
         } else {
             ep.send_eval(0, tags::EVAL, w_k.clone());
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
-            ctrl.data[0] != 0.0
+            ctrl.value(0) != 0.0
         };
         if stop {
             break;
@@ -211,18 +206,26 @@ fn worker(
     let l = ep.id() - topo.p;
     let shard = &shards[l];
     let n_local = shard.data.cols();
+    let comm = params.comm();
     let loss = problem.build_loss();
     let mut rng = Pcg64::seed_from_u64(params.seed ^ (0xA51 + l as u64));
     let mut w_t = vec![0.0f64; topo.d];
     let mut w_m = vec![0.0f64; topo.d];
     let mut margins0 = vec![0.0f64; n_local];
+    // reusable per-server decode buffers for `[flag, w_k...]` pull
+    // responses (no allocation in the pull/compute/push race)
+    let mut resp_bufs: Vec<Vec<f64>> = (0..topo.p)
+        .map(|k| {
+            let (lo, hi) = topo.key_range(k);
+            vec![0.0f64; hi - lo + 1]
+        })
+        .collect();
 
     loop {
         // synchronous full-gradient phase
         for k in 0..topo.p {
-            let msg = ep.recv_from(topo.server_node(k), tags::BCAST);
             let (lo, hi) = topo.key_range(k);
-            w_t[lo..hi].copy_from_slice(&msg.data);
+            comm.recv_into(ep, topo.server_node(k), tags::BCAST, &mut w_t[lo..hi]);
         }
         shard.data.transpose_matvec(&w_t, &mut margins0);
         let mut zsum = vec![0.0f64; topo.d];
@@ -234,22 +237,24 @@ fn worker(
         }
         for k in 0..topo.p {
             let (lo, hi) = topo.key_range(k);
-            ep.send(topo.server_node(k), tags::REDUCE, zsum[lo..hi].to_vec());
+            comm.send(ep, topo.server_node(k), tags::REDUCE, &zsum[lo..hi]);
         }
 
         // asynchronous inner loop
         loop {
             let mut ended = false;
             for k in 0..topo.p {
-                ep.send(topo.server_node(k), tags::PULL_REQ, vec![0.0]);
+                // pull request token: structured, not codec-compressed
+                comm.send_exact(ep, topo.server_node(k), tags::PULL_REQ, vec![0.0]);
             }
             for k in 0..topo.p {
-                let msg = ep.recv_from(topo.server_node(k), tags::PULL_RESP);
                 let (lo, hi) = topo.key_range(k);
-                if msg.data[0] != 0.0 {
+                let resp = &mut resp_bufs[k];
+                comm.recv_into(ep, topo.server_node(k), tags::PULL_RESP, resp);
+                if resp[0] != 0.0 {
                     ended = true;
                 }
-                w_m[lo..hi].copy_from_slice(&msg.data[1..]);
+                w_m[lo..hi].copy_from_slice(&resp[1..]);
             }
             if ended {
                 break;
@@ -262,15 +267,16 @@ fn worker(
             shard.data.col_axpy(i, delta, &mut grad);
             for k in 0..topo.p {
                 let (lo, hi) = topo.key_range(k);
-                ep.send(topo.server_node(k), tags::PUSH, grad[lo..hi].to_vec());
+                comm.send(ep, topo.server_node(k), tags::PUSH, &grad[lo..hi]);
             }
         }
         for k in 0..topo.p {
-            ep.send(topo.server_node(k), tags::CTRL, vec![1.0]);
+            // end-of-epoch control token: structured, exact
+            comm.send_exact(ep, topo.server_node(k), tags::CTRL, vec![1.0]);
         }
 
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
-        if ctrl.data[0] != 0.0 {
+        if ctrl.value(0) != 0.0 {
             break;
         }
     }

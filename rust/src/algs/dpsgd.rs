@@ -60,17 +60,7 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Worker => None,
         })
         .expect("leader result");
-    let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    RunResult {
-        algorithm: "dpsgd".into(),
-        dataset: problem.ds.name.clone(),
-        w,
-        trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+    RunResult::from_cluster("dpsgd", &problem.ds.name, w, trace, wall.seconds(), &cluster.stats)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -91,11 +81,15 @@ fn worker(
     let prev = (id + q - 1) % q;
     let shard = &shards[id];
     let local_n = shard.data.cols();
+    let comm = params.comm();
     let loss = problem.build_loss();
     let mut w = vec![0.0f64; d];
     let mut rng = Pcg64::seed_from_u64(params.seed ^ (id as u64).wrapping_mul(0x9E37));
     let mut trace = Trace::default();
     let mut grads = 0u64;
+    // reusable decode buffers for the ring exchange (no per-round allocs)
+    let mut wp = vec![0.0f64; d];
+    let mut wn = vec![0.0f64; d];
 
     if id == 0 {
         trace.push(TracePoint {
@@ -103,6 +97,7 @@ fn worker(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads: 0,
             objective: problem.objective(&w),
         });
@@ -112,14 +107,13 @@ fn worker(
     for t in 0..params.outer {
         let eta = eta0 / (1.0 + DECAY * t as f64);
         for _ in 0..rounds {
-            // 1. ring mixing: exchange dense w with both neighbours.
-            //    (send both first — channels are buffered, no deadlock)
-            ep.send(next, tags::RING, w.clone());
-            ep.send(prev, tags::RING, w.clone());
-            let from_prev = ep.recv_from(prev, tags::RING);
-            let from_next = ep.recv_from(next, tags::RING);
-            for ((wi, a), b) in w.iter_mut().zip(from_prev.data.iter()).zip(from_next.data.iter())
-            {
+            // 1. ring mixing: exchange dense w with both neighbours —
+            //    one encode, two Arc sends (send both first; channels are
+            //    buffered, no deadlock)
+            comm.send_all(ep, [next, prev], tags::RING, &w);
+            ep.recv_from(prev, tags::RING).decode_into(&mut wp);
+            ep.recv_from(next, tags::RING).decode_into(&mut wn);
+            for ((wi, a), b) in w.iter_mut().zip(wp.iter()).zip(wn.iter()) {
                 *wi = (*wi + a + b) / 3.0;
             }
             // 2. local stochastic gradient step on the shard
@@ -148,9 +142,7 @@ fn worker(
             let mut avg = w.clone();
             for peer in 1..q {
                 let msg = ep.recv_eval_from(peer, tags::EVAL);
-                for (a, v) in avg.iter_mut().zip(msg.data.iter()) {
-                    *a += v;
-                }
+                msg.add_into(&mut avg);
             }
             let inv_q = 1.0 / q as f64;
             avg.iter_mut().for_each(|v| *v *= inv_q);
@@ -162,6 +154,7 @@ fn worker(
                 sim_time,
                 wall_time: wall.seconds(),
                 scalars: ep.stats().total_scalars(),
+                bytes: ep.stats().total_bytes(),
                 grads: grads * q as u64, // all workers step in parallel
                 objective,
             });
@@ -182,7 +175,7 @@ fn worker(
         } else {
             ep.send_eval(0, tags::EVAL, w.clone());
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
-            if ctrl.data[0] != 0.0 {
+            if ctrl.value(0) != 0.0 {
                 return NodeOut::Worker;
             }
         }

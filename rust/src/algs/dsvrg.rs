@@ -62,17 +62,14 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Worker => None,
         })
         .expect("center result");
-    let total_sim_time = center.trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    RunResult {
-        algorithm: "dsvrg".into(),
-        dataset: problem.ds.name.clone(),
-        w: center.w,
-        trace: center.trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+    RunResult::from_cluster(
+        "dsvrg",
+        &problem.ds.name,
+        center.w,
+        center.trace,
+        wall.seconds(),
+        &cluster.stats,
+    )
 }
 
 fn center(
@@ -85,6 +82,7 @@ fn center(
     wall: &Stopwatch,
 ) -> CenterOut {
     let n = problem.n();
+    let comm = params.comm();
     let mut w = vec![0.0f64; d];
     let mut trace = Trace::default();
     let mut grads = 0u64;
@@ -93,20 +91,19 @@ fn center(
         sim_time: 0.0,
         wall_time: wall.seconds(),
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&w),
     });
     ep.discard_cpu();
 
     for t in 0..params.outer {
-        // (1) broadcast w_t, gather local gradient sums
-        for l in 1..=q {
-            ep.send(l, tags::BCAST, w.clone());
-        }
+        // (1) broadcast w_t (one encode, Arc fan-out), gather gradient sums
+        comm.send_all(ep, 1..=q, tags::BCAST, &w);
         let mut z = vec![0.0f64; d];
         for l in 1..=q {
             let msg = ep.recv_from(l, tags::REDUCE);
-            linalg::axpy(1.0, &msg.data, &mut z);
+            msg.add_into(&mut z);
         }
         let inv_n = 1.0 / n as f64;
         linalg::scale(inv_n, &mut z);
@@ -114,9 +111,9 @@ fn center(
 
         // (2) on-duty machine J runs the inner loop
         let j = 1 + (t % q);
-        ep.send(j, tags::RING, z);
+        comm.send(ep, j, tags::RING, &z);
         let msg = ep.recv_from(j, tags::RING);
-        w = msg.data;
+        w = msg.to_vec(d);
         grads += m_inner as u64;
 
         // evaluation (off the clock)
@@ -128,6 +125,7 @@ fn center(
             sim_time,
             wall_time: wall.seconds(),
             scalars: ep.stats().total_scalars(),
+            bytes: ep.stats().total_bytes(),
             grads,
             objective,
         });
@@ -160,6 +158,8 @@ fn worker(
     let q = shards.len();
     let shard = &shards[l];
     let n_local = shard.data.cols();
+    let d = problem.d();
+    let comm = params.comm();
     let loss = problem.build_loss();
     let lambda = problem.reg.lambda();
     let use_l2 = matches!(problem.reg, crate::loss::Regularizer::L2 { .. });
@@ -168,9 +168,8 @@ fn worker(
 
     loop {
         // (1) receive w_t, return local loss-gradient sum
-        let msg = ep.recv_from(0, tags::BCAST);
-        let w_t = msg.data;
-        let mut zsum = vec![0.0f64; w_t.len()];
+        let w_t = comm.recv_vec(ep, 0, tags::BCAST, d);
+        let mut zsum = vec![0.0f64; d];
         let mut margins0 = vec![0.0f64; n_local];
         shard.data.transpose_matvec(&w_t, &mut margins0);
         for i in 0..n_local {
@@ -179,12 +178,11 @@ fn worker(
                 shard.data.col_axpy(i, c, &mut zsum);
             }
         }
-        ep.send(0, tags::REDUCE, zsum);
+        comm.send(ep, 0, tags::REDUCE, &zsum);
 
         // (2) if on duty this epoch, run the inner loop and return w
         if l == t % q {
-            let msg = ep.recv_from(0, tags::RING);
-            let z = msg.data;
+            let z = comm.recv_vec(ep, 0, tags::RING, d);
             let mut w = w_t.clone();
             for _ in 0..m_inner {
                 let i = rng.below(n_local);
@@ -201,11 +199,11 @@ fn worker(
                 }
                 shard.data.col_axpy(i, -eta * delta, &mut w);
             }
-            ep.send(0, tags::RING, w);
+            comm.send(ep, 0, tags::RING, &w);
         }
 
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
-        if ctrl.data[0] != 0.0 {
+        if ctrl.value(0) != 0.0 {
             break;
         }
         t += 1;

@@ -30,20 +30,11 @@ use super::{Problem, RunParams};
 use crate::cluster::run_cluster;
 use crate::linalg;
 use crate::metrics::{RunResult, Trace, TracePoint};
-use crate::net::topology::{star_allreduce, tree_allreduce};
 use crate::net::{tags, Endpoint, NodeId};
 use crate::sparse::partition::{by_features, by_features_rows, FeatureSlab};
 use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
-
-fn allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, star: bool) {
-    if star {
-        star_allreduce(ep, group, data);
-    } else {
-        tree_allreduce(ep, group, data);
-    }
-}
 
 struct CoordOut {
     trace: Trace,
@@ -89,18 +80,15 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Worker => None,
         })
         .expect("coordinator result");
-    let total_sim_time = coord.trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
     let _ = d;
-    RunResult {
-        algorithm: "fdsaga".into(),
-        dataset: problem.ds.name.clone(),
-        w: coord.w,
-        trace: coord.trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+    RunResult::from_cluster(
+        "fdsaga",
+        &problem.ds.name,
+        coord.w,
+        coord.trace,
+        wall.seconds(),
+        &cluster.stats,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -115,6 +103,7 @@ fn coordinator(
     wall: &Stopwatch,
 ) -> CoordOut {
     let q = group.len() - 1;
+    let comm = params.comm();
     let mut trace = Trace::default();
     let mut grads = 0u64;
     let mut w = vec![0.0f64; problem.d()];
@@ -123,6 +112,7 @@ fn coordinator(
         sim_time: 0.0,
         wall_time: wall.seconds(),
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&w),
     });
@@ -133,13 +123,13 @@ fn coordinator(
         while m < m_inner {
             let b = u.min(m_inner - m);
             let mut partial = vec![0.0f64; b];
-            allreduce(ep, group, &mut partial, params.star_reduce);
+            comm.allreduce(ep, group, &mut partial);
             grads += b as u64;
             m += b;
         }
         for (l, slab) in slabs.iter().enumerate() {
             let msg = ep.recv_eval_from(l + 1, tags::EVAL);
-            w[slab.row_lo..slab.row_hi].copy_from_slice(&msg.data);
+            msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
         }
         let objective = problem.objective(&w);
         ep.discard_cpu();
@@ -149,6 +139,7 @@ fn coordinator(
             sim_time,
             wall_time: wall.seconds(),
             scalars: ep.stats().total_scalars(),
+            bytes: ep.stats().total_bytes(),
             grads,
             objective,
         });
@@ -185,6 +176,7 @@ fn worker(
     let dl = slab.dim();
     let n = problem.n();
     let inv_n = 1.0 / n as f64;
+    let comm = params.comm();
     let loss = problem.build_loss();
     let lambda = match problem.reg {
         crate::loss::Regularizer::L2 { lambda } => lambda,
@@ -219,7 +211,7 @@ fn worker(
             }
             let mut partial: Vec<f64> =
                 batch_idx.iter().map(|&i| slab.data.col_dot(i, &w_l)).collect();
-            allreduce(ep, group, &mut partial, params.star_reduce);
+            comm.allreduce(ep, group, &mut partial);
             for (k, &i) in batch_idx.iter().enumerate() {
                 let c = loss.derivative(partial[k], y[i]);
                 let delta = c - a[i];
@@ -236,7 +228,7 @@ fn worker(
 
         ep.send_eval(0, tags::EVAL, w_l.clone());
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
-        if ctrl.data[0] != 0.0 {
+        if ctrl.value(0) != 0.0 {
             break;
         }
     }

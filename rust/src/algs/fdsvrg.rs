@@ -12,9 +12,10 @@
 //!   `2q` scalars per sampled instance, `M·2q` per outer iteration.
 //!
 //! Both use the Fig.-5 binomial tree rooted at the coordinator
-//! ([`crate::net::topology::tree_allreduce`]), so the counters reproduce the
-//! §4.5 accounting *exactly* — `comm_counters_match_paper_formula` below
-//! pins this.
+//! ([`crate::net::collectives`], reached through the run's
+//! [`crate::net::collectives::Comm`] handle so the payloads go through the
+//! wire codec), so the counters reproduce the §4.5 accounting *exactly* —
+//! `comm_counters_match_paper_formula` below pins this.
 //!
 //! All workers draw the sampled index `i_m` from the same seeded PRNG
 //! stream, which makes the distributed update *exactly* the serial SVRG
@@ -27,20 +28,11 @@ use super::{Problem, RunParams};
 use crate::cluster::run_cluster;
 use crate::linalg;
 use crate::metrics::{RunResult, Trace, TracePoint};
-use crate::net::topology::{star_allreduce, tree_allreduce};
 use crate::net::{tags, Endpoint, NodeId};
 use crate::sparse::partition::{by_features, by_features_rows, FeatureSlab};
 use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
-
-fn allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, star: bool) {
-    if star {
-        star_allreduce(ep, group, data);
-    } else {
-        tree_allreduce(ep, group, data);
-    }
-}
 
 /// Outcome of the coordinator node.
 struct CoordOut {
@@ -92,17 +84,14 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Worker => None,
         })
         .expect("coordinator result");
-    let total_sim_time = coord.trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    RunResult {
-        algorithm: "fdsvrg".into(),
-        dataset: problem.ds.name.clone(),
-        w: coord.w,
-        trace: coord.trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+    RunResult::from_cluster(
+        "fdsvrg",
+        &problem.ds.name,
+        coord.w,
+        coord.trace,
+        wall.seconds(),
+        &cluster.stats,
+    )
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -119,6 +108,7 @@ fn coordinator(
     wall: &Stopwatch,
 ) -> CoordOut {
     let q = group.len() - 1;
+    let comm = params.comm();
     let mut trace = Trace::default();
     let mut grads = 0u64;
     let mut w = vec![0.0f64; d];
@@ -127,6 +117,7 @@ fn coordinator(
         sim_time: 0.0,
         wall_time: wall.seconds(),
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&w),
     });
@@ -135,7 +126,7 @@ fn coordinator(
     for t in 0..params.outer {
         // --- full-gradient phase: allreduce of partial products (root) ---
         let mut margins = vec![0.0f64; n];
-        allreduce(ep, group, &mut margins, params.star_reduce);
+        comm.allreduce(ep, group, &mut margins);
         grads += n as u64;
 
         // --- inner loop: one scalar-batch allreduce per mini-batch ---
@@ -143,7 +134,7 @@ fn coordinator(
         while m < m_inner {
             let b = u.min(m_inner - m);
             let mut partial = vec![0.0f64; b];
-            allreduce(ep, group, &mut partial, params.star_reduce);
+            comm.allreduce(ep, group, &mut partial);
             grads += b as u64;
             m += b;
         }
@@ -151,7 +142,7 @@ fn coordinator(
         // --- evaluation plane: collect w slabs, decide stop ---
         for (l, slab) in slabs.iter().enumerate() {
             let msg = ep.recv_eval_from(l + 1, tags::EVAL);
-            w[slab.row_lo..slab.row_hi].copy_from_slice(&msg.data);
+            msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
         }
         let objective = problem.objective(&w);
         ep.discard_cpu();
@@ -161,6 +152,7 @@ fn coordinator(
             sim_time,
             wall_time: wall.seconds(),
             scalars: ep.stats().total_scalars(),
+            bytes: ep.stats().total_bytes(),
             grads,
             objective,
         });
@@ -196,6 +188,7 @@ fn worker(
     let slab = &slabs[l];
     let dl = slab.dim();
     let n = problem.n();
+    let comm = params.comm();
     let loss = problem.build_loss();
     let lambda = match problem.reg {
         crate::loss::Regularizer::L2 { lambda } => lambda,
@@ -215,7 +208,7 @@ fn worker(
         // --- full gradient phase (Alg. 1 lines 3–5) ---
         let mut margins = vec![0.0f64; n];
         slab.data.transpose_matvec(&w_l, &mut margins);
-        allreduce(ep, group, &mut margins, params.star_reduce);
+        comm.allreduce(ep, group, &mut margins);
         for i in 0..n {
             c0[i] = loss.derivative(margins[i], y[i]);
         }
@@ -250,7 +243,7 @@ fn worker(
                     .iter()
                     .map(|&i| alpha * slab.data.col_dot(i, &w_l) + gamma * zx[i])
                     .collect();
-                allreduce(ep, group, &mut partial, params.star_reduce);
+                comm.allreduce(ep, group, &mut partial);
                 for (k, &i) in batch_idx.iter().enumerate() {
                     let delta = loss.derivative(partial[k], y[i]) - c0[i];
                     alpha *= beta;
@@ -286,7 +279,7 @@ fn worker(
                 // u partial inner products, communicated together (§4.4.1)
                 let mut partial: Vec<f64> =
                     batch_idx.iter().map(|&i| slab.data.col_dot(i, &w_l)).collect();
-                allreduce(ep, group, &mut partial, params.star_reduce);
+                comm.allreduce(ep, group, &mut partial);
                 // apply the b variance-reduced updates (line 11), each using
                 // the margin taken before this batch's updates
                 for (k, &i) in batch_idx.iter().enumerate() {
@@ -308,7 +301,7 @@ fn worker(
         // --- evaluation plane: ship the slab, await continue/stop ---
         ep.send_eval(0, tags::EVAL, w_l.clone());
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
-        if ctrl.data[0] != 0.0 {
+        if ctrl.value(0) != 0.0 {
             break;
         }
     }
@@ -475,6 +468,37 @@ mod tests {
         for w in res.trace.points.windows(2) {
             assert!(w[1].sim_time >= w[0].sim_time);
             assert!(w[1].scalars >= w[0].scalars);
+            assert!(w[1].bytes >= w[0].bytes);
         }
+    }
+
+    #[test]
+    fn f32_wire_halves_bytes_and_stays_close() {
+        let p = tiny();
+        let base = fast_params(4, 6);
+        let r64 = run(&p, &base);
+        let r32 = run(&p, &RunParams { wire: crate::net::WireFmt::F32, ..base.clone() });
+        // identical logical traffic, half the wire bytes
+        assert_eq!(r64.total_scalars, r32.total_scalars);
+        assert_eq!(r64.total_bytes, 8 * r64.total_scalars);
+        assert_eq!(r32.total_bytes, 4 * r32.total_scalars);
+        // f32 margins perturb the trajectory only at rounding scale
+        let rel = crate::linalg::dist2(&r64.w, &r32.w)
+            / (1.0 + crate::linalg::nrm2(&r64.w).powi(2));
+        assert!(rel < 1e-4, "f32 wire drifted too far: rel {rel:.3e}");
+        assert!(r32.final_objective() - r64.final_objective() < 1e-3);
+    }
+
+    #[test]
+    fn sparse_wire_runs_end_to_end() {
+        let p = tiny();
+        let mut params = fast_params(3, 4);
+        params.wire = crate::net::WireFmt::Sparse;
+        let res = run(&p, &params);
+        assert!(res.final_objective().is_finite());
+        let f0 = p.objective(&vec![0.0; p.d()]);
+        assert!(res.final_objective() < f0 - 1e-2);
+        // dense margin payloads under the sparse codec: 8 bytes per nonzero
+        assert!(res.total_bytes > 0 && res.total_bytes <= 8 * res.total_scalars);
     }
 }

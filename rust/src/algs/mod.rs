@@ -28,7 +28,8 @@ pub mod serial;
 pub mod synsvrg;
 
 use crate::loss::{Loss, LossKind, Regularizer};
-use crate::net::SimParams;
+use crate::net::collectives::Comm;
+use crate::net::{SimParams, WireFmt};
 use crate::sparse::libsvm::Dataset;
 use std::sync::Arc;
 
@@ -144,6 +145,10 @@ pub struct RunParams {
     pub sim_time_cap: Option<f64>,
     /// Ablation: replace the Fig.-5 tree with a naive star reduce.
     pub star_reduce: bool,
+    /// Wire format for counted payloads (`--wire f64|f32|sparse`): `f64`
+    /// is bit-exact (the equivalence-suite default), `f32` halves wire
+    /// bytes, `sparse` sends only nonzeros as `(u32, f32)` pairs.
+    pub wire: WireFmt,
     /// FD-SVRG inner loop implementation: lazy `w̃ = α·v + γ·z`
     /// representation (O(nnz) per step, L2 only) instead of the naive
     /// O(d_l)-per-step dense update. Numerically equal up to roundoff;
@@ -165,6 +170,7 @@ impl Default for RunParams {
             gap_stop: None,
             sim_time_cap: None,
             star_reduce: false,
+            wire: WireFmt::F64,
             lazy: false,
         }
     }
@@ -177,6 +183,12 @@ impl RunParams {
         } else {
             p.default_eta()
         }
+    }
+
+    /// The run's communication policy: every counted send goes through
+    /// this handle (codec + tree/star selection).
+    pub fn comm(&self) -> Comm {
+        Comm::new(self.wire, self.star_reduce)
     }
 }
 

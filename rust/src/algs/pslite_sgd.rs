@@ -62,17 +62,14 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Other => None,
         })
         .expect("monitor result");
-    let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    RunResult {
-        algorithm: "pslite-sgd".into(),
-        dataset: problem.ds.name.clone(),
+    RunResult::from_cluster(
+        "pslite-sgd",
+        &problem.ds.name,
         w,
         trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+        wall.seconds(),
+        &cluster.stats,
+    )
 }
 
 fn server(
@@ -85,6 +82,7 @@ fn server(
     let k = ep.id();
     let (lo, hi) = topo.key_range(k);
     let q = topo.q;
+    let comm = params.comm();
     let mut w_k = vec![0.0f64; hi - lo];
     let mut trace = Trace::default();
     let mut grads = 0u64;
@@ -95,6 +93,7 @@ fn server(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads: 0,
             objective: problem.objective(&full_w),
         });
@@ -108,15 +107,20 @@ fn server(
             let msg = ep.recv_any();
             match msg.tag {
                 tags::PULL_REQ => {
-                    // payload = keys (global feature ids as f64)
+                    // payload = keys (global feature ids as f64); the
+                    // ⟨key, value⟩ protocol is its own sparse codec, so
+                    // both directions travel as exact structured payloads
+                    // and can be read in place, no decode copy
+                    let keys = msg.payload.as_f64().expect("pslite keys are exact f64");
                     let resp: Vec<f64> =
-                        msg.data.iter().map(|&key| w_k[key as usize - lo]).collect();
-                    ep.send(msg.from, tags::PULL_RESP, resp);
+                        keys.iter().map(|&key| w_k[key as usize - lo]).collect();
+                    comm.send_exact(ep, msg.from, tags::PULL_RESP, resp);
                 }
                 tags::PUSH => {
                     // payload = [eta_t, key0, val0, key1, val1, ...]
-                    let eta_t = msg.data[0];
-                    let mut it = msg.data[1..].chunks_exact(2);
+                    let data = msg.payload.as_f64().expect("pslite kv payloads are exact f64");
+                    let eta_t = data[0];
+                    let mut it = data[1..].chunks_exact(2);
                     for kv in &mut it {
                         let idx = kv[0] as usize - lo;
                         w_k[idx] -= eta_t * kv[1];
@@ -136,7 +140,7 @@ fn server(
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
                 let (slo, shi) = topo.key_range(s);
-                full_w[slo..shi].copy_from_slice(&msg.data);
+                msg.decode_into(&mut full_w[slo..shi]);
             }
             let objective = problem.objective(&full_w);
             ep.discard_cpu();
@@ -146,6 +150,7 @@ fn server(
                 sim_time,
                 wall_time: wall.seconds(),
                 scalars: ep.stats().total_scalars(),
+                bytes: ep.stats().total_bytes(),
                 grads,
                 objective,
             });
@@ -164,7 +169,7 @@ fn server(
         } else {
             ep.send_eval(0, tags::EVAL, w_k.clone());
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
-            ctrl.data[0] != 0.0
+            ctrl.value(0) != 0.0
         };
         if stop {
             break;
@@ -189,6 +194,7 @@ fn worker(
     let shard = &shards[l];
     let n_local = shard.data.cols();
     let n = problem.n() as f64;
+    let comm = params.comm();
     let loss = problem.build_loss();
     let lambda = problem.reg.lambda();
     let q = topo.q as f64;
@@ -217,12 +223,14 @@ fn worker(
             let touched: Vec<usize> =
                 (0..topo.p).filter(|&k| !srv_keys[k].is_empty()).collect();
             for &k in &touched {
-                ep.send(topo.server_node(k), tags::PULL_REQ, srv_keys[k].clone());
+                comm.send_exact(ep, topo.server_node(k), tags::PULL_REQ, srv_keys[k].clone());
             }
             pulled.clear();
             for &k in &touched {
                 let msg = ep.recv_from(topo.server_node(k), tags::PULL_RESP);
-                pulled.extend_from_slice(&msg.data);
+                let resp = msg.payload.as_f64().expect("pslite pull responses are exact f64");
+                debug_assert_eq!(resp.len(), srv_keys[k].len());
+                pulled.extend_from_slice(resp);
             }
             // keys were grouped in ascending-server order and are sorted
             // within each group, so `pulled` aligns with `rows`
@@ -248,16 +256,16 @@ fn worker(
                     payload.push(key);
                     payload.push(grad);
                 }
-                ep.send(topo.server_node(k), tags::PUSH, payload);
+                comm.send_exact(ep, topo.server_node(k), tags::PUSH, payload);
                 offset += nk;
             }
             step += 1;
         }
         for k in 0..topo.p {
-            ep.send(topo.server_node(k), tags::CTRL, vec![1.0]);
+            comm.send_exact(ep, topo.server_node(k), tags::CTRL, vec![1.0]);
         }
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
-        if ctrl.data[0] != 0.0 {
+        if ctrl.value(0) != 0.0 {
             break;
         }
     }

@@ -61,6 +61,7 @@ pub fn svrg(
         sim_time: 0.0,
         wall_time: 0.0,
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&w),
     });
@@ -126,6 +127,7 @@ pub fn svrg(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads,
             objective,
         });
@@ -158,6 +160,7 @@ pub fn sgd(
         sim_time: 0.0,
         wall_time: 0.0,
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&w),
     });
@@ -187,6 +190,7 @@ pub fn sgd(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads: step,
             objective: problem.objective(&w),
         });
@@ -236,6 +240,7 @@ pub fn svrg_lazy(
         sim_time: 0.0,
         wall_time: 0.0,
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&w),
     });
@@ -294,6 +299,7 @@ pub fn svrg_lazy(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads,
             objective: problem.objective(&w),
         });
@@ -352,32 +358,14 @@ pub fn run_svrg_result(problem: &Problem, params: &RunParams) -> RunResult {
     let wall = Stopwatch::start();
     let (w, trace) =
         svrg(problem, eta, params.outer, params.m_inner, params.seed, SvrgOption::I, None);
-    RunResult {
-        algorithm: "serial-svrg".into(),
-        dataset: problem.ds.name.clone(),
-        w,
-        trace,
-        total_sim_time: 0.0,
-        total_wall_time: wall.seconds(),
-        total_scalars: 0,
-        busiest_node_scalars: 0,
-    }
+    RunResult::serial("serial-svrg", &problem.ds.name, w, trace, wall.seconds())
 }
 
 pub fn run_sgd_result(problem: &Problem, params: &RunParams) -> RunResult {
     let eta = params.effective_eta(problem);
     let wall = Stopwatch::start();
     let (w, trace) = sgd(problem, eta, params.outer, 1.0 / problem.n() as f64, params.seed);
-    RunResult {
-        algorithm: "serial-sgd".into(),
-        dataset: problem.ds.name.clone(),
-        w,
-        trace,
-        total_sim_time: 0.0,
-        total_wall_time: wall.seconds(),
-        total_scalars: 0,
-        busiest_node_scalars: 0,
-    }
+    RunResult::serial("serial-sgd", &problem.ds.name, w, trace, wall.seconds())
 }
 
 #[cfg(test)]

@@ -59,17 +59,7 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
             NodeOut::Other => None,
         })
         .expect("monitor result");
-    let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    RunResult {
-        algorithm: "synsvrg".into(),
-        dataset: problem.ds.name.clone(),
-        w,
-        trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: cluster.stats.total_scalars(),
-        busiest_node_scalars: cluster.stats.busiest_node_scalars(),
-    }
+    RunResult::from_cluster("synsvrg", &problem.ds.name, w, trace, wall.seconds(), &cluster.stats)
 }
 
 /// Server `k` (Algorithm 3). Server 0 additionally assembles evaluation
@@ -88,6 +78,7 @@ fn server(
     let dk = hi - lo;
     let n = problem.n();
     let q = topo.q;
+    let comm = params.comm();
     let lambda = problem.reg.lambda();
     let mut w_k = vec![0.0f64; dk];
     let mut trace = Trace::default();
@@ -99,6 +90,7 @@ fn server(
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
+            bytes: 0,
             grads: 0,
             objective: problem.objective(&full_w),
         });
@@ -106,27 +98,24 @@ fn server(
     }
 
     for t in 0..params.outer {
-        // full-gradient phase: send w_t^(k) to all workers, sum their z_l^(k)
-        for l in 0..q {
-            ep.send(topo.worker_node(l), tags::BCAST, w_k.clone());
-        }
+        // full-gradient phase: fan w_t^(k) out to all workers (one
+        // encode, Arc clones), sum their z_l^(k)
+        comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::BCAST, &w_k);
         let mut z_k = vec![0.0f64; dk];
         for l in 0..q {
             let msg = ep.recv_from(topo.worker_node(l), tags::REDUCE);
-            linalg::axpy(1.0, &msg.data, &mut z_k);
+            msg.add_into(&mut z_k);
         }
         linalg::scale(1.0 / n as f64, &mut z_k);
         grads += n as u64;
 
         // inner rounds (Algorithm 3 lines 7–12)
         for _ in 0..m_rounds {
-            for l in 0..q {
-                ep.send(topo.worker_node(l), tags::PULL_RESP, w_k.clone());
-            }
+            comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::PULL_RESP, &w_k);
             let mut grad_k = vec![0.0f64; dk];
             for l in 0..q {
                 let msg = ep.recv_from(topo.worker_node(l), tags::PUSH);
-                linalg::axpy(1.0, &msg.data, &mut grad_k);
+                msg.add_into(&mut grad_k);
             }
             linalg::scale(1.0 / q as f64, &mut grad_k);
             // w̃ ← w̃ − η(∇̄ + z + ∇g(w̃))
@@ -142,7 +131,7 @@ fn server(
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
                 let (slo, shi) = topo.key_range(s);
-                full_w[slo..shi].copy_from_slice(&msg.data);
+                msg.decode_into(&mut full_w[slo..shi]);
             }
             let objective = problem.objective(&full_w);
             ep.discard_cpu();
@@ -152,6 +141,7 @@ fn server(
                 sim_time,
                 wall_time: wall.seconds(),
                 scalars: ep.stats().total_scalars(),
+                bytes: ep.stats().total_bytes(),
                 grads,
                 objective,
             });
@@ -170,7 +160,7 @@ fn server(
         } else {
             ep.send_eval(0, tags::EVAL, w_k.clone());
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
-            ctrl.data[0] != 0.0
+            ctrl.value(0) != 0.0
         };
         if stop {
             break;
@@ -196,6 +186,7 @@ fn worker(
     let l = ep.id() - topo.p;
     let shard = &shards[l];
     let n_local = shard.data.cols();
+    let comm = params.comm();
     let loss = problem.build_loss();
     let mut rng = Pcg64::seed_from_u64(params.seed ^ (0x517 + l as u64));
     let mut w_t = vec![0.0f64; topo.d];
@@ -205,9 +196,8 @@ fn worker(
     loop {
         // assemble w_t from all servers
         for k in 0..topo.p {
-            let msg = ep.recv_from(topo.server_node(k), tags::BCAST);
             let (lo, hi) = topo.key_range(k);
-            w_t[lo..hi].copy_from_slice(&msg.data);
+            comm.recv_into(ep, topo.server_node(k), tags::BCAST, &mut w_t[lo..hi]);
         }
         // local loss-gradient sum, split to servers
         shard.data.transpose_matvec(&w_t, &mut margins0);
@@ -220,15 +210,14 @@ fn worker(
         }
         for k in 0..topo.p {
             let (lo, hi) = topo.key_range(k);
-            ep.send(topo.server_node(k), tags::REDUCE, zsum[lo..hi].to_vec());
+            comm.send(ep, topo.server_node(k), tags::REDUCE, &zsum[lo..hi]);
         }
 
         // inner rounds (Algorithm 4 lines 5–10)
         for _ in 0..m_rounds {
             for k in 0..topo.p {
-                let msg = ep.recv_from(topo.server_node(k), tags::PULL_RESP);
                 let (lo, hi) = topo.key_range(k);
-                w_m[lo..hi].copy_from_slice(&msg.data);
+                comm.recv_into(ep, topo.server_node(k), tags::PULL_RESP, &mut w_m[lo..hi]);
             }
             let i = rng.below(n_local);
             let yi = y[shard.col_idx[i]];
@@ -238,12 +227,12 @@ fn worker(
             shard.data.col_axpy(i, delta, &mut grad);
             for k in 0..topo.p {
                 let (lo, hi) = topo.key_range(k);
-                ep.send(topo.server_node(k), tags::PUSH, grad[lo..hi].to_vec());
+                comm.send(ep, topo.server_node(k), tags::PUSH, &grad[lo..hi]);
             }
         }
 
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
-        if ctrl.data[0] != 0.0 {
+        if ctrl.value(0) != 0.0 {
             break;
         }
     }

@@ -112,7 +112,7 @@ mod tests {
     #[test]
     fn barrier_syncs_clocks() {
         let barrier = SimBarrier::new(3);
-        let out = run_cluster(3, SimParams { latency: 1.0, per_msg: 0.0, sec_per_scalar: 0.0 }, {
+        let out = run_cluster(3, SimParams { latency: 1.0, per_msg: 0.0, sec_per_byte: 0.0 }, {
             let barrier = barrier.clone();
             move |mut ep| {
                 if ep.id() == 2 {

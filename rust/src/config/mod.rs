@@ -184,6 +184,8 @@ pub struct ExperimentConfig {
     pub latency: f64,
     pub per_msg: f64,
     pub bandwidth_gbps: f64,
+    /// Wire format for counted payloads (`run.wire = "f64"|"f32"|"sparse"`).
+    pub wire: crate::net::WireFmt,
     /// FD-SVRG lazy inner loop (§Perf).
     pub lazy: bool,
 }
@@ -209,6 +211,7 @@ impl Default for ExperimentConfig {
             latency: 40e-6,
             per_msg: 10e-6,
             bandwidth_gbps: 10.0, // paper §5: 10GbE
+            wire: crate::net::WireFmt::F64,
             lazy: false,
         }
     }
@@ -231,6 +234,11 @@ impl ExperimentConfig {
             latency: cfg.f64_or("net.latency", d.latency),
             per_msg: cfg.f64_or("net.per_msg", d.per_msg),
             bandwidth_gbps: cfg.f64_or("net.bandwidth_gbps", d.bandwidth_gbps),
+            wire: {
+                let s = cfg.str_or("run.wire", d.wire.name());
+                crate::net::WireFmt::parse(s)
+                    .unwrap_or_else(|| panic!("run.wire must be f64|f32|sparse, got {s:?}"))
+            },
             lazy: cfg.bool_or("run.lazy", d.lazy),
         }
     }
@@ -239,7 +247,8 @@ impl ExperimentConfig {
         crate::net::SimParams {
             latency: self.latency,
             per_msg: self.per_msg,
-            sec_per_scalar: 8.0 * 8.0 / (self.bandwidth_gbps * 1e9),
+            // bandwidth is bits/s; the simulator charges per payload byte
+            sec_per_byte: 8.0 / (self.bandwidth_gbps * 1e9),
         }
     }
 
@@ -256,6 +265,7 @@ impl ExperimentConfig {
             gap_stop: None,
             sim_time_cap: None,
             star_reduce: false,
+            wire: self.wire,
             lazy: self.lazy,
         }
     }
@@ -315,7 +325,19 @@ latency = 5e-5
     fn sim_params_from_bandwidth() {
         let e = ExperimentConfig::default();
         let sp = e.sim_params();
-        assert!((sp.sec_per_scalar - 6.4e-9).abs() < 1e-12);
+        // 10 Gb/s ⇒ 0.8 ns per byte (an 8-byte f64 scalar keeps its 6.4 ns)
+        assert!((sp.sec_per_byte - 0.8e-9).abs() < 1e-13);
+    }
+
+    #[test]
+    fn wire_format_parses_from_config() {
+        let c = Config::parse("[run]\nwire = \"f32\"\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.wire, crate::net::WireFmt::F32);
+        assert_eq!(e.run_params().wire, crate::net::WireFmt::F32);
+        // default stays bit-exact f64
+        let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(e.wire, crate::net::WireFmt::F64);
     }
 
     #[test]

@@ -115,8 +115,9 @@ pub fn fig6_fig7(ctx: &Ctx, datasets: &[(&str, usize)]) -> Result<()> {
             "final gap",
             "sim time (s)",
             "scalars",
+            "bytes",
             "time to 1e-4 (s)",
-            "comm to 1e-4",
+            "bytes to 1e-4",
         ]);
         println!("== Fig 6/7 :: {profile} (q={q}, λ={:.0e}) ==", ctx.cfg.lambda);
         let mut plot_t = AsciiPlot::new(
@@ -124,8 +125,8 @@ pub fn fig6_fig7(ctx: &Ctx, datasets: &[(&str, usize)]) -> Result<()> {
             "time (s)",
         );
         let mut plot_c = AsciiPlot::new(
-            &format!("Fig 7 :: {profile} — objective gap vs communicated scalars"),
-            "scalars",
+            &format!("Fig 7 :: {profile} — objective gap vs bytes on the wire"),
+            "bytes on the wire",
         );
         for algo in Algorithm::ALL_DISTRIBUTED {
             let mut params = ctx.base_params(q);
@@ -139,7 +140,9 @@ pub fn fig6_fig7(ctx: &Ctx, datasets: &[(&str, usize)]) -> Result<()> {
             params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
             let res = run_and_save(ctx, &problem, algo, &params, f_opt, &format!("fig6_{profile}"));
             let tt = res.trace.time_to_gap(f_opt, ctx.cfg.gap_target);
-            let cc = res.trace.comm_to_gap(f_opt, ctx.cfg.gap_target);
+            // bytes, to match the Fig-7 plot axis (comm_to_gap keeps the
+            // scalar view for callers that want the §4.5 unit)
+            let cc = res.trace.bytes_to_gap(f_opt, ctx.cfg.gap_target);
             plot_t.add(Series::gap_vs_time(algo.name(), &res.trace, f_opt));
             plot_c.add(Series::gap_vs_comm(algo.name(), &res.trace, f_opt));
             table.row(vec![
@@ -148,6 +151,7 @@ pub fn fig6_fig7(ctx: &Ctx, datasets: &[(&str, usize)]) -> Result<()> {
                 format!("{:.3e}", res.final_objective() - f_opt),
                 format!("{:.4}", res.total_sim_time),
                 format!("{}", res.total_scalars),
+                format!("{}", res.total_bytes),
                 tt.map(|t| format!("{t:.4}")).unwrap_or_else(|| ">cap".into()),
                 cc.map(|c| format!("{c}")).unwrap_or_else(|| ">cap".into()),
             ]);
@@ -291,6 +295,63 @@ pub fn table3(ctx: &Ctx) -> Result<Vec<(String, Option<f64>, f64)>> {
     }
     println!("== Table 3 :: speedup to PS-Lite (SGD) ==");
     println!("{}", table.render());
+    Ok(rows)
+}
+
+/// Wire-format ablation: FD-SVRG under `f64`/`f32`/`sparse` payload
+/// codecs on the `url-sim` and `news20-sim` profiles — objective gap vs
+/// bytes on the wire. `f32` halves the bytes of the same trajectory (up
+/// to rounding); `sparse` pays 8 B per nonzero, which loses on the dense
+/// margin payloads and quantifies why the codec choice matters.
+/// Returns `(profile, wire, total_bytes, final_gap)` rows.
+pub fn wire_ablation(ctx: &Ctx) -> Result<Vec<(String, &'static str, u64, f64)>> {
+    use crate::net::WireFmt;
+    let mut rows = Vec::new();
+    for profile in ["url-sim", "news20-sim"] {
+        let q = profiles::paper_worker_count(profile);
+        let problem = ctx.problem(profile, ctx.cfg.lambda)?;
+        let (_, f_opt) = ctx.optimum(&problem);
+        let mut table = TextTable::new(vec![
+            "wire",
+            "final gap",
+            "total bytes",
+            "busiest node bytes",
+            "messages",
+            "sim time (s)",
+        ]);
+        let mut plot = AsciiPlot::new(
+            &format!("Wire ablation :: {profile} — objective gap vs bytes on the wire"),
+            "bytes on the wire",
+        );
+        println!("== Wire ablation :: {profile} (q={q}, λ={:.0e}) ==", ctx.cfg.lambda);
+        for wire in WireFmt::ALL {
+            let mut params = ctx.base_params(q);
+            params.outer = ctx.epochs(default_epochs(Algorithm::FdSvrg) / 3);
+            params.wire = wire;
+            params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
+            let res = run_and_save(
+                ctx,
+                &problem,
+                Algorithm::FdSvrg,
+                &params,
+                f_opt,
+                &format!("wire_{profile}_{}", wire.name()),
+            );
+            let gap = res.final_objective() - f_opt;
+            plot.add(Series::gap_vs_comm(wire.name(), &res.trace, f_opt));
+            table.row(vec![
+                wire.name().to_string(),
+                format!("{gap:.3e}"),
+                format!("{}", res.total_bytes),
+                format!("{}", res.busiest_node_bytes),
+                format!("{}", res.total_messages),
+                format!("{:.4}", res.total_sim_time),
+            ]);
+            rows.push((profile.to_string(), wire.name(), res.total_bytes, gap));
+        }
+        println!("{}", table.render());
+        println!("{}", plot.render());
+    }
     Ok(rows)
 }
 

@@ -11,9 +11,11 @@
 //!   Parameter-Server framework hosting SynSVRG, AsySVRG and PS-Lite-style
 //!   asynchronous SGD.
 //! * [`net`] / [`cluster`] — an in-process multi-node cluster simulator with
-//!   exact communication accounting (scalars per link) and a
-//!   latency/bandwidth simulated clock, standing in for the paper's
-//!   16-node 10GbE testbed.
+//!   a typed wire layer ([`net::payload`]: `f64`/`f32`/sparse codecs over
+//!   `Arc` buffers, shared zero-copy collectives in [`net::collectives`]),
+//!   byte-accurate per-sender communication accounting (scalars kept as
+//!   the derived §4.5 view) and a latency/bandwidth simulated clock,
+//!   standing in for the paper's 16-node 10GbE testbed.
 //! * [`runtime`] — the blocked dense trainer behind the backend-agnostic
 //!   [`runtime::ComputeEngine`] trait: a pure-Rust f32 backend (the
 //!   default; fully offline) and a PJRT backend (`--features xla`) that

@@ -46,10 +46,13 @@ const USAGE: &str = "usage:
                --dataset <profile|path.libsvm> [--q N] [--servers P] [--lambda L]
                [--eta E] [--outer T] [--batch U] [--seed S] [--config file.toml]
                [--out dir] [--star] [--lazy] [--gap-target G]
+               [--wire f64|f32|sparse]   (payload codec for counted traffic:
+               f64 = bit-exact default, f32 = half the wire bytes,
+               sparse = (u32,f32) pairs for the nonzeros only)
                [--engine native|block|xla]   (native = sparse CSC path,
                block = dense blocked trainer on the pure-Rust engine,
                xla = dense blocked trainer on PJRT, needs --features xla)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|all> [--out dir] [--quick]
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|all> [--out dir] [--quick]
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|xla]
                (default: the build's own backend — xla when compiled in,
@@ -74,6 +77,10 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.batch = args.get_or("batch", cfg.batch);
     cfg.seed = args.get_or("seed", cfg.seed);
     cfg.gap_target = args.get_or("gap-target", cfg.gap_target);
+    if let Some(v) = args.get("wire") {
+        cfg.wire = fdsvrg::net::WireFmt::parse(v)
+            .with_context(|| format!("unknown wire format {v:?} (f64|f32|sparse)"))?;
+    }
     Ok(cfg)
 }
 
@@ -108,7 +115,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine_kind = args.get("engine").unwrap_or("native");
 
     println!(
-        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, engine={engine_kind})",
+        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, engine={engine_kind})",
         algo.name(),
         cfg.dataset,
         problem.d(),
@@ -116,6 +123,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         params.q,
         cfg.lambda,
         if cfg.eta > 0.0 { format!("{}", cfg.eta) } else { format!("auto={:.3}", problem.default_eta()) },
+        params.wire.name(),
     );
     let res = match engine_kind {
         // "native" keeps its historical meaning: the sparse CSC algorithms
@@ -144,13 +152,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     println!("{}", table.render());
     println!(
-        "final objective {:.8} | train accuracy {:.2}% | sim {:.3}s | wall {:.3}s | {} scalars (busiest node {})",
+        "final objective {:.8} | train accuracy {:.2}% | sim {:.3}s | wall {:.3}s | {} bytes on the wire in {} messages ({} scalars; busiest node {} bytes)",
         res.final_objective(),
         100.0 * problem.accuracy(&res.w),
         res.total_sim_time,
         res.total_wall_time,
+        res.total_bytes,
+        res.total_messages,
         res.total_scalars,
-        res.busiest_node_scalars,
+        res.busiest_node_bytes,
     );
     if let Some(test) = &test_ds {
         let m = fdsvrg::eval::evaluate(test, &res.w);
@@ -194,6 +204,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("table1") => exp::table1(),
         Some("table2") => exp::table2(&ctx).map(|_| ()),
         Some("table3") => exp::table3(&ctx).map(|_| ()),
+        Some("wire") => exp::wire_ablation(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),
     }

@@ -47,6 +47,9 @@ pub fn run_result_to_json(res: &RunResult, f_opt: Option<f64>) -> String {
         "  \"busiest_node_scalars\": {},\n",
         res.busiest_node_scalars
     ));
+    s.push_str(&format!("  \"total_bytes\": {},\n", res.total_bytes));
+    s.push_str(&format!("  \"busiest_node_bytes\": {},\n", res.busiest_node_bytes));
+    s.push_str(&format!("  \"total_messages\": {},\n", res.total_messages));
     s.push_str(&format!(
         "  \"f_opt\": {},\n",
         f_opt.map(num).unwrap_or_else(|| "null".into())
@@ -56,11 +59,12 @@ pub fn run_result_to_json(res: &RunResult, f_opt: Option<f64>) -> String {
     for (i, p) in res.trace.points.iter().enumerate() {
         s.push_str(&format!(
             "    {{\"outer\": {}, \"sim_time\": {}, \"wall_time\": {}, \
-             \"scalars\": {}, \"grads\": {}, \"objective\": {}{}}}{}\n",
+             \"scalars\": {}, \"bytes\": {}, \"grads\": {}, \"objective\": {}{}}}{}\n",
             p.outer,
             num(p.sim_time),
             num(p.wall_time),
             p.scalars,
+            p.bytes,
             p.grads,
             num(p.objective),
             f_opt
@@ -96,6 +100,7 @@ mod tests {
             sim_time: 0.0,
             wall_time: 0.0,
             scalars: 0,
+            bytes: 0,
             grads: 0,
             objective: 0.7,
         });
@@ -104,6 +109,7 @@ mod tests {
             sim_time: 0.5,
             wall_time: 1.0,
             scalars: 640,
+            bytes: 5120,
             grads: 80,
             objective: 0.3,
         });
@@ -116,6 +122,10 @@ mod tests {
             total_wall_time: 1.0,
             total_scalars: 640,
             busiest_node_scalars: 160,
+            total_bytes: 5120,
+            busiest_node_bytes: 1280,
+            total_messages: 32,
+            node_comm: Vec::new(),
         }
     }
 
@@ -125,9 +135,67 @@ mod tests {
         assert!(j.contains("\"algorithm\": \"fdsvrg\""));
         assert!(j.contains("tiny \\\"quoted\\\""));
         assert!(j.contains("\"gap\": 0.04999999999999999") || j.contains("\"gap\": 0.05"));
+        assert!(j.contains("\"total_bytes\": 5120"));
+        assert!(j.contains("\"busiest_node_bytes\": 1280"));
+        assert!(j.contains("\"total_messages\": 32"));
+        assert!(j.contains("\"bytes\": 5120"));
         // structurally: balanced braces/brackets
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    /// Golden-file round trip: the serialized document for a fixed run
+    /// must match `rust/tests/golden/run_result.golden.json` byte for
+    /// byte. Regenerate the file from this fixture when the schema
+    /// deliberately changes.
+    #[test]
+    fn golden_file_round_trip() {
+        fn golden() -> RunResult {
+            let mut trace = Trace::default();
+            trace.push(TracePoint {
+                outer: 0,
+                sim_time: 0.0,
+                wall_time: 0.0,
+                scalars: 0,
+                bytes: 0,
+                grads: 0,
+                objective: 0.75,
+            });
+            trace.push(TracePoint {
+                outer: 1,
+                sim_time: 0.5,
+                wall_time: 1.0,
+                scalars: 640,
+                bytes: 5120,
+                grads: 80,
+                objective: 0.5,
+            });
+            RunResult {
+                algorithm: "fdsvrg".into(),
+                dataset: "golden-sim".into(),
+                w: vec![0.0; 4],
+                trace,
+                total_sim_time: 0.5,
+                total_wall_time: 1.0,
+                total_scalars: 640,
+                busiest_node_scalars: 160,
+                total_bytes: 5120,
+                busiest_node_bytes: 1280,
+                total_messages: 32,
+                node_comm: Vec::new(),
+            }
+        }
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/tests/golden/run_result.golden.json");
+        let want = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read golden file {}: {e}", path.display()));
+        let got = run_result_to_json(&golden(), Some(0.25));
+        assert_eq!(
+            got, want,
+            "RunResult JSON drifted from the golden file; if the schema change \
+             is intentional, regenerate {} from this fixture",
+            path.display()
+        );
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Convergence traces, counters and result writers.
 //!
 //! Every algorithm run produces a [`Trace`]: one [`TracePoint`] per outer
-//! iteration carrying the three axes the paper plots — simulated cluster
-//! time (Fig. 6/8/9), communicated scalars (Fig. 7) and the objective gap.
-//! Writers emit CSV that the experiment drivers collect into `results/`.
+//! iteration carrying the axes the paper plots — simulated cluster time
+//! (Fig. 6/8/9), communication (Fig. 7; bytes on the wire are the
+//! canonical unit, with scalars kept as the derived §4.5 view) and the
+//! objective gap. Writers emit CSV that the experiment drivers collect
+//! into `results/`.
 
 pub mod json;
 pub mod plot;
 
+use crate::net::{CommStats, NodeComm};
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::path::Path;
@@ -22,8 +25,12 @@ pub struct TracePoint {
     /// Real wall-clock of the host process, seconds (reported alongside;
     /// contention-polluted, not used for figures).
     pub wall_time: f64,
-    /// Total scalars communicated so far (all links).
+    /// Total scalars communicated so far (all links) — the derived §4.5
+    /// view of `bytes`.
     pub scalars: u64,
+    /// Total wire bytes communicated so far (all links), the canonical
+    /// communication unit.
+    pub bytes: u64,
     /// Stochastic gradient evaluations so far (N per full-gradient pass +
     /// 1 per inner step), the paper's §4.5 normalization.
     pub grads: u64,
@@ -58,6 +65,11 @@ impl Trace {
         self.crossing(f_opt, target).map(|(i, _)| self.points[i].scalars)
     }
 
+    /// Wire bytes communicated when the gap first drops below `target`.
+    pub fn bytes_to_gap(&self, f_opt: f64, target: f64) -> Option<u64> {
+        self.crossing(f_opt, target).map(|(i, _)| self.points[i].bytes)
+    }
+
     fn crossing(&self, f_opt: f64, target: f64) -> Option<(usize, f64)> {
         for (i, p) in self.points.iter().enumerate() {
             let gap = p.objective - f_opt;
@@ -81,22 +93,23 @@ impl Trace {
         None
     }
 
-    /// Write `outer,sim_time,wall_time,scalars,grads,objective,gap` CSV.
+    /// Write `outer,sim_time,wall_time,scalars,bytes,grads,objective,gap` CSV.
     pub fn write_csv<P: AsRef<Path>>(&self, path: P, f_opt: f64) -> Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir).ok();
         }
         let mut f = std::fs::File::create(path.as_ref())
             .with_context(|| format!("create {}", path.as_ref().display()))?;
-        writeln!(f, "outer,sim_time,wall_time,scalars,grads,objective,gap")?;
+        writeln!(f, "outer,sim_time,wall_time,scalars,bytes,grads,objective,gap")?;
         for p in &self.points {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{:.12},{:.6e}",
+                "{},{:.6},{:.6},{},{},{},{:.12},{:.6e}",
                 p.outer,
                 p.sim_time,
                 p.wall_time,
                 p.scalars,
+                p.bytes,
                 p.grads,
                 p.objective,
                 p.objective - f_opt
@@ -115,11 +128,71 @@ pub struct RunResult {
     pub trace: Trace,
     pub total_sim_time: f64,
     pub total_wall_time: f64,
+    /// Derived scalar view of the traffic (§4.5 pins: under the `f64`
+    /// wire format `total_bytes == 8 * total_scalars`).
     pub total_scalars: u64,
     pub busiest_node_scalars: u64,
+    /// Canonical wire accounting: bytes and messages, totalled and for
+    /// the busiest single sender.
+    pub total_bytes: u64,
+    pub busiest_node_bytes: u64,
+    pub total_messages: u64,
+    /// Per-sender counters (scalars, bytes, messages), indexed by node id.
+    pub node_comm: Vec<NodeComm>,
 }
 
 impl RunResult {
+    /// Assemble a result from a finished cluster run's counters. The
+    /// total simulated time is read off the trace's last point.
+    pub fn from_cluster(
+        algorithm: &str,
+        dataset: &str,
+        w: Vec<f64>,
+        trace: Trace,
+        total_wall_time: f64,
+        stats: &CommStats,
+    ) -> RunResult {
+        let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
+        RunResult {
+            algorithm: algorithm.into(),
+            dataset: dataset.into(),
+            w,
+            trace,
+            total_sim_time,
+            total_wall_time,
+            total_scalars: stats.total_scalars(),
+            busiest_node_scalars: stats.busiest_node_scalars(),
+            total_bytes: stats.total_bytes(),
+            busiest_node_bytes: stats.busiest_node_bytes(),
+            total_messages: stats.total_messages(),
+            node_comm: stats.per_node(),
+        }
+    }
+
+    /// Result of a run that never touched the network (serial baselines).
+    pub fn serial(
+        algorithm: &str,
+        dataset: &str,
+        w: Vec<f64>,
+        trace: Trace,
+        total_wall_time: f64,
+    ) -> RunResult {
+        RunResult {
+            algorithm: algorithm.into(),
+            dataset: dataset.into(),
+            w,
+            trace,
+            total_sim_time: 0.0,
+            total_wall_time,
+            total_scalars: 0,
+            busiest_node_scalars: 0,
+            total_bytes: 0,
+            busiest_node_bytes: 0,
+            total_messages: 0,
+            node_comm: Vec::new(),
+        }
+    }
+
     pub fn final_objective(&self) -> f64 {
         self.trace.last_objective().unwrap_or(f64::NAN)
     }
@@ -183,6 +256,7 @@ mod tests {
                 sim_time: i as f64,
                 wall_time: i as f64 * 2.0,
                 scalars: (i as u64) * 100,
+                bytes: (i as u64) * 800,
                 grads: (i as u64) * 10,
                 objective: 1.0 + g, // f_opt = 1.0
             });
@@ -210,6 +284,7 @@ mod tests {
     fn comm_to_gap_reads_scalars() {
         let t = trace_with_gaps(&[1.0, 0.1, 0.001]);
         assert_eq!(t.comm_to_gap(1.0, 0.01), Some(200));
+        assert_eq!(t.bytes_to_gap(1.0, 0.01), Some(1600));
     }
 
     #[test]

@@ -28,7 +28,10 @@ impl Series {
         }
     }
 
-    /// Build a communication-axis series (Fig. 7 style).
+    /// Build a communication-axis series (Fig. 7 style). The comm axis is
+    /// labelled in wire **bytes** — the canonical unit, which keeps the
+    /// wire-format ablations comparable (the scalar view stays available
+    /// in the CSV/JSON outputs).
     pub fn gap_vs_comm(label: &str, trace: &Trace, f_opt: f64) -> Series {
         Series {
             label: label.to_string(),
@@ -36,7 +39,7 @@ impl Series {
                 .points
                 .iter()
                 .filter(|p| p.objective - f_opt > 0.0)
-                .map(|p| (p.scalars as f64, p.objective - f_opt))
+                .map(|p| (p.bytes as f64, p.objective - f_opt))
                 .collect(),
         }
     }
@@ -142,6 +145,7 @@ mod tests {
                 sim_time: i as f64,
                 wall_time: i as f64,
                 scalars: 100 * i as u64,
+                bytes: 800 * i as u64,
                 grads: 10 * i as u64,
                 objective: 1.0 + rate.powi(i as i32),
             });
@@ -169,9 +173,9 @@ mod tests {
     }
 
     #[test]
-    fn comm_axis_uses_scalars() {
+    fn comm_axis_uses_wire_bytes() {
         let s = Series::gap_vs_comm("c", &demo_trace(0.5), 1.0);
-        assert_eq!(s.points[1].0, 100.0);
+        assert_eq!(s.points[1].0, 800.0);
     }
 
     #[test]
@@ -195,6 +199,7 @@ mod tests {
             sim_time: 0.0,
             wall_time: 0.0,
             scalars: 0,
+            bytes: 0,
             grads: 0,
             objective: 2.0,
         });

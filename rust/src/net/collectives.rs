@@ -1,0 +1,357 @@
+//! Shared collectives over typed payloads — the one place algorithms talk
+//! to the wire.
+//!
+//! The tree collectives implement the paper's Fig.-5 binomial tree rooted
+//! at `group[0]`; [`star_allreduce`] is the naive hub ablation. Both are
+//! generic over the [`WireFmt`] codec: under the default `f64` format the
+//! arithmetic (and therefore the §4.5 scalar counters) is identical to a
+//! raw `Vec<f64>` implementation, while `f32`/`sparse` trade precision or
+//! zeros for wire bytes.
+//!
+//! Broadcast fan-out is **zero-copy in-process**: the root encodes its
+//! buffer into an `Arc` payload once, and every hop forwards `Arc` clones
+//! instead of deep-copying a `d`-length vector per child (the old
+//! O(d·log q) allocation hot path of every collective).
+//!
+//! Algorithms do not call the free functions directly; they hold a
+//! [`Comm`] (built by [`crate::algs::RunParams::comm`]) that carries the
+//! run's wire format and tree/star choice, so *every counted send* goes
+//! through one codec path.
+
+use super::payload::{Payload, WireFmt};
+use super::{tags, Endpoint, NodeId, Tag};
+
+/// A run's communication policy: which codec encodes counted payloads and
+/// whether allreduces use the Fig.-5 tree or the star ablation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Comm {
+    pub wire: WireFmt,
+    pub star: bool,
+}
+
+impl Comm {
+    pub fn new(wire: WireFmt, star: bool) -> Comm {
+        Comm { wire, star }
+    }
+
+    /// Allreduce (elementwise sum) over `group`; tree by default, star
+    /// under the ablation flag.
+    pub fn allreduce(&self, ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+        if self.star {
+            star_allreduce(ep, group, data, self.wire);
+        } else {
+            tree_allreduce(ep, group, data, self.wire);
+        }
+    }
+
+    /// Encode and send one counted vector.
+    pub fn send(&self, ep: &mut Endpoint, to: NodeId, tag: Tag, data: &[f64]) {
+        ep.send(to, tag, self.wire.encode(data));
+    }
+
+    /// Encode once, then fan the same `Arc` payload out to every peer
+    /// (zero-copy: one encode regardless of the peer count).
+    pub fn send_all(
+        &self,
+        ep: &mut Endpoint,
+        to: impl IntoIterator<Item = NodeId>,
+        tag: Tag,
+        data: &[f64],
+    ) {
+        let payload = self.wire.encode(data);
+        for peer in to {
+            ep.send(peer, tag, payload.clone());
+        }
+    }
+
+    /// Structured payloads — key/value pairs, request tokens, step-size
+    /// headers — whose layout is itself the message format. These always
+    /// travel as exact `f64` (8 B/scalar): re-encoding them would corrupt
+    /// keys or drop structurally-meaningful zeros.
+    pub fn send_exact(&self, ep: &mut Endpoint, to: NodeId, tag: Tag, data: Vec<f64>) {
+        ep.send(to, tag, Payload::from(data));
+    }
+
+    /// Receive from `from` and decode into a caller-sized buffer.
+    pub fn recv_into(&self, ep: &mut Endpoint, from: NodeId, tag: Tag, out: &mut [f64]) {
+        ep.recv_from(from, tag).decode_into(out);
+    }
+
+    /// Receive from `from` and decode into a fresh vector of logical
+    /// length `len`.
+    pub fn recv_vec(&self, ep: &mut Endpoint, from: NodeId, tag: Tag, len: usize) -> Vec<f64> {
+        ep.recv_from(from, tag).to_vec(len)
+    }
+}
+
+/// Reduce (elementwise sum) of `data` from all nodes in `group` to
+/// `group[0]` along the binomial tree. Every node calls this with its own
+/// contribution; on return `group[0]`'s buffer holds the sum (other
+/// buffers hold partial sums).
+pub fn tree_reduce(ep: &mut Endpoint, group: &[NodeId], data: &mut [f64], wire: WireFmt) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    let q = group.len();
+    let mut mask = 1usize;
+    while mask < q {
+        if rank & (mask - 1) == 0 {
+            if rank & mask != 0 {
+                // sender: pass partial sum down to (rank - mask), then leave
+                ep.send(group[rank - mask], tags::REDUCE, wire.encode(data));
+                break;
+            } else if rank + mask < q {
+                let msg = ep.recv_from(group[rank + mask], tags::REDUCE);
+                msg.add_into(data);
+            }
+        }
+        mask <<= 1;
+    }
+}
+
+/// Broadcast `data` from `group[0]` to all of `group` along the reverse
+/// binomial tree. The root encodes once; interior nodes forward the
+/// received `Arc` payload (pointer clones, no per-hop deep copy) and only
+/// decode into their own buffer at the end. On non-root nodes `data` is
+/// overwritten.
+pub fn tree_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, wire: WireFmt) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    let q = group.len();
+    let mut mask = 1usize;
+    while mask < q {
+        mask <<= 1;
+    }
+    mask >>= 1;
+    // receive once from the parent, then forward to children in reverse order
+    let mut payload: Option<Payload> = if rank == 0 { Some(wire.encode(data)) } else { None };
+    while mask >= 1 {
+        if rank & (mask - 1) == 0 {
+            if payload.is_none() && rank & mask != 0 {
+                payload = Some(ep.recv_from(group[rank - mask], tags::BCAST).payload);
+            } else if rank & mask == 0 && rank + mask < q {
+                // a node only reaches a forwarding round after its own
+                // receive (its low bits are all zero here), so the payload
+                // is present — forward the Arc, no deep copy
+                let p = payload.as_ref().expect("tree broadcast: forward before receive");
+                ep.send(group[rank + mask], tags::BCAST, p.clone());
+            }
+        }
+        if mask == 1 {
+            break;
+        }
+        mask >>= 1;
+    }
+    // Non-root nodes adopt the received payload. Under a lossy codec the
+    // root does the same with its own encoding, so every node — root
+    // included — exits holding identical (codec-rounded) values; on the
+    // exact f64 path the root's buffer is already bit-identical and the
+    // copy is skipped.
+    let payload = payload.expect("tree broadcast: payload not received");
+    if rank != 0 || wire != WireFmt::F64 {
+        payload.decode_resize(data);
+    }
+}
+
+/// Allreduce = tree reduce to `group[0]` + reverse-tree broadcast.
+/// After return every node holds the elementwise sum.
+pub fn tree_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, wire: WireFmt) {
+    tree_reduce(ep, group, data, wire);
+    tree_broadcast(ep, group, data, wire);
+}
+
+/// Naive star allreduce (ablation baseline): all nodes send to `group[0]`,
+/// which sums and fans the result back out. Same scalar/byte volume as the
+/// tree but `2(q−1)` sequential rounds at the hub and a hub hot-spot. The
+/// fan-out encodes once and clones the `Arc` payload per peer.
+pub fn star_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, wire: WireFmt) {
+    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
+    if rank == 0 {
+        for &peer in &group[1..] {
+            let msg = ep.recv_from(peer, tags::REDUCE);
+            msg.add_into(data);
+        }
+        let payload = wire.encode(data);
+        for &peer in &group[1..] {
+            ep.send(peer, tags::BCAST, payload.clone());
+        }
+        // lossy codec: the hub keeps the same rounded values it fanned out
+        if wire != WireFmt::F64 {
+            payload.decode_resize(data);
+        }
+    } else {
+        ep.send(group[0], tags::REDUCE, wire.encode(data));
+        let msg = ep.recv_from(group[0], tags::BCAST);
+        msg.payload.decode_resize(data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{build, SimParams};
+    use std::thread;
+
+    /// Run `f(endpoint, rank)` on `n` nodes, return per-rank results.
+    fn run_group<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(&mut Endpoint, usize) -> T + Send + Sync + Copy + 'static,
+    ) -> (Vec<T>, std::sync::Arc<crate::net::CommStats>) {
+        let (eps, stats) = build(n, SimParams::free());
+        let mut handles = Vec::new();
+        for (rank, mut ep) in eps.into_iter().enumerate() {
+            handles.push(thread::spawn(move || f(&mut ep, rank)));
+        }
+        (handles.into_iter().map(|h| h.join().unwrap()).collect(), stats)
+    }
+
+    #[test]
+    fn allreduce_sums_under_every_wire_format() {
+        for fmt in WireFmt::ALL {
+            for n in [1usize, 2, 3, 5, 8, 9] {
+                let (results, _) = run_group(n, move |ep, rank| {
+                    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                    let mut data = vec![rank as f64, 1.0, 0.0];
+                    tree_allreduce(ep, &group, &mut data, fmt);
+                    data
+                });
+                let want = vec![(0..n).sum::<usize>() as f64, n as f64, 0.0];
+                for (rank, r) in results.iter().enumerate() {
+                    assert_eq!(r, &want, "{} n={n} rank={rank}", fmt.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn star_agrees_with_tree_under_every_wire_format() {
+        for fmt in WireFmt::ALL {
+            let (results, _) = run_group(6, move |ep, rank| {
+                let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                let mut data = vec![(rank + 1) as f64, 0.0];
+                star_allreduce(ep, &group, &mut data, fmt);
+                data
+            });
+            for r in &results {
+                assert_eq!(r, &vec![21.0, 0.0], "{}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn lossy_allreduce_leaves_all_nodes_identical() {
+        // 0.1·(rank+1) is not f32-representable: without the root's
+        // self-decode the hub would keep exact f64 sums while workers
+        // hold rounded ones
+        for star in [false, true] {
+            let (results, _) = run_group(5, move |ep, rank| {
+                let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                let mut data = vec![0.1 * (rank as f64 + 1.0); 3];
+                if star {
+                    star_allreduce(ep, &group, &mut data, WireFmt::F32);
+                } else {
+                    tree_allreduce(ep, &group, &mut data, WireFmt::F32);
+                }
+                data
+            });
+            for (rank, r) in results.iter().enumerate() {
+                assert_eq!(
+                    r, &results[0],
+                    "star={star} rank={rank}: every node must hold the same rounded sum"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_wire_halves_collective_bytes() {
+        let run = |fmt: WireFmt| {
+            let (_, stats) = run_group(5, move |ep, rank| {
+                let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                let mut data = vec![rank as f64 + 1.0; 32];
+                tree_allreduce(ep, &group, &mut data, fmt);
+            });
+            (stats.total_scalars(), stats.total_bytes())
+        };
+        let (s64, b64) = run(WireFmt::F64);
+        let (s32, b32) = run(WireFmt::F32);
+        assert_eq!(s64, s32, "scalar view must not depend on the codec");
+        assert_eq!(b64, 2 * b32, "f32 wire must halve the bytes");
+        assert_eq!(b64, 8 * s64, "f64 wire: 8 bytes per scalar");
+    }
+
+    #[test]
+    fn sparse_wire_counts_nonzeros_only() {
+        // broadcast a 1%-dense vector: sparse moves ~1% of the f64 bytes
+        let (_, dense_stats) = run_group(4, |ep, rank| {
+            let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+            let mut data = vec![0.0f64; 1000];
+            if rank == 0 {
+                data[7] = 1.0;
+                data[700] = -2.0;
+            }
+            tree_broadcast(ep, &group, &mut data, WireFmt::F64);
+            data
+        });
+        let (results, sparse_stats) = run_group(4, |ep, rank| {
+            let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+            let mut data = vec![0.0f64; 1000];
+            if rank == 0 {
+                data[7] = 1.0;
+                data[700] = -2.0;
+            }
+            tree_broadcast(ep, &group, &mut data, WireFmt::Sparse);
+            data
+        });
+        for r in &results {
+            assert_eq!(r[7], 1.0);
+            assert_eq!(r[700], -2.0);
+            assert_eq!(r.iter().filter(|v| **v != 0.0).count(), 2);
+        }
+        assert!(
+            sparse_stats.total_bytes() * 100 < dense_stats.total_bytes(),
+            "sparse {} bytes vs dense {}",
+            sparse_stats.total_bytes(),
+            dense_stats.total_bytes()
+        );
+    }
+
+    #[test]
+    fn comm_send_exact_ignores_wire_format() {
+        let comm = Comm::new(WireFmt::Sparse, false);
+        let (eps, stats) = build(2, SimParams::free());
+        let mut it = eps.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let h = thread::spawn(move || {
+            // structured payload full of zeros — must not be compressed away
+            comm.send_exact(&mut a, 1, tags::PUSH, vec![0.0, 3.0, 0.0]);
+        });
+        let msg = b.recv_from(0, tags::PUSH);
+        h.join().unwrap();
+        assert_eq!(msg.to_vec(3), vec![0.0, 3.0, 0.0]);
+        assert_eq!(stats.total_scalars(), 3);
+        assert_eq!(stats.total_bytes(), 24);
+    }
+
+    #[test]
+    fn comm_send_all_encodes_once() {
+        let comm = Comm::new(WireFmt::F64, false);
+        let (eps, stats) = build(3, SimParams::free());
+        let mut it = eps.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let mut c = it.next().unwrap();
+        let h = thread::spawn(move || {
+            comm.send_all(&mut a, 1..3, tags::BCAST, &[5.0, 6.0]);
+        });
+        let mb = b.recv_from(0, tags::BCAST);
+        let mc = c.recv_from(0, tags::BCAST);
+        h.join().unwrap();
+        assert_eq!(mb.to_vec(2), vec![5.0, 6.0]);
+        // both receivers share the same Arc buffer — fan-out was zero-copy
+        match (&mb.payload, &mc.payload) {
+            (Payload::DenseF64(x), Payload::DenseF64(y)) => {
+                assert!(std::sync::Arc::ptr_eq(x, y));
+            }
+            _ => unreachable!(),
+        }
+    }
+}

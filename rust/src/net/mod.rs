@@ -5,15 +5,18 @@
 //! exchange [`Msg`]s over channels. Two things make this a *simulator*
 //! rather than just a thread pool:
 //!
-//! 1. **Exact communication accounting.** Every payload scalar is counted
-//!    (a `d`-vector costs `d`, matching the paper's Fig. 7 axis), per
-//!    sender, in [`CommStats`]. The counters are what Figure 7 and the
-//!    §4.5 complexity table read out, and they are independent of how the
-//!    simulation is scheduled.
+//! 1. **Exact communication accounting.** Every payload is a typed
+//!    [`Payload`] that knows its wire size, so [`CommStats`] counts
+//!    **bytes and messages** per sender — the canonical units — plus the
+//!    logical scalar count as a derived view (a `d`-vector costs `d`
+//!    scalars, matching the paper's Fig. 7 axis; under the default `f64`
+//!    wire format bytes are exactly 8× scalars). The counters are what
+//!    Figure 7 and the §4.5 complexity table read out, and they are
+//!    independent of how the simulation is scheduled.
 //! 2. **A simulated clock.** Each node accumulates (a) its own compute,
 //!    measured on the per-thread CPU clock so co-scheduled sibling nodes
-//!    don't pollute it, and (b) message delays `α + len·β` (latency +
-//!    scalar transfer time). A receive advances the receiver to
+//!    don't pollute it, and (b) message delays `α + bytes·β` (latency +
+//!    per-byte transfer time). A receive advances the receiver to
 //!    `max(own_clock, sender_send_time + delay)` — the standard
 //!    happens-before rule of a distributed-event simulation. Reported
 //!    times are therefore the schedule a real cluster would follow, even
@@ -21,8 +24,16 @@
 //!
 //! Evaluation traffic (objective snapshots) uses the `send_eval`/`recv_eval`
 //! pair which bypasses both the counters and the clock.
+//!
+//! Collectives (tree/star allreduce, zero-copy broadcast) live in
+//! [`collectives`]; the codec layer ([`WireFmt`]/[`Payload`]) in
+//! [`payload`].
 
+pub mod collectives;
+pub mod payload;
 pub mod topology;
+
+pub use payload::{Payload, WireFmt};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -58,41 +69,55 @@ pub mod tags {
 ///   what makes a star hub a hot-spot and the paper's Fig.-5 tree faster:
 ///   the hub must process `q` messages one after another while tree nodes
 ///   each handle `O(log q)`.
-/// * `sec_per_scalar` — transfer time per payload scalar (8-byte f64 over
-///   the link bandwidth); serializes with `per_msg` at the endpoints.
+/// * `sec_per_byte` — transfer time per payload **byte** over the link
+///   bandwidth; serializes with `per_msg` at the endpoints. Bytes are the
+///   canonical unit so compressed wire formats (`f32`, `sparse`) speed the
+///   simulated transfer exactly in proportion to the bytes they save.
 #[derive(Clone, Copy, Debug)]
 pub struct SimParams {
     /// Wire latency in seconds. Default 40 µs (10GbE switch + propagation).
     pub latency: f64,
     /// Per-message endpoint processing. Default 10 µs.
     pub per_msg: f64,
-    /// Seconds per payload scalar. Default: 8 bytes over 10 Gb/s.
-    pub sec_per_scalar: f64,
+    /// Seconds per payload byte. Default: 10 Gb/s (an 8-byte f64 scalar
+    /// costs the same 6.4 ns it did when this field was seconds-per-scalar).
+    pub sec_per_byte: f64,
 }
 
 impl Default for SimParams {
     fn default() -> Self {
-        SimParams { latency: 40e-6, per_msg: 10e-6, sec_per_scalar: 8.0 * 8.0 / 10e9 }
+        SimParams { latency: 40e-6, per_msg: 10e-6, sec_per_byte: 8.0 / 10e9 }
     }
 }
 
 impl SimParams {
     /// Endpoint occupancy of one message (applied on both ends).
-    pub fn occupancy(&self, scalars: usize) -> f64 {
-        self.per_msg + scalars as f64 * self.sec_per_scalar
+    pub fn occupancy(&self, bytes: usize) -> f64 {
+        self.per_msg + bytes as f64 * self.sec_per_byte
     }
 
     /// An idealized zero-cost network (used by equivalence tests where only
     /// the numerics matter).
     pub fn free() -> Self {
-        SimParams { latency: 0.0, per_msg: 0.0, sec_per_scalar: 0.0 }
+        SimParams { latency: 0.0, per_msg: 0.0, sec_per_byte: 0.0 }
     }
 }
 
-/// Global communication counters (scalars & messages per sending node).
+/// One sender's counters: the canonical byte/message counts plus the
+/// derived scalar view.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NodeComm {
+    pub scalars: u64,
+    pub bytes: u64,
+    pub messages: u64,
+}
+
+/// Global communication counters (wire bytes, messages and the derived
+/// scalar view, per sending node).
 #[derive(Debug)]
 pub struct CommStats {
     scalars: Vec<AtomicU64>,
+    bytes: Vec<AtomicU64>,
     messages: Vec<AtomicU64>,
 }
 
@@ -100,12 +125,17 @@ impl CommStats {
     pub fn new(n_nodes: usize) -> Arc<Self> {
         Arc::new(CommStats {
             scalars: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
+            bytes: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
             messages: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
         })
     }
 
     pub fn total_scalars(&self) -> u64 {
         self.scalars.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     pub fn total_messages(&self) -> u64 {
@@ -116,14 +146,39 @@ impl CommStats {
         self.scalars[id].load(Ordering::Relaxed)
     }
 
+    pub fn node_bytes(&self, id: NodeId) -> u64 {
+        self.bytes[id].load(Ordering::Relaxed)
+    }
+
+    pub fn node_messages(&self, id: NodeId) -> u64 {
+        self.messages[id].load(Ordering::Relaxed)
+    }
+
     /// Scalars sent by the busiest single node — the paper's argument
     /// against centralized frameworks is about exactly this number.
     pub fn busiest_node_scalars(&self) -> u64 {
         self.scalars.iter().map(|a| a.load(Ordering::Relaxed)).max().unwrap_or(0)
     }
 
-    fn record(&self, from: NodeId, scalars: usize) {
+    /// Wire bytes sent by the busiest single node.
+    pub fn busiest_node_bytes(&self) -> u64 {
+        self.bytes.iter().map(|a| a.load(Ordering::Relaxed)).max().unwrap_or(0)
+    }
+
+    /// Per-sender snapshot of all three counters.
+    pub fn per_node(&self) -> Vec<NodeComm> {
+        (0..self.scalars.len())
+            .map(|id| NodeComm {
+                scalars: self.node_scalars(id),
+                bytes: self.node_bytes(id),
+                messages: self.node_messages(id),
+            })
+            .collect()
+    }
+
+    fn record(&self, from: NodeId, scalars: usize, bytes: usize) {
         self.scalars[from].fetch_add(scalars as u64, Ordering::Relaxed);
+        self.bytes[from].fetch_add(bytes as u64, Ordering::Relaxed);
         self.messages[from].fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -133,9 +188,36 @@ impl CommStats {
 pub struct Msg {
     pub from: NodeId,
     pub tag: Tag,
-    pub data: Vec<f64>,
+    pub payload: Payload,
     pub send_time: f64,
     counted: bool,
+}
+
+impl Msg {
+    /// Logical scalar count of the payload.
+    pub fn scalars(&self) -> usize {
+        self.payload.scalars()
+    }
+
+    /// Decode into a caller-sized buffer (see [`Payload::decode_into`]).
+    pub fn decode_into(&self, out: &mut [f64]) {
+        self.payload.decode_into(out);
+    }
+
+    /// Decode into a fresh vector of logical length `len`.
+    pub fn to_vec(&self, len: usize) -> Vec<f64> {
+        self.payload.to_vec(len)
+    }
+
+    /// Elementwise-add the decoded payload into `out`.
+    pub fn add_into(&self, out: &mut [f64]) {
+        self.payload.add_into(out);
+    }
+
+    /// Read one logical coordinate (control flags and the like).
+    pub fn value(&self, i: usize) -> f64 {
+        self.payload.value(i)
+    }
 }
 
 /// One node's handle on the network.
@@ -197,30 +279,39 @@ impl Endpoint {
         }
     }
 
-    /// Send `data` to node `to`; counts scalars, serializes on this node's
-    /// outgoing NIC and stamps the on-the-wire time.
-    pub fn send(&mut self, to: NodeId, tag: Tag, data: Vec<f64>) {
+    /// Send a payload to node `to`; counts scalars/bytes/messages,
+    /// serializes on this node's outgoing NIC and stamps the on-the-wire
+    /// time. `Vec<f64>` converts implicitly to an exact `f64` payload;
+    /// codec-encoded traffic goes through [`collectives::Comm`].
+    pub fn send(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
         self.tick();
-        self.stats.record(self.id, data.len());
-        let wire_time = self.clock.max(self.nic_out) + self.params.occupancy(data.len());
+        let payload = payload.into();
+        let bytes = payload.wire_bytes();
+        self.stats.record(self.id, payload.scalars(), bytes);
+        let wire_time = self.clock.max(self.nic_out) + self.params.occupancy(bytes);
         self.nic_out = wire_time;
-        let msg = Msg { from: self.id, tag, data, send_time: wire_time, counted: true };
+        let msg = Msg { from: self.id, tag, payload, send_time: wire_time, counted: true };
         // A disconnected peer means the run is being torn down (e.g. a
         // worker panicked); panicking here unwinds this node too.
-        self.senders[to].send(msg).expect("peer endpoint disconnected");
+        self.senders[to].send(msg).unwrap_or_else(|_| {
+            panic!("node {}: peer {to} disconnected on send (tag {tag})", self.id)
+        });
     }
 
     /// Evaluation-plane send: not counted, no clock effect on either side.
-    pub fn send_eval(&mut self, to: NodeId, tag: Tag, data: Vec<f64>) {
+    pub fn send_eval(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
         self.discard_cpu();
-        let msg = Msg { from: self.id, tag, data, send_time: 0.0, counted: false };
-        self.senders[to].send(msg).expect("peer endpoint disconnected");
+        let msg =
+            Msg { from: self.id, tag, payload: payload.into(), send_time: 0.0, counted: false };
+        self.senders[to].send(msg).unwrap_or_else(|_| {
+            panic!("node {}: peer {to} disconnected on eval send (tag {tag})", self.id)
+        });
     }
 
     fn deliver(&mut self, msg: &Msg) {
         if msg.counted {
             let at_nic = msg.send_time + self.params.latency;
-            let done = at_nic.max(self.nic_in) + self.params.occupancy(msg.data.len());
+            let done = at_nic.max(self.nic_in) + self.params.occupancy(msg.payload.wire_bytes());
             self.nic_in = done;
             if done > self.clock {
                 self.clock = done;
@@ -237,7 +328,12 @@ impl Endpoint {
             return msg;
         }
         loop {
-            let msg = self.rx.recv().expect("all peers disconnected while receiving");
+            let msg = self.rx.recv().unwrap_or_else(|_| {
+                panic!(
+                    "node {}: all peers disconnected while receiving (expected peer {from}, tag {tag})",
+                    self.id
+                )
+            });
             if msg.from == from && msg.tag == tag {
                 self.deliver(&msg);
                 return msg;
@@ -255,7 +351,12 @@ impl Endpoint {
             return msg;
         }
         loop {
-            let msg = self.rx.recv().expect("all peers disconnected while receiving");
+            let msg = self.rx.recv().unwrap_or_else(|_| {
+                panic!(
+                    "node {}: all peers disconnected while receiving (any peer, tag {tag})",
+                    self.id
+                )
+            });
             if msg.tag == tag {
                 self.deliver(&msg);
                 return msg;
@@ -271,7 +372,9 @@ impl Endpoint {
             self.deliver(&msg);
             return msg;
         }
-        let msg = self.rx.recv().expect("all peers disconnected while receiving");
+        let msg = self.rx.recv().unwrap_or_else(|_| {
+            panic!("node {}: all peers disconnected while receiving (any peer, any tag)", self.id)
+        });
         self.deliver(&msg);
         msg
     }
@@ -283,7 +386,12 @@ impl Endpoint {
             return self.stash.remove(pos).unwrap();
         }
         loop {
-            let msg = self.rx.recv().expect("all peers disconnected while receiving");
+            let msg = self.rx.recv().unwrap_or_else(|_| {
+                panic!(
+                    "node {}: all peers disconnected while receiving (expected peer {from}, eval tag {tag})",
+                    self.id
+                )
+            });
             if msg.from == from && msg.tag == tag {
                 return msg;
             }
@@ -337,7 +445,7 @@ mod tests {
     use std::thread;
 
     #[test]
-    fn send_recv_counts_scalars() {
+    fn send_recv_counts_scalars_bytes_messages() {
         let (mut eps, stats) = build(2, SimParams::default());
         let mut b = eps.pop().unwrap();
         let mut a = eps.pop().unwrap();
@@ -346,21 +454,43 @@ mod tests {
         });
         let msg = b.recv_from(0, tags::CTRL);
         h.join().unwrap();
-        assert_eq!(msg.data, vec![1.0, 2.0, 3.0]);
+        assert_eq!(msg.to_vec(3), vec![1.0, 2.0, 3.0]);
         assert_eq!(stats.total_scalars(), 3);
+        assert_eq!(stats.total_bytes(), 24, "f64 wire: 8 bytes per scalar");
         assert_eq!(stats.total_messages(), 1);
         assert_eq!(stats.node_scalars(0), 3);
+        assert_eq!(stats.node_bytes(0), 24);
+        assert_eq!(stats.node_messages(0), 1);
         assert_eq!(stats.node_scalars(1), 0);
+        let per_node = stats.per_node();
+        assert_eq!(per_node[0], NodeComm { scalars: 3, bytes: 24, messages: 1 });
+        assert_eq!(per_node[1], NodeComm::default());
+    }
+
+    #[test]
+    fn compressed_payload_counts_fewer_bytes() {
+        let (mut eps, stats) = build(2, SimParams::default());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            a.send(1, tags::CTRL, WireFmt::F32.encode(&[1.0, 2.0, 3.0, 4.0]));
+        });
+        let msg = b.recv_from(0, tags::CTRL);
+        h.join().unwrap();
+        assert_eq!(msg.to_vec(4), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(stats.total_scalars(), 4, "scalar view is codec-independent");
+        assert_eq!(stats.total_bytes(), 16, "f32 wire: 4 bytes per scalar");
     }
 
     #[test]
     fn receive_applies_latency_and_bandwidth() {
-        let params = SimParams { latency: 1.0, per_msg: 0.0, sec_per_scalar: 0.5 };
+        // 4 f64 scalars = 32 bytes; 0.0625 s/B ⇒ 2 s occupancy per endpoint
+        let params = SimParams { latency: 1.0, per_msg: 0.0, sec_per_byte: 0.0625 };
         let (mut eps, _) = build(2, params);
         let mut b = eps.pop().unwrap();
         let mut a = eps.pop().unwrap();
         let h = thread::spawn(move || {
-            // sender occupancy 4*0.5=2, wire latency 1, receiver occupancy 2
+            // sender occupancy 32·0.0625=2, wire latency 1, receiver occupancy 2
             a.send(1, tags::CTRL, vec![0.0; 4]);
         });
         b.recv_from(0, tags::CTRL);
@@ -372,7 +502,8 @@ mod tests {
 
     #[test]
     fn eval_plane_is_free() {
-        let (mut eps, stats) = build(2, SimParams { latency: 1.0, per_msg: 1.0, sec_per_scalar: 1.0 });
+        let (mut eps, stats) =
+            build(2, SimParams { latency: 1.0, per_msg: 1.0, sec_per_byte: 1.0 });
         let mut b = eps.pop().unwrap();
         let mut a = eps.pop().unwrap();
         let h = thread::spawn(move || {
@@ -381,6 +512,7 @@ mod tests {
         b.recv_eval_from(0, tags::EVAL);
         h.join().unwrap();
         assert_eq!(stats.total_scalars(), 0);
+        assert_eq!(stats.total_bytes(), 0);
         assert!(b.now() < 0.5);
     }
 
@@ -397,14 +529,14 @@ mod tests {
         let m2 = b.recv_from(0, tags::REDUCE);
         let m1 = b.recv_from(0, tags::PUSH);
         h.join().unwrap();
-        assert_eq!(m2.data, vec![2.0]);
-        assert_eq!(m1.data, vec![1.0]);
+        assert_eq!(m2.to_vec(1), vec![2.0]);
+        assert_eq!(m1.to_vec(1), vec![1.0]);
     }
 
     #[test]
     fn clock_happens_before_chain() {
         // a -> b -> c: c's clock must reflect both hops' latency
-        let params = SimParams { latency: 1.0, per_msg: 0.0, sec_per_scalar: 0.0 };
+        let params = SimParams { latency: 1.0, per_msg: 0.0, sec_per_byte: 0.0 };
         let (eps, _) = build(3, params);
         let mut it = eps.into_iter();
         let mut a = it.next().unwrap();
@@ -413,12 +545,12 @@ mod tests {
         let ha = thread::spawn(move || a.send(1, tags::CTRL, vec![1.0]));
         let hb = thread::spawn(move || {
             let m = b.recv_from(0, tags::CTRL);
-            b.send(2, tags::CTRL, m.data);
+            b.send(2, tags::CTRL, m.to_vec(1));
         });
         let m = c.recv_from(1, tags::CTRL);
         ha.join().unwrap();
         hb.join().unwrap();
-        assert_eq!(m.data, vec![1.0]);
+        assert_eq!(m.to_vec(1), vec![1.0]);
         assert!(c.now() >= 2.0, "two hops of 1s latency");
     }
 
@@ -439,6 +571,45 @@ mod tests {
         h1.join().unwrap();
         h2.join().unwrap();
         assert_eq!(stats.busiest_node_scalars(), 20);
+        assert_eq!(stats.busiest_node_bytes(), 160);
         assert_eq!(stats.total_scalars(), 25);
+        assert_eq!(stats.total_bytes(), 200);
+    }
+
+    #[test]
+    fn recv_panic_names_node_peer_and_tag() {
+        let (mut eps, _) = build(2, SimParams::free());
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        drop(a); // peer 0 goes away before sending anything
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            b.recv_from(0, tags::REDUCE);
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .expect("panic payload should be a formatted String");
+        assert!(
+            msg.contains("node 1") && msg.contains("peer 0") && msg.contains("tag 1"),
+            "panic message must name receiver, expected peer and tag: {msg}"
+        );
+    }
+
+    #[test]
+    fn send_panic_names_node_peer_and_tag() {
+        let (mut eps, _) = build(2, SimParams::free());
+        let b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        drop(b);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            a.send(1, tags::PUSH, vec![1.0]);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().expect("formatted String payload");
+        assert!(
+            msg.contains("node 0") && msg.contains("peer 1") && msg.contains("tag 5"),
+            "panic message must name sender, peer and tag: {msg}"
+        );
     }
 }

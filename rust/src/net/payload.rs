@@ -1,0 +1,317 @@
+//! Typed wire payloads and codecs.
+//!
+//! Everything that crosses a counted link is a [`Payload`]: a reference-
+//! counted, immutable buffer in one of three wire formats. Two things fall
+//! out of this representation:
+//!
+//! 1. **Byte-accurate accounting.** Each variant knows its own wire size
+//!    ([`Payload::wire_bytes`]), so [`crate::net::CommStats`] can count
+//!    bytes — the canonical unit — while the logical scalar count
+//!    ([`Payload::scalars`]) survives as a derived view for the paper's
+//!    §4.5 `2qN`/`2q` pins.
+//! 2. **Zero-copy fan-out.** `Arc` buffers make forwarding free in-process:
+//!    a tree broadcast clones a pointer per hop instead of a `d`-length
+//!    vector (see [`crate::net::collectives`]).
+//!
+//! [`WireFmt`] is the codec selector threaded from the CLI (`--wire`)
+//! through [`crate::algs::RunParams`]: `f64` is the bit-exact default,
+//! `f32` halves the bytes of every dense payload, and `sparse` sends only
+//! the nonzero coordinates as `(u32 index, f32 value)` pairs.
+
+use std::sync::Arc;
+
+/// Wire-format selector (`--wire f64|f32|sparse`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WireFmt {
+    /// 8 bytes per scalar; bit-exact (the default — equivalence suites pin
+    /// this path against serial references).
+    #[default]
+    F64,
+    /// 4 bytes per scalar; rounds every payload value to `f32` on the wire.
+    F32,
+    /// `(u32, f32)` pairs for the nonzeros only — 8 bytes per *nonzero*.
+    /// Wins when payloads are sparser than 50%.
+    Sparse,
+}
+
+impl WireFmt {
+    pub const ALL: [WireFmt; 3] = [WireFmt::F64, WireFmt::F32, WireFmt::Sparse];
+
+    pub fn parse(s: &str) -> Option<WireFmt> {
+        match s {
+            "f64" | "F64" => Some(WireFmt::F64),
+            "f32" | "F32" => Some(WireFmt::F32),
+            "sparse" => Some(WireFmt::Sparse),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireFmt::F64 => "f64",
+            WireFmt::F32 => "f32",
+            WireFmt::Sparse => "sparse",
+        }
+    }
+
+    /// Wire bytes per scalar of a fully-dense payload — what closed-form
+    /// accounting charges when it models traffic instead of counting real
+    /// payloads: 8 for `f64`, 4 for `f32`, and 8 for `sparse` (one
+    /// `(u32, f32)` pair per scalar, since a dense payload is all
+    /// nonzeros).
+    pub fn dense_bytes_per_scalar(self) -> u64 {
+        match self {
+            WireFmt::F64 | WireFmt::Sparse => 8,
+            WireFmt::F32 => 4,
+        }
+    }
+
+    /// Encode a dense vector for the wire.
+    pub fn encode(self, data: &[f64]) -> Payload {
+        match self {
+            WireFmt::F64 => Payload::DenseF64(data.into()),
+            WireFmt::F32 => {
+                Payload::DenseF32(data.iter().map(|&v| v as f32).collect::<Vec<f32>>().into())
+            }
+            WireFmt::Sparse => {
+                let mut idx = Vec::new();
+                let mut val = Vec::new();
+                for (i, &v) in data.iter().enumerate() {
+                    if v != 0.0 {
+                        idx.push(i as u32);
+                        val.push(v as f32);
+                    }
+                }
+                Payload::Sparse { idx: idx.into(), val: val.into() }
+            }
+        }
+    }
+}
+
+/// One wire payload. Buffers are `Arc`s so clones (tree fan-out, star
+/// broadcast) share the allocation instead of deep-copying it.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    DenseF64(Arc<[f64]>),
+    DenseF32(Arc<[f32]>),
+    /// Nonzero coordinates only; `idx` is strictly ascending.
+    Sparse { idx: Arc<[u32]>, val: Arc<[f32]> },
+}
+
+impl From<Vec<f64>> for Payload {
+    fn from(v: Vec<f64>) -> Payload {
+        Payload::DenseF64(v.into())
+    }
+}
+
+impl Payload {
+    /// Logical scalar count — the §4.5 "communicated scalars" view
+    /// (dense: length; sparse: number of nonzeros).
+    pub fn scalars(&self) -> usize {
+        match self {
+            Payload::DenseF64(v) => v.len(),
+            Payload::DenseF32(v) => v.len(),
+            Payload::Sparse { val, .. } => val.len(),
+        }
+    }
+
+    /// Exact bytes on the wire — the canonical unit the simulator charges
+    /// for (counters and NIC occupancy).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::DenseF64(v) => 8 * v.len(),
+            Payload::DenseF32(v) => 4 * v.len(),
+            Payload::Sparse { idx, val } => 4 * idx.len() + 4 * val.len(),
+        }
+    }
+
+    /// Decode into a caller-sized buffer. Dense payload lengths must match
+    /// `out.len()`; a sparse payload zeroes `out` and scatters its
+    /// nonzeros.
+    pub fn decode_into(&self, out: &mut [f64]) {
+        match self {
+            Payload::DenseF64(v) => {
+                assert_eq!(v.len(), out.len(), "dense f64 payload length mismatch");
+                out.copy_from_slice(v);
+            }
+            Payload::DenseF32(v) => {
+                assert_eq!(v.len(), out.len(), "dense f32 payload length mismatch");
+                for (o, &x) in out.iter_mut().zip(v.iter()) {
+                    *o = x as f64;
+                }
+            }
+            Payload::Sparse { idx, val } => {
+                out.iter_mut().for_each(|o| *o = 0.0);
+                for (&i, &x) in idx.iter().zip(val.iter()) {
+                    out[i as usize] = x as f64;
+                }
+            }
+        }
+    }
+
+    /// Decode into a fresh vector of logical length `len`.
+    pub fn to_vec(&self, len: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; len];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Elementwise-add the decoded payload into `out` (reduce step; for
+    /// the `f64` format this is the exact same additions as a raw
+    /// `Vec<f64>` reduce, in the same order). Dense payload lengths must
+    /// match `out.len()` — a mismatch is a protocol bug, not something to
+    /// truncate silently.
+    pub fn add_into(&self, out: &mut [f64]) {
+        match self {
+            Payload::DenseF64(v) => {
+                assert_eq!(v.len(), out.len(), "dense f64 payload length mismatch");
+                for (o, &x) in out.iter_mut().zip(v.iter()) {
+                    *o += x;
+                }
+            }
+            Payload::DenseF32(v) => {
+                assert_eq!(v.len(), out.len(), "dense f32 payload length mismatch");
+                for (o, &x) in out.iter_mut().zip(v.iter()) {
+                    *o += x as f64;
+                }
+            }
+            Payload::Sparse { idx, val } => {
+                for (&i, &x) in idx.iter().zip(val.iter()) {
+                    out[i as usize] += x as f64;
+                }
+            }
+        }
+    }
+
+    /// Decode replacing `data`, resizing to the payload's dense length.
+    /// Sparse payloads carry no length, so `data` must already be sized.
+    pub fn decode_resize(&self, data: &mut Vec<f64>) {
+        match self {
+            Payload::DenseF64(v) => {
+                data.clear();
+                data.extend_from_slice(v);
+            }
+            Payload::DenseF32(v) => {
+                data.clear();
+                data.extend(v.iter().map(|&x| x as f64));
+            }
+            Payload::Sparse { .. } => self.decode_into(data),
+        }
+    }
+
+    /// Borrow an exact `f64` payload in place (the structured payloads
+    /// built by `Comm::send_exact`); `None` for codec-compressed
+    /// variants. Lets protocol hot loops read without a decode copy.
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Payload::DenseF64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Read one logical coordinate (control flags and the like).
+    pub fn value(&self, i: usize) -> f64 {
+        match self {
+            Payload::DenseF64(v) => v[i],
+            Payload::DenseF32(v) => v[i] as f64,
+            Payload::Sparse { idx, val } => match idx.binary_search(&(i as u32)) {
+                Ok(p) => val[p] as f64,
+                Err(_) => 0.0,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_round_trips_bit_exactly() {
+        let data = vec![0.1, -2.5, 0.0, 1e300, f64::MIN_POSITIVE];
+        let p = WireFmt::F64.encode(&data);
+        assert_eq!(p.to_vec(5), data);
+        assert_eq!(p.scalars(), 5);
+        assert_eq!(p.wire_bytes(), 40);
+    }
+
+    #[test]
+    fn f32_halves_bytes_and_rounds() {
+        let data = vec![1.0, 0.1, -3.0, 0.0];
+        let p = WireFmt::F32.encode(&data);
+        assert_eq!(p.scalars(), 4);
+        assert_eq!(p.wire_bytes(), 16);
+        let back = p.to_vec(4);
+        assert_eq!(back[0], 1.0);
+        assert_eq!(back[2], -3.0);
+        assert!((back[1] - 0.1).abs() < 1e-7 && back[1] != 0.1, "0.1 must round through f32");
+    }
+
+    #[test]
+    fn sparse_keeps_only_nonzeros() {
+        let data = vec![0.0, 2.0, 0.0, 0.0, -1.0];
+        let p = WireFmt::Sparse.encode(&data);
+        assert_eq!(p.scalars(), 2);
+        assert_eq!(p.wire_bytes(), 16); // 2 × (u32 + f32)
+        assert_eq!(p.to_vec(5), data);
+        assert_eq!(p.value(1), 2.0);
+        assert_eq!(p.value(3), 0.0);
+    }
+
+    #[test]
+    fn add_into_matches_decode_then_add() {
+        let data = vec![1.0, 0.0, 3.0];
+        for fmt in WireFmt::ALL {
+            let p = fmt.encode(&data);
+            let mut acc = vec![10.0, 20.0, 30.0];
+            p.add_into(&mut acc);
+            let mut want = vec![10.0, 20.0, 30.0];
+            for (w, v) in want.iter_mut().zip(p.to_vec(3)) {
+                *w += v;
+            }
+            assert_eq!(acc, want, "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn decode_resize_adopts_dense_length() {
+        let p = WireFmt::F64.encode(&[1.0, 2.0, 3.0]);
+        let mut data = vec![0.0; 7];
+        p.decode_resize(&mut data);
+        assert_eq!(data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn clones_share_the_buffer() {
+        let p = WireFmt::F64.encode(&[1.0; 1000]);
+        let q = p.clone();
+        match (&p, &q) {
+            (Payload::DenseF64(a), Payload::DenseF64(b)) => {
+                assert!(Arc::ptr_eq(a, b), "clone must not deep-copy");
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn dense_bytes_per_scalar_matches_encode() {
+        let dense = [1.0, -2.0, 3.5, 4.0, 0.25];
+        for fmt in WireFmt::ALL {
+            assert_eq!(
+                fmt.encode(&dense).wire_bytes() as u64,
+                dense.len() as u64 * fmt.dense_bytes_per_scalar(),
+                "{}",
+                fmt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for fmt in WireFmt::ALL {
+            assert_eq!(WireFmt::parse(fmt.name()), Some(fmt));
+        }
+        assert_eq!(WireFmt::parse("f16"), None);
+        assert_eq!(WireFmt::default(), WireFmt::F64);
+    }
+}

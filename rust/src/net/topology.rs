@@ -1,102 +1,43 @@
-//! Communication topologies.
+//! Topology helpers and exact-`f64` views of the collectives.
 //!
-//! The centerpiece is the paper's **tree-structured global sum** (Fig. 5):
-//! the coordinator (node 0) and `q` workers form a binomial tree; a reduce
-//! climbs the tree pairing workers so disjoint pairs combine
-//! *simultaneously*, and the broadcast walks the reverse tree. For one
-//! reduced+broadcast vector of length `L` over `q` workers the total
-//! traffic is exactly `2·q·L` scalars — the paper's `2q` per scalar — in
-//! `2·⌈log₂(q+1)⌉` latency rounds instead of the `2q` rounds of a naive
-//! star. [`star_allreduce`] implements that naive strategy for the
-//! tree-vs-flat ablation.
+//! The collective *implementations* (binomial tree reduce/broadcast and
+//! the star ablation, generic over the wire codec) live in
+//! [`crate::net::collectives`]; algorithms reach them through
+//! [`crate::net::collectives::Comm`]. The free functions here are the
+//! historical raw-`Vec<f64>` entry points, pinned to the bit-exact
+//! [`WireFmt::F64`] format — tests and benches use them to assert the
+//! paper's Fig.-5 properties (for one reduced+broadcast vector of length
+//! `L` over `q` workers the total traffic is exactly `2·q·L` scalars in
+//! `2·⌈log₂(q+1)⌉` latency rounds instead of the naive star's `2q`).
 //!
 //! Node ids: the *cluster* numbering used by every algorithm is
 //! `0 = coordinator, 1..=q = workers`. The binomial tree is built over all
 //! `q+1` nodes with the coordinator as root.
 
-use super::{tags, Endpoint, NodeId};
+use super::collectives;
+use super::{Endpoint, NodeId, WireFmt};
 
-/// Reduce (elementwise sum) of `data` from all nodes in `group` to
-/// `group[0]`, using a binomial tree. Every node in `group` must call this
-/// with its own contribution in `data`; on return, `group[0]`'s `data`
-/// holds the sum (other nodes' buffers hold partial sums).
+/// Exact-`f64` tree reduce to `group[0]` (see
+/// [`collectives::tree_reduce`]).
 pub fn tree_reduce(ep: &mut Endpoint, group: &[NodeId], data: &mut [f64]) {
-    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
-    let q = group.len();
-    let mut mask = 1usize;
-    while mask < q {
-        if rank & (mask - 1) == 0 {
-            if rank & mask != 0 {
-                // sender: pass partial sum down to (rank - mask), then leave
-                ep.send(group[rank - mask], tags::REDUCE, data.to_vec());
-                break;
-            } else if rank + mask < q {
-                let msg = ep.recv_from(group[rank + mask], tags::REDUCE);
-                for (d, m) in data.iter_mut().zip(msg.data.iter()) {
-                    *d += *m;
-                }
-            }
-        }
-        mask <<= 1;
-    }
+    collectives::tree_reduce(ep, group, data, WireFmt::F64);
 }
 
-/// Broadcast `data` from `group[0]` to all nodes of `group` along the
-/// reverse binomial tree. On non-root nodes `data` is overwritten.
+/// Exact-`f64` reverse-tree broadcast from `group[0]` (see
+/// [`collectives::tree_broadcast`]).
 pub fn tree_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
-    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
-    let q = group.len();
-    let mut mask = 1usize;
-    while mask < q {
-        mask <<= 1;
-    }
-    mask >>= 1;
-    // receive once from the parent, then forward to children in reverse order
-    let mut received = rank == 0;
-    while mask >= 1 {
-        if rank & (mask - 1) == 0 {
-            if !received && rank & mask != 0 {
-                let msg = ep.recv_from(group[rank - mask], tags::BCAST);
-                *data = msg.data;
-                received = true;
-            } else if received && rank & mask == 0 && rank + mask < q {
-                ep.send(group[rank + mask], tags::BCAST, data.clone());
-            }
-        }
-        if mask == 1 {
-            break;
-        }
-        mask >>= 1;
-    }
+    collectives::tree_broadcast(ep, group, data, WireFmt::F64);
 }
 
-/// Allreduce = tree reduce to `group[0]` + reverse-tree broadcast.
-/// After return every node holds the elementwise sum.
+/// Exact-`f64` allreduce: tree reduce + reverse-tree broadcast.
 pub fn tree_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
-    tree_reduce(ep, group, data);
-    tree_broadcast(ep, group, data);
+    collectives::tree_allreduce(ep, group, data, WireFmt::F64);
 }
 
-/// Naive star allreduce (ablation baseline): all nodes send to `group[0]`,
-/// which sums and sends the result back to each. Same scalar volume as the
-/// tree but `2(q−1)` sequential rounds at the hub and a hub hot-spot.
+/// Exact-`f64` naive star allreduce (ablation baseline; see
+/// [`collectives::star_allreduce`]).
 pub fn star_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
-    let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
-    if rank == 0 {
-        for &peer in &group[1..] {
-            let msg = ep.recv_from(peer, tags::REDUCE);
-            for (d, m) in data.iter_mut().zip(msg.data.iter()) {
-                *d += *m;
-            }
-        }
-        for &peer in &group[1..] {
-            ep.send(peer, tags::BCAST, data.to_vec());
-        }
-    } else {
-        ep.send(group[0], tags::REDUCE, data.to_vec());
-        let msg = ep.recv_from(group[0], tags::BCAST);
-        *data = msg.data;
-    }
+    collectives::star_allreduce(ep, group, data, WireFmt::F64);
 }
 
 /// Ring neighbors for DSVRG's decentralized layout over `n` workers.
@@ -144,7 +85,8 @@ mod tests {
 
     #[test]
     fn allreduce_traffic_is_2q_scalars() {
-        // paper Fig. 5: coordinator + q workers, one scalar => 2q scalars total
+        // paper Fig. 5: coordinator + q workers, one scalar => 2q scalars
+        // total — and, under the f64 wire, exactly 8× that in bytes.
         for q in [1usize, 2, 3, 4, 7, 8, 15, 16] {
             let n = q + 1;
             let (_, stats) = run_group(n, SimParams::free(), |ep, rank| {
@@ -156,6 +98,11 @@ mod tests {
                 stats.total_scalars(),
                 2 * q as u64,
                 "q={q}: tree allreduce of 1 scalar must cost 2q"
+            );
+            assert_eq!(
+                stats.total_bytes(),
+                8 * 2 * q as u64,
+                "q={q}: f64 wire bytes must be 8× the scalar count"
             );
         }
     }
@@ -174,6 +121,7 @@ mod tests {
             star_allreduce(ep, &group, &mut data);
         });
         assert_eq!(star_stats.total_scalars(), tree_stats.total_scalars());
+        assert_eq!(star_stats.total_bytes(), tree_stats.total_bytes());
         assert!(star_stats.node_scalars(0) > tree_stats.node_scalars(0));
     }
 
@@ -184,7 +132,7 @@ mod tests {
         // hub handles only ⌈log₂ 17⌉ messages per direction. This is the
         // paper's Fig.-5 argument.
         let n = 17usize;
-        let params = SimParams { latency: 0.0, per_msg: 1.0, sec_per_scalar: 0.0 };
+        let params = SimParams { latency: 0.0, per_msg: 1.0, sec_per_byte: 0.0 };
         let (results, _) = run_group(n, params, |ep, _| {
             let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
             let mut data = vec![1.0];

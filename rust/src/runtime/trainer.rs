@@ -120,6 +120,11 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
     let mut trace = Trace::default();
     let mut grads = 0u64;
     let mut scalars = 0u64;
+    // closed-form wire accounting: the modeled payloads (margins, batch
+    // dots) are dense, so bytes = scalars × the codec's dense rate, and
+    // every modeled tree allreduce moves 2q messages
+    let bytes_per_scalar = params.wire.dense_bytes_per_scalar();
+    let mut messages = 0u64;
     let assemble = |w: &[Vec<f32>]| -> Vec<f64> {
         let mut out = vec![0f64; d];
         for (l, wl) in w.iter().enumerate() {
@@ -136,6 +141,7 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
         sim_time: 0.0,
         wall_time: 0.0,
         scalars: 0,
+        bytes: 0,
         grads: 0,
         objective: problem.objective(&assemble(&w)),
     });
@@ -156,6 +162,7 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
             }
         }
         scalars += 2 * q as u64 * n as u64; // one tree allreduce of N scalars
+        messages += 2 * q as u64;
         let inv_n = 1.0 / n as f32;
         for zl in z.iter_mut() {
             zl.iter_mut().for_each(|v| *v = 0.0);
@@ -198,6 +205,7 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
                 }
             }
             scalars += 2 * q as u64 * BLOCK_U as u64;
+            messages += 2 * q as u64;
 
             let yb: Vec<f32> =
                 idx.iter().map(|&i| data.y_blocks[b][i as usize]).collect();
@@ -226,6 +234,7 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
             sim_time: wall.seconds(),
             wall_time: wall.seconds(),
             scalars,
+            bytes: bytes_per_scalar * scalars,
             grads,
             objective,
         });
@@ -247,6 +256,10 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
         total_wall_time: wall.seconds(),
         total_scalars: scalars,
         busiest_node_scalars: scalars / q.max(1) as u64,
+        total_bytes: bytes_per_scalar * scalars,
+        busiest_node_bytes: bytes_per_scalar * (scalars / q.max(1) as u64),
+        total_messages: messages,
+        node_comm: Vec::new(),
     })
 }
 

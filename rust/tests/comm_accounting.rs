@@ -140,7 +140,7 @@ fn tree_spreads_busiest_node_load() {
     // tree pipelines them across log₂(q) levels. (With 1-scalar payloads
     // on a latency-dominated network the comparison can flip — that regime
     // is covered by the ablation bench, not asserted here.)
-    tree.sim = SimParams { latency: 0.0, per_msg: 50e-6, sec_per_scalar: 1e-6 };
+    tree.sim = SimParams { latency: 0.0, per_msg: 50e-6, sec_per_byte: 1.25e-7 };
     let mut star = tree.clone();
     star.star_reduce = true;
     let t_tree = Algorithm::FdSvrg.run(&p, &tree).total_sim_time;
@@ -159,7 +159,7 @@ fn sim_clock_scales_with_network_params() {
     let free = Algorithm::FdSvrg.run(&p, &params(4, 2));
     assert!(free.total_sim_time > 0.0, "compute time still accrues");
     let mut slow = params(4, 2);
-    slow.sim = SimParams { latency: 1e-3, per_msg: 1e-4, sec_per_scalar: 1e-6 };
+    slow.sim = SimParams { latency: 1e-3, per_msg: 1e-4, sec_per_byte: 1.25e-7 };
     let slow_run = Algorithm::FdSvrg.run(&p, &slow);
     assert!(
         slow_run.total_sim_time > free.total_sim_time * 10.0,
@@ -230,4 +230,58 @@ fn gradient_counter_matches_paper() {
     let res = Algorithm::FdSvrg.run(&p, &params(3, 2));
     let last = res.trace.points.last().unwrap();
     assert_eq!(last.grads, 2 * 2 * 77);
+}
+
+/// Back-compat pin for the byte-accurate wire layer: under the default
+/// `f64` wire format every algorithm's **per-sender** byte counter is
+/// exactly 8× its scalar counter (and so are the totals and the busiest-
+/// node view) — the §4.5 scalar closed forms above therefore survive as a
+/// derived view of the canonical byte counters.
+#[test]
+fn f64_wire_bytes_are_8x_scalars_per_sender() {
+    check("bytes = 8×scalars under f64 wire", 4, |g| {
+        let p = problem(g.usize_in(60, 250), g.usize_in(30, 90), g.rng().next_u64());
+        let q = g.usize_in(2, 6);
+        for algo in Algorithm::ALL_DISTRIBUTED {
+            let mut pr = params(q, 2);
+            pr.servers = 2;
+            let res = algo.run(&p, &pr);
+            assert_eq!(res.total_bytes, 8 * res.total_scalars, "{} total", algo.name());
+            assert_eq!(
+                res.busiest_node_bytes,
+                8 * res.busiest_node_scalars,
+                "{} busiest node",
+                algo.name()
+            );
+            assert!(res.total_messages > 0, "{} must count messages", algo.name());
+            let mut messages = 0u64;
+            for (id, nc) in res.node_comm.iter().enumerate() {
+                assert_eq!(nc.bytes, 8 * nc.scalars, "{} node {id}", algo.name());
+                messages += nc.messages;
+            }
+            assert_eq!(messages, res.total_messages, "{} message sum", algo.name());
+        }
+    });
+}
+
+/// `--wire f32` halves the wire bytes of the same logical traffic; the
+/// scalar view (and with it every §4.5 closed form above) is unchanged.
+#[test]
+fn f32_wire_halves_bytes_keeps_scalar_pins() {
+    use fdsvrg::net::WireFmt;
+    let p = problem(300, 80, 9);
+    let q = 4u64;
+    let outer = 2u64;
+    let mut pr = params(q as usize, outer as usize);
+    let r64 = Algorithm::FdSvrg.run(&p, &pr);
+    pr.wire = WireFmt::F32;
+    let r32 = Algorithm::FdSvrg.run(&p, &pr);
+    let n = p.n() as u64;
+    // the 4qN·T scalar pin holds under both codecs
+    assert_eq!(r64.total_scalars, 4 * q * n * outer);
+    assert_eq!(r32.total_scalars, 4 * q * n * outer);
+    assert_eq!(r64.total_bytes, 8 * r64.total_scalars);
+    assert_eq!(r32.total_bytes, 4 * r32.total_scalars);
+    assert_eq!(r64.total_bytes, 2 * r32.total_bytes, "f32 must halve the wire bytes");
+    assert_eq!(r64.total_messages, r32.total_messages, "codec must not change message count");
 }
