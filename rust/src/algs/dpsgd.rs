@@ -20,24 +20,36 @@
 //! bounds.
 
 use super::{Problem, RunParams};
-use crate::cluster::run_cluster;
 use crate::linalg;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
+use crate::session::cluster::{
+    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
+    EpochGate,
+};
+use crate::session::{EpochReport, NodeState, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
-use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
 
 /// Step decay matching [`super::fdsgd`]: `η_t = η₀ / (1 + 0.1·t)`.
 const DECAY: f64 = 0.1;
 
-enum NodeOut {
-    Leader(Box<(Trace, Vec<f64>)>),
-    Worker,
+/// Run D-PSGD (the fire-and-forget path: one session driven to completion).
+pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    super::Algorithm::DPsgd.run(problem, params)
 }
 
-pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+/// Build the steppable D-PSGD driver: `q` ring workers, no coordinator;
+/// node 0 doubles as the session monitor and reports the *consensus
+/// average* `w̄` (the quantity D-PSGD's analysis bounds). Every node's
+/// full local parameter copy rides in its resume `extra`, so a restored
+/// ring continues bit-exactly.
+pub(crate) fn driver(
+    problem: &Problem,
+    params: &RunParams,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ClusterDriver> {
     let q = params.q.max(2); // a ring needs at least 2 nodes
     let d = problem.d();
     let n = problem.n();
@@ -46,21 +58,16 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
     let rounds = m_inner.div_ceil(q);
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
-    let wall = Stopwatch::start();
+    let dataset = problem.ds.name.clone();
+    let sim = params.sim;
+    let problem = problem.clone();
+    let params = params.clone();
 
-    let cluster = run_cluster(q, params.sim, |mut ep| {
-        worker(&mut ep, problem, params, q, d, eta0, rounds, &shards, &y, &wall)
+    let node_fn = Arc::new(move |mut ep: Endpoint, cx: &ClusterCtx| {
+        let gate = if ep.id() == 0 { Some(cx.take_gate()) } else { None };
+        worker(&mut ep, &problem, &params, q, d, eta0, rounds, &shards, &y, gate.as_ref(), cx);
     });
-
-    let (trace, w) = cluster
-        .results
-        .into_iter()
-        .find_map(|r| match r {
-            NodeOut::Leader(b) => Some(*b),
-            NodeOut::Worker => None,
-        })
-        .expect("leader result");
-    RunResult::from_cluster("dpsgd", &problem.ds.name, w, trace, wall.seconds(), &cluster.stats)
+    ClusterDriver::new("dpsgd", &dataset, q, d, sim, resume, node_fn)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -74,8 +81,9 @@ fn worker(
     rounds: usize,
     shards: &[InstanceShard],
     y: &[f64],
-    wall: &Stopwatch,
-) -> NodeOut {
+    gate: Option<&EpochGate>,
+    cx: &ClusterCtx,
+) {
     let id = ep.id();
     let next = (id + 1) % q;
     let prev = (id + q - 1) % q;
@@ -83,28 +91,31 @@ fn worker(
     let local_n = shard.data.cols();
     let comm = params.comm();
     let loss = problem.build_loss();
-    let mut w = vec![0.0f64; d];
-    let mut rng = Pcg64::seed_from_u64(params.seed ^ (id as u64).wrapping_mul(0x9E37));
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
+    let (mut w, mut rng, mut t, mut grads) =
+        match (cx.resume.as_deref(), cx.node_state(id)) {
+            (Some(r), Some(st)) => {
+                assert_eq!(st.extra.len(), d, "dpsgd node extra = local parameter copy");
+                (
+                    st.extra.clone(),
+                    Pcg64::from_state_words(st.rng.expect("dpsgd node state carries the RNG")),
+                    r.epoch,
+                    // the leader reports grads × q (all workers step in
+                    // parallel); recover the per-node count
+                    r.grads / q as u64,
+                )
+            }
+            _ => (
+                vec![0.0f64; d],
+                Pcg64::seed_from_u64(params.seed ^ (id as u64).wrapping_mul(0x9E37)),
+                0usize,
+                0u64,
+            ),
+        };
     // reusable decode buffers for the ring exchange (no per-round allocs)
     let mut wp = vec![0.0f64; d];
     let mut wn = vec![0.0f64; d];
 
-    if id == 0 {
-        trace.push(TracePoint {
-            outer: 0,
-            sim_time: 0.0,
-            wall_time: wall.seconds(),
-            scalars: 0,
-            bytes: 0,
-            grads: 0,
-            objective: problem.objective(&w),
-        });
-        ep.discard_cpu();
-    }
-
-    for t in 0..params.outer {
+    loop {
         let eta = eta0 / (1.0 + DECAY * t as f64);
         for _ in 0..rounds {
             // 1. ring mixing: exchange dense w with both neighbours —
@@ -138,7 +149,8 @@ fn worker(
         }
 
         // evaluation plane: leader gathers everyone's w, reports consensus
-        if id == 0 {
+        t += 1;
+        if let Some(gate) = gate {
             let mut avg = w.clone();
             for peer in 1..q {
                 let msg = ep.recv_eval_from(peer, tags::EVAL);
@@ -146,46 +158,44 @@ fn worker(
             }
             let inv_q = 1.0 / q as f64;
             avg.iter_mut().for_each(|v| *v *= inv_q);
-            let objective = problem.objective(&avg);
-            ep.discard_cpu();
             let sim_time = ep.now();
-            trace.push(TracePoint {
-                outer: t + 1,
-                sim_time,
-                wall_time: wall.seconds(),
-                scalars: ep.stats().total_scalars(),
-                bytes: ep.stats().total_bytes(),
+            let own = NodeState {
+                rng: Some(rng.state_words()),
+                clock: ep.clock_state(),
+                extra: w.clone(),
+            };
+            let nodes = collect_node_states(ep, 0, own, 1..q, q);
+            let (scalars, bytes, per_node) = comm_snapshot(ep);
+            let directive = gate.exchange(EpochReport {
+                epoch: t,
+                w: avg,
                 grads: grads * q as u64, // all workers step in parallel
-                objective,
+                sim_time,
+                scalars,
+                bytes,
+                comm: per_node,
+                nodes,
             });
-            let gap_hit = params
-                .gap_stop
-                .map(|(f_opt, target)| objective - f_opt <= target)
-                .unwrap_or(false);
-            let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
-            let stop = gap_hit || time_hit || t + 1 == params.outer;
+            let stop = directive == Directive::Stop;
             for peer in 1..q {
                 ep.send_eval(peer, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
             }
             if stop {
-                let mut tr = Trace::default();
-                std::mem::swap(&mut tr, &mut trace);
-                return NodeOut::Leader(Box::new((tr, avg)));
+                return;
             }
         } else {
             ep.send_eval(0, tags::EVAL, w.clone());
+            let st = NodeState {
+                rng: Some(rng.state_words()),
+                clock: ep.clock_state(),
+                extra: w.clone(),
+            };
+            send_node_state(ep, 0, &st);
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
             if ctrl.value(0) != 0.0 {
-                return NodeOut::Worker;
+                return;
             }
         }
-    }
-    if id == 0 {
-        let mut tr = Trace::default();
-        std::mem::swap(&mut tr, &mut trace);
-        NodeOut::Leader(Box::new((tr, w)))
-    } else {
-        NodeOut::Worker
     }
 }
 

@@ -16,26 +16,31 @@
 //! FD-SVRG's fully-parallel inner loop.
 
 use super::{Problem, RunParams};
-use crate::cluster::run_cluster;
 use crate::linalg;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
+use crate::session::cluster::{
+    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
+    EpochGate,
+};
+use crate::session::{EpochReport, NodeState, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
-use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
 
-struct CenterOut {
-    trace: Trace,
-    w: Vec<f64>,
-}
-
-enum NodeOut {
-    Center(Box<CenterOut>),
-    Worker,
-}
-
+/// Run DSVRG (the fire-and-forget path: one session driven to completion).
 pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    super::Algorithm::Dsvrg.run(problem, params)
+}
+
+/// Build the steppable DSVRG driver: node 0 is the center (monitor), nodes
+/// 1..=q hold instance shards. The round-robin duty rotation runs on the
+/// absolute epoch counter, so resumed runs continue the same schedule.
+pub(crate) fn driver(
+    problem: &Problem,
+    params: &RunParams,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ClusterDriver> {
     let q = params.q.max(1);
     let d = problem.d();
     let n = problem.n();
@@ -43,35 +48,23 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
     let m_inner = if params.m_inner == 0 { (n / q).max(1) } else { params.m_inner };
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
-    let wall = Stopwatch::start();
+    let dataset = problem.ds.name.clone();
+    let sim = params.sim;
+    let problem = problem.clone();
+    let params = params.clone();
 
-    let cluster = run_cluster(q + 1, params.sim, |mut ep| {
+    let node_fn = Arc::new(move |mut ep: Endpoint, cx: &ClusterCtx| {
         if ep.id() == 0 {
-            NodeOut::Center(Box::new(center(&mut ep, problem, params, q, d, m_inner, &wall)))
+            let gate = cx.take_gate();
+            center(&mut ep, &problem, &params, q, d, m_inner, &gate, cx);
         } else {
-            worker(&mut ep, problem, params, eta, m_inner, &shards, &y);
-            NodeOut::Worker
+            worker(&mut ep, &problem, &params, eta, m_inner, &shards, &y, cx);
         }
     });
-
-    let center = cluster
-        .results
-        .into_iter()
-        .find_map(|r| match r {
-            NodeOut::Center(c) => Some(*c),
-            NodeOut::Worker => None,
-        })
-        .expect("center result");
-    RunResult::from_cluster(
-        "dsvrg",
-        &problem.ds.name,
-        center.w,
-        center.trace,
-        wall.seconds(),
-        &cluster.stats,
-    )
+    ClusterDriver::new("dsvrg", &dataset, q + 1, d, sim, resume, node_fn)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn center(
     ep: &mut Endpoint,
     problem: &Problem,
@@ -79,25 +72,17 @@ fn center(
     q: usize,
     d: usize,
     m_inner: usize,
-    wall: &Stopwatch,
-) -> CenterOut {
+    gate: &EpochGate,
+    cx: &ClusterCtx,
+) {
     let n = problem.n();
     let comm = params.comm();
-    let mut w = vec![0.0f64; d];
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
-    trace.push(TracePoint {
-        outer: 0,
-        sim_time: 0.0,
-        wall_time: wall.seconds(),
-        scalars: 0,
-        bytes: 0,
-        grads: 0,
-        objective: problem.objective(&w),
-    });
-    ep.discard_cpu();
+    let resume = cx.resume.as_deref();
+    let mut grads = resume.map(|r| r.grads).unwrap_or(0);
+    let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
+    let mut w = resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; d]);
 
-    for t in 0..params.outer {
+    loop {
         // (1) broadcast w_t (one encode, Arc fan-out), gather gradient sums
         comm.send_all(ep, 1..=q, tags::BCAST, &w);
         let mut z = vec![0.0f64; d];
@@ -110,31 +95,29 @@ fn center(
         grads += n as u64;
 
         // (2) on-duty machine J runs the inner loop
-        let j = 1 + (t % q);
+        let j = 1 + (epoch % q);
         comm.send(ep, j, tags::RING, &z);
         let msg = ep.recv_from(j, tags::RING);
         w = msg.to_vec(d);
         grads += m_inner as u64;
 
-        // evaluation (off the clock)
-        let objective = problem.objective(&w);
-        ep.discard_cpu();
+        // evaluation plane: collect states, report the boundary
         let sim_time = ep.now();
-        trace.push(TracePoint {
-            outer: t + 1,
-            sim_time,
-            wall_time: wall.seconds(),
-            scalars: ep.stats().total_scalars(),
-            bytes: ep.stats().total_bytes(),
+        let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+        let nodes = collect_node_states(ep, 0, own, 1..=q, q + 1);
+        let (scalars, bytes, per_node) = comm_snapshot(ep);
+        epoch += 1;
+        let directive = gate.exchange(EpochReport {
+            epoch,
+            w: w.clone(),
             grads,
-            objective,
+            sim_time,
+            scalars,
+            bytes,
+            comm: per_node,
+            nodes,
         });
-        let gap_hit = match params.gap_stop {
-            Some((f_opt, target)) => objective - f_opt <= target,
-            None => false,
-        };
-        let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
-        let stop = gap_hit || time_hit || t + 1 == params.outer;
+        let stop = directive == Directive::Stop;
         for l in 1..=q {
             ep.send_eval(l, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
         }
@@ -142,9 +125,9 @@ fn center(
             break;
         }
     }
-    CenterOut { trace, w }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker(
     ep: &mut Endpoint,
     problem: &Problem,
@@ -153,6 +136,7 @@ fn worker(
     m_inner: usize,
     shards: &[InstanceShard],
     y: &[f64],
+    cx: &ClusterCtx,
 ) {
     let l = ep.id() - 1;
     let q = shards.len();
@@ -163,8 +147,13 @@ fn worker(
     let loss = problem.build_loss();
     let lambda = problem.reg.lambda();
     let use_l2 = matches!(problem.reg, crate::loss::Regularizer::L2 { .. });
-    let mut rng = Pcg64::seed_from_u64(params.seed ^ (0xD5 + l as u64));
-    let mut t = 0usize;
+    let (mut rng, mut t) = match (cx.resume.as_deref(), cx.node_state(ep.id())) {
+        (Some(r), Some(st)) => (
+            Pcg64::from_state_words(st.rng.expect("dsvrg worker state carries the RNG")),
+            r.epoch,
+        ),
+        _ => (Pcg64::seed_from_u64(params.seed ^ (0xD5 + l as u64)), 0usize),
+    };
 
     loop {
         // (1) receive w_t, return local loss-gradient sum
@@ -202,6 +191,8 @@ fn worker(
             comm.send(ep, 0, tags::RING, &w);
         }
 
+        let st = NodeState { rng: Some(rng.state_words()), clock: ep.clock_state(), extra: vec![] };
+        send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {
             break;

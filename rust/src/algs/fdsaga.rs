@@ -27,29 +27,35 @@
 //! `ā^(l) = (1/N) Σ_i a_i x_i^(l)` is the slab of the table average.
 
 use super::{Problem, RunParams};
-use crate::cluster::run_cluster;
 use crate::linalg;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint, NodeId};
+use crate::session::cluster::{
+    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
+    EpochGate,
+};
+use crate::session::{EpochReport, NodeState, ResumeState};
 use crate::sparse::partition::{by_features, by_features_rows, FeatureSlab};
-use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
-
-struct CoordOut {
-    trace: Trace,
-    w: Vec<f64>,
-}
-
-enum NodeOut {
-    Coord(Box<CoordOut>),
-    Worker,
-}
 
 /// Run FD-SAGA on a simulated cluster of `params.q` workers + coordinator.
 /// One "epoch" = `m_inner` (default N) sampled instances, so traces are
 /// axis-compatible with FD-SVRG.
 pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    super::Algorithm::FdSaga.run(problem, params)
+}
+
+/// Build the steppable FD-SAGA driver. Worker resume state (`extra`)
+/// carries the SAGA memory: the `N`-scalar coefficient table followed by
+/// the `d_l` slab of its running average (incrementally maintained, so it
+/// must be checkpointed rather than recomputed to keep the trajectory
+/// bit-exact).
+pub(crate) fn driver(
+    problem: &Problem,
+    params: &RunParams,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ClusterDriver> {
     let q = params.q.max(1);
     let n = problem.n();
     let d = problem.d();
@@ -61,64 +67,42 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
     let _ = by_features; // nnz-balanced variant kept for the lazy path
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let group: Vec<NodeId> = (0..=q).collect();
-    let wall = Stopwatch::start();
+    let dataset = problem.ds.name.clone();
+    let sim = params.sim;
+    let problem = problem.clone();
+    let params = params.clone();
 
-    let cluster = run_cluster(q + 1, params.sim, |mut ep| {
+    let node_fn = Arc::new(move |mut ep: Endpoint, cx: &ClusterCtx| {
         if ep.id() == 0 {
-            NodeOut::Coord(Box::new(coordinator(&mut ep, problem, params, &group, m_inner, u, &slabs, &wall)))
+            let gate = cx.take_gate();
+            coordinator(&mut ep, &params, &group, d, m_inner, u, &slabs, &gate, cx);
         } else {
-            worker(&mut ep, problem, params, &group, eta, m_inner, u, &slabs, &y);
-            NodeOut::Worker
+            worker(&mut ep, &problem, &params, &group, eta, m_inner, u, &slabs, &y, cx);
         }
     });
-
-    let coord = cluster
-        .results
-        .into_iter()
-        .find_map(|r| match r {
-            NodeOut::Coord(c) => Some(*c),
-            NodeOut::Worker => None,
-        })
-        .expect("coordinator result");
-    let _ = d;
-    RunResult::from_cluster(
-        "fdsaga",
-        &problem.ds.name,
-        coord.w,
-        coord.trace,
-        wall.seconds(),
-        &cluster.stats,
-    )
+    ClusterDriver::new("fdsaga", &dataset, q + 1, d, sim, resume, node_fn)
 }
 
 #[allow(clippy::too_many_arguments)]
 fn coordinator(
     ep: &mut Endpoint,
-    problem: &Problem,
     params: &RunParams,
     group: &[NodeId],
+    d: usize,
     m_inner: usize,
     u: usize,
     slabs: &[FeatureSlab],
-    wall: &Stopwatch,
-) -> CoordOut {
+    gate: &EpochGate,
+    cx: &ClusterCtx,
+) {
     let q = group.len() - 1;
     let comm = params.comm();
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
-    let mut w = vec![0.0f64; problem.d()];
-    trace.push(TracePoint {
-        outer: 0,
-        sim_time: 0.0,
-        wall_time: wall.seconds(),
-        scalars: 0,
-        bytes: 0,
-        grads: 0,
-        objective: problem.objective(&w),
-    });
-    ep.discard_cpu();
+    let resume = cx.resume.as_deref();
+    let mut grads = resume.map(|r| r.grads).unwrap_or(0);
+    let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
+    let mut w = resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; d]);
 
-    for t in 0..params.outer {
+    loop {
         let mut m = 0usize;
         while m < m_inner {
             let b = u.min(m_inner - m);
@@ -131,24 +115,22 @@ fn coordinator(
             let msg = ep.recv_eval_from(l + 1, tags::EVAL);
             msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
         }
-        let objective = problem.objective(&w);
-        ep.discard_cpu();
         let sim_time = ep.now();
-        trace.push(TracePoint {
-            outer: t + 1,
-            sim_time,
-            wall_time: wall.seconds(),
-            scalars: ep.stats().total_scalars(),
-            bytes: ep.stats().total_bytes(),
+        let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+        let nodes = collect_node_states(ep, 0, own, 1..=q, q + 1);
+        let (scalars, bytes, per_node) = comm_snapshot(ep);
+        epoch += 1;
+        let directive = gate.exchange(EpochReport {
+            epoch,
+            w: w.clone(),
             grads,
-            objective,
+            sim_time,
+            scalars,
+            bytes,
+            comm: per_node,
+            nodes,
         });
-        let gap_hit = params
-            .gap_stop
-            .map(|(f_opt, target)| objective - f_opt <= target)
-            .unwrap_or(false);
-        let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
-        let stop = gap_hit || time_hit || t + 1 == params.outer;
+        let stop = directive == Directive::Stop;
         for l in 1..=q {
             ep.send_eval(l, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
         }
@@ -156,7 +138,6 @@ fn coordinator(
             break;
         }
     }
-    CoordOut { trace, w }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -170,6 +151,7 @@ fn worker(
     u: usize,
     slabs: &[FeatureSlab],
     y: &[f64],
+    cx: &ClusterCtx,
 ) {
     let l = ep.id() - 1;
     let slab = &slabs[l];
@@ -184,21 +166,37 @@ fn worker(
         _ => panic!("FD-SAGA supports L2 (or no) regularization"),
     };
 
-    let mut w_l = vec![0.0f64; dl];
+    let mut w_l;
     // SAGA state: scalar coefficient table (identical on every worker) and
     // the slab of its running average ā^(l) = (1/N) Σ a_i x_i^(l).
-    let mut a = vec![0.0f64; n];
-    let mut abar_l = vec![0.0f64; dl];
-    // Initialize the table at w = 0: a_i = φ'(0, y_i). This costs no
-    // communication (margins are identically zero) and removes SAGA's
-    // cold-start bias.
-    for i in 0..n {
-        a[i] = loss.derivative(0.0, y[i]);
-        if a[i] != 0.0 {
-            slab.data.col_axpy(i, a[i] * inv_n, &mut abar_l);
+    let mut a;
+    let mut abar_l;
+    let mut sample_rng;
+    match (cx.resume.as_deref(), cx.node_state(ep.id())) {
+        (Some(r), Some(st)) => {
+            w_l = r.w[slab.row_lo..slab.row_hi].to_vec();
+            assert_eq!(st.extra.len(), n + dl, "fdsaga worker extra = table + average slab");
+            a = st.extra[..n].to_vec();
+            abar_l = st.extra[n..].to_vec();
+            sample_rng =
+                Pcg64::from_state_words(st.rng.expect("fdsaga worker state carries the RNG"));
+        }
+        _ => {
+            w_l = vec![0.0f64; dl];
+            a = vec![0.0f64; n];
+            abar_l = vec![0.0f64; dl];
+            // Initialize the table at w = 0: a_i = φ'(0, y_i). This costs no
+            // communication (margins are identically zero) and removes SAGA's
+            // cold-start bias.
+            for i in 0..n {
+                a[i] = loss.derivative(0.0, y[i]);
+                if a[i] != 0.0 {
+                    slab.data.col_axpy(i, a[i] * inv_n, &mut abar_l);
+                }
+            }
+            sample_rng = Pcg64::seed_from_u64(params.seed);
         }
     }
-    let mut sample_rng = Pcg64::seed_from_u64(params.seed);
 
     loop {
         let mut m = 0usize;
@@ -227,6 +225,12 @@ fn worker(
         }
 
         ep.send_eval(0, tags::EVAL, w_l.clone());
+        let mut extra = Vec::with_capacity(n + dl);
+        extra.extend_from_slice(&a);
+        extra.extend_from_slice(&abar_l);
+        let st =
+            NodeState { rng: Some(sample_rng.state_words()), clock: ep.clock_state(), extra };
+        send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {
             break;

@@ -25,28 +25,31 @@
 //! see `rust/tests/equivalence.rs`.
 
 use super::{Problem, RunParams};
-use crate::cluster::run_cluster;
 use crate::linalg;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint, NodeId};
+use crate::session::cluster::{
+    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
+    EpochGate,
+};
+use crate::session::{EpochReport, NodeState, ResumeState};
 use crate::sparse::partition::{by_features, by_features_rows, FeatureSlab};
-use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
 
-/// Outcome of the coordinator node.
-struct CoordOut {
-    trace: Trace,
-    w: Vec<f64>,
-}
-
-enum NodeOut {
-    Coord(Box<CoordOut>),
-    Worker,
-}
-
-/// Run FD-SVRG on a simulated cluster of `params.q` workers + coordinator.
+/// Run FD-SVRG on a simulated cluster of `params.q` workers + coordinator
+/// (the fire-and-forget path: one session driven to completion).
 pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    super::Algorithm::FdSvrg.run(problem, params)
+}
+
+/// Build the steppable FD-SVRG driver: node 0 is the coordinator (and the
+/// session's monitor), nodes 1..=q are workers.
+pub(crate) fn driver(
+    problem: &Problem,
+    params: &RunParams,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ClusterDriver> {
     let q = params.q.max(1);
     let n = problem.n();
     let d = problem.d();
@@ -63,67 +66,43 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
     });
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let group: Vec<NodeId> = (0..=q).collect();
-    let wall = Stopwatch::start();
+    let dataset = problem.ds.name.clone();
+    let sim = params.sim;
+    let problem = problem.clone();
+    let params = params.clone();
 
-    let cluster = run_cluster(q + 1, params.sim, |mut ep| {
+    let node_fn = Arc::new(move |mut ep: Endpoint, cx: &ClusterCtx| {
         if ep.id() == 0 {
-            NodeOut::Coord(Box::new(coordinator(
-                &mut ep, problem, params, &group, n, d, m_inner, u, &slabs, &wall,
-            )))
+            let gate = cx.take_gate();
+            coordinator(&mut ep, &params, &group, n, m_inner, u, &slabs, &gate, cx);
         } else {
-            worker(&mut ep, problem, params, &group, eta, m_inner, u, &slabs, &y);
-            NodeOut::Worker
+            worker(&mut ep, &problem, &params, &group, eta, m_inner, u, &slabs, &y, cx);
         }
     });
-
-    let coord = cluster
-        .results
-        .into_iter()
-        .find_map(|r| match r {
-            NodeOut::Coord(c) => Some(*c),
-            NodeOut::Worker => None,
-        })
-        .expect("coordinator result");
-    RunResult::from_cluster(
-        "fdsvrg",
-        &problem.ds.name,
-        coord.w,
-        coord.trace,
-        wall.seconds(),
-        &cluster.stats,
-    )
+    ClusterDriver::new("fdsvrg", &dataset, q + 1, d, sim, resume, node_fn)
 }
 
 #[allow(clippy::too_many_arguments)]
 fn coordinator(
     ep: &mut Endpoint,
-    problem: &Problem,
     params: &RunParams,
     group: &[NodeId],
     n: usize,
-    d: usize,
     m_inner: usize,
     u: usize,
     slabs: &[FeatureSlab],
-    wall: &Stopwatch,
-) -> CoordOut {
+    gate: &EpochGate,
+    cx: &ClusterCtx,
+) {
     let q = group.len() - 1;
     let comm = params.comm();
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
-    let mut w = vec![0.0f64; d];
-    trace.push(TracePoint {
-        outer: 0,
-        sim_time: 0.0,
-        wall_time: wall.seconds(),
-        scalars: 0,
-        bytes: 0,
-        grads: 0,
-        objective: problem.objective(&w),
-    });
-    ep.discard_cpu(); // objective eval is off the critical path
+    let resume = cx.resume.as_deref();
+    let mut grads = resume.map(|r| r.grads).unwrap_or(0);
+    let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
+    let mut w =
+        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; slabs.last().unwrap().row_hi]);
 
-    for t in 0..params.outer {
+    loop {
         // --- full-gradient phase: allreduce of partial products (root) ---
         let mut margins = vec![0.0f64; n];
         comm.allreduce(ep, group, &mut margins);
@@ -139,29 +118,27 @@ fn coordinator(
             m += b;
         }
 
-        // --- evaluation plane: collect w slabs, decide stop ---
+        // --- evaluation plane: collect w slabs + worker states, report ---
         for (l, slab) in slabs.iter().enumerate() {
             let msg = ep.recv_eval_from(l + 1, tags::EVAL);
             msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
         }
-        let objective = problem.objective(&w);
-        ep.discard_cpu();
         let sim_time = ep.now();
-        trace.push(TracePoint {
-            outer: t + 1,
-            sim_time,
-            wall_time: wall.seconds(),
-            scalars: ep.stats().total_scalars(),
-            bytes: ep.stats().total_bytes(),
+        let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+        let nodes = collect_node_states(ep, 0, own, 1..=q, q + 1);
+        let (scalars, bytes, per_node) = comm_snapshot(ep);
+        epoch += 1;
+        let directive = gate.exchange(EpochReport {
+            epoch,
+            w: w.clone(),
             grads,
-            objective,
+            sim_time,
+            scalars,
+            bytes,
+            comm: per_node,
+            nodes,
         });
-        let gap_hit = match params.gap_stop {
-            Some((f_opt, target)) => objective - f_opt <= target,
-            None => false,
-        };
-        let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
-        let stop = gap_hit || time_hit || t + 1 == params.outer;
+        let stop = directive == Directive::Stop;
         for l in 1..=q {
             ep.send_eval(l, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
         }
@@ -169,7 +146,6 @@ fn coordinator(
             break;
         }
     }
-    CoordOut { trace, w }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -183,6 +159,7 @@ fn worker(
     u: usize,
     slabs: &[FeatureSlab],
     y: &[f64],
+    cx: &ClusterCtx,
 ) {
     let l = ep.id() - 1;
     let slab = &slabs[l];
@@ -196,13 +173,21 @@ fn worker(
     };
     let use_l2_fast_path = matches!(problem.reg, crate::loss::Regularizer::L2 { .. });
 
-    // worker state: parameter slab + reusable buffers
-    let mut w_l = vec![0.0f64; dl];
+    // worker state: parameter slab + reusable buffers; on resume the slab
+    // comes out of the checkpointed full `w` (exact bits — the eval plane
+    // ships uncompressed f64) and the sampling stream continues from its
+    // checkpointed words.
+    let (mut w_l, mut sample_rng) = match (cx.resume.as_deref(), cx.node_state(ep.id())) {
+        (Some(r), Some(st)) => (
+            r.w[slab.row_lo..slab.row_hi].to_vec(),
+            Pcg64::from_state_words(st.rng.expect("fdsvrg worker state carries the sampling RNG")),
+        ),
+        _ => (vec![0.0f64; dl], Pcg64::seed_from_u64(params.seed)),
+    };
     let mut z_l = vec![0.0f64; dl];
     let mut c0 = vec![0.0f64; n];
     // shared sampling stream — identical on every worker (paper §4.3:
     // "make the parameter identical for different machines")
-    let mut sample_rng = Pcg64::seed_from_u64(params.seed);
 
     loop {
         // --- full gradient phase (Alg. 1 lines 3–5) ---
@@ -298,8 +283,15 @@ fn worker(
             }
         }
 
-        // --- evaluation plane: ship the slab, await continue/stop ---
+        // --- evaluation plane: ship the slab + session state, await
+        // continue/stop ---
         ep.send_eval(0, tags::EVAL, w_l.clone());
+        let st = NodeState {
+            rng: Some(sample_rng.state_words()),
+            clock: ep.clock_state(),
+            extra: vec![],
+        };
+        send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {
             break;

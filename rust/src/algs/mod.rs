@@ -223,21 +223,51 @@ impl Algorithm {
         }
     }
 
+    /// Parse an algorithm name: case-insensitive and underscore-tolerant
+    /// (`FD_SVRG`, `FdSvrg`, `fd-svrg` and `fdsvrg` all name
+    /// [`Algorithm::FdSvrg`]).
     pub fn parse(s: &str) -> Option<Algorithm> {
-        match s {
+        let norm = s.trim().to_ascii_lowercase().replace('_', "-");
+        match norm.as_str() {
             "fdsvrg" | "fd-svrg" => Some(Algorithm::FdSvrg),
             "fdsgd" | "fd-sgd" => Some(Algorithm::FdSgd),
             "fdsaga" | "fd-saga" => Some(Algorithm::FdSaga),
-            "dsvrg" => Some(Algorithm::Dsvrg),
+            "dsvrg" | "d-svrg" => Some(Algorithm::Dsvrg),
             "dpsgd" | "d-psgd" => Some(Algorithm::DPsgd),
-            "synsvrg" => Some(Algorithm::SynSvrg),
-            "asysvrg" => Some(Algorithm::AsySvrg),
+            "synsvrg" | "syn-svrg" => Some(Algorithm::SynSvrg),
+            "asysvrg" | "asy-svrg" => Some(Algorithm::AsySvrg),
             "pslite-sgd" | "pslite" | "ps-sgd" => Some(Algorithm::PsLiteSgd),
             "serial-svrg" | "svrg" => Some(Algorithm::SerialSvrg),
             "serial-sgd" | "sgd" => Some(Algorithm::SerialSgd),
             _ => None,
         }
     }
+
+    /// [`Algorithm::parse`] with a CLI-grade error: the failure message
+    /// lists every valid name instead of a bare "unknown algorithm".
+    pub fn parse_or_err(s: &str) -> Result<Algorithm, String> {
+        Algorithm::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = Algorithm::ALL.iter().map(|a| a.name()).collect();
+            format!(
+                "unknown algorithm {s:?}; valid names (case-insensitive, '_' ok): {}",
+                names.join(", ")
+            )
+        })
+    }
+
+    /// Every algorithm, in dispatch order.
+    pub const ALL: [Algorithm; 10] = [
+        Algorithm::FdSvrg,
+        Algorithm::FdSgd,
+        Algorithm::FdSaga,
+        Algorithm::Dsvrg,
+        Algorithm::DPsgd,
+        Algorithm::SynSvrg,
+        Algorithm::AsySvrg,
+        Algorithm::PsLiteSgd,
+        Algorithm::SerialSvrg,
+        Algorithm::SerialSgd,
+    ];
 
     pub const ALL_DISTRIBUTED: [Algorithm; 4] =
         [Algorithm::FdSvrg, Algorithm::Dsvrg, Algorithm::SynSvrg, Algorithm::AsySvrg];
@@ -260,20 +290,43 @@ impl Algorithm {
         crate::runtime::trainer::run(problem, params, engine)
     }
 
-    /// Dispatch a run.
+    /// Build the steppable [`crate::session::Driver`] for this algorithm
+    /// (optionally resuming from a mid-run state). Callers normally go
+    /// through [`crate::session::SessionBuilder`] instead.
+    pub fn make_driver(
+        &self,
+        problem: &Problem,
+        params: &RunParams,
+        resume: Option<crate::session::ResumeState>,
+    ) -> anyhow::Result<Box<dyn crate::session::Driver>> {
+        Ok(match self {
+            Algorithm::FdSvrg => Box::new(fdsvrg::driver(problem, params, resume)?),
+            Algorithm::FdSgd => Box::new(fdsgd::driver(problem, params, resume)?),
+            Algorithm::FdSaga => Box::new(fdsaga::driver(problem, params, resume)?),
+            Algorithm::Dsvrg => Box::new(dsvrg::driver(problem, params, resume)?),
+            Algorithm::DPsgd => Box::new(dpsgd::driver(problem, params, resume)?),
+            Algorithm::SynSvrg => Box::new(synsvrg::driver(problem, params, resume)?),
+            Algorithm::AsySvrg => Box::new(asysvrg::driver(problem, params, resume)?),
+            Algorithm::PsLiteSgd => Box::new(pslite_sgd::driver(problem, params, resume)?),
+            Algorithm::SerialSvrg => {
+                Box::new(crate::session::serial::SerialSvrgDriver::new(problem, params, resume)?)
+            }
+            Algorithm::SerialSgd => {
+                Box::new(crate::session::serial::SerialSgdDriver::new(problem, params, resume)?)
+            }
+        })
+    }
+
+    /// Dispatch a run — a thin compatibility wrapper over
+    /// [`crate::session::Session::run_to_completion`]. The session derives
+    /// its stop policies from `params` (`outer`, `gap_stop`,
+    /// `sim_time_cap`), so the trajectory and stopping behaviour are
+    /// identical to the historical fire-and-forget loops.
     pub fn run(&self, problem: &Problem, params: &RunParams) -> crate::metrics::RunResult {
-        match self {
-            Algorithm::FdSvrg => fdsvrg::run(problem, params),
-            Algorithm::FdSgd => fdsgd::run(problem, params),
-            Algorithm::FdSaga => fdsaga::run(problem, params),
-            Algorithm::Dsvrg => dsvrg::run(problem, params),
-            Algorithm::DPsgd => dpsgd::run(problem, params),
-            Algorithm::SynSvrg => synsvrg::run(problem, params),
-            Algorithm::AsySvrg => asysvrg::run(problem, params),
-            Algorithm::PsLiteSgd => pslite_sgd::run(problem, params),
-            Algorithm::SerialSvrg => serial::run_svrg_result(problem, params),
-            Algorithm::SerialSgd => serial::run_sgd_result(problem, params),
-        }
+        crate::session::SessionBuilder::new(*self, problem, params.clone())
+            .build()
+            .expect("fresh sessions cannot fail to build")
+            .run_to_completion()
     }
 }
 
@@ -340,20 +393,27 @@ mod tests {
 
     #[test]
     fn algorithm_parse_round_trip() {
-        for a in [
-            Algorithm::FdSvrg,
-            Algorithm::FdSgd,
-            Algorithm::FdSaga,
-            Algorithm::Dsvrg,
-            Algorithm::DPsgd,
-            Algorithm::SynSvrg,
-            Algorithm::AsySvrg,
-            Algorithm::PsLiteSgd,
-            Algorithm::SerialSvrg,
-            Algorithm::SerialSgd,
-        ] {
+        for a in Algorithm::ALL {
             assert_eq!(Algorithm::parse(a.name()), Some(a), "{}", a.name());
         }
         assert_eq!(Algorithm::parse("nope"), None);
+    }
+
+    #[test]
+    fn algorithm_parse_is_case_and_underscore_tolerant() {
+        assert_eq!(Algorithm::parse("FD_SVRG"), Some(Algorithm::FdSvrg));
+        assert_eq!(Algorithm::parse("FdSvrg"), Some(Algorithm::FdSvrg));
+        assert_eq!(Algorithm::parse("  Fd-Svrg "), Some(Algorithm::FdSvrg));
+        assert_eq!(Algorithm::parse("PSLITE_SGD"), Some(Algorithm::PsLiteSgd));
+        assert_eq!(Algorithm::parse("Serial_SVRG"), Some(Algorithm::SerialSvrg));
+        assert_eq!(Algorithm::parse("D_PSGD"), Some(Algorithm::DPsgd));
+    }
+
+    #[test]
+    fn algorithm_parse_error_lists_valid_names() {
+        let err = Algorithm::parse_or_err("no-such-algo").unwrap_err();
+        for a in Algorithm::ALL {
+            assert!(err.contains(a.name()), "error must list {:?}: {err}", a.name());
+        }
     }
 }

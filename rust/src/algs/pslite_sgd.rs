@@ -20,89 +20,82 @@
 
 use super::ps::PsTopology;
 use super::{Problem, RunParams};
-use crate::cluster::run_cluster;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
+use crate::session::cluster::{
+    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
+    EpochGate,
+};
+use crate::session::{EpochReport, NodeState, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
-use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
 
-enum NodeOut {
-    Monitor(Box<(Trace, Vec<f64>)>),
-    Other,
+/// Run PS-Lite (SGD) (the fire-and-forget path: one session driven to
+/// completion).
+pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    super::Algorithm::PsLiteSgd.run(problem, params)
 }
 
-pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+/// Build the steppable PS-Lite (SGD) driver. Worker resume state carries
+/// the RNG words plus the global step counter that drives the η decay;
+/// the asynchronous pull/push race itself is (by design) not
+/// deterministic, so resume is valid-continuation rather than bit-exact.
+pub(crate) fn driver(
+    problem: &Problem,
+    params: &RunParams,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ClusterDriver> {
     let q = params.q.max(1);
     let p = params.servers.max(1);
     let d = problem.d();
     let topo = PsTopology::new(p, q, d);
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
-    let wall = Stopwatch::start();
+    let dataset = problem.ds.name.clone();
+    let sim = params.sim;
+    let problem = problem.clone();
+    let params = params.clone();
 
-    let cluster = run_cluster(topo.n_nodes(), params.sim, |mut ep| {
+    let node_fn = Arc::new(move |mut ep: Endpoint, cx: &ClusterCtx| {
         if topo.is_server(ep.id()) {
-            match server(&mut ep, problem, params, topo, &wall) {
-                Some(tw) => NodeOut::Monitor(Box::new(tw)),
-                None => NodeOut::Other,
-            }
+            let gate = if ep.id() == 0 { Some(cx.take_gate()) } else { None };
+            server(&mut ep, &params, topo, gate.as_ref(), cx);
         } else {
-            worker(&mut ep, problem, params, topo, &shards, &y);
-            NodeOut::Other
+            worker(&mut ep, &problem, &params, topo, &shards, &y, cx);
         }
     });
-
-    let (trace, w) = cluster
-        .results
-        .into_iter()
-        .find_map(|r| match r {
-            NodeOut::Monitor(b) => Some(*b),
-            NodeOut::Other => None,
-        })
-        .expect("monitor result");
-    RunResult::from_cluster(
-        "pslite-sgd",
-        &problem.ds.name,
-        w,
-        trace,
-        wall.seconds(),
-        &cluster.stats,
-    )
+    ClusterDriver::new("pslite-sgd", &dataset, topo.n_nodes(), d, sim, resume, node_fn)
 }
 
 fn server(
     ep: &mut Endpoint,
-    problem: &Problem,
     params: &RunParams,
     topo: PsTopology,
-    wall: &Stopwatch,
-) -> Option<(Trace, Vec<f64>)> {
+    gate: Option<&EpochGate>,
+    cx: &ClusterCtx,
+) {
     let k = ep.id();
     let (lo, hi) = topo.key_range(k);
     let q = topo.q;
     let comm = params.comm();
-    let mut w_k = vec![0.0f64; hi - lo];
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
-    let mut full_w = vec![0.0f64; topo.d];
-    if k == 0 {
-        trace.push(TracePoint {
-            outer: 0,
-            sim_time: 0.0,
-            wall_time: wall.seconds(),
-            scalars: 0,
-            bytes: 0,
-            grads: 0,
-            objective: problem.objective(&full_w),
-        });
-        ep.discard_cpu();
-    }
+    let resume = cx.resume.as_deref();
+    let mut w_k =
+        resume.map(|r| r.w[lo..hi].to_vec()).unwrap_or_else(|| vec![0.0f64; hi - lo]);
+    let mut grads = resume.map(|r| r.grads).unwrap_or(0);
+    let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
+    let mut full_w =
+        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; topo.d]);
 
-    for t in 0..params.outer {
-        // event loop for one epoch: serve sparse pulls, apply sparse pushes
+    loop {
+        // event loop for one epoch: serve sparse pulls, apply sparse pushes.
+        // Finished workers' session-state snapshots can land while this
+        // server is still draining the epoch; park them OUTSIDE the
+        // endpoint stash until the loop ends (recv_any serves the stash
+        // first, so stashing mid-loop would hand the same message straight
+        // back — livelock).
         let mut done_workers = 0usize;
+        let mut parked_states = Vec::new();
         while done_workers < q {
             let msg = ep.recv_any();
             match msg.tag {
@@ -130,36 +123,39 @@ fn server(
                 tags::CTRL => {
                     done_workers += 1;
                 }
+                tags::STATE => parked_states.push(msg),
                 other => panic!("pslite server {k}: unexpected tag {other}"),
             }
         }
+        // re-stash for the monitor's selective receive below
+        for msg in parked_states {
+            ep.stash_back(msg);
+        }
 
         // epoch boundary: evaluate on the monitor
-        let stop = if k == 0 {
+        epoch += 1;
+        let stop = if let Some(gate) = gate {
             full_w[lo..hi].copy_from_slice(&w_k);
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
                 let (slo, shi) = topo.key_range(s);
                 msg.decode_into(&mut full_w[slo..shi]);
             }
-            let objective = problem.objective(&full_w);
-            ep.discard_cpu();
             let sim_time = ep.now();
-            trace.push(TracePoint {
-                outer: t + 1,
-                sim_time,
-                wall_time: wall.seconds(),
-                scalars: ep.stats().total_scalars(),
-                bytes: ep.stats().total_bytes(),
+            let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+            let nodes = collect_node_states(ep, 0, own, 1..topo.n_nodes(), topo.n_nodes());
+            let (scalars, bytes, per_node) = comm_snapshot(ep);
+            let directive = gate.exchange(EpochReport {
+                epoch,
+                w: full_w.clone(),
                 grads,
-                objective,
+                sim_time,
+                scalars,
+                bytes,
+                comm: per_node,
+                nodes,
             });
-            let gap_hit = match params.gap_stop {
-                Some((f_opt, target)) => objective - f_opt <= target,
-                None => false,
-            };
-            let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
-            let stop = gap_hit || time_hit || t + 1 == params.outer;
+            let stop = directive == Directive::Stop;
             for node in 0..topo.n_nodes() {
                 if node != 0 {
                     ep.send_eval(node, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
@@ -168,17 +164,14 @@ fn server(
             stop
         } else {
             ep.send_eval(0, tags::EVAL, w_k.clone());
+            let st = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+            send_node_state(ep, 0, &st);
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
             ctrl.value(0) != 0.0
         };
         if stop {
             break;
         }
-    }
-    if k == 0 {
-        Some((trace, full_w))
-    } else {
-        None
     }
 }
 
@@ -189,6 +182,7 @@ fn worker(
     topo: PsTopology,
     shards: &[InstanceShard],
     y: &[f64],
+    cx: &ClusterCtx,
 ) {
     let l = ep.id() - topo.p;
     let shard = &shards[l];
@@ -201,8 +195,14 @@ fn worker(
     // SGD wants a larger initial step than SVRG's 0.1/L; ×2 is stable under
     // q-way asynchronous races (×5 visibly oscillates on the tiny tests)
     let eta0 = params.effective_eta(problem) * 2.0;
-    let mut rng = Pcg64::seed_from_u64(params.seed ^ (0x5d9 + l as u64));
-    let mut step = 0u64;
+    // step counter (η decay) and RNG continue across a resume
+    let (mut rng, mut step) = match cx.node_state(ep.id()) {
+        Some(st) if cx.resume.is_some() => (
+            Pcg64::from_state_words(st.rng.expect("pslite worker state carries the RNG")),
+            st.extra.first().map(|&s| s as u64).unwrap_or(0),
+        ),
+        _ => (Pcg64::seed_from_u64(params.seed ^ (0x5d9 + l as u64)), 0u64),
+    };
     // scratch: per-server key/value staging
     let mut srv_keys: Vec<Vec<f64>> = vec![Vec::new(); topo.p];
     let mut pulled: Vec<f64> = Vec::new();
@@ -264,6 +264,12 @@ fn worker(
         for k in 0..topo.p {
             comm.send_exact(ep, topo.server_node(k), tags::CTRL, vec![1.0]);
         }
+        let st = NodeState {
+            rng: Some(rng.state_words()),
+            clock: ep.clock_state(),
+            extra: vec![step as f64],
+        };
+        send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {
             break;

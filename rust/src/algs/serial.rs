@@ -14,9 +14,9 @@
 //! this form makes the FD-SVRG ≡ serial-SVRG equivalence exact (it is the
 //! same floating-point computation, merely partitioned by feature blocks).
 
-use super::{Problem, RunParams};
+use super::Problem;
 use crate::linalg;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::{Trace, TracePoint};
 use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 
@@ -27,6 +27,124 @@ pub enum SvrgOption {
     I,
     /// `w_{t+1} = w̃_m`, random `m` — the Johnson & Zhang analyzed variant.
     II,
+}
+
+/// Steppable serial-SVRG state: one [`svrg_epoch`] call per outer
+/// iteration. This is the single copy of the epoch body; both the
+/// [`svrg`] reference wrapper and the session layer's
+/// [`crate::session::serial::SerialSvrgDriver`] drive it.
+pub struct SvrgState {
+    pub w: Vec<f64>,
+    pub sample_rng: Pcg64,
+    pub option_rng: Pcg64,
+    margins: Vec<f64>,
+    c0: Vec<f64>,
+    z: Vec<f64>,
+    w_snapshot_m: Vec<f64>,
+}
+
+impl SvrgState {
+    /// Fresh state at `w = 0` with the shared sampling-stream layout (one
+    /// `below(n)` per inner step; option-II snapshot draws come from a
+    /// separate stream so both options consume identical sampling
+    /// sequences — shared with FD-SVRG, paper §4.3).
+    pub fn fresh(problem: &Problem, seed: u64) -> SvrgState {
+        SvrgState {
+            w: vec![0.0f64; problem.d()],
+            sample_rng: Pcg64::seed_from_u64(seed),
+            option_rng: Pcg64::seed_from_u64(seed ^ 0x5eed_0011),
+            margins: vec![0.0f64; problem.n()],
+            c0: vec![0.0f64; problem.n()],
+            z: vec![0.0f64; problem.d()],
+            w_snapshot_m: Vec::new(),
+        }
+    }
+
+    /// Rebuild mid-run state from checkpointed `w` + RNG words.
+    pub fn restore(
+        problem: &Problem,
+        w: Vec<f64>,
+        sample_rng: [u64; 4],
+        option_rng: [u64; 4],
+    ) -> SvrgState {
+        SvrgState {
+            w,
+            sample_rng: Pcg64::from_state_words(sample_rng),
+            option_rng: Pcg64::from_state_words(option_rng),
+            margins: vec![0.0f64; problem.n()],
+            c0: vec![0.0f64; problem.n()],
+            z: vec![0.0f64; problem.d()],
+            w_snapshot_m: Vec::new(),
+        }
+    }
+}
+
+/// One serial-SVRG outer iteration (full-gradient pass + `m_inner`
+/// variance-reduced steps); returns the gradient evaluations consumed.
+///
+/// The arithmetic is kept operation-for-operation identical to the
+/// FD-SVRG worker (store φ' undivided, scale by 1/N inside the scatter)
+/// so the q=1 equivalence test can demand bitwise equality.
+pub fn svrg_epoch(
+    problem: &Problem,
+    eta: f64,
+    m_inner: usize,
+    option: SvrgOption,
+    st: &mut SvrgState,
+) -> u64 {
+    let n = problem.n();
+    let loss = problem.build_loss();
+    let x = &problem.ds.x;
+    let y = &problem.ds.y;
+    let m_inner = if m_inner == 0 { n } else { m_inner };
+    let mut grads = 0u64;
+
+    // full (loss-part) gradient at w_t
+    x.transpose_matvec(&st.w, &mut st.margins);
+    for i in 0..n {
+        st.c0[i] = loss.derivative(st.margins[i], y[i]);
+    }
+    st.z.iter_mut().for_each(|v| *v = 0.0);
+    let inv_n = 1.0 / n as f64;
+    for i in 0..n {
+        if st.c0[i] != 0.0 {
+            x.col_axpy(i, st.c0[i] * inv_n, &mut st.z);
+        }
+    }
+    grads += n as u64;
+
+    // inner loop on w̃ (= w, updated in place)
+    let snapshot_at = match option {
+        SvrgOption::I => m_inner, // never triggers
+        SvrgOption::II => 1 + st.option_rng.below(m_inner),
+    };
+    for m in 0..m_inner {
+        let i = st.sample_rng.below(n);
+        let zi = x.col_dot(i, &st.w);
+        let delta = loss.derivative(zi, y[i]) - st.c0[i];
+        // dense part: w̃ −= η (z + ∇g(w̃))
+        match problem.reg {
+            crate::loss::Regularizer::L2 { lambda } => {
+                linalg::axpby(-eta, &st.z, 1.0 - eta * lambda, &mut st.w);
+            }
+            _ => {
+                for (wi, zi) in st.w.iter_mut().zip(st.z.iter()) {
+                    let g = problem.reg.grad_coord(*wi);
+                    *wi -= eta * (*zi + g);
+                }
+            }
+        }
+        // sparse part: w̃ −= η Δφ x_i
+        x.col_axpy(i, -eta * delta, &mut st.w);
+        grads += 1;
+        if m + 1 == snapshot_at {
+            st.w_snapshot_m = st.w.clone();
+        }
+    }
+    if option == SvrgOption::II {
+        st.w = st.w_snapshot_m.clone();
+    }
+    grads
 }
 
 /// Serial SVRG. Returns final `w` and, when `snapshots` is non-null, pushes
@@ -40,19 +158,7 @@ pub fn svrg(
     option: SvrgOption,
     mut snapshots: Option<&mut Vec<Vec<f64>>>,
 ) -> (Vec<f64>, Trace) {
-    let d = problem.d();
-    let n = problem.n();
-    let loss = problem.build_loss();
-    let x = &problem.ds.x;
-    let y = &problem.ds.y;
-    let m_inner = if m_inner == 0 { n } else { m_inner };
-    // sampling stream: shared layout with FD-SVRG (one `below(n)` per inner
-    // step, option-II snapshot draws come from a separate stream so both
-    // options consume identical sampling sequences)
-    let mut sample_rng = Pcg64::seed_from_u64(seed);
-    let mut option_rng = Pcg64::seed_from_u64(seed ^ 0x5eed_0011);
-
-    let mut w = vec![0.0f64; d];
+    let mut st = SvrgState::fresh(problem, seed);
     let mut trace = Trace::default();
     let wall = Stopwatch::start();
     let mut grads = 0u64;
@@ -63,65 +169,12 @@ pub fn svrg(
         scalars: 0,
         bytes: 0,
         grads: 0,
-        objective: problem.objective(&w),
+        objective: problem.objective(&st.w),
     });
 
-    let mut margins = vec![0.0f64; n];
-    let mut c0 = vec![0.0f64; n];
-    let mut z = vec![0.0f64; d];
-    let mut w_snapshot_m: Vec<f64> = Vec::new();
-
     for t in 0..outer {
-        // full (loss-part) gradient at w_t. The arithmetic is kept
-        // operation-for-operation identical to the FD-SVRG worker
-        // (store φ' undivided, scale by 1/N inside the scatter) so the
-        // q=1 equivalence test can demand bitwise equality.
-        x.transpose_matvec(&w, &mut margins);
-        for i in 0..n {
-            c0[i] = loss.derivative(margins[i], y[i]);
-        }
-        z.iter_mut().for_each(|v| *v = 0.0);
-        let inv_n = 1.0 / n as f64;
-        for i in 0..n {
-            if c0[i] != 0.0 {
-                x.col_axpy(i, c0[i] * inv_n, &mut z);
-            }
-        }
-        grads += n as u64;
-
-        // inner loop on w̃ (= w, updated in place)
-        let snapshot_at = match option {
-            SvrgOption::I => m_inner, // never triggers
-            SvrgOption::II => 1 + option_rng.below(m_inner),
-        };
-        for m in 0..m_inner {
-            let i = sample_rng.below(n);
-            let zi = x.col_dot(i, &w);
-            let delta = loss.derivative(zi, y[i]) - c0[i];
-            // dense part: w̃ −= η (z + ∇g(w̃))
-            match problem.reg {
-                crate::loss::Regularizer::L2 { lambda } => {
-                    linalg::axpby(-eta, &z, 1.0 - eta * lambda, &mut w);
-                }
-                _ => {
-                    for (wi, zi) in w.iter_mut().zip(z.iter()) {
-                        let g = problem.reg.grad_coord(*wi);
-                        *wi -= eta * (*zi + g);
-                    }
-                }
-            }
-            // sparse part: w̃ −= η Δφ x_i
-            x.col_axpy(i, -eta * delta, &mut w);
-            grads += 1;
-            if m + 1 == snapshot_at {
-                w_snapshot_m = w.clone();
-            }
-        }
-        if option == SvrgOption::II {
-            w = w_snapshot_m.clone();
-        }
-
-        let objective = problem.objective(&w);
+        grads += svrg_epoch(problem, eta, m_inner, option, &mut st);
+        let objective = problem.objective(&st.w);
         trace.push(TracePoint {
             outer: t + 1,
             sim_time: 0.0,
@@ -132,10 +185,58 @@ pub fn svrg(
             objective,
         });
         if let Some(s) = snapshots.as_deref_mut() {
-            s.push(w.clone());
+            s.push(st.w.clone());
         }
     }
-    (w, trace)
+    (st.w, trace)
+}
+
+/// Steppable serial-SGD state: one [`sgd_epoch`] call per epoch of `N`
+/// sampled instances.
+pub struct SgdState {
+    pub w: Vec<f64>,
+    pub rng: Pcg64,
+    /// Global step counter (drives the `1/(1 + step·decay)` decay).
+    pub step: u64,
+}
+
+impl SgdState {
+    pub fn fresh(problem: &Problem, seed: u64) -> SgdState {
+        SgdState { w: vec![0.0f64; problem.d()], rng: Pcg64::seed_from_u64(seed), step: 0 }
+    }
+
+    pub fn restore(w: Vec<f64>, rng: [u64; 4], step: u64) -> SgdState {
+        SgdState { w, rng: Pcg64::from_state_words(rng), step }
+    }
+}
+
+/// One serial-SGD epoch (`N` steps with `1/(1 + step·decay)` decay,
+/// `decay=0` = fixed step); returns the gradient evaluations consumed.
+pub fn sgd_epoch(problem: &Problem, eta0: f64, decay: f64, st: &mut SgdState) -> u64 {
+    let n = problem.n();
+    let loss = problem.build_loss();
+    let x = &problem.ds.x;
+    let y = &problem.ds.y;
+    for _ in 0..n {
+        let i = st.rng.below(n);
+        let zi = x.col_dot(i, &st.w);
+        let g = loss.derivative(zi, y[i]);
+        let eta = eta0 / (1.0 + st.step as f64 * decay);
+        match problem.reg {
+            crate::loss::Regularizer::L2 { lambda } => {
+                linalg::scale(1.0 - eta * lambda, &mut st.w);
+            }
+            _ => {
+                for wi in st.w.iter_mut() {
+                    let gr = problem.reg.grad_coord(*wi);
+                    *wi -= eta * gr;
+                }
+            }
+        }
+        x.col_axpy(i, -eta * g, &mut st.w);
+        st.step += 1;
+    }
+    n as u64
 }
 
 /// Serial SGD with `1/(1 + t·decay)` step decay (`decay=0` = fixed step).
@@ -146,13 +247,7 @@ pub fn sgd(
     decay: f64,
     seed: u64,
 ) -> (Vec<f64>, Trace) {
-    let d = problem.d();
-    let n = problem.n();
-    let loss = problem.build_loss();
-    let x = &problem.ds.x;
-    let y = &problem.ds.y;
-    let mut rng = Pcg64::seed_from_u64(seed);
-    let mut w = vec![0.0f64; d];
+    let mut st = SgdState::fresh(problem, seed);
     let mut trace = Trace::default();
     let wall = Stopwatch::start();
     trace.push(TracePoint {
@@ -162,40 +257,21 @@ pub fn sgd(
         scalars: 0,
         bytes: 0,
         grads: 0,
-        objective: problem.objective(&w),
+        objective: problem.objective(&st.w),
     });
-    let mut step = 0u64;
     for t in 0..epochs {
-        for _ in 0..n {
-            let i = rng.below(n);
-            let zi = x.col_dot(i, &w);
-            let g = loss.derivative(zi, y[i]);
-            let eta = eta0 / (1.0 + step as f64 * decay);
-            match problem.reg {
-                crate::loss::Regularizer::L2 { lambda } => {
-                    linalg::scale(1.0 - eta * lambda, &mut w);
-                }
-                _ => {
-                    for wi in w.iter_mut() {
-                        let gr = problem.reg.grad_coord(*wi);
-                        *wi -= eta * gr;
-                    }
-                }
-            }
-            x.col_axpy(i, -eta * g, &mut w);
-            step += 1;
-        }
+        sgd_epoch(problem, eta0, decay, &mut st);
         trace.push(TracePoint {
             outer: t + 1,
             sim_time: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
             bytes: 0,
-            grads: step,
-            objective: problem.objective(&w),
+            grads: st.step,
+            objective: problem.objective(&st.w),
         });
     }
-    (w, trace)
+    (st.w, trace)
 }
 
 /// Lazy-update serial SVRG for **L2-regularized** problems: algebraically
@@ -350,22 +426,6 @@ pub fn cached_optimum(problem: &Problem, cache_dir: &std::path::Path, outer: usi
     std::fs::create_dir_all(cache_dir).ok();
     std::fs::write(&path, bytes).ok();
     (w, f)
-}
-
-/// [`RunResult`] adapters so the serial algorithms fit the [`super::Algorithm`] dispatch.
-pub fn run_svrg_result(problem: &Problem, params: &RunParams) -> RunResult {
-    let eta = params.effective_eta(problem);
-    let wall = Stopwatch::start();
-    let (w, trace) =
-        svrg(problem, eta, params.outer, params.m_inner, params.seed, SvrgOption::I, None);
-    RunResult::serial("serial-svrg", &problem.ds.name, w, trace, wall.seconds())
-}
-
-pub fn run_sgd_result(problem: &Problem, params: &RunParams) -> RunResult {
-    let eta = params.effective_eta(problem);
-    let wall = Stopwatch::start();
-    let (w, trace) = sgd(problem, eta, params.outer, 1.0 / problem.n() as f64, params.seed);
-    RunResult::serial("serial-sgd", &problem.ds.name, w, trace, wall.seconds())
 }
 
 #[cfg(test)]

@@ -10,21 +10,33 @@
 
 use super::ps::PsTopology;
 use super::{Problem, RunParams};
-use crate::cluster::run_cluster;
 use crate::linalg;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
+use crate::session::cluster::{
+    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
+    EpochGate,
+};
+use crate::session::{EpochReport, NodeState, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
-use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use std::sync::Arc;
 
-enum NodeOut {
-    Monitor(Box<(Trace, Vec<f64>)>),
-    Other,
+/// Run SynSVRG (the fire-and-forget path: one session driven to
+/// completion).
+pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+    super::Algorithm::SynSvrg.run(problem, params)
 }
 
-pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
+/// Build the steppable SynSVRG driver: servers 0..p (server 0 is the
+/// monitor), workers p..p+q. Server parameter blocks restore from the
+/// checkpointed full `w` via the deterministic key ranges; worker RNG
+/// streams restore from their checkpointed words.
+pub(crate) fn driver(
+    problem: &Problem,
+    params: &RunParams,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ClusterDriver> {
     let q = params.q.max(1);
     let p = params.servers.max(1);
     let d = problem.d();
@@ -36,34 +48,25 @@ pub fn run(problem: &Problem, params: &RunParams) -> RunResult {
     let topo = PsTopology::new(p, q, d);
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
-    let wall = Stopwatch::start();
+    let dataset = problem.ds.name.clone();
+    let sim = params.sim;
+    let problem = problem.clone();
+    let params = params.clone();
 
-    let cluster = run_cluster(topo.n_nodes(), params.sim, |mut ep| {
+    let node_fn = Arc::new(move |mut ep: Endpoint, cx: &ClusterCtx| {
         if topo.is_server(ep.id()) {
-            let out = server(&mut ep, problem, params, topo, eta, m_rounds, &wall);
-            match out {
-                Some(tw) => NodeOut::Monitor(Box::new(tw)),
-                None => NodeOut::Other,
-            }
+            let gate = if ep.id() == 0 { Some(cx.take_gate()) } else { None };
+            server(&mut ep, &problem, &params, topo, eta, m_rounds, gate.as_ref(), cx);
         } else {
-            worker(&mut ep, problem, params, topo, m_rounds, &shards, &y);
-            NodeOut::Other
+            worker(&mut ep, &problem, &params, topo, m_rounds, &shards, &y, cx);
         }
     });
-
-    let (trace, w) = cluster
-        .results
-        .into_iter()
-        .find_map(|r| match r {
-            NodeOut::Monitor(b) => Some(*b),
-            NodeOut::Other => None,
-        })
-        .expect("monitor result");
-    RunResult::from_cluster("synsvrg", &problem.ds.name, w, trace, wall.seconds(), &cluster.stats)
+    ClusterDriver::new("synsvrg", &dataset, topo.n_nodes(), d, sim, resume, node_fn)
 }
 
 /// Server `k` (Algorithm 3). Server 0 additionally assembles evaluation
-/// snapshots and records the trace. Returns `Some((trace, w))` on server 0.
+/// snapshots and runs the session gate.
+#[allow(clippy::too_many_arguments)]
 fn server(
     ep: &mut Endpoint,
     problem: &Problem,
@@ -71,8 +74,9 @@ fn server(
     topo: PsTopology,
     eta: f64,
     m_rounds: usize,
-    wall: &Stopwatch,
-) -> Option<(Trace, Vec<f64>)> {
+    gate: Option<&EpochGate>,
+    cx: &ClusterCtx,
+) {
     let k = ep.id();
     let (lo, hi) = topo.key_range(k);
     let dk = hi - lo;
@@ -80,24 +84,15 @@ fn server(
     let q = topo.q;
     let comm = params.comm();
     let lambda = problem.reg.lambda();
-    let mut w_k = vec![0.0f64; dk];
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
-    let mut full_w = vec![0.0f64; topo.d];
-    if k == 0 {
-        trace.push(TracePoint {
-            outer: 0,
-            sim_time: 0.0,
-            wall_time: wall.seconds(),
-            scalars: 0,
-            bytes: 0,
-            grads: 0,
-            objective: problem.objective(&full_w),
-        });
-        ep.discard_cpu();
-    }
+    let resume = cx.resume.as_deref();
+    let mut w_k =
+        resume.map(|r| r.w[lo..hi].to_vec()).unwrap_or_else(|| vec![0.0f64; dk]);
+    let mut grads = resume.map(|r| r.grads).unwrap_or(0);
+    let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
+    let mut full_w =
+        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; topo.d]);
 
-    for t in 0..params.outer {
+    loop {
         // full-gradient phase: fan w_t^(k) out to all workers (one
         // encode, Arc clones), sum their z_l^(k)
         comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::BCAST, &w_k);
@@ -125,32 +120,30 @@ fn server(
             grads += q as u64;
         }
 
-        // evaluation plane: monitor assembles w and decides stop
-        let stop = if k == 0 {
+        // evaluation plane: monitor assembles w, reports the boundary
+        epoch += 1;
+        let stop = if let Some(gate) = gate {
             full_w[lo..hi].copy_from_slice(&w_k);
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
                 let (slo, shi) = topo.key_range(s);
                 msg.decode_into(&mut full_w[slo..shi]);
             }
-            let objective = problem.objective(&full_w);
-            ep.discard_cpu();
             let sim_time = ep.now();
-            trace.push(TracePoint {
-                outer: t + 1,
-                sim_time,
-                wall_time: wall.seconds(),
-                scalars: ep.stats().total_scalars(),
-                bytes: ep.stats().total_bytes(),
+            let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+            let nodes = collect_node_states(ep, 0, own, 1..topo.n_nodes(), topo.n_nodes());
+            let (scalars, bytes, per_node) = comm_snapshot(ep);
+            let directive = gate.exchange(EpochReport {
+                epoch,
+                w: full_w.clone(),
                 grads,
-                objective,
+                sim_time,
+                scalars,
+                bytes,
+                comm: per_node,
+                nodes,
             });
-            let gap_hit = match params.gap_stop {
-                Some((f_opt, target)) => objective - f_opt <= target,
-                None => false,
-            };
-            let time_hit = params.sim_time_cap.map(|cap| sim_time >= cap).unwrap_or(false);
-            let stop = gap_hit || time_hit || t + 1 == params.outer;
+            let stop = directive == Directive::Stop;
             for node in 0..topo.n_nodes() {
                 if node != 0 {
                     ep.send_eval(node, tags::CTRL, vec![if stop { 1.0 } else { 0.0 }]);
@@ -159,6 +152,8 @@ fn server(
             stop
         } else {
             ep.send_eval(0, tags::EVAL, w_k.clone());
+            let st = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+            send_node_state(ep, 0, &st);
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
             ctrl.value(0) != 0.0
         };
@@ -166,14 +161,10 @@ fn server(
             break;
         }
     }
-    if k == 0 {
-        Some((trace, full_w))
-    } else {
-        None
-    }
 }
 
 /// Worker `l` (Algorithm 4).
+#[allow(clippy::too_many_arguments)]
 fn worker(
     ep: &mut Endpoint,
     problem: &Problem,
@@ -182,13 +173,19 @@ fn worker(
     m_rounds: usize,
     shards: &[InstanceShard],
     y: &[f64],
+    cx: &ClusterCtx,
 ) {
     let l = ep.id() - topo.p;
     let shard = &shards[l];
     let n_local = shard.data.cols();
     let comm = params.comm();
     let loss = problem.build_loss();
-    let mut rng = Pcg64::seed_from_u64(params.seed ^ (0x517 + l as u64));
+    let mut rng = match cx.node_state(ep.id()) {
+        Some(st) if cx.resume.is_some() => {
+            Pcg64::from_state_words(st.rng.expect("synsvrg worker state carries the RNG"))
+        }
+        _ => Pcg64::seed_from_u64(params.seed ^ (0x517 + l as u64)),
+    };
     let mut w_t = vec![0.0f64; topo.d];
     let mut w_m = vec![0.0f64; topo.d];
     let mut margins0 = vec![0.0f64; n_local];
@@ -231,6 +228,8 @@ fn worker(
             }
         }
 
+        let st = NodeState { rng: Some(rng.state_words()), clock: ep.clock_state(), extra: vec![] };
+        send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {
             break;

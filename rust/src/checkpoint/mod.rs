@@ -1,11 +1,11 @@
-//! Model checkpointing: save/restore a trained parameter vector with
-//! enough metadata to validate it against the problem it is loaded into.
+//! Model checkpointing: save/restore trained parameters (version 1) and
+//! full mid-run session snapshots (version 2).
 //!
-//! Format (version 1, little-endian):
+//! ## Version 1 — final weights (inference-only), little-endian
 //!
 //! ```text
 //! magic   8 B  "FDSVRGCK"
-//! version u32
+//! version u32  = 1
 //! d       u64          parameter dimension
 //! algo    u32 + bytes  algorithm name
 //! dataset u32 + bytes  dataset name
@@ -13,13 +13,50 @@
 //! w       d × f64
 //! crc     u64          FNV-1a over everything above
 //! ```
+//!
+//! ## Version 2 — session snapshot (mid-run resume), little-endian
+//!
+//! Shares the v1 header layout (so inference-only consumers read the
+//! weights out of either version), then appends the session section:
+//!
+//! ```text
+//! magic   8 B  "FDSVRGCK"
+//! version u32  = 2
+//! d       u64
+//! algo    u32 + bytes
+//! dataset u32 + bytes
+//! lambda  f64
+//! w       d × f64               assembled parameter at the epoch boundary
+//! wire    u32                   0 = f64, 1 = f32, 2 = sparse
+//! epoch   u64                   completed outer epochs
+//! grads   u64                   cumulative gradient evaluations
+//! trace   u64 count × point     point = outer u64, sim_time f64,
+//!                               wall_time f64, scalars u64, bytes u64,
+//!                               grads u64, objective f64
+//! comm    u64 count × sender    sender = scalars u64, bytes u64,
+//!                               messages u64   (per-node counters)
+//! nodes   u64 count × node      node = has_rng u8, rng 4 × u64,
+//!                               clock f64, nic_out f64, nic_in f64,
+//!                               extra u64 count × f64
+//! crc     u64                   FNV-1a over everything above
+//! ```
+//!
+//! `nodes[i].extra` is algorithm-owned (SAGA's coefficient table, D-PSGD's
+//! local parameter copy, PS-Lite's step counter, ...). A run restored from
+//! a v2 checkpoint continues on the identical trajectory: same `w`, same
+//! trace points, same per-sender byte counters (for the deterministic
+//! algorithms; the asynchronous ones race by design).
 
+use crate::metrics::Trace;
+use crate::net::{ClockState, NodeComm, WireFmt};
+use crate::session::{NodeState, ResumeState, SessionState};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"FDSVRGCK";
 const VERSION: u32 = 1;
+const VERSION_SESSION: u32 = 2;
 
 /// A saved model.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,6 +74,22 @@ fn fnv1a(bytes: &[u8]) -> u64 {
         h = h.wrapping_mul(0x1000_0000_01b3);
     }
     h
+}
+
+/// Check magic + CRC; returns the CRC-covered body slice.
+fn verify_envelope(bytes: &[u8]) -> Result<&[u8]> {
+    if bytes.len() < MAGIC.len() + 12 + 8 {
+        bail!("checkpoint too short ({} bytes)", bytes.len());
+    }
+    if &bytes[..8] != MAGIC {
+        bail!("bad checkpoint magic");
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(crc_bytes.try_into().unwrap());
+    if want != fnv1a(body) {
+        bail!("checkpoint CRC mismatch (corrupted file)");
+    }
+    Ok(body)
 }
 
 fn put_str(buf: &mut Vec<u8>, s: &str) {
@@ -75,6 +128,55 @@ fn get_str(bytes: &[u8], at: &mut usize) -> Result<String> {
     Ok(s.to_string())
 }
 
+fn get_f64(bytes: &[u8], at: &mut usize) -> Result<f64> {
+    Ok(f64::from_bits(get_u64(bytes, at)?))
+}
+
+fn get_u8(bytes: &[u8], at: &mut usize) -> Result<u8> {
+    if *at >= bytes.len() {
+        bail!("truncated checkpoint");
+    }
+    let v = bytes[*at];
+    *at += 1;
+    Ok(v)
+}
+
+fn get_f64_vec(bytes: &[u8], at: &mut usize, len: usize) -> Result<Vec<f64>> {
+    let end = *at + 8 * len;
+    if end > bytes.len() {
+        bail!("truncated checkpoint vector");
+    }
+    let v = bytes[*at..end]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    *at = end;
+    Ok(v)
+}
+
+fn put_f64_vec(buf: &mut Vec<u8>, v: &[f64]) {
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn wire_code(wire: WireFmt) -> u32 {
+    match wire {
+        WireFmt::F64 => 0,
+        WireFmt::F32 => 1,
+        WireFmt::Sparse => 2,
+    }
+}
+
+fn wire_from_code(code: u32) -> Result<WireFmt> {
+    match code {
+        0 => Ok(WireFmt::F64),
+        1 => Ok(WireFmt::F32),
+        2 => Ok(WireFmt::Sparse),
+        other => bail!("unknown wire-format code {other} in checkpoint"),
+    }
+}
+
 impl Checkpoint {
     pub fn new(algorithm: &str, dataset: &str, lambda: f64, w: Vec<f64>) -> Checkpoint {
         Checkpoint { algorithm: algorithm.into(), dataset: dataset.into(), lambda, w }
@@ -97,36 +199,25 @@ impl Checkpoint {
         buf
     }
 
-    /// Parse + verify a version-1 checkpoint.
+    /// Parse + verify a checkpoint, reading the inference view (header +
+    /// weights). Accepts version 1 files and the shared header of
+    /// version 2 session snapshots, so old consumers keep working on
+    /// both.
     pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
-        if bytes.len() < MAGIC.len() + 12 + 8 {
-            bail!("checkpoint too short ({} bytes)", bytes.len());
-        }
-        if &bytes[..8] != MAGIC {
-            bail!("bad checkpoint magic");
-        }
-        let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
-        let want = u64::from_le_bytes(crc_bytes.try_into().unwrap());
-        let got = fnv1a(body);
-        if want != got {
-            bail!("checkpoint CRC mismatch (corrupted file)");
-        }
+        let body = verify_envelope(bytes)?;
         let mut at = 8usize;
         let version = get_u32(bytes, &mut at)?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_SESSION {
             bail!("unsupported checkpoint version {version}");
         }
         let d = get_u64(bytes, &mut at)? as usize;
         let algorithm = get_str(bytes, &mut at)?;
         let dataset = get_str(bytes, &mut at)?;
         let lambda = f64::from_bits(get_u64(bytes, &mut at)?);
-        if body.len() - at != 8 * d {
+        if version == VERSION && body.len() - at != 8 * d {
             bail!("checkpoint dim {d} disagrees with payload");
         }
-        let w = bytes[at..at + 8 * d]
-            .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-            .collect();
+        let w = get_f64_vec(bytes, &mut at, d)?;
         Ok(Checkpoint { algorithm, dataset, lambda, w })
     }
 
@@ -157,6 +248,196 @@ impl Checkpoint {
             );
         }
         Ok(())
+    }
+}
+
+/// A version-2 checkpoint: the full mid-run [`SessionState`]. Saving one
+/// and resuming through [`crate::session::SessionBuilder::resume`]
+/// reproduces the uninterrupted run's trajectory.
+#[derive(Clone, Debug)]
+pub struct SessionCheckpoint {
+    pub state: SessionState,
+}
+
+/// Either checkpoint version, as loaded from disk.
+pub enum Loaded {
+    /// v1: final weights only (inference / warm start).
+    Weights(Checkpoint),
+    /// v2: full session snapshot (mid-run resume; also usable for
+    /// inference via its `w`).
+    Session(Box<SessionCheckpoint>),
+}
+
+/// Load a checkpoint of either version, dispatching on the version field.
+pub fn load_any<P: AsRef<Path>>(path: P) -> Result<Loaded> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?
+        .read_to_end(&mut bytes)?;
+    verify_envelope(&bytes)?;
+    let mut at = 8usize;
+    let version = get_u32(&bytes, &mut at)?;
+    match version {
+        VERSION => Ok(Loaded::Weights(
+            Checkpoint::from_bytes(&bytes)
+                .with_context(|| format!("parse {}", path.as_ref().display()))?,
+        )),
+        VERSION_SESSION => Ok(Loaded::Session(Box::new(
+            SessionCheckpoint::from_bytes(&bytes)
+                .with_context(|| format!("parse {}", path.as_ref().display()))?,
+        ))),
+        other => bail!("unsupported checkpoint version {other}"),
+    }
+}
+
+impl SessionCheckpoint {
+    pub fn new(state: SessionState) -> SessionCheckpoint {
+        SessionCheckpoint { state }
+    }
+
+    /// Serialize to the version-2 binary format (see the module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let st = &self.state;
+        let r = &st.resume;
+        let mut buf = Vec::with_capacity(128 + 8 * r.w.len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION_SESSION.to_le_bytes());
+        buf.extend_from_slice(&(r.w.len() as u64).to_le_bytes());
+        put_str(&mut buf, &st.algorithm);
+        put_str(&mut buf, &st.dataset);
+        buf.extend_from_slice(&st.lambda.to_le_bytes());
+        put_f64_vec(&mut buf, &r.w);
+        buf.extend_from_slice(&wire_code(st.wire).to_le_bytes());
+        buf.extend_from_slice(&(r.epoch as u64).to_le_bytes());
+        buf.extend_from_slice(&r.grads.to_le_bytes());
+        buf.extend_from_slice(&(st.trace.points.len() as u64).to_le_bytes());
+        for p in &st.trace.points {
+            buf.extend_from_slice(&(p.outer as u64).to_le_bytes());
+            buf.extend_from_slice(&p.sim_time.to_le_bytes());
+            buf.extend_from_slice(&p.wall_time.to_le_bytes());
+            buf.extend_from_slice(&p.scalars.to_le_bytes());
+            buf.extend_from_slice(&p.bytes.to_le_bytes());
+            buf.extend_from_slice(&p.grads.to_le_bytes());
+            buf.extend_from_slice(&p.objective.to_le_bytes());
+        }
+        buf.extend_from_slice(&(r.comm.len() as u64).to_le_bytes());
+        for nc in &r.comm {
+            buf.extend_from_slice(&nc.scalars.to_le_bytes());
+            buf.extend_from_slice(&nc.bytes.to_le_bytes());
+            buf.extend_from_slice(&nc.messages.to_le_bytes());
+        }
+        buf.extend_from_slice(&(r.nodes.len() as u64).to_le_bytes());
+        for node in &r.nodes {
+            match node.rng {
+                Some(words) => {
+                    buf.push(1);
+                    for wdr in words {
+                        buf.extend_from_slice(&wdr.to_le_bytes());
+                    }
+                }
+                None => {
+                    buf.push(0);
+                    buf.extend_from_slice(&[0u8; 32]);
+                }
+            }
+            buf.extend_from_slice(&node.clock.clock.to_le_bytes());
+            buf.extend_from_slice(&node.clock.nic_out.to_le_bytes());
+            buf.extend_from_slice(&node.clock.nic_in.to_le_bytes());
+            buf.extend_from_slice(&(node.extra.len() as u64).to_le_bytes());
+            put_f64_vec(&mut buf, &node.extra);
+        }
+        let crc = fnv1a(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf
+    }
+
+    /// Parse + verify a version-2 checkpoint.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionCheckpoint> {
+        let body = verify_envelope(bytes)?;
+        let mut at = 8usize;
+        let version = get_u32(bytes, &mut at)?;
+        if version != VERSION_SESSION {
+            bail!("not a session checkpoint (version {version}; use Checkpoint for v1)");
+        }
+        let d = get_u64(bytes, &mut at)? as usize;
+        let algorithm = get_str(bytes, &mut at)?;
+        let dataset = get_str(bytes, &mut at)?;
+        let lambda = get_f64(bytes, &mut at)?;
+        let w = get_f64_vec(bytes, &mut at, d)?;
+        let wire = wire_from_code(get_u32(bytes, &mut at)?)?;
+        let epoch = get_u64(bytes, &mut at)? as usize;
+        let grads = get_u64(bytes, &mut at)?;
+        let npoints = get_u64(bytes, &mut at)? as usize;
+        let mut trace = Trace::default();
+        for _ in 0..npoints {
+            trace.push(crate::metrics::TracePoint {
+                outer: get_u64(bytes, &mut at)? as usize,
+                sim_time: get_f64(bytes, &mut at)?,
+                wall_time: get_f64(bytes, &mut at)?,
+                scalars: get_u64(bytes, &mut at)?,
+                bytes: get_u64(bytes, &mut at)?,
+                grads: get_u64(bytes, &mut at)?,
+                objective: get_f64(bytes, &mut at)?,
+            });
+        }
+        let ncomm = get_u64(bytes, &mut at)? as usize;
+        let mut comm = Vec::with_capacity(ncomm);
+        for _ in 0..ncomm {
+            comm.push(NodeComm {
+                scalars: get_u64(bytes, &mut at)?,
+                bytes: get_u64(bytes, &mut at)?,
+                messages: get_u64(bytes, &mut at)?,
+            });
+        }
+        let nnodes = get_u64(bytes, &mut at)? as usize;
+        let mut nodes = Vec::with_capacity(nnodes);
+        for _ in 0..nnodes {
+            let has_rng = get_u8(bytes, &mut at)? != 0;
+            let mut words = [0u64; 4];
+            for wdr in words.iter_mut() {
+                *wdr = get_u64(bytes, &mut at)?;
+            }
+            let clock = ClockState {
+                clock: get_f64(bytes, &mut at)?,
+                nic_out: get_f64(bytes, &mut at)?,
+                nic_in: get_f64(bytes, &mut at)?,
+            };
+            let nextra = get_u64(bytes, &mut at)? as usize;
+            let extra = get_f64_vec(bytes, &mut at, nextra)?;
+            nodes.push(NodeState { rng: has_rng.then_some(words), clock, extra });
+        }
+        if at != body.len() {
+            bail!("session checkpoint has {} trailing bytes", body.len() - at);
+        }
+        Ok(SessionCheckpoint {
+            state: SessionState {
+                algorithm,
+                dataset,
+                lambda,
+                wire,
+                trace,
+                resume: ResumeState { epoch, grads, w, comm, nodes },
+            },
+        })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<SessionCheckpoint> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        SessionCheckpoint::from_bytes(&bytes)
+            .with_context(|| format!("parse {}", path.as_ref().display()))
     }
 }
 
@@ -219,5 +500,110 @@ mod tests {
     fn empty_w_round_trips() {
         let c = Checkpoint::new("a", "b", 0.0, vec![]);
         assert_eq!(Checkpoint::from_bytes(&c.to_bytes()).unwrap(), c);
+    }
+
+    fn demo_session() -> SessionCheckpoint {
+        let mut trace = Trace::default();
+        trace.push(crate::metrics::TracePoint {
+            outer: 0,
+            sim_time: 0.0,
+            wall_time: 0.0,
+            scalars: 0,
+            bytes: 0,
+            grads: 0,
+            objective: 0.693,
+        });
+        trace.push(crate::metrics::TracePoint {
+            outer: 1,
+            sim_time: 1.5,
+            wall_time: 0.1,
+            scalars: 100,
+            bytes: 800,
+            grads: 60,
+            objective: 0.5,
+        });
+        SessionCheckpoint::new(SessionState {
+            algorithm: "fdsvrg".into(),
+            dataset: "tiny".into(),
+            lambda: 1e-3,
+            wire: WireFmt::F64,
+            trace,
+            resume: ResumeState {
+                epoch: 1,
+                grads: 60,
+                w: vec![0.25, -1.0, 3.5],
+                comm: vec![
+                    NodeComm { scalars: 40, bytes: 320, messages: 4 },
+                    NodeComm { scalars: 60, bytes: 480, messages: 6 },
+                ],
+                nodes: vec![
+                    NodeState {
+                        rng: None,
+                        clock: ClockState { clock: 1.5, nic_out: 1.4, nic_in: 1.45 },
+                        extra: vec![],
+                    },
+                    NodeState {
+                        rng: Some([u64::MAX, 1, 2, 3]),
+                        clock: ClockState { clock: 1.2, nic_out: 0.0, nic_in: 1.1 },
+                        extra: vec![9.0, -0.5],
+                    },
+                ],
+            },
+        })
+    }
+
+    #[test]
+    fn session_checkpoint_round_trips() {
+        let c = demo_session();
+        let back = SessionCheckpoint::from_bytes(&c.to_bytes()).unwrap();
+        let (a, b) = (&c.state, &back.state);
+        assert_eq!(a.algorithm, b.algorithm);
+        assert_eq!(a.dataset, b.dataset);
+        assert_eq!(a.lambda, b.lambda);
+        assert_eq!(a.wire, b.wire);
+        assert_eq!(a.trace.points, b.trace.points);
+        assert_eq!(a.resume.epoch, b.resume.epoch);
+        assert_eq!(a.resume.grads, b.resume.grads);
+        assert_eq!(a.resume.w, b.resume.w);
+        assert_eq!(a.resume.comm, b.resume.comm);
+        assert_eq!(a.resume.nodes, b.resume.nodes);
+    }
+
+    #[test]
+    fn v1_reader_extracts_weights_from_v2() {
+        // inference-only consumers read the shared header of either version
+        let c = demo_session();
+        let weights = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(weights.algorithm, "fdsvrg");
+        assert_eq!(weights.w, vec![0.25, -1.0, 3.5]);
+        assert_eq!(weights.lambda, 1e-3);
+    }
+
+    #[test]
+    fn load_any_dispatches_on_version() {
+        let dir = std::env::temp_dir().join("fdsvrg_ckpt_any_test");
+        let v1 = dir.join("v1.ckpt");
+        let v2 = dir.join("v2.ckpt");
+        demo().save(&v1).unwrap();
+        demo_session().save(&v2).unwrap();
+        assert!(matches!(load_any(&v1).unwrap(), Loaded::Weights(_)));
+        assert!(matches!(load_any(&v2).unwrap(), Loaded::Session(_)));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn session_checkpoint_corruption_detected() {
+        let mut bytes = demo_session().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        let err = SessionCheckpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn v1_loader_rejects_session_parser() {
+        // a v1 file is not a session snapshot
+        let err = SessionCheckpoint::from_bytes(&demo().to_bytes()).unwrap_err();
+        assert!(format!("{err}").contains("version 1"), "{err}");
     }
 }

@@ -78,8 +78,21 @@ where
     F: Fn(Endpoint) -> T + Send + Sync,
 {
     let (eps, stats) = build(n_nodes, params);
+    ClusterRun { results: run_endpoints(eps, f), stats }
+}
+
+/// Run `f(endpoint)` on one thread per pre-built endpoint. This is the
+/// spawning/teardown half of [`run_cluster`], split out so launchers that
+/// need to prepare the endpoints first (the session layer preloads comm
+/// counters and restores clock states when resuming from a checkpoint)
+/// share the same panic-propagation semantics.
+pub fn run_endpoints<T, F>(eps: Vec<Endpoint>, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Endpoint) -> T + Send + Sync,
+{
     let f = &f;
-    let results: Vec<T> = std::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         let handles: Vec<_> = eps.into_iter().map(|ep| scope.spawn(move || f(ep))).collect();
         handles
             .into_iter()
@@ -95,8 +108,7 @@ where
                 }
             })
             .collect()
-    });
-    ClusterRun { results, stats }
+    })
 }
 
 #[cfg(test)]

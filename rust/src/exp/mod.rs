@@ -9,6 +9,7 @@ use crate::config::ExperimentConfig;
 use crate::data::profiles;
 use crate::metrics::plot::{AsciiPlot, Series};
 use crate::metrics::{RunResult, TextTable};
+use crate::session::{SessionBuilder, StopPolicy};
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -89,8 +90,23 @@ pub fn paper_grid() -> Vec<(&'static str, usize)> {
         .collect()
 }
 
-fn run_and_save(ctx: &Ctx, problem: &Problem, algo: Algorithm, params: &RunParams, f_opt: f64, tag: &str) -> RunResult {
-    let res = algo.run(problem, params);
+/// Run one (algorithm, params) cell through the session layer with the
+/// driver's stop policies spelled out explicitly (rather than smuggled in
+/// through `RunParams` fields), then persist the trace.
+fn run_and_save(
+    ctx: &Ctx,
+    problem: &Problem,
+    algo: Algorithm,
+    params: &RunParams,
+    policies: &[StopPolicy],
+    f_opt: f64,
+    tag: &str,
+) -> RunResult {
+    let mut builder = SessionBuilder::new(algo, problem, params.clone());
+    for &p in policies {
+        builder = builder.stop_when(p);
+    }
+    let res = builder.build().expect("fresh experiment session").run_to_completion();
     let csv = ctx.out_dir.join(format!("{tag}_{}.csv", algo.name()));
     if let Err(e) = res.trace.write_csv(&csv, f_opt) {
         crate::util::logger::log(
@@ -137,8 +153,9 @@ pub fn fig6_fig7(ctx: &Ctx, datasets: &[(&str, usize)]) -> Result<()> {
                 default_epochs(algo)
             };
             params.outer = ctx.epochs(budget);
-            params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
-            let res = run_and_save(ctx, &problem, algo, &params, f_opt, &format!("fig6_{profile}"));
+            let gap = StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 };
+            let tag = format!("fig6_{profile}");
+            let res = run_and_save(ctx, &problem, algo, &params, &[gap], f_opt, &tag);
             let tt = res.trace.time_to_gap(f_opt, ctx.cfg.gap_target);
             // bytes, to match the Fig-7 plot axis (comm_to_gap keeps the
             // scalar view for callers that want the §4.5 unit)
@@ -193,8 +210,9 @@ pub fn fig9(ctx: &Ctx) -> Result<Vec<(usize, f64)>> {
     for q in [1usize, 4, 8, 16] {
         let mut params = ctx.base_params(q);
         params.outer = ctx.epochs(default_epochs(Algorithm::FdSvrg));
-        params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
-        let res = run_and_save(ctx, &problem, Algorithm::FdSvrg, &params, f_opt, &format!("fig9_q{q}"));
+        let gap = StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 };
+        let tag = format!("fig9_q{q}");
+        let res = run_and_save(ctx, &problem, Algorithm::FdSvrg, &params, &[gap], f_opt, &tag);
         let t = res
             .trace
             .time_to_gap(f_opt, ctx.cfg.gap_target)
@@ -229,8 +247,9 @@ pub fn table2(ctx: &Ctx) -> Result<Vec<(String, f64, f64)>> {
         let time_of = |algo: Algorithm| -> f64 {
             let mut params = ctx.base_params(q);
             params.outer = ctx.epochs(default_epochs(algo));
-            params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
-            let res = run_and_save(ctx, &problem, algo, &params, f_opt, &format!("table2_{profile}"));
+            let gap = StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 };
+            let tag = format!("table2_{profile}");
+            let res = run_and_save(ctx, &problem, algo, &params, &[gap], f_opt, &tag);
             res.trace
                 .time_to_gap(f_opt, ctx.cfg.gap_target)
                 .unwrap_or(res.total_sim_time)
@@ -262,9 +281,16 @@ pub fn table3(ctx: &Ctx) -> Result<Vec<(String, Option<f64>, f64)>> {
         // FD-SVRG side
         let mut params = ctx.base_params(q);
         params.outer = ctx.epochs(default_epochs(Algorithm::FdSvrg));
-        params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
-        let res_fd =
-            run_and_save(ctx, &problem, Algorithm::FdSvrg, &params, f_opt, &format!("table3_{profile}"));
+        let gap = StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 };
+        let res_fd = run_and_save(
+            ctx,
+            &problem,
+            Algorithm::FdSvrg,
+            &params,
+            &[gap],
+            f_opt,
+            &format!("table3_{profile}"),
+        );
         let t_fd = res_fd
             .trace
             .time_to_gap(f_opt, ctx.cfg.gap_target)
@@ -275,13 +301,15 @@ pub fn table3(ctx: &Ctx) -> Result<Vec<(String, Option<f64>, f64)>> {
         let mut sgd_params = ctx.base_params(q);
         sgd_params.servers = 8; // paper §5.2
         sgd_params.outer = ctx.epochs(default_epochs(Algorithm::PsLiteSgd));
-        sgd_params.gap_stop = Some((f_opt, ctx.cfg.gap_target));
-        sgd_params.sim_time_cap = Some(cap);
         let res_sgd = run_and_save(
             ctx,
             &problem,
             Algorithm::PsLiteSgd,
             &sgd_params,
+            &[
+                StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target },
+                StopPolicy::SimTimeCap(cap),
+            ],
             f_opt,
             &format!("table3_{profile}"),
         );
@@ -328,12 +356,12 @@ pub fn wire_ablation(ctx: &Ctx) -> Result<Vec<(String, &'static str, u64, f64)>>
             let mut params = ctx.base_params(q);
             params.outer = ctx.epochs(default_epochs(Algorithm::FdSvrg) / 3);
             params.wire = wire;
-            params.gap_stop = Some((f_opt, ctx.cfg.gap_target / 10.0));
             let res = run_and_save(
                 ctx,
                 &problem,
                 Algorithm::FdSvrg,
                 &params,
+                &[StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 }],
                 f_opt,
                 &format!("wire_{profile}_{}", wire.name()),
             );

@@ -30,6 +30,7 @@ fn real_main() -> Result<()> {
     let args = Args::parse();
     match args.subcommand() {
         Some("train") => cmd_train(&args),
+        Some("predict") => cmd_predict(&args),
         Some("exp") => cmd_exp(&args),
         Some("data") => cmd_data(&args),
         Some("check-engine") | Some("check-artifacts") => cmd_check_engine(&args),
@@ -52,6 +53,14 @@ const USAGE: &str = "usage:
                [--engine native|block|xla]   (native = sparse CSC path,
                block = dense blocked trainer on the pure-Rust engine,
                xla = dense blocked trainer on PJRT, needs --features xla)
+               [--ckpt file --save-every K]   (write a v2 session checkpoint
+               every K epochs; resumable mid-run snapshot)
+               [--resume file]   (continue a run from a v2 session
+               checkpoint; --outer counts total epochs incl. pre-resume)
+               [--save file]     (write final weights as a v1 checkpoint)
+  fdsvrg predict --ckpt file [--dataset profile|path.libsvm]
+               (inference from a checkpoint of either version: v1 final
+               weights or a v2 session snapshot)
   fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|all> [--out dir] [--quick]
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|xla]
@@ -97,8 +106,7 @@ fn load_dataset(name: &str) -> Result<fdsvrg::sparse::libsvm::Dataset> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_experiment_config(args)?;
-    let algo = Algorithm::parse(&cfg.algo)
-        .with_context(|| format!("unknown algorithm {:?}", cfg.algo))?;
+    let algo = Algorithm::parse_or_err(&cfg.algo).map_err(|e| anyhow::anyhow!(e))?;
     let ds = load_dataset(&cfg.dataset)?;
     // optional held-out split (--test-frac 0.2)
     let test_frac: f64 = args.get_or("test-frac", 0.0);
@@ -126,9 +134,54 @@ fn cmd_train(args: &Args) -> Result<()> {
         params.wire.name(),
     );
     let res = match engine_kind {
-        // "native" keeps its historical meaning: the sparse CSC algorithms
-        "native" => algo.run(&problem, &params),
+        // "native" keeps its historical meaning: the sparse CSC algorithms,
+        // now driven through the session layer so runs can be observed,
+        // checkpointed mid-flight, and resumed.
+        "native" => {
+            let mut builder = fdsvrg::session::SessionBuilder::new(algo, &problem, params.clone());
+            if let Some(path) = args.get("resume") {
+                match fdsvrg::checkpoint::load_any(path)? {
+                    fdsvrg::checkpoint::Loaded::Session(sc) => {
+                        let st = sc.state;
+                        println!(
+                            "resuming from {path}: epoch {} ({} trace points)",
+                            st.resume.epoch,
+                            st.trace.points.len()
+                        );
+                        builder = builder.resume(st);
+                    }
+                    fdsvrg::checkpoint::Loaded::Weights(_) => bail!(
+                        "{path} is a version-1 final-weights checkpoint (inference-only); \
+                         use `fdsvrg predict --ckpt {path}` instead, or train fresh"
+                    ),
+                }
+            }
+            let ckpt_path = args.get("ckpt").map(|s| s.to_string());
+            if let Some(ckpt) = &ckpt_path {
+                let every: usize = args.get_or("save-every", 1usize);
+                builder =
+                    builder.observe(fdsvrg::session::CheckpointObserver::new(ckpt.clone(), every));
+            } else if args.get("save-every").is_some() {
+                bail!("--save-every needs --ckpt <path> to say where checkpoints go");
+            }
+            let mut session = builder.build()?;
+            while !session.should_stop() {
+                session.step();
+            }
+            // Final flush: the observer only fires on multiples of
+            // --save-every, so write the end-of-run state unconditionally
+            // (the checkpoint on disk always matches the finished run).
+            if let Some(ckpt) = &ckpt_path {
+                fdsvrg::checkpoint::SessionCheckpoint::new(session.state()).save(ckpt)?;
+                println!("session checkpoint written to {ckpt}");
+            }
+            session.finish()
+        }
         other => {
+            anyhow::ensure!(
+                args.get("resume").is_none() && args.get("ckpt").is_none(),
+                "--resume/--ckpt session checkpointing is available on the native engine only"
+            );
             let kind = fdsvrg::runtime::EngineKind::parse(other)
                 .with_context(|| format!("unknown engine {other:?} (native|block|xla)"))?;
             let engine = fdsvrg::runtime::build_engine(
@@ -188,6 +241,37 @@ fn cmd_train(args: &Args) -> Result<()> {
             .save(ckpt)?;
         println!("checkpoint written to {ckpt}");
     }
+    Ok(())
+}
+
+/// Inference from a saved checkpoint — v1 final weights or a v2 session
+/// snapshot (whose assembled `w` serves equally well). Exercises the
+/// backward-compat guarantee: v1 files keep loading after the v2 cut.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let path = args.get("ckpt").context("predict needs --ckpt <file>")?;
+    let (version, algorithm, dataset, lambda, w) = match fdsvrg::checkpoint::load_any(path)? {
+        fdsvrg::checkpoint::Loaded::Weights(c) => (1, c.algorithm, c.dataset, c.lambda, c.w),
+        fdsvrg::checkpoint::Loaded::Session(sc) => {
+            let st = sc.state;
+            (2, st.algorithm, st.dataset, st.lambda, st.resume.w)
+        }
+    };
+    let ds_name = args.get("dataset").map(|s| s.to_string()).unwrap_or_else(|| dataset.clone());
+    let ds = load_dataset(&ds_name)?;
+    let problem = Problem::logistic_l2(ds, lambda);
+    anyhow::ensure!(
+        w.len() == problem.d(),
+        "checkpoint dim {} does not match dataset {ds_name:?} dim {}",
+        w.len(),
+        problem.d()
+    );
+    println!(
+        "checkpoint {path} (v{version}, {algorithm} on {dataset}, λ={lambda:.0e}): \
+         objective {:.8}, accuracy {:.2}% on {ds_name} ({} instances)",
+        problem.objective(&w),
+        100.0 * problem.accuracy(&w),
+        problem.n()
+    );
     Ok(())
 }
 

@@ -119,6 +119,45 @@ impl Trace {
     }
 }
 
+/// Final communication accounting of a run, as a value (the session layer
+/// assembles it from live [`CommStats`], a resume snapshot, or a closed
+/// form, depending on the driver).
+#[derive(Clone, Debug, Default)]
+pub struct CommTotals {
+    pub total_scalars: u64,
+    pub busiest_node_scalars: u64,
+    pub total_bytes: u64,
+    pub busiest_node_bytes: u64,
+    pub total_messages: u64,
+    pub node_comm: Vec<NodeComm>,
+}
+
+impl CommTotals {
+    /// Totals derived from a per-sender snapshot.
+    pub fn from_node_comm(node_comm: Vec<NodeComm>) -> CommTotals {
+        CommTotals {
+            total_scalars: node_comm.iter().map(|n| n.scalars).sum(),
+            busiest_node_scalars: node_comm.iter().map(|n| n.scalars).max().unwrap_or(0),
+            total_bytes: node_comm.iter().map(|n| n.bytes).sum(),
+            busiest_node_bytes: node_comm.iter().map(|n| n.bytes).max().unwrap_or(0),
+            total_messages: node_comm.iter().map(|n| n.messages).sum(),
+            node_comm,
+        }
+    }
+
+    /// Live totals of a finished cluster run.
+    pub fn from_stats(stats: &CommStats) -> CommTotals {
+        CommTotals {
+            total_scalars: stats.total_scalars(),
+            busiest_node_scalars: stats.busiest_node_scalars(),
+            total_bytes: stats.total_bytes(),
+            busiest_node_bytes: stats.busiest_node_bytes(),
+            total_messages: stats.total_messages(),
+            node_comm: stats.per_node(),
+        }
+    }
+}
+
 /// Result of a complete algorithm run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -142,17 +181,17 @@ pub struct RunResult {
 }
 
 impl RunResult {
-    /// Assemble a result from a finished cluster run's counters. The
-    /// total simulated time is read off the trace's last point.
-    pub fn from_cluster(
+    /// Assemble a result from the session layer's pieces: the trace it
+    /// accumulated plus the driver's final weights and comm totals.
+    pub fn from_totals(
         algorithm: &str,
         dataset: &str,
         w: Vec<f64>,
         trace: Trace,
+        total_sim_time: f64,
         total_wall_time: f64,
-        stats: &CommStats,
+        totals: CommTotals,
     ) -> RunResult {
-        let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
         RunResult {
             algorithm: algorithm.into(),
             dataset: dataset.into(),
@@ -160,36 +199,12 @@ impl RunResult {
             trace,
             total_sim_time,
             total_wall_time,
-            total_scalars: stats.total_scalars(),
-            busiest_node_scalars: stats.busiest_node_scalars(),
-            total_bytes: stats.total_bytes(),
-            busiest_node_bytes: stats.busiest_node_bytes(),
-            total_messages: stats.total_messages(),
-            node_comm: stats.per_node(),
-        }
-    }
-
-    /// Result of a run that never touched the network (serial baselines).
-    pub fn serial(
-        algorithm: &str,
-        dataset: &str,
-        w: Vec<f64>,
-        trace: Trace,
-        total_wall_time: f64,
-    ) -> RunResult {
-        RunResult {
-            algorithm: algorithm.into(),
-            dataset: dataset.into(),
-            w,
-            trace,
-            total_sim_time: 0.0,
-            total_wall_time,
-            total_scalars: 0,
-            busiest_node_scalars: 0,
-            total_bytes: 0,
-            busiest_node_bytes: 0,
-            total_messages: 0,
-            node_comm: Vec::new(),
+            total_scalars: totals.total_scalars,
+            busiest_node_scalars: totals.busiest_node_scalars,
+            total_bytes: totals.total_bytes,
+            busiest_node_bytes: totals.busiest_node_bytes,
+            total_messages: totals.total_messages,
+            node_comm: totals.node_comm,
         }
     }
 

@@ -58,6 +58,9 @@ pub mod tags {
     pub const CTRL: Tag = 6;
     pub const RING: Tag = 7;
     pub const EVAL: Tag = 100;
+    /// Session-layer state snapshots (evaluation plane, uncounted): each
+    /// node ships its resumable state to the monitor at epoch boundaries.
+    pub const STATE: Tag = 101;
 }
 
 /// Network cost model (LogP-flavoured):
@@ -110,6 +113,17 @@ pub struct NodeComm {
     pub scalars: u64,
     pub bytes: u64,
     pub messages: u64,
+}
+
+/// One node's simulated-clock state — everything the scheduler needs to
+/// resume a node exactly where a previous run left it: the clock itself
+/// plus the NIC occupancy horizons that future sends/receives serialize
+/// against.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClockState {
+    pub clock: f64,
+    pub nic_out: f64,
+    pub nic_in: f64,
 }
 
 /// Global communication counters (wire bytes, messages and the derived
@@ -174,6 +188,18 @@ impl CommStats {
                 messages: self.node_messages(id),
             })
             .collect()
+    }
+
+    /// Seed the counters from a previous run's per-sender snapshot so a
+    /// resumed session's accounting continues exactly where the
+    /// checkpointed one stopped. Entries beyond this cluster's node count
+    /// are ignored; missing entries stay zero.
+    pub fn preload(&self, base: &[NodeComm]) {
+        for (i, nc) in base.iter().enumerate().take(self.scalars.len()) {
+            self.scalars[i].store(nc.scalars, Ordering::Relaxed);
+            self.bytes[i].store(nc.bytes, Ordering::Relaxed);
+            self.messages[i].store(nc.messages, Ordering::Relaxed);
+        }
     }
 
     fn record(&self, from: NodeId, scalars: usize, bytes: usize) {
@@ -279,6 +305,23 @@ impl Endpoint {
         }
     }
 
+    /// Snapshot the full clock state (clock + NIC horizons) for a session
+    /// checkpoint. CPU time burned since the last network op is discarded
+    /// (snapshots happen on the uncounted evaluation plane).
+    pub fn clock_state(&mut self) -> ClockState {
+        self.discard_cpu();
+        ClockState { clock: self.clock, nic_out: self.nic_out, nic_in: self.nic_in }
+    }
+
+    /// Restore a clock state exported by [`Endpoint::clock_state`] so a
+    /// resumed node's schedule continues where the checkpointed one
+    /// stopped.
+    pub fn restore_clock_state(&mut self, cs: ClockState) {
+        self.clock = cs.clock;
+        self.nic_out = cs.nic_out;
+        self.nic_in = cs.nic_in;
+    }
+
     /// Send a payload to node `to`; counts scalars/bytes/messages,
     /// serializes on this node's outgoing NIC and stamps the on-the-wire
     /// time. `Vec<f64>` converts implicitly to an exact `f64` payload;
@@ -377,6 +420,22 @@ impl Endpoint {
         });
         self.deliver(&msg);
         msg
+    }
+
+    /// Return a message to the stash so a later *selective* receive can
+    /// claim it. Event loops built on [`Endpoint::recv_any`] use this for
+    /// out-of-band traffic (e.g. the session layer's `STATE` snapshots,
+    /// which arrive on the evaluation plane while a server is still
+    /// draining its epoch): `deliver` already ran, but eval messages are
+    /// clock-free, so stashing is side-effect-free.
+    ///
+    /// Call this only **after** the `recv_any` loop has finished:
+    /// `recv_any` serves the stash before the channel, so stashing a
+    /// message back while still looping hands the same message straight
+    /// back (livelock). Park out-of-band messages in a local buffer for
+    /// the duration of the loop instead.
+    pub fn stash_back(&mut self, msg: Msg) {
+        self.stash.push_back(msg);
     }
 
     /// Evaluation-plane receive (no clock effect).

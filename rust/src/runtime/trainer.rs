@@ -30,7 +30,10 @@
 use super::{ComputeEngine, BLOCK_D, BLOCK_N, BLOCK_U};
 use crate::algs::{Problem, RunParams};
 use crate::loss::Regularizer;
-use crate::metrics::{RunResult, Trace, TracePoint};
+use crate::metrics::{CommTotals, RunResult};
+use crate::session::{
+    Driver, EpochReport, FinishOut, NodeState, ResumeState, SessionBuilder,
+};
 use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use anyhow::{ensure, Context, Result};
@@ -95,39 +98,110 @@ impl BlockedData {
     }
 }
 
-/// Run FD-SVRG through a blocked compute engine. Mini-batch size is
-/// pinned to the contract's `BLOCK_U`; `params.batch` is ignored.
-pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) -> Result<RunResult> {
-    let lambda = match problem.reg {
-        Regularizer::L2 { lambda } => lambda as f32,
-        _ => anyhow::bail!("the blocked engine supports L2 regularization only"),
-    };
-    ensure!(
-        problem.loss == crate::loss::LossKind::Logistic,
-        "the blocked engine kernels implement the logistic loss"
-    );
-    let data = BlockedData::build(problem).context("blocking dataset for the dense engine")?;
-    let (d, n) = (data.d, data.n);
-    let q = data.n_slabs; // the "workers" of the accounting
-    let eta = params.effective_eta(problem) as f32;
-    let m_inner = if params.m_inner == 0 { n } else { params.m_inner };
-    let wall = Stopwatch::start();
+/// Steppable blocked FD-SVRG: one outer iteration per [`Driver::step`],
+/// every FLOP through the [`ComputeEngine`] kernels. Construct with
+/// [`BlockedDriver::new`]; the [`run`] wrapper rides it through the shared
+/// session runner.
+pub struct BlockedDriver<'e> {
+    name: String,
+    problem: Problem,
+    engine: &'e dyn ComputeEngine,
+    data: BlockedData,
+    eta: f32,
+    lambda: f32,
+    m_inner: usize,
+    bytes_per_scalar: u64,
+    /// parameter + full-gradient slabs, padded to BLOCK_D
+    w: Vec<Vec<f32>>,
+    z: Vec<Vec<f32>>,
+    margins: Vec<f32>,
+    c0: Vec<f32>,
+    rng: Pcg64,
+    epoch: usize,
+    grads: u64,
+    scalars: u64,
+    messages: u64,
+    wall: Stopwatch,
+}
 
-    // parameter + full-gradient slabs, padded to BLOCK_D
-    let mut w: Vec<Vec<f32>> = vec![vec![0f32; BLOCK_D]; q];
-    let mut z: Vec<Vec<f32>> = vec![vec![0f32; BLOCK_D]; q];
+impl<'e> BlockedDriver<'e> {
+    /// Mini-batch size is pinned to the contract's `BLOCK_U`;
+    /// `params.batch` is ignored.
+    pub fn new(
+        problem: &Problem,
+        params: &RunParams,
+        engine: &'e dyn ComputeEngine,
+        resume: Option<ResumeState>,
+    ) -> Result<BlockedDriver<'e>> {
+        let lambda = match problem.reg {
+            Regularizer::L2 { lambda } => lambda as f32,
+            _ => anyhow::bail!("the blocked engine supports L2 regularization only"),
+        };
+        ensure!(
+            problem.loss == crate::loss::LossKind::Logistic,
+            "the blocked engine kernels implement the logistic loss"
+        );
+        let data = BlockedData::build(problem).context("blocking dataset for the dense engine")?;
+        let n = data.n;
+        let q = data.n_slabs; // the "workers" of the accounting
+        let eta = params.effective_eta(problem) as f32;
+        let m_inner = if params.m_inner == 0 { n } else { params.m_inner };
 
-    let mut trace = Trace::default();
-    let mut grads = 0u64;
-    let mut scalars = 0u64;
-    // closed-form wire accounting: the modeled payloads (margins, batch
-    // dots) are dense, so bytes = scalars × the codec's dense rate, and
-    // every modeled tree allreduce moves 2q messages
-    let bytes_per_scalar = params.wire.dense_bytes_per_scalar();
-    let mut messages = 0u64;
-    let assemble = |w: &[Vec<f32>]| -> Vec<f64> {
+        let mut driver = BlockedDriver {
+            name: format!("fdsvrg-{}", engine.name()),
+            problem: problem.clone(),
+            engine,
+            eta,
+            lambda,
+            m_inner,
+            // closed-form wire accounting: the modeled payloads (margins,
+            // batch dots) are dense, so bytes = scalars × the codec's
+            // dense rate, and every modeled tree allreduce moves 2q
+            // messages
+            bytes_per_scalar: params.wire.dense_bytes_per_scalar(),
+            w: vec![vec![0f32; BLOCK_D]; q],
+            z: vec![vec![0f32; BLOCK_D]; q],
+            margins: vec![0f32; data.n_blocks * BLOCK_N],
+            c0: vec![0f32; data.n_blocks * BLOCK_N],
+            rng: Pcg64::seed_from_u64(params.seed),
+            epoch: 0,
+            grads: 0,
+            scalars: 0,
+            messages: 0,
+            wall: Stopwatch::start(),
+            data,
+        };
+        if let Some(r) = resume {
+            if !r.is_fresh() {
+                ensure!(r.nodes.len() == 1, "blocked checkpoint carries exactly one node");
+                ensure!(r.w.len() == driver.data.d, "checkpoint dim mismatch");
+                let node = &r.nodes[0];
+                ensure!(node.extra.len() == 2, "blocked node extra = [scalars, messages]");
+                // f32 → f64 is exact, so the f64 checkpoint restores the
+                // f32 slabs bit-for-bit
+                for (l, wl) in driver.w.iter_mut().enumerate() {
+                    let lo = l * BLOCK_D;
+                    let hi = (lo + BLOCK_D).min(driver.data.d);
+                    for (j, src) in r.w[lo..hi].iter().enumerate() {
+                        wl[j] = *src as f32;
+                    }
+                }
+                driver.rng = Pcg64::from_state_words(
+                    node.rng.ok_or_else(|| anyhow::anyhow!("missing RNG state"))?,
+                );
+                driver.epoch = r.epoch;
+                driver.grads = r.grads;
+                driver.scalars = node.extra[0].to_bits();
+                driver.messages = node.extra[1].to_bits();
+            }
+        }
+        Ok(driver)
+    }
+
+    fn assemble(&self) -> Vec<f64> {
+        let d = self.data.d;
         let mut out = vec![0f64; d];
-        for (l, wl) in w.iter().enumerate() {
+        for (l, wl) in self.w.iter().enumerate() {
             let lo = l * BLOCK_D;
             let hi = (lo + BLOCK_D).min(d);
             for (j, o) in out[lo..hi].iter_mut().enumerate() {
@@ -135,41 +209,42 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
             }
         }
         out
-    };
-    trace.push(TracePoint {
-        outer: 0,
-        sim_time: 0.0,
-        wall_time: 0.0,
-        scalars: 0,
-        bytes: 0,
-        grads: 0,
-        objective: problem.objective(&assemble(&w)),
-    });
+    }
 
-    let mut rng = Pcg64::seed_from_u64(params.seed);
-    let mut margins = vec![0f32; data.n_blocks * BLOCK_N];
-    let mut c0 = vec![0f32; data.n_blocks * BLOCK_N];
+    fn node_state(&self) -> NodeState {
+        NodeState {
+            rng: Some(self.rng.state_words()),
+            clock: Default::default(),
+            extra: vec![f64::from_bits(self.scalars), f64::from_bits(self.messages)],
+        }
+    }
 
-    for t in 0..params.outer {
+    /// One outer iteration (full-gradient phase + inner loop in batches of
+    /// `BLOCK_U`). Engine kernels are assumed healthy mid-run; a kernel
+    /// failure here is a broken backend and panics with context.
+    fn epoch_body(&mut self) -> Result<()> {
+        let n = self.data.n;
+        let q = self.data.n_slabs;
+
         // ---- full-gradient phase (Alg. 1 lines 3–5) ----
-        margins.iter_mut().for_each(|v| *v = 0.0);
-        for (l, wl) in w.iter().enumerate() {
-            for b in 0..data.n_blocks {
-                let s = engine.partial_products(wl, &data.blocks[l][b])?;
+        self.margins.iter_mut().for_each(|v| *v = 0.0);
+        for (l, wl) in self.w.iter().enumerate() {
+            for b in 0..self.data.n_blocks {
+                let s = self.engine.partial_products(wl, &self.data.blocks[l][b])?;
                 for (j, sv) in s.iter().enumerate() {
-                    margins[b * BLOCK_N + j] += sv;
+                    self.margins[b * BLOCK_N + j] += sv;
                 }
             }
         }
-        scalars += 2 * q as u64 * n as u64; // one tree allreduce of N scalars
-        messages += 2 * q as u64;
+        self.scalars += 2 * q as u64 * n as u64; // one tree allreduce of N scalars
+        self.messages += 2 * q as u64;
         let inv_n = 1.0 / n as f32;
-        for zl in z.iter_mut() {
+        for zl in self.z.iter_mut() {
             zl.iter_mut().for_each(|v| *v = 0.0);
         }
-        for b in 0..data.n_blocks {
-            let mb = &margins[b * BLOCK_N..(b + 1) * BLOCK_N];
-            let coef = engine.logistic_coef(mb, &data.y_blocks[b])?;
+        for b in 0..self.data.n_blocks {
+            let mb = &self.margins[b * BLOCK_N..(b + 1) * BLOCK_N];
+            let coef = self.engine.logistic_coef(mb, &self.data.y_blocks[b])?;
             let lo = b * BLOCK_N;
             let valid = (n - lo).min(BLOCK_N);
             let c_scaled: Vec<f32> = coef
@@ -177,90 +252,117 @@ pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) ->
                 .enumerate()
                 .map(|(j, &v)| if j < valid { v * inv_n } else { 0.0 })
                 .collect();
-            c0[lo..lo + BLOCK_N].copy_from_slice(&coef);
-            for (l, zl) in z.iter_mut().enumerate() {
-                let zb = engine.coef_matvec(&data.blocks[l][b], &c_scaled)?;
+            self.c0[lo..lo + BLOCK_N].copy_from_slice(&coef);
+            for (l, zl) in self.z.iter_mut().enumerate() {
+                let zb = self.engine.coef_matvec(&self.data.blocks[l][b], &c_scaled)?;
                 for (zv, nv) in zl.iter_mut().zip(zb.iter()) {
                     *zv += nv;
                 }
             }
         }
-        grads += n as u64;
+        self.grads += n as u64;
 
         // ---- inner loop (lines 7–12), batches of BLOCK_U ----
         let mut m = 0usize;
-        while m < m_inner {
+        while m < self.m_inner {
             // uniform over instances: block ∝ size, then uniform within
-            let gi = rng.below(n);
+            let gi = self.rng.below(n);
             let b = gi / BLOCK_N;
             let valid = (n - b * BLOCK_N).min(BLOCK_N);
-            let idx: Vec<i32> = (0..BLOCK_U).map(|_| rng.below(valid) as i32).collect();
+            let idx: Vec<i32> = (0..BLOCK_U).map(|_| self.rng.below(valid) as i32).collect();
 
             // batch partial products, summed across slabs ("tree allreduce")
             let mut dots = vec![0f32; BLOCK_U];
-            for (l, wl) in w.iter().enumerate() {
-                let part = engine.batch_dots(wl, &data.blocks[l][b], &idx)?;
+            for (l, wl) in self.w.iter().enumerate() {
+                let part = self.engine.batch_dots(wl, &self.data.blocks[l][b], &idx)?;
                 for (dv, pv) in dots.iter_mut().zip(part.iter()) {
                     *dv += pv;
                 }
             }
-            scalars += 2 * q as u64 * BLOCK_U as u64;
-            messages += 2 * q as u64;
+            self.scalars += 2 * q as u64 * BLOCK_U as u64;
+            self.messages += 2 * q as u64;
 
             let yb: Vec<f32> =
-                idx.iter().map(|&i| data.y_blocks[b][i as usize]).collect();
+                idx.iter().map(|&i| self.data.y_blocks[b][i as usize]).collect();
             let c0b: Vec<f32> =
-                idx.iter().map(|&i| c0[b * BLOCK_N + i as usize]).collect();
-            for (l, wl) in w.iter_mut().enumerate() {
-                *wl = engine.batch_update(
+                idx.iter().map(|&i| self.c0[b * BLOCK_N + i as usize]).collect();
+            for (l, wl) in self.w.iter_mut().enumerate() {
+                *wl = self.engine.batch_update(
                     wl,
-                    &z[l],
-                    &data.blocks[l][b],
+                    &self.z[l],
+                    &self.data.blocks[l][b],
                     &idx,
                     &dots,
                     &yb,
                     &c0b,
-                    eta,
-                    lambda,
+                    self.eta,
+                    self.lambda,
                 )?;
             }
-            grads += BLOCK_U as u64;
+            self.grads += BLOCK_U as u64;
             m += BLOCK_U;
         }
+        Ok(())
+    }
+}
 
-        let objective = problem.objective(&assemble(&w));
-        trace.push(TracePoint {
-            outer: t + 1,
-            sim_time: wall.seconds(),
-            wall_time: wall.seconds(),
-            scalars,
-            bytes: bytes_per_scalar * scalars,
-            grads,
-            objective,
-        });
-        if let Some((f_opt, target)) = params.gap_stop {
-            if objective - f_opt <= target {
-                break;
-            }
+impl Driver for BlockedDriver<'_> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dataset(&self) -> &str {
+        &self.problem.ds.name
+    }
+
+    fn step(&mut self) -> EpochReport {
+        self.epoch_body().expect("compute engine failed mid-run");
+        self.epoch += 1;
+        EpochReport {
+            epoch: self.epoch,
+            w: self.assemble(),
+            grads: self.grads,
+            sim_time: self.wall.seconds(),
+            scalars: self.scalars,
+            bytes: self.bytes_per_scalar * self.scalars,
+            comm: Vec::new(),
+            nodes: vec![self.node_state()],
         }
     }
 
-    let w_final = assemble(&w);
-    let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
-    Ok(RunResult {
-        algorithm: format!("fdsvrg-{}", engine.name()),
-        dataset: problem.ds.name.clone(),
-        w: w_final,
-        trace,
-        total_sim_time,
-        total_wall_time: wall.seconds(),
-        total_scalars: scalars,
-        busiest_node_scalars: scalars / q.max(1) as u64,
-        total_bytes: bytes_per_scalar * scalars,
-        busiest_node_bytes: bytes_per_scalar * (scalars / q.max(1) as u64),
-        total_messages: messages,
-        node_comm: Vec::new(),
-    })
+    fn state(&self) -> ResumeState {
+        ResumeState {
+            epoch: self.epoch,
+            grads: self.grads,
+            w: self.assemble(),
+            comm: Vec::new(),
+            nodes: vec![self.node_state()],
+        }
+    }
+
+    fn finish(self: Box<Self>) -> FinishOut {
+        let q = self.data.n_slabs.max(1) as u64;
+        let totals = CommTotals {
+            total_scalars: self.scalars,
+            busiest_node_scalars: self.scalars / q,
+            total_bytes: self.bytes_per_scalar * self.scalars,
+            busiest_node_bytes: self.bytes_per_scalar * (self.scalars / q),
+            total_messages: self.messages,
+            node_comm: Vec::new(),
+        };
+        FinishOut { w: self.assemble(), totals }
+    }
+}
+
+/// Run FD-SVRG through a blocked compute engine — a thin wrapper riding
+/// [`BlockedDriver`] through the shared session runner (stop policies
+/// derived from `params`). Mini-batch size is pinned to the contract's
+/// `BLOCK_U`; `params.batch` is ignored.
+pub fn run(problem: &Problem, params: &RunParams, engine: &dyn ComputeEngine) -> Result<RunResult> {
+    let driver = BlockedDriver::new(problem, params, engine, None)?;
+    Ok(SessionBuilder::from_driver(Box::new(driver), problem, params.clone())
+        .build()?
+        .run_to_completion())
 }
 
 #[cfg(test)]

@@ -1,0 +1,282 @@
+//! Generic [`Driver`] over the thread-per-node cluster simulator.
+//!
+//! The simulator runs every node to completion on its own OS thread, so a
+//! steppable API needs the control flow inverted at epoch boundaries: the
+//! monitor node (coordinator / center / server 0 / ring leader) ends each
+//! epoch by sending an [`EpochReport`] through an [`EpochGate`] and
+//! blocking until the session answers with a [`Directive`]. `Continue`
+//! resumes the cluster for one more epoch (via the algorithms' existing
+//! uncounted CTRL flags to the other nodes); `Stop` winds it down. The
+//! gate rides plain channels, so it adds **zero** counted traffic and no
+//! simulated time — trajectories and counters are bit-identical to the
+//! old fire-and-forget loops.
+//!
+//! Every epoch report carries the full per-node resume state, so
+//! [`Driver::state`] works at *any* boundary without extra protocol. The
+//! copies this costs (uncounted, in-process) scale with the algorithm's
+//! state: O(q·d) for D-PSGD (each node's local `d`-vector), O(q·N + d)
+//! for FD-SAGA (every worker's copy of the `N`-scalar table), O(d) for
+//! the rest — paid per epoch, against the epoch's own O(N·nnz) compute,
+//! whether or not a checkpoint is ever taken. If a profile shows this,
+//! the CTRL reply has room for a "state wanted" flag to make shipping
+//! lazy.
+//!
+//! The cluster itself runs on one background runner thread (which hosts
+//! the scoped per-node threads), spawned lazily on the first
+//! [`Driver::step`] so a session stopped before any epoch never starts
+//! the cluster at all. Checkpoint/resume restarts the cluster from a
+//! [`ResumeState`]: comm counters are preloaded into [`CommStats`], each
+//! node's simulated clock (+ NIC horizons) is restored before its thread
+//! starts, and the per-node [`NodeState`]s (RNG words + algorithm extras)
+//! are handed to the algorithm's node function.
+
+use super::{Driver, EpochReport, FinishOut, NodeState, ResumeState};
+use crate::cluster::run_endpoints;
+use crate::metrics::CommTotals;
+use crate::net::{build, CommStats, Endpoint, NodeComm, SimParams};
+use anyhow::{ensure, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Session → cluster control word, answered to every epoch report.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Directive {
+    Continue,
+    Stop,
+}
+
+/// The monitor node's handle on the session: report an epoch boundary,
+/// block for the verdict. A disconnected session (dropped mid-run) reads
+/// as `Stop`, so the cluster always winds down cleanly.
+pub struct EpochGate {
+    tx: Sender<EpochReport>,
+    rx: Receiver<Directive>,
+}
+
+impl EpochGate {
+    pub fn exchange(&self, report: EpochReport) -> Directive {
+        if self.tx.send(report).is_err() {
+            return Directive::Stop;
+        }
+        self.rx.recv().unwrap_or(Directive::Stop)
+    }
+}
+
+/// Per-node context the generic runner hands to an algorithm's node
+/// function: the gate (taken once, by the monitor node) and the resume
+/// state (shared; nodes index [`ResumeState::nodes`] by their id).
+pub struct ClusterCtx {
+    gate: Mutex<Option<EpochGate>>,
+    pub resume: Option<Arc<ResumeState>>,
+}
+
+impl ClusterCtx {
+    /// Claim the gate — exactly one node (the monitor) may call this.
+    pub fn take_gate(&self) -> EpochGate {
+        self.gate.lock().unwrap().take().expect("epoch gate already taken by another node")
+    }
+
+    /// This node's resumable state, if resuming.
+    pub fn node_state(&self, id: usize) -> Option<&NodeState> {
+        self.resume.as_deref().and_then(|r| r.nodes.get(id))
+    }
+}
+
+/// The node function an algorithm registers: dispatches on `ep.id()` to
+/// its monitor/worker/server roles.
+pub type NodeFn = Arc<dyn Fn(Endpoint, &ClusterCtx) + Send + Sync>;
+
+struct Running {
+    reports: Receiver<EpochReport>,
+    directives: Sender<Directive>,
+    handle: JoinHandle<()>,
+}
+
+/// Generic cluster-backed [`Driver`]: owns the runner thread, the gate
+/// channels and the boundary state. Algorithm modules construct one via
+/// [`ClusterDriver::new`] with their node function; everything else
+/// (spawn, step protocol, state export, teardown) is shared.
+pub struct ClusterDriver {
+    name: String,
+    dataset: String,
+    n_nodes: usize,
+    sim: SimParams,
+    node_fn: NodeFn,
+    resume: Option<Arc<ResumeState>>,
+    /// Training state at the last epoch boundary (starts as the resume
+    /// state, or fresh).
+    last: ResumeState,
+    stats: Option<Arc<CommStats>>,
+    running: Option<Running>,
+}
+
+impl ClusterDriver {
+    /// `d` is the problem dimension (for the fresh initial `w`). When
+    /// resuming, the resume state must describe exactly this cluster
+    /// shape.
+    pub fn new(
+        name: &str,
+        dataset: &str,
+        n_nodes: usize,
+        d: usize,
+        sim: SimParams,
+        resume: Option<ResumeState>,
+        node_fn: NodeFn,
+    ) -> Result<ClusterDriver> {
+        let (resume, last) = match resume {
+            Some(r) if !r.is_fresh() => {
+                ensure!(
+                    r.nodes.len() == n_nodes,
+                    "checkpoint describes a {}-node cluster, run requests {n_nodes} \
+                     (resume needs the original q/servers shape)",
+                    r.nodes.len()
+                );
+                ensure!(r.w.len() == d, "checkpoint dim {} != problem dim {d}", r.w.len());
+                let last = r.clone();
+                (Some(Arc::new(r)), last)
+            }
+            _ => (None, ResumeState::fresh(d, n_nodes)),
+        };
+        Ok(ClusterDriver {
+            name: name.to_string(),
+            dataset: dataset.to_string(),
+            n_nodes,
+            sim,
+            node_fn,
+            resume,
+            last,
+            stats: None,
+            running: None,
+        })
+    }
+
+    fn spawn(&mut self) {
+        let (tx_rep, rx_rep) = channel::<EpochReport>();
+        let (tx_dir, rx_dir) = channel::<Directive>();
+        let ctx = Arc::new(ClusterCtx {
+            gate: Mutex::new(Some(EpochGate { tx: tx_rep, rx: rx_dir })),
+            resume: self.resume.clone(),
+        });
+        let (mut eps, stats) = build(self.n_nodes, self.sim);
+        if let Some(r) = self.resume.as_deref() {
+            stats.preload(&r.comm);
+            for ep in eps.iter_mut() {
+                ep.restore_clock_state(r.nodes[ep.id()].clock);
+            }
+        }
+        self.stats = Some(stats);
+        let node_fn = self.node_fn.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("session-{}", self.name))
+            .spawn(move || {
+                run_endpoints(eps, move |ep| node_fn(ep, &ctx));
+            })
+            .expect("spawn cluster runner thread");
+        self.running = Some(Running { reports: rx_rep, directives: tx_dir, handle });
+    }
+
+    /// Re-raise a cluster panic on the session thread with the runner's
+    /// payload (preserving the "node panicked: ..." message).
+    fn raise_cluster_failure(&mut self) -> ! {
+        if let Some(r) = self.running.take() {
+            match r.handle.join() {
+                Err(payload) => std::panic::resume_unwind(payload),
+                Ok(()) => panic!("cluster runner exited without reporting an epoch"),
+            }
+        }
+        panic!("cluster is not running");
+    }
+}
+
+impl Driver for ClusterDriver {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    fn step(&mut self) -> EpochReport {
+        if self.running.is_none() {
+            self.spawn(); // nodes start their first epoch immediately
+        } else if self.running.as_ref().unwrap().directives.send(Directive::Continue).is_err() {
+            self.raise_cluster_failure();
+        }
+        let received = self.running.as_ref().unwrap().reports.recv();
+        let report = match received {
+            Ok(rep) => rep,
+            Err(_) => self.raise_cluster_failure(),
+        };
+        self.last = ResumeState {
+            epoch: report.epoch,
+            grads: report.grads,
+            w: report.w.clone(),
+            comm: report.comm.clone(),
+            nodes: report.nodes.clone(),
+        };
+        report
+    }
+
+    fn state(&self) -> ResumeState {
+        self.last.clone()
+    }
+
+    fn finish(mut self: Box<Self>) -> FinishOut {
+        if let Some(r) = self.running.take() {
+            let _ = r.directives.send(Directive::Stop);
+            if let Err(payload) = r.handle.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        let totals = match &self.stats {
+            Some(st) => CommTotals::from_stats(st),
+            // never spawned: the counters are whatever the resume carried
+            None => CommTotals::from_node_comm(self.last.comm.clone()),
+        };
+        FinishOut { w: std::mem::take(&mut self.last.w), totals }
+    }
+}
+
+impl Drop for ClusterDriver {
+    fn drop(&mut self) {
+        // Session dropped without finish(): wind the cluster down rather
+        // than leaking node threads blocked on the gate.
+        if let Some(r) = self.running.take() {
+            let _ = r.directives.send(Directive::Stop);
+            let _ = r.handle.join(); // swallow panics — we're already unwinding
+        }
+    }
+}
+
+/// Helper the monitor nodes share: assemble the per-node state vector from
+/// the STATE eval messages of `peers` (own state goes at `own_id`).
+pub fn collect_node_states(
+    ep: &mut Endpoint,
+    own_id: usize,
+    own: NodeState,
+    peers: impl IntoIterator<Item = usize>,
+    n_nodes: usize,
+) -> Vec<NodeState> {
+    let mut nodes = vec![NodeState::default(); n_nodes];
+    nodes[own_id] = own;
+    for peer in peers {
+        let msg = ep.recv_eval_from(peer, crate::net::tags::STATE);
+        let buf = msg.to_vec(msg.scalars());
+        nodes[peer] = NodeState::unpack(&buf);
+    }
+    nodes
+}
+
+/// Helper the non-monitor nodes share: ship this node's resumable state to
+/// the monitor over the uncounted evaluation plane.
+pub fn send_node_state(ep: &mut Endpoint, monitor: usize, state: &NodeState) {
+    ep.send_eval(monitor, crate::net::tags::STATE, state.pack());
+}
+
+/// Snapshot helper for the monitor's report.
+pub fn comm_snapshot(ep: &Endpoint) -> (u64, u64, Vec<NodeComm>) {
+    let stats = ep.stats();
+    (stats.total_scalars(), stats.total_bytes(), stats.per_node())
+}

@@ -1,0 +1,723 @@
+//! Session layer — the steppable execution API every algorithm runs under.
+//!
+//! The paper's headline claims are *trajectories* (objective gap vs
+//! communication and vs time), and the ROADMAP's production north-star
+//! needs long-running jobs that can be observed, preempted and resumed.
+//! Both want the same thing from the algorithm layer: the outer epoch as
+//! the unit of work. This module provides it:
+//!
+//! * [`Driver`] — one outer epoch per [`Driver::step`], with
+//!   [`Driver::state`] exporting a full mid-run snapshot at the epoch
+//!   boundary. Implemented by all ten algorithms (the cluster ones through
+//!   [`cluster::ClusterDriver`], the serial pair in [`serial`], the
+//!   blocked dense trainer in [`crate::runtime::trainer`]).
+//! * [`Session`] / [`SessionBuilder`] — the shared outer loop: computes
+//!   the objective off the simulated clock, appends [`crate::metrics::Trace`]
+//!   points, notifies [`Observer`]s, and evaluates composable
+//!   [`StopPolicy`] values. This is the *single* copy of the per-epoch
+//!   trace/stop logic that used to be duplicated inside every algorithm.
+//! * [`SessionState`] — the durable snapshot (trace so far + per-node RNG
+//!   words, simulated clocks, comm counters, algorithm state) serialized
+//!   as the version-2 checkpoint format
+//!   ([`crate::checkpoint::SessionCheckpoint`]); a killed run restored
+//!   from it continues on the identical trajectory (bit-exact `w`, trace
+//!   and per-sender byte counters for the deterministic algorithms).
+//!
+//! `Algorithm::run` survives as a thin compatibility wrapper over
+//! [`Session::run_to_completion`], so the equivalence/convergence suites
+//! pin the refactor bit-exactly.
+
+pub mod cluster;
+pub mod serial;
+
+use crate::algs::{Algorithm, Problem, RunParams};
+use crate::metrics::{CommTotals, RunResult, Trace, TracePoint};
+use crate::net::{ClockState, NodeComm, WireFmt};
+use crate::util::time::Stopwatch;
+use anyhow::{ensure, Result};
+use std::path::PathBuf;
+
+/// What a completed epoch looked like — the typed payload every
+/// [`Observer`] receives and every [`StopPolicy`] is evaluated against.
+#[derive(Clone, Debug)]
+pub struct StepEvent {
+    /// Absolute outer-epoch index of the epoch that just completed
+    /// (continues across checkpoint/resume; first fresh epoch is 1).
+    pub epoch: usize,
+    /// Objective `f(w)` at the epoch boundary (computed off the simulated
+    /// clock by the session, not the cluster).
+    pub objective: f64,
+    /// Simulated cluster time at the monitor node, seconds.
+    pub sim_time: f64,
+    /// Host wall-clock of this session, seconds (contention-polluted).
+    pub wall_time: f64,
+    /// Cumulative stochastic-gradient evaluations.
+    pub grads: u64,
+    /// Cumulative communicated scalars (derived §4.5 view of `bytes`).
+    pub scalars: u64,
+    /// Cumulative wire bytes (canonical unit).
+    pub bytes: u64,
+    /// Per-sender counter snapshot ([`NodeComm`] per node id).
+    pub comm: Vec<NodeComm>,
+}
+
+/// One node's resumable state inside a [`ResumeState`]: the RNG stream (if
+/// the node owns one), the simulated clock, and whatever algorithm-specific
+/// payload the node needs beyond the shared parameter vector (SAGA's
+/// coefficient table, D-PSGD's local parameter copy, PS-Lite's step
+/// counter, ...).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeState {
+    pub rng: Option<[u64; 4]>,
+    pub clock: ClockState,
+    pub extra: Vec<f64>,
+}
+
+impl NodeState {
+    /// Flatten for the evaluation plane (uncounted, exact `f64`): layout
+    /// `[has_rng, rng0..rng3 (bit-cast), clock, nic_out, nic_in, extra...]`.
+    pub(crate) fn pack(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(8 + self.extra.len());
+        match self.rng {
+            Some(words) => {
+                v.push(1.0);
+                v.extend(words.iter().map(|&w| f64::from_bits(w)));
+            }
+            None => v.extend([0.0; 5]),
+        }
+        v.push(self.clock.clock);
+        v.push(self.clock.nic_out);
+        v.push(self.clock.nic_in);
+        v.extend_from_slice(&self.extra);
+        v
+    }
+
+    pub(crate) fn unpack(v: &[f64]) -> NodeState {
+        assert!(v.len() >= 8, "node state payload too short ({})", v.len());
+        let rng = if v[0] != 0.0 {
+            Some([v[1].to_bits(), v[2].to_bits(), v[3].to_bits(), v[4].to_bits()])
+        } else {
+            None
+        };
+        NodeState {
+            rng,
+            clock: ClockState { clock: v[5], nic_out: v[6], nic_in: v[7] },
+            extra: v[8..].to_vec(),
+        }
+    }
+}
+
+/// The training-state half of a session snapshot: everything a driver
+/// needs to continue a run at an epoch boundary. `nodes` is indexed by
+/// simulated node id; an empty `nodes` with `epoch == 0` means "fresh
+/// start".
+#[derive(Clone, Debug, Default)]
+pub struct ResumeState {
+    pub epoch: usize,
+    pub grads: u64,
+    /// Full assembled parameter vector at the boundary.
+    pub w: Vec<f64>,
+    /// Per-sender communication counters at the boundary.
+    pub comm: Vec<NodeComm>,
+    pub nodes: Vec<NodeState>,
+}
+
+impl ResumeState {
+    /// A fresh (never-stepped) state for a `d`-dimensional problem on an
+    /// `n_nodes` cluster.
+    pub fn fresh(d: usize, n_nodes: usize) -> ResumeState {
+        ResumeState {
+            epoch: 0,
+            grads: 0,
+            w: vec![0.0; d],
+            comm: vec![NodeComm::default(); n_nodes],
+            nodes: Vec::new(),
+        }
+    }
+
+    pub fn is_fresh(&self) -> bool {
+        self.nodes.is_empty() && self.epoch == 0
+    }
+}
+
+/// A full mid-run session snapshot — what [`Session::state`] exports and
+/// the version-2 checkpoint format serializes.
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    pub algorithm: String,
+    pub dataset: String,
+    pub lambda: f64,
+    /// Wire format of the run; a resume must use the same codec or the
+    /// byte counters (and f32/sparse trajectories) would diverge.
+    pub wire: WireFmt,
+    /// Trace accumulated so far (includes the epoch-0 point).
+    pub trace: Trace,
+    pub resume: ResumeState,
+}
+
+/// Raw per-epoch report a [`Driver`] returns from [`Driver::step`]: the
+/// session turns it into a [`StepEvent`] (adding the objective and wall
+/// time) and a trace point.
+#[derive(Clone, Debug)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub w: Vec<f64>,
+    pub grads: u64,
+    pub sim_time: f64,
+    pub scalars: u64,
+    pub bytes: u64,
+    pub comm: Vec<NodeComm>,
+    pub nodes: Vec<NodeState>,
+}
+
+/// Final accounting a [`Driver`] hands back when the run is finished.
+pub struct FinishOut {
+    pub w: Vec<f64>,
+    pub totals: CommTotals,
+}
+
+/// A steppable algorithm execution: one outer epoch per [`Driver::step`].
+///
+/// Restoration is by construction: [`SessionBuilder::resume`] routes a
+/// [`SessionState`] into the algorithm's driver constructor, which rebuilds
+/// every node from its [`NodeState`] (RNG stream, simulated clock,
+/// algorithm extras) and the shared [`ResumeState`] (`w`, epoch, counters).
+pub trait Driver {
+    /// Algorithm name as reported in results (e.g. `"fdsvrg"`).
+    fn name(&self) -> &str;
+    /// Dataset name as reported in results.
+    fn dataset(&self) -> &str;
+    /// Advance exactly one outer epoch and report the boundary.
+    fn step(&mut self) -> EpochReport;
+    /// Export the resumable training state at the last epoch boundary.
+    fn state(&self) -> ResumeState;
+    /// Stop the run (terminating any cluster nodes) and return the final
+    /// parameter vector plus communication totals.
+    fn finish(self: Box<Self>) -> FinishOut;
+}
+
+/// Composable stopping rules, evaluated by the session after every epoch.
+/// These subsume the old ad-hoc `gap_stop`/`sim_time_cap` fields of
+/// [`RunParams`] (which are still translated into the equivalent policies
+/// for compatibility).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopPolicy {
+    /// Stop once the absolute epoch index reaches `max` (a resumed run
+    /// counts the epochs done before the checkpoint).
+    MaxEpochs(usize),
+    /// Stop once `objective − f_opt ≤ target` (paper's gap-based stop).
+    GapReached { f_opt: f64, target: f64 },
+    /// Stop once the simulated clock passes this many seconds (the
+    /// ">1000s" rows of the paper's Table 3).
+    SimTimeCap(f64),
+    /// Stop after `epochs` consecutive epochs without improving the best
+    /// objective by at least `min_delta` (plateau detection).
+    Patience { epochs: usize, min_delta: f64 },
+}
+
+/// Runtime wrapper pairing a policy with its evaluation state (only
+/// `Patience` carries any).
+struct PolicyRt {
+    spec: StopPolicy,
+    best: f64,
+    since: usize,
+}
+
+impl PolicyRt {
+    fn new(spec: StopPolicy) -> PolicyRt {
+        PolicyRt { spec, best: f64::INFINITY, since: 0 }
+    }
+
+    /// Evaluate against a completed epoch; returns true to stop.
+    fn fires(&mut self, ev: &StepEvent) -> bool {
+        match self.spec {
+            StopPolicy::MaxEpochs(max) => ev.epoch >= max,
+            StopPolicy::GapReached { f_opt, target } => ev.objective - f_opt <= target,
+            StopPolicy::SimTimeCap(cap) => ev.sim_time >= cap,
+            StopPolicy::Patience { epochs, min_delta } => {
+                if ev.objective < self.best - min_delta {
+                    self.best = ev.objective;
+                    self.since = 0;
+                } else {
+                    self.since += 1;
+                }
+                self.since >= epochs
+            }
+        }
+    }
+}
+
+/// Read-only view of the running session handed to observers, with enough
+/// access to export a full checkpoint ([`SessionView::state`]).
+pub struct SessionView<'a> {
+    driver: &'a dyn Driver,
+    trace: &'a Trace,
+    lambda: f64,
+    wire: WireFmt,
+}
+
+impl SessionView<'_> {
+    pub fn trace(&self) -> &Trace {
+        self.trace
+    }
+
+    /// Export the full session snapshot at the current epoch boundary.
+    pub fn state(&self) -> SessionState {
+        SessionState {
+            algorithm: self.driver.name().to_string(),
+            dataset: self.driver.dataset().to_string(),
+            lambda: self.lambda,
+            wire: self.wire,
+            trace: self.trace.clone(),
+            resume: self.driver.state(),
+        }
+    }
+}
+
+/// Typed per-epoch callback. Observers see every completed epoch exactly
+/// once, in order, after the trace point is appended and before stop
+/// policies are evaluated.
+pub trait Observer {
+    fn on_epoch(&mut self, ev: &StepEvent, session: &SessionView<'_>);
+}
+
+/// Adapter so plain closures work as observers (ignoring the view):
+/// `builder.observe(FnObserver(|ev| ...))`.
+pub struct FnObserver<F: FnMut(&StepEvent)>(pub F);
+
+impl<F: FnMut(&StepEvent)> Observer for FnObserver<F> {
+    fn on_epoch(&mut self, ev: &StepEvent, _session: &SessionView<'_>) {
+        (self.0)(ev)
+    }
+}
+
+/// Observer that writes a version-2 session checkpoint every `every`
+/// epochs. Epochs that are not multiples of `every` are skipped — callers
+/// that need the final state on disk regardless (the CLI does) write one
+/// more checkpoint from [`Session::state`] after the run ends.
+pub struct CheckpointObserver {
+    path: PathBuf,
+    every: usize,
+}
+
+impl CheckpointObserver {
+    pub fn new(path: impl Into<PathBuf>, every: usize) -> CheckpointObserver {
+        CheckpointObserver { path, every: every.max(1) }
+    }
+}
+
+impl Observer for CheckpointObserver {
+    fn on_epoch(&mut self, ev: &StepEvent, session: &SessionView<'_>) {
+        if ev.epoch % self.every != 0 {
+            return;
+        }
+        let ckpt = crate::checkpoint::SessionCheckpoint::new(session.state());
+        if let Err(e) = ckpt.save(&self.path) {
+            crate::util::logger::log(
+                crate::util::logger::Level::Warn,
+                format_args!("checkpoint write failed at epoch {}: {e:#}", ev.epoch),
+            );
+        }
+    }
+}
+
+/// Builder for a [`Session`]: problem + params + observers + stop policies
+/// (+ optional resume state). This replaces direct `run()` calls as the
+/// way algorithm executions are configured.
+pub struct SessionBuilder<'d> {
+    algo: Option<Algorithm>,
+    driver: Option<Box<dyn Driver + 'd>>,
+    problem: Problem,
+    params: RunParams,
+    observers: Vec<Box<dyn Observer + 'd>>,
+    policies: Vec<StopPolicy>,
+    default_policies: bool,
+    resume: Option<SessionState>,
+}
+
+impl<'d> SessionBuilder<'d> {
+    /// Session for one of the named algorithms.
+    pub fn new(algo: Algorithm, problem: &Problem, params: RunParams) -> SessionBuilder<'d> {
+        SessionBuilder {
+            algo: Some(algo),
+            driver: None,
+            problem: problem.clone(),
+            params,
+            observers: Vec::new(),
+            policies: Vec::new(),
+            default_policies: true,
+            resume: None,
+        }
+    }
+
+    /// Session over a caller-provided driver (the blocked dense trainer
+    /// uses this to ride the same runner).
+    pub fn from_driver(
+        driver: Box<dyn Driver + 'd>,
+        problem: &Problem,
+        params: RunParams,
+    ) -> SessionBuilder<'d> {
+        SessionBuilder {
+            algo: None,
+            driver: Some(driver),
+            problem: problem.clone(),
+            params,
+            observers: Vec::new(),
+            policies: Vec::new(),
+            default_policies: true,
+            resume: None,
+        }
+    }
+
+    /// Attach a per-epoch observer.
+    pub fn observe(mut self, o: impl Observer + 'd) -> Self {
+        self.observers.push(Box::new(o));
+        self
+    }
+
+    /// Add a stop policy (composable; the run stops when *any* fires).
+    pub fn stop_when(mut self, p: StopPolicy) -> Self {
+        self.policies.push(p);
+        self
+    }
+
+    /// Drop the policies derived from `RunParams` (`MaxEpochs(outer)`,
+    /// `gap_stop`, `sim_time_cap`) — the caller provides all of them.
+    pub fn explicit_policies_only(mut self) -> Self {
+        self.default_policies = false;
+        self
+    }
+
+    /// Resume from a mid-run snapshot (a version-2 checkpoint). The
+    /// session continues the trace and counters; `MaxEpochs` counts
+    /// absolute epochs, so `outer` means "total epochs including the ones
+    /// before the checkpoint".
+    pub fn resume(mut self, state: SessionState) -> Self {
+        self.resume = Some(state);
+        self
+    }
+
+    /// Validate and construct the session. Fresh sessions cannot fail;
+    /// resumes are validated against the problem and params.
+    pub fn build(self) -> Result<Session<'d>> {
+        let SessionBuilder {
+            algo,
+            driver,
+            problem,
+            params,
+            observers,
+            policies,
+            default_policies,
+            resume,
+        } = self;
+        let d = problem.d();
+        let (resume_state, mut trace) = match resume {
+            Some(st) => {
+                if let Some(a) = algo {
+                    ensure!(
+                        st.algorithm == a.name(),
+                        "checkpoint is for algorithm {:?}, not {:?}",
+                        st.algorithm,
+                        a.name()
+                    );
+                }
+                ensure!(
+                    st.dataset == problem.ds.name,
+                    "checkpoint is for dataset {:?}, not {:?}",
+                    st.dataset,
+                    problem.ds.name
+                );
+                ensure!(
+                    st.resume.w.len() == d,
+                    "checkpoint dim {} does not match problem dim {d}",
+                    st.resume.w.len()
+                );
+                ensure!(
+                    st.wire == params.wire,
+                    "checkpoint was taken under the {} wire, run requests {}",
+                    st.wire.name(),
+                    params.wire.name()
+                );
+                ensure!(!st.trace.points.is_empty(), "checkpoint carries an empty trace");
+                let last = st.trace.points.last().unwrap();
+                ensure!(
+                    last.outer == st.resume.epoch,
+                    "checkpoint trace ends at epoch {} but state is at epoch {}",
+                    last.outer,
+                    st.resume.epoch
+                );
+                (Some(st.resume), st.trace)
+            }
+            None => (None, Trace::default()),
+        };
+
+        let driver: Box<dyn Driver + 'd> = match driver {
+            Some(dr) => dr,
+            None => {
+                let a = algo.expect("builder has either an algorithm or a driver");
+                a.make_driver(&problem, &params, resume_state)?
+            }
+        };
+
+        // Fresh sessions record the epoch-0 point (objective at the
+        // initial parameter) exactly like every algorithm used to.
+        if trace.points.is_empty() {
+            let w0 = driver.state().w;
+            trace.push(TracePoint {
+                outer: 0,
+                sim_time: 0.0,
+                wall_time: 0.0,
+                scalars: 0,
+                bytes: 0,
+                grads: 0,
+                objective: problem.objective(&w0),
+            });
+        }
+
+        let mut all_policies: Vec<PolicyRt> = Vec::new();
+        if default_policies {
+            all_policies.push(PolicyRt::new(StopPolicy::MaxEpochs(params.outer)));
+            if let Some((f_opt, target)) = params.gap_stop {
+                all_policies.push(PolicyRt::new(StopPolicy::GapReached { f_opt, target }));
+            }
+            if let Some(cap) = params.sim_time_cap {
+                all_policies.push(PolicyRt::new(StopPolicy::SimTimeCap(cap)));
+            }
+        }
+        all_policies.extend(policies.into_iter().map(PolicyRt::new));
+
+        let lambda = problem.reg.lambda();
+        Ok(Session {
+            driver,
+            problem,
+            observers,
+            policies: all_policies,
+            trace,
+            lambda,
+            wire: params.wire,
+            wall: Stopwatch::start(),
+            stop_requested: false,
+        })
+    }
+}
+
+/// A running (steppable) algorithm execution. Construct with
+/// [`SessionBuilder`]; drive with [`Session::step`] or
+/// [`Session::run_to_completion`].
+pub struct Session<'d> {
+    driver: Box<dyn Driver + 'd>,
+    problem: Problem,
+    observers: Vec<Box<dyn Observer + 'd>>,
+    policies: Vec<PolicyRt>,
+    trace: Trace,
+    lambda: f64,
+    wire: WireFmt,
+    wall: Stopwatch,
+    stop_requested: bool,
+}
+
+impl<'d> Session<'d> {
+    /// Completed-epoch count so far (absolute; includes pre-resume epochs).
+    pub fn epoch(&self) -> usize {
+        self.trace.points.last().map(|p| p.outer).unwrap_or(0)
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Whether a stop policy has fired (or `MaxEpochs` is already met).
+    /// `run_to_completion` steps until this returns true.
+    pub fn should_stop(&self) -> bool {
+        if self.stop_requested {
+            return true;
+        }
+        // MaxEpochs can be satisfied before any step (outer = 0, or a
+        // resume at/past the target) — evaluate it against the trace tail.
+        let epoch = self.epoch();
+        self.policies.iter().any(|p| matches!(p.spec, StopPolicy::MaxEpochs(max) if epoch >= max))
+    }
+
+    /// Advance exactly one outer epoch: runs the driver, appends the trace
+    /// point, notifies observers (each epoch exactly once), and evaluates
+    /// stop policies.
+    pub fn step(&mut self) -> StepEvent {
+        let report = self.driver.step();
+        let objective = self.problem.objective(&report.w);
+        let ev = StepEvent {
+            epoch: report.epoch,
+            objective,
+            sim_time: report.sim_time,
+            wall_time: self.wall.seconds(),
+            grads: report.grads,
+            scalars: report.scalars,
+            bytes: report.bytes,
+            comm: report.comm,
+        };
+        self.trace.push(TracePoint {
+            outer: ev.epoch,
+            sim_time: ev.sim_time,
+            wall_time: ev.wall_time,
+            scalars: ev.scalars,
+            bytes: ev.bytes,
+            grads: ev.grads,
+            objective: ev.objective,
+        });
+        let Session { driver, trace, observers, lambda, wire, .. } = self;
+        let view = SessionView { driver: driver.as_ref(), trace, lambda: *lambda, wire: *wire };
+        for o in observers.iter_mut() {
+            o.on_epoch(&ev, &view);
+        }
+        // evaluate every policy (no short-circuit: Patience must see each
+        // epoch to track its plateau counter)
+        let mut stop = false;
+        for p in self.policies.iter_mut() {
+            stop |= p.fires(&ev);
+        }
+        if stop {
+            self.stop_requested = true;
+        }
+        ev
+    }
+
+    /// Export the full session snapshot at the current epoch boundary.
+    pub fn state(&self) -> SessionState {
+        SessionState {
+            algorithm: self.driver.name().to_string(),
+            dataset: self.driver.dataset().to_string(),
+            lambda: self.lambda,
+            wire: self.wire,
+            trace: self.trace.clone(),
+            resume: self.driver.state(),
+        }
+    }
+
+    /// Stop the run and assemble the final [`RunResult`].
+    pub fn finish(self) -> RunResult {
+        let Session { driver, trace, wall, .. } = self;
+        let name = driver.name().to_string();
+        let dataset = driver.dataset().to_string();
+        let out = driver.finish();
+        let total_sim_time = trace.points.last().map(|p| p.sim_time).unwrap_or(0.0);
+        let wall_s = wall.seconds();
+        RunResult::from_totals(&name, &dataset, out.w, trace, total_sim_time, wall_s, out.totals)
+    }
+
+    /// The fire-and-forget path `Algorithm::run` wraps: step until a stop
+    /// policy fires, then finish.
+    pub fn run_to_completion(mut self) -> RunResult {
+        while !self.should_stop() {
+            self.step();
+        }
+        self.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, GenSpec};
+    use crate::net::SimParams;
+
+    fn tiny_problem() -> Problem {
+        let ds = generate(&GenSpec::new("t", 150, 60, 10).with_seed(17));
+        Problem::logistic_l2(ds, 1e-2)
+    }
+
+    fn fast_params(q: usize, outer: usize) -> RunParams {
+        RunParams { q, outer, sim: SimParams::free(), ..Default::default() }
+    }
+
+    #[test]
+    fn session_runs_are_deterministic_across_invocations() {
+        // Two independently built sessions over the same seed/params must
+        // agree bit-for-bit (thread scheduling of the cluster must not
+        // leak into the numerics). The session-vs-historical-loop pinning
+        // itself lives in the equivalence/convergence/comm-accounting
+        // suites, whose expectations predate the session layer.
+        let p = tiny_problem();
+        let params = fast_params(3, 4);
+        let a = Algorithm::FdSvrg.run(&p, &params);
+        let b = SessionBuilder::new(Algorithm::FdSvrg, &p, params)
+            .build()
+            .unwrap()
+            .run_to_completion();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.total_scalars, b.total_scalars);
+        assert_eq!(a.trace.points.len(), b.trace.points.len());
+    }
+
+    #[test]
+    fn observers_see_every_epoch_exactly_once() {
+        let p = tiny_problem();
+        let outer = 5;
+        let seen = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        struct Collect(std::rc::Rc<std::cell::RefCell<Vec<usize>>>);
+        impl Observer for Collect {
+            fn on_epoch(&mut self, ev: &StepEvent, _s: &SessionView<'_>) {
+                self.0.borrow_mut().push(ev.epoch);
+            }
+        }
+        let session = SessionBuilder::new(Algorithm::FdSvrg, &p, fast_params(2, outer))
+            .observe(Collect(seen.clone()))
+            .build()
+            .unwrap();
+        let _ = session.run_to_completion();
+        assert_eq!(*seen.borrow(), (1..=outer).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn patience_fires_on_plateau() {
+        // Serial SGD with a big min_delta plateaus immediately: Patience
+        // must end the run before MaxEpochs.
+        let p = tiny_problem();
+        let res = SessionBuilder::new(Algorithm::SerialSgd, &p, fast_params(1, 50))
+            .stop_when(StopPolicy::Patience { epochs: 3, min_delta: 10.0 })
+            .build()
+            .unwrap()
+            .run_to_completion();
+        // epoch 0 point + 3 patience epochs
+        assert_eq!(res.trace.points.len(), 4, "{:?}", res.trace.points.len());
+    }
+
+    #[test]
+    fn max_epochs_zero_runs_no_epochs() {
+        let p = tiny_problem();
+        let res = SessionBuilder::new(Algorithm::FdSvrg, &p, fast_params(2, 0))
+            .build()
+            .unwrap()
+            .run_to_completion();
+        assert_eq!(res.trace.points.len(), 1); // the epoch-0 point only
+        assert_eq!(res.total_scalars, 0);
+    }
+
+    #[test]
+    fn manual_stepping_exposes_state() {
+        let p = tiny_problem();
+        let mut session =
+            SessionBuilder::new(Algorithm::FdSvrg, &p, fast_params(2, 10)).build().unwrap();
+        let e1 = session.step();
+        assert_eq!(e1.epoch, 1);
+        let st = session.state();
+        assert_eq!(st.resume.epoch, 1);
+        assert_eq!(st.resume.w.len(), p.d());
+        assert_eq!(st.algorithm, "fdsvrg");
+        let e2 = session.step();
+        assert_eq!(e2.epoch, 2);
+        assert!(e2.scalars > e1.scalars);
+        let res = session.finish();
+        assert_eq!(res.trace.points.len(), 3);
+    }
+
+    #[test]
+    fn node_state_pack_round_trips() {
+        let st = NodeState {
+            rng: Some([1, u64::MAX, 0x8000_0000_0000_0000, 42]),
+            clock: ClockState { clock: 1.5, nic_out: 2.5, nic_in: 0.25 },
+            extra: vec![3.0, -4.0],
+        };
+        assert_eq!(NodeState::unpack(&st.pack()), st);
+        let none = NodeState { rng: None, clock: ClockState::default(), extra: vec![] };
+        assert_eq!(NodeState::unpack(&none.pack()), none);
+    }
+}

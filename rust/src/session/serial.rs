@@ -1,0 +1,184 @@
+//! [`Driver`] implementations for the serial baselines (single node, no
+//! cluster): one outer iteration per [`Driver::step`], resumable from the
+//! checkpointed RNG words + parameter vector.
+
+use super::{Driver, EpochReport, FinishOut, NodeState, ResumeState};
+use crate::algs::serial::{sgd_epoch, svrg_epoch, SgdState, SvrgOption, SvrgState};
+use crate::algs::{Problem, RunParams};
+use crate::metrics::CommTotals;
+use anyhow::{ensure, Result};
+
+/// Serial SVRG (Option I — the `Algorithm::SerialSvrg` dispatch) as a
+/// steppable driver.
+pub struct SerialSvrgDriver {
+    problem: Problem,
+    eta: f64,
+    m_inner: usize,
+    option: SvrgOption,
+    st: SvrgState,
+    epoch: usize,
+    grads: u64,
+}
+
+impl SerialSvrgDriver {
+    pub fn new(
+        problem: &Problem,
+        params: &RunParams,
+        resume: Option<ResumeState>,
+    ) -> Result<SerialSvrgDriver> {
+        let eta = params.effective_eta(problem);
+        let (st, epoch, grads) = match resume {
+            Some(r) if !r.is_fresh() => {
+                ensure!(r.nodes.len() == 1, "serial checkpoint must carry exactly one node");
+                let node = &r.nodes[0];
+                let sample = node.rng.ok_or_else(|| anyhow::anyhow!("missing RNG state"))?;
+                ensure!(node.extra.len() == 4, "serial-svrg node extra must hold the option RNG");
+                let option = [
+                    node.extra[0].to_bits(),
+                    node.extra[1].to_bits(),
+                    node.extra[2].to_bits(),
+                    node.extra[3].to_bits(),
+                ];
+                (SvrgState::restore(problem, r.w, sample, option), r.epoch, r.grads)
+            }
+            _ => (SvrgState::fresh(problem, params.seed), 0, 0),
+        };
+        Ok(SerialSvrgDriver {
+            problem: problem.clone(),
+            eta,
+            m_inner: params.m_inner,
+            option: SvrgOption::I,
+            st,
+            epoch,
+            grads,
+        })
+    }
+}
+
+impl Driver for SerialSvrgDriver {
+    fn name(&self) -> &str {
+        "serial-svrg"
+    }
+
+    fn dataset(&self) -> &str {
+        &self.problem.ds.name
+    }
+
+    fn step(&mut self) -> EpochReport {
+        self.grads += svrg_epoch(&self.problem, self.eta, self.m_inner, self.option, &mut self.st);
+        self.epoch += 1;
+        EpochReport {
+            epoch: self.epoch,
+            w: self.st.w.clone(),
+            grads: self.grads,
+            sim_time: 0.0,
+            scalars: 0,
+            bytes: 0,
+            comm: Vec::new(),
+            nodes: vec![self.node_state()],
+        }
+    }
+
+    fn state(&self) -> ResumeState {
+        ResumeState {
+            epoch: self.epoch,
+            grads: self.grads,
+            w: self.st.w.clone(),
+            comm: Vec::new(),
+            nodes: vec![self.node_state()],
+        }
+    }
+
+    fn finish(self: Box<Self>) -> FinishOut {
+        FinishOut { w: self.st.w, totals: CommTotals::default() }
+    }
+}
+
+impl SerialSvrgDriver {
+    fn node_state(&self) -> NodeState {
+        NodeState {
+            rng: Some(self.st.sample_rng.state_words()),
+            clock: Default::default(),
+            extra: self.st.option_rng.state_words().iter().map(|&w| f64::from_bits(w)).collect(),
+        }
+    }
+}
+
+/// Serial SGD (with the `Algorithm::run` decay `1/N`) as a steppable
+/// driver.
+pub struct SerialSgdDriver {
+    problem: Problem,
+    eta0: f64,
+    decay: f64,
+    st: SgdState,
+    epoch: usize,
+}
+
+impl SerialSgdDriver {
+    pub fn new(
+        problem: &Problem,
+        params: &RunParams,
+        resume: Option<ResumeState>,
+    ) -> Result<SerialSgdDriver> {
+        let eta0 = params.effective_eta(problem);
+        let decay = 1.0 / problem.n() as f64;
+        let (st, epoch) = match resume {
+            Some(r) if !r.is_fresh() => {
+                ensure!(r.nodes.len() == 1, "serial checkpoint must carry exactly one node");
+                let node = &r.nodes[0];
+                let rng = node.rng.ok_or_else(|| anyhow::anyhow!("missing RNG state"))?;
+                ensure!(node.extra.len() == 1, "serial-sgd node extra must hold the step counter");
+                (SgdState::restore(r.w, rng, node.extra[0] as u64), r.epoch)
+            }
+            _ => (SgdState::fresh(problem, params.seed), 0),
+        };
+        Ok(SerialSgdDriver { problem: problem.clone(), eta0, decay, st, epoch })
+    }
+
+    fn node_state(&self) -> NodeState {
+        NodeState {
+            rng: Some(self.st.rng.state_words()),
+            clock: Default::default(),
+            extra: vec![self.st.step as f64],
+        }
+    }
+}
+
+impl Driver for SerialSgdDriver {
+    fn name(&self) -> &str {
+        "serial-sgd"
+    }
+
+    fn dataset(&self) -> &str {
+        &self.problem.ds.name
+    }
+
+    fn step(&mut self) -> EpochReport {
+        sgd_epoch(&self.problem, self.eta0, self.decay, &mut self.st);
+        self.epoch += 1;
+        EpochReport {
+            epoch: self.epoch,
+            w: self.st.w.clone(),
+            grads: self.st.step,
+            sim_time: 0.0,
+            scalars: 0,
+            bytes: 0,
+            comm: Vec::new(),
+            nodes: vec![self.node_state()],
+        }
+    }
+
+    fn state(&self) -> ResumeState {
+        ResumeState {
+            epoch: self.epoch,
+            grads: self.st.step,
+            w: self.st.w.clone(),
+            comm: Vec::new(),
+            nodes: vec![self.node_state()],
+        }
+    }
+
+    fn finish(self: Box<Self>) -> FinishOut {
+        FinishOut { w: self.st.w, totals: CommTotals::default() }
+    }
+}

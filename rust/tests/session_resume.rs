@@ -1,0 +1,301 @@
+//! Session-layer integration: mid-run checkpoint → restore → continue must
+//! reproduce the uninterrupted run, and the composable stop policies must
+//! reproduce the historical `gap_stop`/`sim_time_cap` behaviour exactly.
+//!
+//! Bit-exactness is asserted for the deterministic distributed algorithms
+//! (FD-SVRG, DSVRG, SynSVRG): same `w`, same trace points (deterministic
+//! fields — `sim_time`/`wall_time` carry measured thread-CPU noise and are
+//! not reproducible even between two *uninterrupted* runs), same per-sender
+//! byte counters. AsySVRG and PS-Lite race by design, so their resumes are
+//! checked for valid continuation instead.
+
+use fdsvrg::algs::{Algorithm, Problem, RunParams};
+use fdsvrg::checkpoint::{load_any, Checkpoint, Loaded, SessionCheckpoint};
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::metrics::{RunResult, Trace};
+use fdsvrg::net::SimParams;
+use fdsvrg::session::{SessionBuilder, SessionState, StopPolicy};
+
+fn tiny() -> Problem {
+    let ds = generate(&GenSpec::new("sess", 150, 64, 10).with_seed(41));
+    Problem::logistic_l2(ds, 1e-2)
+}
+
+fn fast_params(q: usize, outer: usize) -> RunParams {
+    RunParams { q, outer, sim: SimParams::free(), ..Default::default() }
+}
+
+/// Step a fresh session `k` epochs, export its state, and wind it down.
+fn checkpoint_after(algo: Algorithm, p: &Problem, params: &RunParams, k: usize) -> SessionState {
+    let mut session = SessionBuilder::new(algo, p, params.clone()).build().unwrap();
+    for _ in 0..k {
+        session.step();
+    }
+    session.state()
+}
+
+/// Compare the deterministic trace fields (everything but the measured
+/// clocks) point by point.
+fn assert_traces_equal(a: &Trace, b: &Trace, tag: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{tag}: trace lengths differ");
+    for (i, (pa, pb)) in a.points.iter().zip(b.points.iter()).enumerate() {
+        assert_eq!(pa.outer, pb.outer, "{tag}: point {i} outer");
+        assert_eq!(pa.scalars, pb.scalars, "{tag}: point {i} scalars");
+        assert_eq!(pa.bytes, pb.bytes, "{tag}: point {i} bytes");
+        assert_eq!(pa.grads, pb.grads, "{tag}: point {i} grads");
+        assert_eq!(
+            pa.objective.to_bits(),
+            pb.objective.to_bits(),
+            "{tag}: point {i} objective {:.17e} vs {:.17e}",
+            pa.objective,
+            pb.objective
+        );
+    }
+}
+
+fn assert_runs_identical(straight: &RunResult, resumed: &RunResult, tag: &str) {
+    assert_eq!(straight.w.len(), resumed.w.len(), "{tag}: dim");
+    for (i, (a, b)) in straight.w.iter().zip(resumed.w.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: w[{i}] {a:.17e} vs {b:.17e}");
+    }
+    assert_traces_equal(&straight.trace, &resumed.trace, tag);
+    assert_eq!(straight.total_scalars, resumed.total_scalars, "{tag}: total scalars");
+    assert_eq!(straight.total_bytes, resumed.total_bytes, "{tag}: total bytes");
+    assert_eq!(straight.total_messages, resumed.total_messages, "{tag}: total messages");
+    assert_eq!(straight.node_comm, resumed.node_comm, "{tag}: per-sender counters");
+}
+
+/// Run `outer` epochs straight vs `outer/2` + checkpoint (through the v2
+/// *byte format*, not just the in-memory state) + restore + the rest.
+fn resume_equivalence(algo: Algorithm, params: RunParams) {
+    let p = tiny();
+    let outer = params.outer;
+    let straight = SessionBuilder::new(algo, &p, params.clone())
+        .build()
+        .unwrap()
+        .run_to_completion();
+
+    let st = checkpoint_after(algo, &p, &params, outer / 2);
+    assert_eq!(st.resume.epoch, outer / 2);
+    // full serialization round-trip so the wire format itself is on trial
+    let bytes = SessionCheckpoint::new(st).to_bytes();
+    let restored = SessionCheckpoint::from_bytes(&bytes).unwrap().state;
+    let resumed = SessionBuilder::new(algo, &p, params)
+        .resume(restored)
+        .build()
+        .unwrap()
+        .run_to_completion();
+
+    assert_runs_identical(&straight, &resumed, algo.name());
+}
+
+#[test]
+fn fdsvrg_resume_is_bit_exact() {
+    resume_equivalence(Algorithm::FdSvrg, fast_params(4, 6));
+}
+
+#[test]
+fn fdsvrg_resume_is_bit_exact_minibatch_lazy() {
+    let mut params = fast_params(3, 6);
+    params.batch = 8;
+    params.lazy = true;
+    resume_equivalence(Algorithm::FdSvrg, params);
+}
+
+#[test]
+fn fdsvrg_resume_is_bit_exact_under_costed_network() {
+    // default SimParams: the restored clocks/NIC horizons and preloaded
+    // counters must line up, not just the free-network numerics
+    let mut params = fast_params(4, 6);
+    params.sim = SimParams::default();
+    resume_equivalence(Algorithm::FdSvrg, params);
+}
+
+#[test]
+fn dsvrg_resume_is_bit_exact() {
+    // odd split: the round-robin duty rotation must continue mid-cycle
+    let p = tiny();
+    let params = fast_params(3, 7);
+    let straight = SessionBuilder::new(Algorithm::Dsvrg, &p, params.clone())
+        .build()
+        .unwrap()
+        .run_to_completion();
+    let st = checkpoint_after(Algorithm::Dsvrg, &p, &params, 3);
+    let bytes = SessionCheckpoint::new(st).to_bytes();
+    let restored = SessionCheckpoint::from_bytes(&bytes).unwrap().state;
+    let resumed = SessionBuilder::new(Algorithm::Dsvrg, &p, params)
+        .resume(restored)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_runs_identical(&straight, &resumed, "dsvrg");
+}
+
+#[test]
+fn synsvrg_resume_is_bit_exact() {
+    let mut params = fast_params(4, 6);
+    params.servers = 2;
+    resume_equivalence(Algorithm::SynSvrg, params);
+}
+
+#[test]
+fn fdsaga_and_serial_resumes_are_bit_exact() {
+    // beyond the ALL_DISTRIBUTED pin: SAGA's table state and the serial
+    // drivers' RNG words restore exactly too
+    resume_equivalence(Algorithm::FdSaga, fast_params(3, 6));
+    resume_equivalence(Algorithm::SerialSvrg, fast_params(1, 6));
+    resume_equivalence(Algorithm::SerialSgd, fast_params(1, 6));
+}
+
+#[test]
+fn dpsgd_resume_is_bit_exact() {
+    resume_equivalence(Algorithm::DPsgd, fast_params(3, 6));
+}
+
+#[test]
+fn asysvrg_resume_continues_validly() {
+    // races by design ⇒ no bit-exactness; the resume must still produce a
+    // monotone, finite continuation with the counters carried over
+    let p = tiny();
+    let mut params = fast_params(3, 6);
+    params.servers = 2;
+    let st = checkpoint_after(Algorithm::AsySvrg, &p, &params, 3);
+    let ckpt_scalars = st.resume.comm.iter().map(|c| c.scalars).sum::<u64>();
+    assert!(ckpt_scalars > 0);
+    let resumed = SessionBuilder::new(Algorithm::AsySvrg, &p, params)
+        .resume(st)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_eq!(resumed.trace.points.last().unwrap().outer, 6);
+    assert!(resumed.final_objective().is_finite());
+    assert!(resumed.total_scalars > ckpt_scalars, "counters must continue, not reset");
+    for w in resumed.trace.points.windows(2) {
+        assert!(w[1].scalars >= w[0].scalars);
+    }
+}
+
+#[test]
+fn resume_with_wrong_shape_or_algorithm_is_rejected() {
+    let p = tiny();
+    let params = fast_params(3, 4);
+    let st = checkpoint_after(Algorithm::FdSvrg, &p, &params, 2);
+
+    // wrong algorithm
+    let err = SessionBuilder::new(Algorithm::Dsvrg, &p, params.clone())
+        .resume(st.clone())
+        .build();
+    assert!(err.is_err(), "algorithm mismatch must be rejected");
+
+    // wrong worker count
+    let err =
+        SessionBuilder::new(Algorithm::FdSvrg, &p, fast_params(5, 4)).resume(st.clone()).build();
+    assert!(err.is_err(), "cluster-shape mismatch must be rejected");
+
+    // wrong wire format
+    let mut f32_params = params.clone();
+    f32_params.wire = fdsvrg::net::WireFmt::F32;
+    let err = SessionBuilder::new(Algorithm::FdSvrg, &p, f32_params).resume(st).build();
+    assert!(err.is_err(), "wire-format mismatch must be rejected");
+}
+
+#[test]
+fn gap_policy_matches_recorded_gap_stop_epoch_exactly() {
+    // Replay check: on a recorded trajectory, GapReached must fire at the
+    // same epoch the old inline `gap_stop` logic would have picked.
+    let p = tiny();
+    let f_opt = fdsvrg::algs::serial::solve_optimum(&p, 40).1;
+    let target = 1e-3;
+    let full = Algorithm::FdSvrg.run(&p, &fast_params(4, 50));
+    let expected_epoch = full
+        .trace
+        .points
+        .iter()
+        .find(|pt| pt.outer >= 1 && pt.objective - f_opt <= target)
+        .expect("trajectory must cross the target within 50 epochs")
+        .outer;
+
+    // explicit policy
+    let via_policy = SessionBuilder::new(Algorithm::FdSvrg, &p, fast_params(4, 50))
+        .stop_when(StopPolicy::GapReached { f_opt, target })
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_eq!(via_policy.trace.points.last().unwrap().outer, expected_epoch);
+
+    // legacy RunParams field (translated to the same policy by the builder)
+    let mut legacy = fast_params(4, 50);
+    legacy.gap_stop = Some((f_opt, target));
+    let via_params = Algorithm::FdSvrg.run(&p, &legacy);
+    assert_eq!(via_params.trace.points.last().unwrap().outer, expected_epoch);
+    assert_traces_equal(&via_policy.trace, &via_params.trace, "policy vs legacy");
+}
+
+#[test]
+fn checkpoint_observer_writes_resumable_snapshots() {
+    let dir = std::env::temp_dir().join("fdsvrg_session_ckpt_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("mid.ckpt");
+    let p = tiny();
+    let params = fast_params(2, 6);
+
+    let straight = Algorithm::FdSvrg.run(&p, &params);
+    let with_obs = SessionBuilder::new(Algorithm::FdSvrg, &p, params.clone())
+        .observe(fdsvrg::session::CheckpointObserver::new(&path, 2))
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_runs_identical(&straight, &with_obs, "observer must not perturb the run");
+
+    // the last write fired at epoch 6
+    let loaded = match load_any(&path).unwrap() {
+        Loaded::Session(sc) => sc,
+        Loaded::Weights(_) => panic!("expected a v2 session checkpoint"),
+    };
+    assert_eq!(loaded.state.resume.epoch, 6);
+
+    // ... and resuming it for 2 more epochs just works
+    let more = SessionBuilder::new(Algorithm::FdSvrg, &p, fast_params(2, 8))
+        .resume(loaded.state)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_eq!(more.trace.points.last().unwrap().outer, 8);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn v1_checkpoints_still_load_for_inference() {
+    // backward compat: the pre-session final-weights format keeps working
+    let dir = std::env::temp_dir().join("fdsvrg_session_v1_compat");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("final.ckpt");
+    let p = tiny();
+    let res = Algorithm::FdSvrg.run(&p, &fast_params(2, 3));
+    Checkpoint::new("fdsvrg", "sess", 1e-2, res.w.clone()).save(&path).unwrap();
+
+    let back = Checkpoint::load(&path).unwrap();
+    back.check_compatible(p.d()).unwrap();
+    assert_eq!(back.w, res.w);
+    assert!(matches!(load_any(&path).unwrap(), Loaded::Weights(_)));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn resume_at_target_epoch_runs_nothing() {
+    // outer == checkpoint epoch: the resumed session must stop before
+    // spawning any cluster work and return the checkpointed state
+    let p = tiny();
+    let params = fast_params(2, 4);
+    let st = checkpoint_after(Algorithm::FdSvrg, &p, &params, 4);
+    let w_at_ckpt = st.resume.w.clone();
+    let scalars_at_ckpt = st.resume.comm.iter().map(|c| c.scalars).sum::<u64>();
+    let res = SessionBuilder::new(Algorithm::FdSvrg, &p, params)
+        .resume(st)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_eq!(res.trace.points.last().unwrap().outer, 4);
+    assert_eq!(res.w, w_at_ckpt);
+    assert_eq!(res.total_scalars, scalars_at_ckpt);
+}
