@@ -10,6 +10,9 @@
 //!    tree's log₂(q) depth matter?
 //! 5. wire formats (`--wire`): f64 vs f32 vs sparse payload codecs,
 //!    objective gap vs bytes on the wire (see `exp::wire_ablation`).
+//! 6. network models (`--net`): uniform vs cross-rack/straggler/jitter
+//!    scenarios — gap vs simulated time + per-node clock skew
+//!    (see `exp::netmodel_ablation`).
 //!
 //! ```sh
 //! cargo bench --bench bench_ablations [-- <filter>]
@@ -192,6 +195,13 @@ fn main() {
     b.once("ablation/wire formats", || {
         let ctx = exp::Ctx::bench(Path::new("results"));
         exp::wire_ablation(&ctx).expect("wire ablation run");
+    });
+
+    // --- 6. network models: FD-SVRG vs the PS baselines under uniform /
+    // cross-rack / straggler / jitter scenarios (see exp::netmodel_ablation)
+    b.once("ablation/network models", || {
+        let ctx = exp::Ctx::bench(Path::new("results"));
+        exp::netmodel_ablation(&ctx).expect("netmodel ablation run");
     });
 
     b.finish();

@@ -138,6 +138,33 @@ fn main() {
         });
     }
 
+    // --- endpoint send/recv hot path: uniform-model dispatch pin ---
+    // PR 4 hoisted all time-charging into net::model::LinkView; under the
+    // default uniform model this adds one per-peer table lookup to every
+    // send/recv. This 1-scalar ping-pong isolates the per-message endpoint
+    // overhead so any dispatch regression shows up here (the d=1M
+    // zero-copy cases above pin the bandwidth path — together they are the
+    // before/after guard for the PR 2 zero-copy numbers).
+    b.bench("net/endpoint ping-pong 1-scalar x1000 (uniform model)", || {
+        let (mut eps, _) = build(2, SimParams::default());
+        let mut b1 = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for _ in 0..1000 {
+                    a.send(1, tags::PUSH, vec![1.0]);
+                    a.recv_from(1, tags::PULL_RESP);
+                }
+            });
+            s.spawn(move || {
+                for _ in 0..1000 {
+                    let m = b1.recv_from(0, tags::PUSH);
+                    b1.send(0, tags::PULL_RESP, m.to_vec(1));
+                }
+            });
+        });
+    });
+
     // --- one full FD-SVRG epoch, wall-clock (q=8, tiny) ---
     let ds = generate(&GenSpec::new("epoch", 20_000, 1_000, 100).with_seed(3));
     let problem = Problem::logistic_l2(ds, 1e-4);

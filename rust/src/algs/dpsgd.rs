@@ -24,10 +24,10 @@ use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
 use crate::session::cluster::{
-    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
-    EpochGate,
+    collect_node_states, comm_snapshot, net_node_state, send_node_state, ClusterCtx,
+    ClusterDriver, Directive, EpochGate,
 };
-use crate::session::{EpochReport, NodeState, ResumeState};
+use crate::session::{EpochReport, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
 use crate::util::Pcg64;
 use std::sync::Arc;
@@ -59,7 +59,7 @@ pub(crate) fn driver(
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let dataset = problem.ds.name.clone();
-    let sim = params.sim;
+    let model = params.net_model();
     let problem = problem.clone();
     let params = params.clone();
 
@@ -67,7 +67,7 @@ pub(crate) fn driver(
         let gate = if ep.id() == 0 { Some(cx.take_gate()) } else { None };
         worker(&mut ep, &problem, &params, q, d, eta0, rounds, &shards, &y, gate.as_ref(), cx);
     });
-    ClusterDriver::new("dpsgd", &dataset, q, d, sim, resume, node_fn)
+    ClusterDriver::new("dpsgd", &dataset, q, d, model, resume, node_fn)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -159,11 +159,7 @@ fn worker(
             let inv_q = 1.0 / q as f64;
             avg.iter_mut().for_each(|v| *v *= inv_q);
             let sim_time = ep.now();
-            let own = NodeState {
-                rng: Some(rng.state_words()),
-                clock: ep.clock_state(),
-                extra: w.clone(),
-            };
+            let own = net_node_state(ep, Some(rng.state_words()), w.clone());
             let nodes = collect_node_states(ep, 0, own, 1..q, q);
             let (scalars, bytes, per_node) = comm_snapshot(ep);
             let directive = gate.exchange(EpochReport {
@@ -185,11 +181,7 @@ fn worker(
             }
         } else {
             ep.send_eval(0, tags::EVAL, w.clone());
-            let st = NodeState {
-                rng: Some(rng.state_words()),
-                clock: ep.clock_state(),
-                extra: w.clone(),
-            };
+            let st = net_node_state(ep, Some(rng.state_words()), w.clone());
             send_node_state(ep, 0, &st);
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
             if ctrl.value(0) != 0.0 {

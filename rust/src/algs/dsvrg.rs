@@ -20,10 +20,10 @@ use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
 use crate::session::cluster::{
-    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
-    EpochGate,
+    collect_node_states, comm_snapshot, net_node_state, send_node_state, ClusterCtx,
+    ClusterDriver, Directive, EpochGate,
 };
-use crate::session::{EpochReport, NodeState, ResumeState};
+use crate::session::{EpochReport, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
 use crate::util::Pcg64;
 use std::sync::Arc;
@@ -49,7 +49,7 @@ pub(crate) fn driver(
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let dataset = problem.ds.name.clone();
-    let sim = params.sim;
+    let model = params.net_model();
     let problem = problem.clone();
     let params = params.clone();
 
@@ -61,7 +61,7 @@ pub(crate) fn driver(
             worker(&mut ep, &problem, &params, eta, m_inner, &shards, &y, cx);
         }
     });
-    ClusterDriver::new("dsvrg", &dataset, q + 1, d, sim, resume, node_fn)
+    ClusterDriver::new("dsvrg", &dataset, q + 1, d, model, resume, node_fn)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -103,7 +103,7 @@ fn center(
 
         // evaluation plane: collect states, report the boundary
         let sim_time = ep.now();
-        let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+        let own = net_node_state(ep, None, vec![]);
         let nodes = collect_node_states(ep, 0, own, 1..=q, q + 1);
         let (scalars, bytes, per_node) = comm_snapshot(ep);
         epoch += 1;
@@ -191,7 +191,7 @@ fn worker(
             comm.send(ep, 0, tags::RING, &w);
         }
 
-        let st = NodeState { rng: Some(rng.state_words()), clock: ep.clock_state(), extra: vec![] };
+        let st = net_node_state(ep, Some(rng.state_words()), vec![]);
         send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {

@@ -20,10 +20,10 @@ use super::{Problem, RunParams};
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint, NodeId};
 use crate::session::cluster::{
-    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
-    EpochGate,
+    collect_node_states, comm_snapshot, net_node_state, send_node_state, ClusterCtx,
+    ClusterDriver, Directive, EpochGate,
 };
-use crate::session::{EpochReport, NodeState, ResumeState};
+use crate::session::{EpochReport, ResumeState};
 use crate::sparse::partition::{by_features, by_features_rows, FeatureSlab};
 use crate::util::Pcg64;
 use std::sync::Arc;
@@ -56,7 +56,7 @@ pub(crate) fn driver(
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let group: Vec<NodeId> = (0..=q).collect();
     let dataset = problem.ds.name.clone();
-    let sim = params.sim;
+    let model = params.net_model();
     let problem = problem.clone();
     let params = params.clone();
 
@@ -68,7 +68,7 @@ pub(crate) fn driver(
             worker(&mut ep, &problem, &params, &group, eta0, m_inner, u, &slabs, &y, cx);
         }
     });
-    ClusterDriver::new("fdsgd", &dataset, q + 1, d, sim, resume, node_fn)
+    ClusterDriver::new("fdsgd", &dataset, q + 1, d, model, resume, node_fn)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -104,7 +104,7 @@ fn coordinator(
             msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
         }
         let sim_time = ep.now();
-        let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+        let own = net_node_state(ep, None, vec![]);
         let nodes = collect_node_states(ep, 0, own, 1..=q, q + 1);
         let (scalars, bytes, per_node) = comm_snapshot(ep);
         epoch += 1;
@@ -196,11 +196,7 @@ fn worker(
         epoch += 1;
 
         ep.send_eval(0, tags::EVAL, w_l.clone());
-        let st = NodeState {
-            rng: Some(sample_rng.state_words()),
-            clock: ep.clock_state(),
-            extra: vec![],
-        };
+        let st = net_node_state(ep, Some(sample_rng.state_words()), vec![]);
         send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {

@@ -29,7 +29,7 @@ pub mod synsvrg;
 
 use crate::loss::{Loss, LossKind, Regularizer};
 use crate::net::collectives::Comm;
-use crate::net::{SimParams, WireFmt};
+use crate::net::{NetModel, NetSpec, SimParams, WireFmt};
 use crate::sparse::libsvm::Dataset;
 use std::sync::Arc;
 
@@ -136,8 +136,14 @@ pub struct RunParams {
     pub servers: usize,
     /// Shared RNG seed (drives the instance-sampling sequence).
     pub seed: u64,
-    /// Network cost model.
+    /// Base network link parameters (the uniform / rack-local /
+    /// non-straggler link).
     pub sim: SimParams,
+    /// Network scenario overlay (`--net uniform|hetero|straggler|jitter`),
+    /// resolved against `sim` into the run's [`NetModel`] by
+    /// [`RunParams::net_model`]. `Uniform` (the default) is bit-exact with
+    /// the historical flat-`SimParams` charging.
+    pub net: NetSpec,
     /// Early stop once `objective − f_opt ≤ target`: `(f_opt, target)`.
     pub gap_stop: Option<(f64, f64)>,
     /// Give up once the simulated clock passes this many seconds (the
@@ -167,6 +173,7 @@ impl Default for RunParams {
             servers: 2,
             seed: 42,
             sim: SimParams::default(),
+            net: NetSpec::Uniform,
             gap_stop: None,
             sim_time_cap: None,
             star_reduce: false,
@@ -189,6 +196,12 @@ impl RunParams {
     /// this handle (codec + tree/star selection).
     pub fn comm(&self) -> Comm {
         Comm::new(self.wire, self.star_reduce)
+    }
+
+    /// The run's resolved network timing model: the scenario overlay
+    /// (`net`) applied to the base link parameters (`sim`).
+    pub fn net_model(&self) -> NetModel {
+        self.net.resolve(self.sim)
     }
 }
 

@@ -165,6 +165,7 @@ pub fn svrg(
     trace.push(TracePoint {
         outer: 0,
         sim_time: 0.0,
+        skew: 0.0,
         wall_time: 0.0,
         scalars: 0,
         bytes: 0,
@@ -178,6 +179,7 @@ pub fn svrg(
         trace.push(TracePoint {
             outer: t + 1,
             sim_time: 0.0,
+            skew: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
             bytes: 0,
@@ -253,6 +255,7 @@ pub fn sgd(
     trace.push(TracePoint {
         outer: 0,
         sim_time: 0.0,
+        skew: 0.0,
         wall_time: 0.0,
         scalars: 0,
         bytes: 0,
@@ -264,6 +267,7 @@ pub fn sgd(
         trace.push(TracePoint {
             outer: t + 1,
             sim_time: 0.0,
+            skew: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
             bytes: 0,
@@ -314,6 +318,7 @@ pub fn svrg_lazy(
     trace.push(TracePoint {
         outer: 0,
         sim_time: 0.0,
+        skew: 0.0,
         wall_time: 0.0,
         scalars: 0,
         bytes: 0,
@@ -373,6 +378,7 @@ pub fn svrg_lazy(
         trace.push(TracePoint {
             outer: t + 1,
             sim_time: 0.0,
+            skew: 0.0,
             wall_time: wall.seconds(),
             scalars: 0,
             bytes: 0,

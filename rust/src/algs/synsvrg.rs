@@ -14,10 +14,10 @@ use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
 use crate::session::cluster::{
-    collect_node_states, comm_snapshot, send_node_state, ClusterCtx, ClusterDriver, Directive,
-    EpochGate,
+    collect_node_states, comm_snapshot, net_node_state, send_node_state, ClusterCtx,
+    ClusterDriver, Directive, EpochGate,
 };
-use crate::session::{EpochReport, NodeState, ResumeState};
+use crate::session::{EpochReport, ResumeState};
 use crate::sparse::partition::{by_instances, InstanceShard};
 use crate::util::Pcg64;
 use std::sync::Arc;
@@ -49,7 +49,7 @@ pub(crate) fn driver(
     let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let dataset = problem.ds.name.clone();
-    let sim = params.sim;
+    let model = params.net_model();
     let problem = problem.clone();
     let params = params.clone();
 
@@ -61,7 +61,7 @@ pub(crate) fn driver(
             worker(&mut ep, &problem, &params, topo, m_rounds, &shards, &y, cx);
         }
     });
-    ClusterDriver::new("synsvrg", &dataset, topo.n_nodes(), d, sim, resume, node_fn)
+    ClusterDriver::new("synsvrg", &dataset, topo.n_nodes(), d, model, resume, node_fn)
 }
 
 /// Server `k` (Algorithm 3). Server 0 additionally assembles evaluation
@@ -130,7 +130,7 @@ fn server(
                 msg.decode_into(&mut full_w[slo..shi]);
             }
             let sim_time = ep.now();
-            let own = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+            let own = net_node_state(ep, None, vec![]);
             let nodes = collect_node_states(ep, 0, own, 1..topo.n_nodes(), topo.n_nodes());
             let (scalars, bytes, per_node) = comm_snapshot(ep);
             let directive = gate.exchange(EpochReport {
@@ -152,7 +152,7 @@ fn server(
             stop
         } else {
             ep.send_eval(0, tags::EVAL, w_k.clone());
-            let st = NodeState { rng: None, clock: ep.clock_state(), extra: vec![] };
+            let st = net_node_state(ep, None, vec![]);
             send_node_state(ep, 0, &st);
             let ctrl = ep.recv_eval_from(0, tags::CTRL);
             ctrl.value(0) != 0.0
@@ -228,7 +228,7 @@ fn worker(
             }
         }
 
-        let st = NodeState { rng: Some(rng.state_words()), clock: ep.clock_state(), extra: vec![] };
+        let st = net_node_state(ep, Some(rng.state_words()), vec![]);
         send_node_state(ep, 0, &st);
         let ctrl = ep.recv_eval_from(0, tags::CTRL);
         if ctrl.value(0) != 0.0 {

@@ -31,21 +31,28 @@
 //! epoch   u64                   completed outer epochs
 //! grads   u64                   cumulative gradient evaluations
 //! trace   u64 count × point     point = outer u64, sim_time f64,
+//!                               skew f64 (per-node clock skew),
 //!                               wall_time f64, scalars u64, bytes u64,
 //!                               grads u64, objective f64
 //! comm    u64 count × sender    sender = scalars u64, bytes u64,
 //!                               messages u64   (per-node counters)
 //! nodes   u64 count × node      node = has_rng u8, rng 4 × u64,
+//!                               has_jitter u8, jitter 4 × u64,
 //!                               clock f64, nic_out f64, nic_in f64,
 //!                               extra u64 count × f64
 //! crc     u64                   FNV-1a over everything above
 //! ```
 //!
 //! `nodes[i].extra` is algorithm-owned (SAGA's coefficient table, D-PSGD's
-//! local parameter copy, PS-Lite's step counter, ...). A run restored from
-//! a v2 checkpoint continues on the identical trajectory: same `w`, same
-//! trace points, same per-sender byte counters (for the deterministic
-//! algorithms; the asynchronous ones race by design).
+//! local parameter copy, PS-Lite's step counter, ...). The `jitter` words
+//! are the node's net-model noise stream (PCG state of the
+//! `--net jitter` scenario; `has_jitter = 0` on jitter-free models):
+//! restoring them replays the exact per-message latency noise the
+//! uninterrupted run would have drawn, so jittered runs resume bit-exactly
+//! too. A run restored from a v2 checkpoint continues on the identical
+//! trajectory: same `w`, same trace points, same per-sender byte counters
+//! (for the deterministic algorithms; the asynchronous ones race by
+//! design).
 
 use crate::metrics::Trace;
 use crate::net::{ClockState, NodeComm, WireFmt};
@@ -314,6 +321,7 @@ impl SessionCheckpoint {
         for p in &st.trace.points {
             buf.extend_from_slice(&(p.outer as u64).to_le_bytes());
             buf.extend_from_slice(&p.sim_time.to_le_bytes());
+            buf.extend_from_slice(&p.skew.to_le_bytes());
             buf.extend_from_slice(&p.wall_time.to_le_bytes());
             buf.extend_from_slice(&p.scalars.to_le_bytes());
             buf.extend_from_slice(&p.bytes.to_le_bytes());
@@ -328,16 +336,18 @@ impl SessionCheckpoint {
         }
         buf.extend_from_slice(&(r.nodes.len() as u64).to_le_bytes());
         for node in &r.nodes {
-            match node.rng {
-                Some(words) => {
-                    buf.push(1);
-                    for wdr in words {
-                        buf.extend_from_slice(&wdr.to_le_bytes());
+            for words in [node.rng, node.jitter] {
+                match words {
+                    Some(w) => {
+                        buf.push(1);
+                        for wdr in w {
+                            buf.extend_from_slice(&wdr.to_le_bytes());
+                        }
                     }
-                }
-                None => {
-                    buf.push(0);
-                    buf.extend_from_slice(&[0u8; 32]);
+                    None => {
+                        buf.push(0);
+                        buf.extend_from_slice(&[0u8; 32]);
+                    }
                 }
             }
             buf.extend_from_slice(&node.clock.clock.to_le_bytes());
@@ -373,6 +383,7 @@ impl SessionCheckpoint {
             trace.push(crate::metrics::TracePoint {
                 outer: get_u64(bytes, &mut at)? as usize,
                 sim_time: get_f64(bytes, &mut at)?,
+                skew: get_f64(bytes, &mut at)?,
                 wall_time: get_f64(bytes, &mut at)?,
                 scalars: get_u64(bytes, &mut at)?,
                 bytes: get_u64(bytes, &mut at)?,
@@ -392,11 +403,16 @@ impl SessionCheckpoint {
         let nnodes = get_u64(bytes, &mut at)? as usize;
         let mut nodes = Vec::with_capacity(nnodes);
         for _ in 0..nnodes {
-            let has_rng = get_u8(bytes, &mut at)? != 0;
-            let mut words = [0u64; 4];
-            for wdr in words.iter_mut() {
-                *wdr = get_u64(bytes, &mut at)?;
-            }
+            let read_words = |at: &mut usize| -> Result<Option<[u64; 4]>> {
+                let present = get_u8(bytes, at)? != 0;
+                let mut words = [0u64; 4];
+                for wdr in words.iter_mut() {
+                    *wdr = get_u64(bytes, at)?;
+                }
+                Ok(present.then_some(words))
+            };
+            let rng = read_words(&mut at)?;
+            let jitter = read_words(&mut at)?;
             let clock = ClockState {
                 clock: get_f64(bytes, &mut at)?,
                 nic_out: get_f64(bytes, &mut at)?,
@@ -404,7 +420,7 @@ impl SessionCheckpoint {
             };
             let nextra = get_u64(bytes, &mut at)? as usize;
             let extra = get_f64_vec(bytes, &mut at, nextra)?;
-            nodes.push(NodeState { rng: has_rng.then_some(words), clock, extra });
+            nodes.push(NodeState { rng, jitter, clock, extra });
         }
         if at != body.len() {
             bail!("session checkpoint has {} trailing bytes", body.len() - at);
@@ -507,6 +523,7 @@ mod tests {
         trace.push(crate::metrics::TracePoint {
             outer: 0,
             sim_time: 0.0,
+            skew: 0.0,
             wall_time: 0.0,
             scalars: 0,
             bytes: 0,
@@ -516,6 +533,7 @@ mod tests {
         trace.push(crate::metrics::TracePoint {
             outer: 1,
             sim_time: 1.5,
+            skew: 0.3,
             wall_time: 0.1,
             scalars: 100,
             bytes: 800,
@@ -539,11 +557,13 @@ mod tests {
                 nodes: vec![
                     NodeState {
                         rng: None,
+                        jitter: Some([11, 22, 33, u64::MAX]),
                         clock: ClockState { clock: 1.5, nic_out: 1.4, nic_in: 1.45 },
                         extra: vec![],
                     },
                     NodeState {
                         rng: Some([u64::MAX, 1, 2, 3]),
+                        jitter: None,
                         clock: ClockState { clock: 1.2, nic_out: 0.0, nic_in: 1.1 },
                         extra: vec![9.0, -0.5],
                     },

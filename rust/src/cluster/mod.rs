@@ -2,7 +2,7 @@
 //! endpoints. Owns process topology and deterministic teardown; algorithms
 //! only see their [`Endpoint`] plus whatever state the launcher hands them.
 
-use crate::net::{build, CommStats, Endpoint, SimParams};
+use crate::net::{build, build_with_model, CommStats, Endpoint, NetModel, SimParams};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Clock-synchronizing barrier: all participants wait, and every clock is
@@ -81,6 +81,18 @@ where
     ClusterRun { results: run_endpoints(eps, f), stats }
 }
 
+/// [`run_cluster`] under an explicit [`NetModel`] — scenario runs
+/// (heterogeneous racks, stragglers, seeded jitter) where each endpoint
+/// gets its own link view instead of a flat `SimParams`.
+pub fn run_cluster_model<T, F>(n_nodes: usize, model: &NetModel, f: F) -> ClusterRun<T>
+where
+    T: Send,
+    F: Fn(Endpoint) -> T + Send + Sync,
+{
+    let (eps, stats) = build_with_model(n_nodes, model);
+    ClusterRun { results: run_endpoints(eps, f), stats }
+}
+
 /// Run `f(endpoint)` on one thread per pre-built endpoint. This is the
 /// spawning/teardown half of [`run_cluster`], split out so launchers that
 /// need to prepare the endpoints first (the session layer preloads comm
@@ -137,6 +149,13 @@ mod tests {
         for t in out.results {
             assert!(t >= 5.0, "barrier must release at the max clock, got {t}");
         }
+    }
+
+    #[test]
+    fn run_cluster_model_hands_each_node_its_link_view() {
+        let model = NetModel::Straggler { base: SimParams::free(), slow: 1, factor: 3.0 };
+        let out = run_cluster_model(3, &model, |ep| ep.net().compute_scale());
+        assert_eq!(out.results, vec![1.0, 1.0, 3.0]);
     }
 
     #[test]

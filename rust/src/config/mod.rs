@@ -188,6 +188,28 @@ pub struct ExperimentConfig {
     pub wire: crate::net::WireFmt,
     /// FD-SVRG lazy inner loop (§Perf).
     pub lazy: bool,
+    /// Network scenario kind (`net.model = "uniform"|"hetero"|"straggler"|
+    /// "jitter"`, CLI `--net`); resolved with the `net.*` scenario table
+    /// below by [`ExperimentConfig::net_spec`].
+    pub net_model: String,
+    /// Hetero: nodes per rack (`net.rack_size`).
+    pub rack_size: usize,
+    /// Hetero: cross-rack wire latency, seconds (`net.cross_latency`).
+    pub cross_latency: f64,
+    /// Hetero: cross-rack per-message overhead (`net.cross_per_msg`).
+    pub cross_per_msg: f64,
+    /// Hetero: cross-rack bandwidth (`net.cross_bandwidth_gbps`).
+    pub cross_bandwidth_gbps: f64,
+    /// Straggler: how many (highest-id) nodes run slow (`net.slow`).
+    pub slow: usize,
+    /// Straggler: compute + NIC slowdown factor (`net.factor`).
+    pub slow_factor: f64,
+    /// Jitter: per-message latency-noise amplitude, seconds
+    /// (`net.jitter_amp`).
+    pub jitter_amp: f64,
+    /// Jitter: dedicated noise-stream seed (`net.jitter_seed`),
+    /// independent of the sampling seed so noise and sampling decouple.
+    pub jitter_seed: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -213,6 +235,18 @@ impl Default for ExperimentConfig {
             bandwidth_gbps: 10.0, // paper §5: 10GbE
             wire: crate::net::WireFmt::F64,
             lazy: false,
+            net_model: "uniform".into(),
+            rack_size: 4,
+            // cross-rack defaults: an oversubscribed spine — >10× the
+            // latency, 1/10 the bandwidth of the 10GbE rack links
+            cross_latency: 500e-6,
+            cross_per_msg: 10e-6,
+            cross_bandwidth_gbps: 1.0,
+            slow: 1,
+            slow_factor: 4.0,
+            // jitter default: 5× the base latency, a visibly noisy switch
+            jitter_amp: 200e-6,
+            jitter_seed: 20177,
         }
     }
 }
@@ -236,11 +270,48 @@ impl ExperimentConfig {
             bandwidth_gbps: cfg.f64_or("net.bandwidth_gbps", d.bandwidth_gbps),
             wire: {
                 let s = cfg.str_or("run.wire", d.wire.name());
-                crate::net::WireFmt::parse(s)
-                    .unwrap_or_else(|| panic!("run.wire must be f64|f32|sparse, got {s:?}"))
+                crate::net::WireFmt::parse_or_err(s).unwrap_or_else(|e| panic!("run.wire: {e}"))
             },
             lazy: cfg.bool_or("run.lazy", d.lazy),
+            net_model: cfg.str_or("net.model", &d.net_model).to_string(),
+            rack_size: cfg.usize_or("net.rack_size", d.rack_size),
+            cross_latency: cfg.f64_or("net.cross_latency", d.cross_latency),
+            cross_per_msg: cfg.f64_or("net.cross_per_msg", d.cross_per_msg),
+            cross_bandwidth_gbps: cfg.f64_or("net.cross_bandwidth_gbps", d.cross_bandwidth_gbps),
+            slow: cfg.usize_or("net.slow", d.slow),
+            slow_factor: cfg.f64_or("net.factor", d.slow_factor),
+            jitter_amp: cfg.f64_or("net.jitter_amp", d.jitter_amp),
+            jitter_seed: cfg.usize_or("net.jitter_seed", d.jitter_seed as usize) as u64,
         }
+    }
+
+    /// The [`NetSpec`] for a named scenario kind (case-insensitive),
+    /// parameterized by this config's `net.*` scenario table. The error
+    /// lists every valid kind (the `parse_or_err` convention).
+    pub fn net_spec_for(&self, kind: &str) -> Result<crate::net::NetSpec, String> {
+        use crate::net::{LinkProfile, NetSpec};
+        match kind.trim().to_ascii_lowercase().as_str() {
+            "uniform" => Ok(NetSpec::Uniform),
+            "hetero" | "heterogeneous" => Ok(NetSpec::Hetero {
+                cross: LinkProfile {
+                    latency: self.cross_latency,
+                    per_msg: self.cross_per_msg,
+                    sec_per_byte: 8.0 / (self.cross_bandwidth_gbps * 1e9),
+                },
+                rack_size: self.rack_size.max(1),
+            }),
+            "straggler" => Ok(NetSpec::Straggler { slow: self.slow, factor: self.slow_factor }),
+            "jitter" => Ok(NetSpec::Jitter { amp: self.jitter_amp, seed: self.jitter_seed }),
+            _ => Err(format!(
+                "unknown network model {kind:?}; valid models (case-insensitive): {}",
+                NetSpec::KINDS.join(", ")
+            )),
+        }
+    }
+
+    /// This config's network scenario (`net.model` / CLI `--net`).
+    pub fn net_spec(&self) -> Result<crate::net::NetSpec, String> {
+        self.net_spec_for(&self.net_model)
     }
 
     pub fn sim_params(&self) -> crate::net::SimParams {
@@ -262,6 +333,7 @@ impl ExperimentConfig {
             servers: self.servers,
             seed: self.seed,
             sim: self.sim_params(),
+            net: self.net_spec().unwrap_or_else(|e| panic!("net.model: {e}")),
             gap_stop: None,
             sim_time_cap: None,
             star_reduce: false,
@@ -338,6 +410,50 @@ latency = 5e-5
         // default stays bit-exact f64
         let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
         assert_eq!(e.wire, crate::net::WireFmt::F64);
+    }
+
+    #[test]
+    fn net_model_parses_from_config() {
+        use crate::net::NetSpec;
+        let c = Config::parse("[net]\nmodel = \"straggler\"\nslow = 3\nfactor = 6.5\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.net_spec().unwrap(), NetSpec::Straggler { slow: 3, factor: 6.5 });
+        assert_eq!(e.run_params().net, NetSpec::Straggler { slow: 3, factor: 6.5 });
+        // default stays the legacy uniform network
+        let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(e.net_spec().unwrap(), NetSpec::Uniform);
+        assert_eq!(e.run_params().net, NetSpec::Uniform);
+    }
+
+    #[test]
+    fn net_spec_kinds_are_case_insensitive_and_errors_list_all() {
+        let e = ExperimentConfig::default();
+        assert_eq!(e.net_spec_for("UNIFORM").unwrap(), crate::net::NetSpec::Uniform);
+        assert!(matches!(
+            e.net_spec_for("Jitter").unwrap(),
+            crate::net::NetSpec::Jitter { .. }
+        ));
+        let err = e.net_spec_for("mesh").unwrap_err();
+        for kind in crate::net::NetSpec::KINDS {
+            assert!(err.contains(kind), "error must list {kind:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn hetero_spec_builds_cross_profile_from_the_net_table() {
+        let c = Config::parse(
+            "[net]\nmodel = \"hetero\"\nrack_size = 2\ncross_latency = 1e-3\ncross_bandwidth_gbps = 2.0\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        match e.net_spec().unwrap() {
+            crate::net::NetSpec::Hetero { cross, rack_size } => {
+                assert_eq!(rack_size, 2);
+                assert_eq!(cross.latency, 1e-3);
+                assert!((cross.sec_per_byte - 8.0 / 2e9).abs() < 1e-15);
+            }
+            other => panic!("expected hetero, got {other:?}"),
+        }
     }
 
     #[test]

@@ -383,6 +383,96 @@ pub fn wire_ablation(ctx: &Ctx) -> Result<Vec<(String, &'static str, u64, f64)>>
     Ok(rows)
 }
 
+/// Network-model ablation (`exp netmodel`): FD-SVRG vs the PS baselines
+/// (SynSVRG, PS-Lite SGD) under the four `net::model` scenarios on
+/// `url-sim`/`news20-sim` — objective gap vs *simulated time*. This is
+/// the stress test of the paper's Fig.-7 wall-clock claim: FD-SVRG's
+/// advantage comes from moving fewer bytes, so it should widen (not
+/// vanish) on degraded networks — cross-rack bottlenecks, designated
+/// stragglers, noisy switches. The per-node clock-skew column shows how
+/// unevenly each scenario loads the cluster. Returns
+/// `(profile, scenario, algorithm, sim_time, final_gap, clock_skew)`
+/// rows.
+#[allow(clippy::type_complexity)]
+pub fn netmodel_ablation(
+    ctx: &Ctx,
+) -> Result<Vec<(String, &'static str, &'static str, f64, f64, f64)>> {
+    let mut rows = Vec::new();
+    let scenarios = ["uniform", "hetero", "straggler", "jitter"];
+    for profile in ["url-sim", "news20-sim"] {
+        let q = profiles::paper_worker_count(profile);
+        let problem = ctx.problem(profile, ctx.cfg.lambda)?;
+        let (_, f_opt) = ctx.optimum(&problem);
+        for scenario in scenarios {
+            let spec = ctx
+                .cfg
+                .net_spec_for(scenario)
+                .expect("built-in scenario kinds always parse");
+            let mut table = TextTable::new(vec![
+                "algorithm",
+                "epochs",
+                "final gap",
+                "sim time (s)",
+                "clock skew (s)",
+                "time to 1e-4 (s)",
+            ]);
+            let mut plot = AsciiPlot::new(
+                &format!(
+                    "Net-model ablation :: {profile} / {scenario} — objective gap vs simulated time (s)"
+                ),
+                "time (s)",
+            );
+            println!(
+                "== Net-model ablation :: {profile} / {scenario} (q={q}, λ={:.0e}) ==",
+                ctx.cfg.lambda
+            );
+            for algo in [Algorithm::FdSvrg, Algorithm::SynSvrg, Algorithm::PsLiteSgd] {
+                let mut params = ctx.base_params(q);
+                params.net = spec.clone();
+                let ps = !matches!(algo, Algorithm::FdSvrg);
+                let budget = if ps {
+                    ((default_epochs(algo) as f64) * ctx.ps_scale).round() as usize
+                } else {
+                    default_epochs(algo)
+                };
+                params.outer = ctx.epochs(budget);
+                let gap = StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 };
+                let res = run_and_save(
+                    ctx,
+                    &problem,
+                    algo,
+                    &params,
+                    &[gap],
+                    f_opt,
+                    &format!("netmodel_{profile}_{scenario}"),
+                );
+                let final_gap = res.final_objective() - f_opt;
+                let tt = res.trace.time_to_gap(f_opt, ctx.cfg.gap_target);
+                plot.add(Series::gap_vs_time(algo.name(), &res.trace, f_opt));
+                table.row(vec![
+                    algo.name().to_string(),
+                    format!("{}", res.trace.points.len() - 1),
+                    format!("{final_gap:.3e}"),
+                    format!("{:.4}", res.total_sim_time),
+                    format!("{:.6}", res.clock_skew),
+                    tt.map(|t| format!("{t:.4}")).unwrap_or_else(|| ">cap".into()),
+                ]);
+                rows.push((
+                    profile.to_string(),
+                    scenario,
+                    algo.name(),
+                    res.total_sim_time,
+                    final_gap,
+                    res.clock_skew,
+                ));
+            }
+            println!("{}", table.render());
+            println!("{}", plot.render());
+        }
+    }
+    Ok(rows)
+}
+
 /// Table 1: dataset statistics of the `-sim` profiles.
 pub fn table1() -> Result<()> {
     let mut table =

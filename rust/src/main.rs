@@ -4,7 +4,7 @@
 //! fdsvrg train --algo fdsvrg --dataset webspam-sim --q 16 [--lambda 1e-4]
 //!              [--eta 0.x] [--outer 30] [--batch u] [--servers p]
 //!              [--config exp.toml] [--out results] [--star]
-//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|all> [--out results] [--quick]
+//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
 //! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
@@ -50,6 +50,13 @@ const USAGE: &str = "usage:
                [--wire f64|f32|sparse]   (payload codec for counted traffic:
                f64 = bit-exact default, f32 = half the wire bytes,
                sparse = (u32,f32) pairs for the nonzeros only)
+               [--net uniform|hetero|straggler|jitter]   (network timing
+               model: uniform = the legacy flat SimParams (default,
+               bit-exact), hetero = rack-local vs cross-rack links,
+               straggler = slow nodes, jitter = seeded per-message
+               latency noise; scenario knobs come from the config [net]
+               table or --net-slow/--net-factor/--net-rack/
+               --net-jitter-amp/--net-jitter-seed)
                [--engine native|block|xla]   (native = sparse CSC path,
                block = dense blocked trainer on the pure-Rust engine,
                xla = dense blocked trainer on PJRT, needs --features xla)
@@ -61,7 +68,7 @@ const USAGE: &str = "usage:
   fdsvrg predict --ckpt file [--dataset profile|path.libsvm]
                (inference from a checkpoint of either version: v1 final
                weights or a v2 session snapshot)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|all> [--out dir] [--quick]
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|all> [--out dir] [--quick]
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|xla]
                (default: the build's own backend — xla when compiled in,
@@ -87,9 +94,19 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.seed = args.get_or("seed", cfg.seed);
     cfg.gap_target = args.get_or("gap-target", cfg.gap_target);
     if let Some(v) = args.get("wire") {
-        cfg.wire = fdsvrg::net::WireFmt::parse(v)
-            .with_context(|| format!("unknown wire format {v:?} (f64|f32|sparse)"))?;
+        cfg.wire = fdsvrg::net::WireFmt::parse_or_err(v).map_err(|e| anyhow::anyhow!(e))?;
     }
+    if let Some(v) = args.get("net") {
+        cfg.net_model = v.to_string();
+    }
+    cfg.slow = args.get_or("net-slow", cfg.slow);
+    cfg.slow_factor = args.get_or("net-factor", cfg.slow_factor);
+    cfg.rack_size = args.get_or("net-rack", cfg.rack_size);
+    cfg.jitter_amp = args.get_or("net-jitter-amp", cfg.jitter_amp);
+    cfg.jitter_seed = args.get_or("net-jitter-seed", cfg.jitter_seed);
+    // validate the scenario kind up front so the CLI error lists every
+    // valid value instead of panicking deep inside run_params()
+    cfg.net_spec().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -123,7 +140,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine_kind = args.get("engine").unwrap_or("native");
 
     println!(
-        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, engine={engine_kind})",
+        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, net={}, engine={engine_kind})",
         algo.name(),
         cfg.dataset,
         problem.d(),
@@ -132,6 +149,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lambda,
         if cfg.eta > 0.0 { format!("{}", cfg.eta) } else { format!("auto={:.3}", problem.default_eta()) },
         params.wire.name(),
+        params.net.name(),
     );
     let res = match engine_kind {
         // "native" keeps its historical meaning: the sparse CSC algorithms,
@@ -182,8 +200,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 args.get("resume").is_none() && args.get("ckpt").is_none(),
                 "--resume/--ckpt session checkpointing is available on the native engine only"
             );
-            let kind = fdsvrg::runtime::EngineKind::parse(other)
-                .with_context(|| format!("unknown engine {other:?} (native|block|xla)"))?;
+            let kind =
+                fdsvrg::runtime::EngineKind::parse_or_err(other).map_err(|e| anyhow::anyhow!(e))?;
             let engine = fdsvrg::runtime::build_engine(
                 kind,
                 Path::new(args.get("artifacts").unwrap_or("artifacts")),
@@ -289,6 +307,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("table2") => exp::table2(&ctx).map(|_| ()),
         Some("table3") => exp::table3(&ctx).map(|_| ()),
         Some("wire") => exp::wire_ablation(&ctx).map(|_| ()),
+        Some("netmodel") => exp::netmodel_ablation(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),
     }
@@ -316,8 +335,7 @@ fn cmd_check_engine(args: &Args) -> Result<()> {
     // (Unlike `train`, there is no sparse path here — "block" is the
     // canonical name for the pure-Rust backend.)
     let kind = match args.get("engine") {
-        Some(s) => fdsvrg::runtime::EngineKind::parse(s)
-            .with_context(|| format!("unknown engine {s:?} (block|xla)"))?,
+        Some(s) => fdsvrg::runtime::EngineKind::parse_or_err(s).map_err(|e| anyhow::anyhow!(e))?,
         None => fdsvrg::runtime::EngineKind::default_for_build(),
     };
     let engine = fdsvrg::runtime::build_engine(kind, Path::new(dir))?;

@@ -50,6 +50,7 @@ pub fn run_result_to_json(res: &RunResult, f_opt: Option<f64>) -> String {
     s.push_str(&format!("  \"total_bytes\": {},\n", res.total_bytes));
     s.push_str(&format!("  \"busiest_node_bytes\": {},\n", res.busiest_node_bytes));
     s.push_str(&format!("  \"total_messages\": {},\n", res.total_messages));
+    s.push_str(&format!("  \"clock_skew\": {},\n", num(res.clock_skew)));
     s.push_str(&format!(
         "  \"f_opt\": {},\n",
         f_opt.map(num).unwrap_or_else(|| "null".into())
@@ -58,10 +59,11 @@ pub fn run_result_to_json(res: &RunResult, f_opt: Option<f64>) -> String {
     s.push_str("  \"trace\": [\n");
     for (i, p) in res.trace.points.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"outer\": {}, \"sim_time\": {}, \"wall_time\": {}, \
+            "    {{\"outer\": {}, \"sim_time\": {}, \"skew\": {}, \"wall_time\": {}, \
              \"scalars\": {}, \"bytes\": {}, \"grads\": {}, \"objective\": {}{}}}{}\n",
             p.outer,
             num(p.sim_time),
+            num(p.skew),
             num(p.wall_time),
             p.scalars,
             p.bytes,
@@ -98,6 +100,7 @@ mod tests {
         trace.push(TracePoint {
             outer: 0,
             sim_time: 0.0,
+            skew: 0.0,
             wall_time: 0.0,
             scalars: 0,
             bytes: 0,
@@ -107,6 +110,7 @@ mod tests {
         trace.push(TracePoint {
             outer: 1,
             sim_time: 0.5,
+            skew: 0.25,
             wall_time: 1.0,
             scalars: 640,
             bytes: 5120,
@@ -119,6 +123,7 @@ mod tests {
             w: vec![0.0; 4],
             trace,
             total_sim_time: 0.5,
+            clock_skew: 0.25,
             total_wall_time: 1.0,
             total_scalars: 640,
             busiest_node_scalars: 160,
@@ -138,6 +143,8 @@ mod tests {
         assert!(j.contains("\"total_bytes\": 5120"));
         assert!(j.contains("\"busiest_node_bytes\": 1280"));
         assert!(j.contains("\"total_messages\": 32"));
+        assert!(j.contains("\"clock_skew\": 0.25"));
+        assert!(j.contains("\"skew\": 0.25"));
         assert!(j.contains("\"bytes\": 5120"));
         // structurally: balanced braces/brackets
         assert_eq!(j.matches('{').count(), j.matches('}').count());
@@ -155,6 +162,7 @@ mod tests {
             trace.push(TracePoint {
                 outer: 0,
                 sim_time: 0.0,
+                skew: 0.0,
                 wall_time: 0.0,
                 scalars: 0,
                 bytes: 0,
@@ -164,6 +172,7 @@ mod tests {
             trace.push(TracePoint {
                 outer: 1,
                 sim_time: 0.5,
+                skew: 0.125,
                 wall_time: 1.0,
                 scalars: 640,
                 bytes: 5120,
@@ -176,6 +185,7 @@ mod tests {
                 w: vec![0.0; 4],
                 trace,
                 total_sim_time: 0.5,
+                clock_skew: 0.125,
                 total_wall_time: 1.0,
                 total_scalars: 640,
                 busiest_node_scalars: 160,

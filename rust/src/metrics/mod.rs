@@ -22,6 +22,10 @@ pub struct TracePoint {
     pub outer: usize,
     /// Simulated cluster time, seconds.
     pub sim_time: f64,
+    /// Per-node clock skew at this epoch boundary (max − min simulated
+    /// node time, seconds; 0 for single-node runs) — what makes straggler
+    /// and heterogeneous-network runs measurable.
+    pub skew: f64,
     /// Real wall-clock of the host process, seconds (reported alongside;
     /// contention-polluted, not used for figures).
     pub wall_time: f64,
@@ -93,20 +97,22 @@ impl Trace {
         None
     }
 
-    /// Write `outer,sim_time,wall_time,scalars,bytes,grads,objective,gap` CSV.
+    /// Write `outer,sim_time,skew,wall_time,scalars,bytes,grads,objective,gap`
+    /// CSV (`skew` = per-node clock skew at the epoch boundary).
     pub fn write_csv<P: AsRef<Path>>(&self, path: P, f_opt: f64) -> Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir).ok();
         }
         let mut f = std::fs::File::create(path.as_ref())
             .with_context(|| format!("create {}", path.as_ref().display()))?;
-        writeln!(f, "outer,sim_time,wall_time,scalars,bytes,grads,objective,gap")?;
+        writeln!(f, "outer,sim_time,skew,wall_time,scalars,bytes,grads,objective,gap")?;
         for p in &self.points {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{},{},{},{:.12},{:.6e}",
+                "{},{:.6},{:.6},{:.6},{},{},{},{:.12},{:.6e}",
                 p.outer,
                 p.sim_time,
+                p.skew,
                 p.wall_time,
                 p.scalars,
                 p.bytes,
@@ -166,6 +172,9 @@ pub struct RunResult {
     pub w: Vec<f64>,
     pub trace: Trace,
     pub total_sim_time: f64,
+    /// Final per-node clock skew (max − min simulated node time at the
+    /// last epoch boundary; 0 for single-node runs).
+    pub clock_skew: f64,
     pub total_wall_time: f64,
     /// Derived scalar view of the traffic (§4.5 pins: under the `f64`
     /// wire format `total_bytes == 8 * total_scalars`).
@@ -192,12 +201,14 @@ impl RunResult {
         total_wall_time: f64,
         totals: CommTotals,
     ) -> RunResult {
+        let clock_skew = trace.points.last().map(|p| p.skew).unwrap_or(0.0);
         RunResult {
             algorithm: algorithm.into(),
             dataset: dataset.into(),
             w,
             trace,
             total_sim_time,
+            clock_skew,
             total_wall_time,
             total_scalars: totals.total_scalars,
             busiest_node_scalars: totals.busiest_node_scalars,
@@ -269,6 +280,7 @@ mod tests {
             t.push(TracePoint {
                 outer: i,
                 sim_time: i as f64,
+                skew: 0.25 * i as f64,
                 wall_time: i as f64 * 2.0,
                 scalars: (i as u64) * 100,
                 bytes: (i as u64) * 800,
@@ -313,6 +325,26 @@ mod tests {
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("outer,"));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_includes_clock_skew_column() {
+        let t = trace_with_gaps(&[1.0, 0.1]);
+        let dir = std::env::temp_dir().join("fdsvrg_test_csv_skew");
+        let path = dir.join("t.csv");
+        t.write_csv(&path, 1.0).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert!(lines[0].contains(",skew,"), "header must name the skew column: {}", lines[0]);
+        assert!(lines[2].contains(",0.250000,"), "point 1 skew must serialize: {}", lines[2]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn run_result_clock_skew_reads_the_last_trace_point() {
+        let t = trace_with_gaps(&[1.0, 0.1, 0.01]);
+        let r = RunResult::from_totals("a", "d", vec![], t, 2.0, 2.0, CommTotals::default());
+        assert_eq!(r.clock_skew, 0.5);
     }
 
     #[test]

@@ -143,6 +143,7 @@ mod tests {
             t.push(TracePoint {
                 outer: i,
                 sim_time: i as f64,
+                skew: 0.0,
                 wall_time: i as f64,
                 scalars: 100 * i as u64,
                 bytes: 800 * i as u64,
@@ -197,6 +198,7 @@ mod tests {
         t.push(TracePoint {
             outer: 0,
             sim_time: 0.0,
+            skew: 0.0,
             wall_time: 0.0,
             scalars: 0,
             bytes: 0,

@@ -25,14 +25,24 @@
 //! Evaluation traffic (objective snapshots) uses the `send_eval`/`recv_eval`
 //! pair which bypasses both the counters and the clock.
 //!
+//! All time-charging is owned by the pluggable [`model`] layer: a
+//! [`NetModel`] (uniform / heterogeneous racks / stragglers / seeded
+//! jitter) hands each endpoint a [`model::LinkView`] and the endpoint
+//! routes every compute tick, send and receive through it. [`build`]
+//! keeps the legacy flat-[`SimParams`] signature (a [`NetModel::Uniform`]
+//! network, bit-exact with the pre-model charging); scenario clusters go
+//! through [`build_with_model`].
+//!
 //! Collectives (tree/star allreduce, zero-copy broadcast) live in
 //! [`collectives`]; the codec layer ([`WireFmt`]/[`Payload`]) in
 //! [`payload`].
 
 pub mod collectives;
+pub mod model;
 pub mod payload;
 pub mod topology;
 
+pub use model::{LinkProfile, NetModel, NetSpec};
 pub use payload::{Payload, WireFmt};
 
 use std::collections::VecDeque;
@@ -76,7 +86,7 @@ pub mod tags {
 ///   bandwidth; serializes with `per_msg` at the endpoints. Bytes are the
 ///   canonical unit so compressed wire formats (`f32`, `sparse`) speed the
 ///   simulated transfer exactly in proportion to the bytes they save.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SimParams {
     /// Wire latency in seconds. Default 40 µs (10GbE switch + propagation).
     pub latency: f64,
@@ -216,10 +226,20 @@ pub struct Msg {
     pub tag: Tag,
     pub payload: Payload,
     pub send_time: f64,
+    /// Sender-drawn extra wire latency (a [`NetModel::Jitter`] network;
+    /// exactly 0.0 otherwise), applied at delivery.
+    jitter: f64,
     counted: bool,
 }
 
 impl Msg {
+    /// The seeded extra wire latency charged to this message by a
+    /// [`NetModel::Jitter`] network (0 otherwise) — exposed so determinism
+    /// tests can pin the noise stream message by message.
+    pub fn wire_jitter(&self) -> f64 {
+        self.jitter
+    }
+
     /// Logical scalar count of the payload.
     pub fn scalars(&self) -> usize {
         self.payload.scalars()
@@ -253,12 +273,13 @@ pub struct Endpoint {
     senders: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
     stash: VecDeque<Msg>,
-    clock: f64,
-    /// NIC occupancy horizons: outgoing/incoming messages serialize here.
-    nic_out: f64,
-    nic_in: f64,
+    /// Simulated clock + NIC occupancy horizons; every mutation goes
+    /// through the model layer's charging rules.
+    cs: ClockState,
     cpu: ThreadCpuTimer,
-    params: SimParams,
+    /// This node's charging rules (per-peer links, straggler scales,
+    /// jitter stream) — the [`model`] layer's per-node view.
+    net: model::LinkView,
     stats: Arc<CommStats>,
 }
 
@@ -271,8 +292,15 @@ impl Endpoint {
         self.n_nodes
     }
 
+    /// The model's base link parameters (the uniform/rack-local profile).
     pub fn params(&self) -> SimParams {
-        self.params
+        self.net.base()
+    }
+
+    /// This node's charging view (scenario tests read link profiles and
+    /// straggler scales through it).
+    pub fn net(&self) -> &model::LinkView {
+        &self.net
     }
 
     pub fn stats(&self) -> &Arc<CommStats> {
@@ -280,10 +308,12 @@ impl Endpoint {
     }
 
     /// Charge the thread CPU time burned since the last network operation
-    /// to this node's simulated clock.
+    /// to this node's simulated clock (through the model — stragglers run
+    /// their compute at `factor×`).
     #[inline]
     pub fn tick(&mut self) {
-        self.clock += self.cpu.lap();
+        let lap = self.cpu.lap();
+        self.net.charge_compute(&mut self.cs, lap);
     }
 
     /// Discard CPU time burned since the last network op (evaluation /
@@ -295,13 +325,13 @@ impl Endpoint {
     /// Current simulated time at this node.
     pub fn now(&mut self) -> f64 {
         self.tick();
-        self.clock
+        self.cs.clock
     }
 
     /// Force the clock forward (barrier synchronization).
     pub fn advance_to(&mut self, t: f64) {
-        if t > self.clock {
-            self.clock = t;
+        if t > self.cs.clock {
+            self.cs.clock = t;
         }
     }
 
@@ -310,30 +340,41 @@ impl Endpoint {
     /// (snapshots happen on the uncounted evaluation plane).
     pub fn clock_state(&mut self) -> ClockState {
         self.discard_cpu();
-        ClockState { clock: self.clock, nic_out: self.nic_out, nic_in: self.nic_in }
+        self.cs
     }
 
     /// Restore a clock state exported by [`Endpoint::clock_state`] so a
     /// resumed node's schedule continues where the checkpointed one
     /// stopped.
     pub fn restore_clock_state(&mut self, cs: ClockState) {
-        self.clock = cs.clock;
-        self.nic_out = cs.nic_out;
-        self.nic_in = cs.nic_in;
+        self.cs = cs;
+    }
+
+    /// The jitter stream's PCG state words (None unless the run uses a
+    /// [`NetModel::Jitter`] network) — these join the session checkpoint's
+    /// per-node records.
+    pub fn jitter_words(&self) -> Option<[u64; 4]> {
+        self.net.jitter_words()
+    }
+
+    /// Restore a checkpointed jitter stream (no-op on jitter-free models
+    /// or a `None` snapshot).
+    pub fn restore_jitter(&mut self, words: Option<[u64; 4]>) {
+        self.net.restore_jitter(words);
     }
 
     /// Send a payload to node `to`; counts scalars/bytes/messages,
-    /// serializes on this node's outgoing NIC and stamps the on-the-wire
-    /// time. `Vec<f64>` converts implicitly to an exact `f64` payload;
-    /// codec-encoded traffic goes through [`collectives::Comm`].
+    /// serializes on this node's outgoing NIC (through the model's link
+    /// profile to `to`) and stamps the on-the-wire time. `Vec<f64>`
+    /// converts implicitly to an exact `f64` payload; codec-encoded
+    /// traffic goes through [`collectives::Comm`].
     pub fn send(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
         self.tick();
         let payload = payload.into();
         let bytes = payload.wire_bytes();
         self.stats.record(self.id, payload.scalars(), bytes);
-        let wire_time = self.clock.max(self.nic_out) + self.params.occupancy(bytes);
-        self.nic_out = wire_time;
-        let msg = Msg { from: self.id, tag, payload, send_time: wire_time, counted: true };
+        let (wire_time, jitter) = self.net.charge_send(&mut self.cs, to, bytes);
+        let msg = Msg { from: self.id, tag, payload, send_time: wire_time, jitter, counted: true };
         // A disconnected peer means the run is being torn down (e.g. a
         // worker panicked); panicking here unwinds this node too.
         self.senders[to].send(msg).unwrap_or_else(|_| {
@@ -344,8 +385,14 @@ impl Endpoint {
     /// Evaluation-plane send: not counted, no clock effect on either side.
     pub fn send_eval(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
         self.discard_cpu();
-        let msg =
-            Msg { from: self.id, tag, payload: payload.into(), send_time: 0.0, counted: false };
+        let msg = Msg {
+            from: self.id,
+            tag,
+            payload: payload.into(),
+            send_time: 0.0,
+            jitter: 0.0,
+            counted: false,
+        };
         self.senders[to].send(msg).unwrap_or_else(|_| {
             panic!("node {}: peer {to} disconnected on eval send (tag {tag})", self.id)
         });
@@ -353,12 +400,13 @@ impl Endpoint {
 
     fn deliver(&mut self, msg: &Msg) {
         if msg.counted {
-            let at_nic = msg.send_time + self.params.latency;
-            let done = at_nic.max(self.nic_in) + self.params.occupancy(msg.payload.wire_bytes());
-            self.nic_in = done;
-            if done > self.clock {
-                self.clock = done;
-            }
+            self.net.charge_recv(
+                &mut self.cs,
+                msg.from,
+                msg.payload.wire_bytes(),
+                msg.send_time,
+                msg.jitter,
+            );
         }
     }
 
@@ -459,8 +507,16 @@ impl Endpoint {
     }
 }
 
-/// Build a fully-connected network of `n_nodes` endpoints.
+/// Build a fully-connected network of `n_nodes` endpoints under the legacy
+/// flat [`SimParams`] — a [`NetModel::Uniform`] network, bit-exact with
+/// the pre-model charging.
 pub fn build(n_nodes: usize, params: SimParams) -> (Vec<Endpoint>, Arc<CommStats>) {
+    build_with_model(n_nodes, &NetModel::Uniform(params))
+}
+
+/// Build a fully-connected network of `n_nodes` endpoints, each charging
+/// time through its [`model::LinkView`] of `model`.
+pub fn build_with_model(n_nodes: usize, model: &NetModel) -> (Vec<Endpoint>, Arc<CommStats>) {
     let stats = CommStats::new(n_nodes);
     let mut txs = Vec::with_capacity(n_nodes);
     let mut rxs = Vec::with_capacity(n_nodes);
@@ -486,11 +542,9 @@ pub fn build(n_nodes: usize, params: SimParams) -> (Vec<Endpoint>, Arc<CommStats
                 senders,
                 rx,
                 stash: VecDeque::new(),
-                clock: 0.0,
-                nic_out: 0.0,
-                nic_in: 0.0,
+                cs: ClockState::default(),
                 cpu: ThreadCpuTimer::start(),
-                params,
+                net: model.node_view(id, n_nodes),
                 stats: stats.clone(),
             }
         })
@@ -633,6 +687,88 @@ mod tests {
         assert_eq!(stats.busiest_node_bytes(), 160);
         assert_eq!(stats.total_scalars(), 25);
         assert_eq!(stats.total_bytes(), 200);
+    }
+
+    #[test]
+    fn straggler_nic_slows_the_slow_nodes_messages() {
+        // per_msg = 1 s, factor = 4: a send from the straggler costs 4 s of
+        // outgoing-NIC occupancy; the (fast) receiver adds its own 1 s.
+        let model = NetModel::Straggler {
+            base: SimParams { latency: 0.0, per_msg: 1.0, sec_per_byte: 0.0 },
+            slow: 1,
+            factor: 4.0,
+        };
+        let (mut eps, _) = build_with_model(2, &model);
+        let mut slow = eps.pop().unwrap(); // node 1 = straggler
+        let mut fast = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            slow.send(0, tags::CTRL, vec![1.0]);
+        });
+        fast.recv_from(1, tags::CTRL);
+        h.join().unwrap();
+        let t = fast.now();
+        assert!(t >= 5.0, "4 s straggler send + 1 s receive, got {t}");
+        assert!(t < 5.5, "no extra charges expected, got {t}");
+    }
+
+    #[test]
+    fn jitter_messages_carry_seeded_noise() {
+        let model = NetModel::Jitter { base: SimParams::free(), amp: 3.0, seed: 21 };
+        let collect = || -> Vec<f64> {
+            let (mut eps, _) = build_with_model(2, &model);
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            let h = thread::spawn(move || {
+                for _ in 0..8 {
+                    a.send(1, tags::CTRL, vec![1.0]);
+                }
+            });
+            let jits: Vec<f64> = (0..8).map(|_| b.recv_from(0, tags::CTRL).wire_jitter()).collect();
+            h.join().unwrap();
+            // the noise is charged as wire latency: the receiver clock must
+            // cover at least the largest single jitter seen
+            let t = b.now();
+            let max = jits.iter().cloned().fold(0.0f64, f64::max);
+            assert!(t >= max, "clock {t} must include the {max} jitter");
+            jits
+        };
+        let a = collect();
+        let b = collect();
+        assert_eq!(a, b, "same seed must replay the same noise sequence");
+        assert!(a.iter().all(|&j| (0.0..3.0).contains(&j)));
+        assert!(a.iter().any(|&j| j > 0.0), "amp 3.0 must actually draw noise");
+    }
+
+    #[test]
+    fn hetero_cross_rack_latency_applies_per_link() {
+        // rack_size 1 ⇒ every pair is cross-rack (1 s latency); the local
+        // profile is free, so the whole delay is the cross link's.
+        let model = NetModel::Heterogeneous {
+            local: SimParams::free(),
+            cross: LinkProfile { latency: 1.0, per_msg: 0.0, sec_per_byte: 0.0 },
+            rack_size: 1,
+        };
+        let (mut eps, _) = build_with_model(2, &model);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || a.send(1, tags::CTRL, vec![1.0]));
+        b.recv_from(0, tags::CTRL);
+        h.join().unwrap();
+        let t = b.now();
+        assert!((1.0..1.5).contains(&t), "one cross-rack hop of 1 s, got {t}");
+        // same model, rack_size 2 ⇒ the pair shares a rack, link is free
+        let model = NetModel::Heterogeneous {
+            local: SimParams::free(),
+            cross: LinkProfile { latency: 1.0, per_msg: 0.0, sec_per_byte: 0.0 },
+            rack_size: 2,
+        };
+        let (mut eps, _) = build_with_model(2, &model);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || a.send(1, tags::CTRL, vec![1.0]));
+        b.recv_from(0, tags::CTRL);
+        h.join().unwrap();
+        assert!(b.now() < 0.5, "rack-local link must be free");
     }
 
     #[test]

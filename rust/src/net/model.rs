@@ -1,0 +1,469 @@
+//! Pluggable network timing models — the scenario layer of the simulator.
+//!
+//! The wire layer ([`crate::net::payload`]) decides *what* a message costs
+//! in bytes; this module decides *how long* those bytes take. A
+//! [`NetModel`] describes the whole cluster's timing plane and hands every
+//! node a [`LinkView`] — the per-node charging rules the [`super::Endpoint`]
+//! routes all time accounting through (compute ticks, sender-NIC
+//! serialization, wire latency, receiver-NIC serialization). Four models
+//! ship:
+//!
+//! | model | scenario | parameters |
+//! |-------|----------|------------|
+//! | [`NetModel::Uniform`] | the legacy single-[`SimParams`] network; **bit-exact** with the pre-model charging (the equivalence/comm suites pin it) | base `SimParams` |
+//! | [`NetModel::Heterogeneous`] | rack-structured clusters: rack-local links vs slower cross-rack links | local `SimParams`, cross [`LinkProfile`], `rack_size` |
+//! | [`NetModel::Straggler`] | `slow` designated slow nodes (the highest node ids — workers in every topology) running compute *and* NIC at `factor×` the time | base `SimParams`, `slow`, `factor` |
+//! | [`NetModel::Jitter`] | per-message wire-latency noise, drawn from a dedicated seeded PCG stream per sender — fully deterministic under a seed, checkpoint/resumable | base `SimParams`, `amp`, `seed` |
+//!
+//! Configuration flows as a [`NetSpec`] — a base-free scenario overlay
+//! carried by [`crate::algs::RunParams`] (CLI `--net`, config table
+//! `net.*`) and resolved against the run's base `SimParams` by
+//! [`NetSpec::resolve`], so every existing `RunParams { sim, .. }` call
+//! site keeps meaning what it meant (the default overlay is `Uniform`).
+//!
+//! **Bit-exactness of `Uniform`.** The charging formulas below are the
+//! legacy `Endpoint` formulas with a multiplicative NIC/compute scale and
+//! an additive jitter term. Under `Uniform` the scales are exactly `1.0`
+//! and the jitter is exactly `+0.0`; IEEE-754 guarantees `x * 1.0 == x`
+//! and `x + 0.0 == x` bit-for-bit for every non-negative finite `x`, so
+//! the refactor cannot perturb a single clock bit
+//! (`rust/tests/net_model.rs` pins this against a reference
+//! implementation of the legacy formulas).
+
+use super::{ClockState, NodeId, SimParams};
+use crate::util::Pcg64;
+
+/// One link's LogP cost parameters — the same three axes as [`SimParams`]
+/// (wire latency, per-message endpoint overhead, seconds per payload
+/// byte), but scoped to a single node pair instead of the whole cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    /// Wire/switch latency in seconds (parallel across links).
+    pub latency: f64,
+    /// Per-message endpoint processing (serializes at each NIC).
+    pub per_msg: f64,
+    /// Transfer seconds per payload byte.
+    pub sec_per_byte: f64,
+}
+
+impl LinkProfile {
+    /// Endpoint occupancy of one message over this link.
+    #[inline]
+    pub fn occupancy(&self, bytes: usize) -> f64 {
+        self.per_msg + bytes as f64 * self.sec_per_byte
+    }
+
+    /// A zero-cost link.
+    pub fn free() -> LinkProfile {
+        LinkProfile { latency: 0.0, per_msg: 0.0, sec_per_byte: 0.0 }
+    }
+}
+
+impl From<SimParams> for LinkProfile {
+    fn from(sp: SimParams) -> LinkProfile {
+        LinkProfile { latency: sp.latency, per_msg: sp.per_msg, sec_per_byte: sp.sec_per_byte }
+    }
+}
+
+/// Seeded per-message latency-noise stream (one per sender node). Draws
+/// are uniform in `[0, amp)` from a dedicated PCG stream, so a run is a
+/// pure function of the seed, and the stream's state words join the
+/// checkpoint's per-node records so a mid-run resume replays the exact
+/// same noise tail.
+#[derive(Clone, Debug)]
+pub struct JitterStream {
+    rng: Pcg64,
+    amp: f64,
+}
+
+impl JitterStream {
+    /// Draw the next message's extra wire latency.
+    #[inline]
+    pub fn draw(&mut self) -> f64 {
+        self.amp * self.rng.next_f64()
+    }
+}
+
+/// Derive the per-node jitter stream from the scenario seed: splitmix-style
+/// spread of the node id so streams don't correlate across nodes.
+fn node_stream(seed: u64, id: NodeId) -> Pcg64 {
+    Pcg64::seed_from_u64(seed ^ (id as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A whole cluster's network timing model. Build one per run (usually via
+/// [`NetSpec::resolve`]) and hand each endpoint its charging rules with
+/// [`NetModel::node_view`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetModel {
+    /// Identical LogP parameters on every link — re-expresses the legacy
+    /// flat `SimParams` network bit-exactly.
+    Uniform(SimParams),
+    /// Rack-structured heterogeneity: nodes are grouped into racks of
+    /// `rack_size` consecutive ids; links within a rack use `local`,
+    /// links across racks use `cross` (typically higher latency, lower
+    /// bandwidth).
+    Heterogeneous {
+        local: SimParams,
+        cross: LinkProfile,
+        rack_size: usize,
+    },
+    /// `slow` designated slow nodes — the **highest** node ids, which are
+    /// workers in every topology this crate ships (node 0 is always the
+    /// coordinator/monitor; `slow` is clamped to `n_nodes − 1` so the
+    /// monitor never straggles) — run both compute and NIC occupancy at
+    /// `factor×` the time.
+    Straggler { base: SimParams, slow: usize, factor: f64 },
+    /// Uniform links plus seeded per-message wire-latency noise in
+    /// `[0, amp)`, drawn sender-side from a per-node PCG stream. Fully
+    /// deterministic under `seed`, including across checkpoint/resume.
+    Jitter { base: SimParams, amp: f64, seed: u64 },
+}
+
+impl NetModel {
+    /// Scenario name (`uniform`/`hetero`/`straggler`/`jitter`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetModel::Uniform(_) => "uniform",
+            NetModel::Heterogeneous { .. } => "hetero",
+            NetModel::Straggler { .. } => "straggler",
+            NetModel::Jitter { .. } => "jitter",
+        }
+    }
+
+    /// The base link parameters (what [`super::Endpoint::params`] reports).
+    pub fn base(&self) -> SimParams {
+        match self {
+            NetModel::Uniform(sp) => *sp,
+            NetModel::Heterogeneous { local, .. } => *local,
+            NetModel::Straggler { base, .. } | NetModel::Jitter { base, .. } => *base,
+        }
+    }
+
+    /// The charging view of node `id` in an `n_nodes` cluster: its link
+    /// profile to every peer, its compute/NIC scale, and (under `Jitter`)
+    /// its seeded noise stream.
+    pub fn node_view(&self, id: NodeId, n_nodes: usize) -> LinkView {
+        let base = self.base();
+        match self {
+            NetModel::Uniform(sp) => LinkView {
+                base,
+                links: vec![LinkProfile::from(*sp); n_nodes],
+                compute_scale: 1.0,
+                nic_scale: 1.0,
+                jitter: None,
+            },
+            NetModel::Heterogeneous { local, cross, rack_size } => {
+                let rs = (*rack_size).max(1);
+                let links = (0..n_nodes)
+                    .map(|peer| {
+                        if peer / rs == id / rs {
+                            LinkProfile::from(*local)
+                        } else {
+                            *cross
+                        }
+                    })
+                    .collect();
+                LinkView { base, links, compute_scale: 1.0, nic_scale: 1.0, jitter: None }
+            }
+            NetModel::Straggler { base: sp, slow, factor } => {
+                // clamp to n_nodes − 1: stragglers are always workers, the
+                // monitor (node 0) never slows down
+                let k = (*slow).min(n_nodes.saturating_sub(1));
+                let scale = if id >= n_nodes - k { *factor } else { 1.0 };
+                LinkView {
+                    base,
+                    links: vec![LinkProfile::from(*sp); n_nodes],
+                    compute_scale: scale,
+                    nic_scale: scale,
+                    jitter: None,
+                }
+            }
+            NetModel::Jitter { base: sp, amp, seed } => LinkView {
+                base,
+                links: vec![LinkProfile::from(*sp); n_nodes],
+                compute_scale: 1.0,
+                nic_scale: 1.0,
+                jitter: Some(JitterStream { rng: node_stream(*seed, id), amp: *amp }),
+            },
+        }
+    }
+}
+
+/// Config-level scenario selector (`--net uniform|hetero|straggler|jitter`
+/// plus the `net.*` scenario table): a *base-free* overlay carried by
+/// [`crate::algs::RunParams`] and resolved against the run's base
+/// `SimParams`, so the legacy `sim` field keeps its meaning under every
+/// scenario (it is the rack-local / non-straggler / noise-free link).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum NetSpec {
+    /// The legacy single-`SimParams` network (default; bit-exact).
+    #[default]
+    Uniform,
+    /// Rack-local links use the base `SimParams`; cross-rack links use
+    /// `cross`.
+    Hetero { cross: LinkProfile, rack_size: usize },
+    /// The `slow` highest-id nodes run compute and NIC at `factor×`.
+    Straggler { slow: usize, factor: f64 },
+    /// Seeded per-message latency noise in `[0, amp)`.
+    Jitter { amp: f64, seed: u64 },
+}
+
+impl NetSpec {
+    /// Every scenario kind, for CLI parsing and error listings.
+    pub const KINDS: [&'static str; 4] = ["uniform", "hetero", "straggler", "jitter"];
+
+    /// Scenario name of this spec.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetSpec::Uniform => "uniform",
+            NetSpec::Hetero { .. } => "hetero",
+            NetSpec::Straggler { .. } => "straggler",
+            NetSpec::Jitter { .. } => "jitter",
+        }
+    }
+
+    /// Resolve the overlay against the run's base link parameters.
+    pub fn resolve(&self, base: SimParams) -> NetModel {
+        match self {
+            NetSpec::Uniform => NetModel::Uniform(base),
+            NetSpec::Hetero { cross, rack_size } => NetModel::Heterogeneous {
+                local: base,
+                cross: *cross,
+                rack_size: *rack_size,
+            },
+            NetSpec::Straggler { slow, factor } => {
+                NetModel::Straggler { base, slow: *slow, factor: *factor }
+            }
+            NetSpec::Jitter { amp, seed } => NetModel::Jitter { base, amp: *amp, seed: *seed },
+        }
+    }
+}
+
+/// One node's charging rules — everything the [`super::Endpoint`] needs to
+/// turn an event (compute lap, send, receive) into simulated time. All
+/// time-charging formulas of the simulator live in the three `charge_*`
+/// methods; the endpoint owns the [`ClockState`] and routes every event
+/// through here.
+#[derive(Clone, Debug)]
+pub struct LinkView {
+    base: SimParams,
+    /// This node's link profile to each peer (symmetric; own entry unused).
+    links: Vec<LinkProfile>,
+    /// Multiplier on measured compute time (stragglers run slow).
+    compute_scale: f64,
+    /// Multiplier on this node's NIC occupancy, send and receive side.
+    nic_scale: f64,
+    jitter: Option<JitterStream>,
+}
+
+impl LinkView {
+    /// The base (`SimParams`) link parameters of the model.
+    pub fn base(&self) -> SimParams {
+        self.base
+    }
+
+    /// This node's link profile to `peer`.
+    pub fn link(&self, peer: NodeId) -> LinkProfile {
+        self.links[peer]
+    }
+
+    /// This node's compute-time multiplier (1.0 unless it is a straggler).
+    pub fn compute_scale(&self) -> f64 {
+        self.compute_scale
+    }
+
+    /// Charge `cpu` seconds of measured compute to the clock.
+    #[inline]
+    pub fn charge_compute(&self, cs: &mut ClockState, cpu: f64) {
+        cs.clock += cpu * self.compute_scale;
+    }
+
+    /// Sender-side charge of one counted message to `to`: serializes on
+    /// the outgoing NIC and returns `(wire timestamp, wire jitter)` — the
+    /// jitter is drawn here (sender side) so the noise sequence is a pure
+    /// function of this node's send sequence, and travels with the message
+    /// to be applied as extra wire latency at the receiver.
+    #[inline]
+    pub fn charge_send(&mut self, cs: &mut ClockState, to: NodeId, bytes: usize) -> (f64, f64) {
+        let occ = self.links[to].occupancy(bytes) * self.nic_scale;
+        let wire_time = cs.clock.max(cs.nic_out) + occ;
+        cs.nic_out = wire_time;
+        let jitter = match &mut self.jitter {
+            Some(j) => j.draw(),
+            None => 0.0,
+        };
+        (wire_time, jitter)
+    }
+
+    /// Receiver-side charge of one counted message from `from`: wire
+    /// latency (+ the sender-drawn jitter), then serialization on the
+    /// incoming NIC; advances the clock per the happens-before rule.
+    #[inline]
+    pub fn charge_recv(
+        &self,
+        cs: &mut ClockState,
+        from: NodeId,
+        bytes: usize,
+        send_time: f64,
+        jitter: f64,
+    ) {
+        let link = &self.links[from];
+        let at_nic = send_time + link.latency + jitter;
+        let done = at_nic.max(cs.nic_in) + link.occupancy(bytes) * self.nic_scale;
+        cs.nic_in = done;
+        if done > cs.clock {
+            cs.clock = done;
+        }
+    }
+
+    /// The jitter stream's PCG state words (None unless this is a
+    /// [`NetModel::Jitter`] view) — joins the checkpoint's per-node
+    /// records so a resume continues the exact noise sequence.
+    pub fn jitter_words(&self) -> Option<[u64; 4]> {
+        self.jitter.as_ref().map(|j| j.rng.state_words())
+    }
+
+    /// Restore a checkpointed jitter stream. A `None` (checkpoint taken
+    /// under a jitter-free model) leaves the freshly-seeded stream in
+    /// place; restoring onto a jitter-free view is a no-op.
+    pub fn restore_jitter(&mut self, words: Option<[u64; 4]>) {
+        if let (Some(j), Some(w)) = (self.jitter.as_mut(), words) {
+            j.rng = Pcg64::from_state_words(w);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> SimParams {
+        SimParams { latency: 1e-3, per_msg: 1e-4, sec_per_byte: 1e-8 }
+    }
+
+    #[test]
+    fn uniform_view_has_identity_scales_and_equal_links() {
+        let model = NetModel::Uniform(base());
+        for id in 0..4 {
+            let v = model.node_view(id, 4);
+            assert_eq!(v.compute_scale(), 1.0);
+            assert_eq!(v.nic_scale, 1.0);
+            assert!(v.jitter.is_none());
+            for peer in 0..4 {
+                assert_eq!(v.link(peer), LinkProfile::from(base()));
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_marks_the_highest_ids() {
+        let model = NetModel::Straggler { base: base(), slow: 2, factor: 8.0 };
+        let scales: Vec<f64> = (0..5).map(|id| model.node_view(id, 5).compute_scale()).collect();
+        assert_eq!(scales, vec![1.0, 1.0, 1.0, 8.0, 8.0]);
+        // slow count clamps to n_nodes − 1: the monitor (node 0) never slows
+        let all = NetModel::Straggler { base: base(), slow: 99, factor: 2.0 };
+        let scales: Vec<f64> = (0..3).map(|id| all.node_view(id, 3).compute_scale()).collect();
+        assert_eq!(scales, vec![1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn hetero_links_split_by_rack() {
+        let cross = LinkProfile { latency: 0.5, per_msg: 0.0, sec_per_byte: 0.0 };
+        let model = NetModel::Heterogeneous { local: base(), cross, rack_size: 2 };
+        // nodes 0,1 are rack 0; nodes 2,3 rack 1
+        let v = model.node_view(0, 4);
+        assert_eq!(v.link(1), LinkProfile::from(base()), "rack-local link");
+        assert_eq!(v.link(2), cross, "cross-rack link");
+        assert_eq!(v.link(3), cross);
+        let v3 = model.node_view(3, 4);
+        assert_eq!(v3.link(2), LinkProfile::from(base()));
+        assert_eq!(v3.link(0), cross);
+    }
+
+    #[test]
+    fn jitter_streams_are_per_node_and_seed_deterministic() {
+        let model = NetModel::Jitter { base: base(), amp: 2.0, seed: 7 };
+        let draw5 = |id: NodeId| -> Vec<f64> {
+            let mut v = model.node_view(id, 3);
+            let mut cs = ClockState::default();
+            (0..5).map(|_| v.charge_send(&mut cs, (id + 1) % 3, 8).1).collect()
+        };
+        let a = draw5(0);
+        assert_eq!(a, draw5(0), "same seed + node must replay the sequence");
+        assert_ne!(a, draw5(1), "nodes must not share a stream");
+        assert!(a.iter().all(|&j| (0.0..2.0).contains(&j)));
+        assert!(a.iter().any(|&j| j > 0.0));
+        let other = NetModel::Jitter { base: base(), amp: 2.0, seed: 8 };
+        let mut v = other.node_view(0, 3);
+        let mut cs = ClockState::default();
+        let b: Vec<f64> = (0..5).map(|_| v.charge_send(&mut cs, 1, 8).1).collect();
+        assert_ne!(a, b, "different seeds must differ");
+    }
+
+    #[test]
+    fn jitter_words_round_trip_continues_the_stream() {
+        let model = NetModel::Jitter { base: base(), amp: 1.0, seed: 11 };
+        let mut v = model.node_view(2, 4);
+        let mut cs = ClockState::default();
+        for _ in 0..7 {
+            v.charge_send(&mut cs, 0, 100);
+        }
+        let words = v.jitter_words().expect("jitter view exports its stream");
+        let mut fresh = model.node_view(2, 4);
+        fresh.restore_jitter(Some(words));
+        let mut cs2 = ClockState::default();
+        for _ in 0..10 {
+            let a = v.charge_send(&mut cs, 0, 8).1;
+            let b = fresh.charge_send(&mut cs2, 0, 8).1;
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // restoring onto a jitter-free view is a no-op; None leaves the
+        // fresh stream in place
+        let mut uni = NetModel::Uniform(base()).node_view(0, 2);
+        uni.restore_jitter(Some(words));
+        assert!(uni.jitter_words().is_none());
+    }
+
+    #[test]
+    fn netspec_resolves_against_the_base_params() {
+        let sp = base();
+        assert_eq!(NetSpec::Uniform.resolve(sp), NetModel::Uniform(sp));
+        let spec = NetSpec::Straggler { slow: 1, factor: 3.0 };
+        assert_eq!(spec.resolve(sp), NetModel::Straggler { base: sp, slow: 1, factor: 3.0 });
+        assert_eq!(spec.name(), "straggler");
+        assert_eq!(NetSpec::default(), NetSpec::Uniform);
+        for kind in NetSpec::KINDS {
+            assert!(!kind.is_empty());
+        }
+    }
+
+    #[test]
+    fn charge_math_reproduces_the_documented_example() {
+        // 4 f64 scalars = 32 bytes at 0.0625 s/B ⇒ 2 s occupancy/side,
+        // 1 s latency (the example from the net module docs)
+        let sp = SimParams { latency: 1.0, per_msg: 0.0, sec_per_byte: 0.0625 };
+        let model = NetModel::Uniform(sp);
+        let mut tx = model.node_view(0, 2);
+        let rx = model.node_view(1, 2);
+        let mut cs0 = ClockState::default();
+        let mut cs1 = ClockState::default();
+        let (wire, jit) = tx.charge_send(&mut cs0, 1, 32);
+        assert_eq!(wire, 2.0);
+        assert_eq!(jit, 0.0);
+        rx.charge_recv(&mut cs1, 0, 32, wire, jit);
+        assert_eq!(cs1.clock, 5.0); // 2 (send occ) + 1 (latency) + 2 (recv occ)
+        assert_eq!(cs1.nic_in, 5.0);
+    }
+
+    #[test]
+    fn straggler_scales_both_compute_and_nic() {
+        let sp = SimParams { latency: 0.0, per_msg: 1.0, sec_per_byte: 0.0 };
+        let model = NetModel::Straggler { base: sp, slow: 1, factor: 4.0 };
+        let mut slow = model.node_view(1, 2);
+        let mut cs = ClockState::default();
+        slow.charge_compute(&mut cs, 1.0);
+        assert_eq!(cs.clock, 4.0, "compute runs 4x slow");
+        let (wire, _) = slow.charge_send(&mut cs, 0, 0);
+        assert_eq!(wire, 8.0, "NIC occupancy 4x on top of the 4s clock");
+    }
+}

@@ -37,13 +37,26 @@ pub enum WireFmt {
 impl WireFmt {
     pub const ALL: [WireFmt; 3] = [WireFmt::F64, WireFmt::F32, WireFmt::Sparse];
 
+    /// Parse a wire-format name, case-insensitively (`F64`, `f64`, …).
     pub fn parse(s: &str) -> Option<WireFmt> {
-        match s {
-            "f64" | "F64" => Some(WireFmt::F64),
-            "f32" | "F32" => Some(WireFmt::F32),
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" => Some(WireFmt::F64),
+            "f32" => Some(WireFmt::F32),
             "sparse" => Some(WireFmt::Sparse),
             _ => None,
         }
+    }
+
+    /// [`WireFmt::parse`] with a CLI-grade error: the failure message
+    /// lists every valid format instead of a bare "unknown wire format".
+    pub fn parse_or_err(s: &str) -> Result<WireFmt, String> {
+        WireFmt::parse(s).ok_or_else(|| {
+            let names: Vec<&str> = WireFmt::ALL.iter().map(|f| f.name()).collect();
+            format!(
+                "unknown wire format {s:?}; valid formats (case-insensitive): {}",
+                names.join(", ")
+            )
+        })
     }
 
     pub fn name(self) -> &'static str {
@@ -313,5 +326,21 @@ mod tests {
         }
         assert_eq!(WireFmt::parse("f16"), None);
         assert_eq!(WireFmt::default(), WireFmt::F64);
+    }
+
+    #[test]
+    fn parse_is_case_insensitive() {
+        assert_eq!(WireFmt::parse("F64"), Some(WireFmt::F64));
+        assert_eq!(WireFmt::parse("  Sparse "), Some(WireFmt::Sparse));
+        assert_eq!(WireFmt::parse("F32"), Some(WireFmt::F32));
+    }
+
+    #[test]
+    fn parse_error_lists_valid_formats() {
+        let err = WireFmt::parse_or_err("f16").unwrap_err();
+        for fmt in WireFmt::ALL {
+            assert!(err.contains(fmt.name()), "error must list {:?}: {err}", fmt.name());
+        }
+        assert_eq!(WireFmt::parse_or_err("SPARSE"), Ok(WireFmt::Sparse));
     }
 }

@@ -40,12 +40,28 @@ pub enum EngineKind {
 }
 
 impl EngineKind {
+    /// Every accepted engine name (canonical names + aliases), the source
+    /// of truth for [`EngineKind::parse`] error listings.
+    pub const NAMES: [&'static str; 4] = ["native", "block", "xla", "pjrt"];
+
+    /// Parse an engine name, case-insensitively (`Native`, `XLA`, …).
     pub fn parse(s: &str) -> Option<EngineKind> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "native" | "block" => Some(EngineKind::Native),
             "xla" | "pjrt" => Some(EngineKind::Xla),
             _ => None,
         }
+    }
+
+    /// [`EngineKind::parse`] with a CLI-grade error: the failure message
+    /// lists every valid name instead of a bare "unknown engine".
+    pub fn parse_or_err(s: &str) -> Result<EngineKind, String> {
+        EngineKind::parse(s).ok_or_else(|| {
+            format!(
+                "unknown engine {s:?}; valid engines (case-insensitive): {}",
+                EngineKind::NAMES.join(", ")
+            )
+        })
     }
 
     pub fn name(&self) -> &'static str {
@@ -95,6 +111,23 @@ mod tests {
         assert_eq!(EngineKind::parse("block"), Some(EngineKind::Native));
         assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Xla));
         assert_eq!(EngineKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn engine_kind_parse_is_case_insensitive() {
+        assert_eq!(EngineKind::parse("Native"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("XLA"), Some(EngineKind::Xla));
+        assert_eq!(EngineKind::parse(" Block "), Some(EngineKind::Native));
+    }
+
+    #[test]
+    fn engine_kind_parse_error_lists_valid_names() {
+        let err = EngineKind::parse_or_err("gpu").unwrap_err();
+        for name in EngineKind::NAMES {
+            assert!(err.contains(name), "error must list {name:?}: {err}");
+            assert!(EngineKind::parse(name).is_some(), "{name:?} must actually parse");
+        }
+        assert_eq!(EngineKind::parse_or_err("PJRT"), Ok(EngineKind::Xla));
     }
 
     #[test]

@@ -214,6 +214,7 @@ impl<'e> BlockedDriver<'e> {
     fn node_state(&self) -> NodeState {
         NodeState {
             rng: Some(self.rng.state_words()),
+            jitter: None,
             clock: Default::default(),
             extra: vec![f64::from_bits(self.scalars), f64::from_bits(self.messages)],
         }

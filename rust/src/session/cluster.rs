@@ -26,14 +26,15 @@
 //! [`Driver::step`] so a session stopped before any epoch never starts
 //! the cluster at all. Checkpoint/resume restarts the cluster from a
 //! [`ResumeState`]: comm counters are preloaded into [`CommStats`], each
-//! node's simulated clock (+ NIC horizons) is restored before its thread
-//! starts, and the per-node [`NodeState`]s (RNG words + algorithm extras)
-//! are handed to the algorithm's node function.
+//! node's simulated clock (+ NIC horizons) and net-model jitter stream
+//! are restored before its thread starts, and the per-node
+//! [`NodeState`]s (RNG words + algorithm extras) are handed to the
+//! algorithm's node function.
 
 use super::{Driver, EpochReport, FinishOut, NodeState, ResumeState};
 use crate::cluster::run_endpoints;
 use crate::metrics::CommTotals;
-use crate::net::{build, CommStats, Endpoint, NodeComm, SimParams};
+use crate::net::{build_with_model, CommStats, Endpoint, NetModel, NodeComm};
 use anyhow::{ensure, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -101,7 +102,7 @@ pub struct ClusterDriver {
     name: String,
     dataset: String,
     n_nodes: usize,
-    sim: SimParams,
+    model: NetModel,
     node_fn: NodeFn,
     resume: Option<Arc<ResumeState>>,
     /// Training state at the last epoch boundary (starts as the resume
@@ -120,7 +121,7 @@ impl ClusterDriver {
         dataset: &str,
         n_nodes: usize,
         d: usize,
-        sim: SimParams,
+        model: NetModel,
         resume: Option<ResumeState>,
         node_fn: NodeFn,
     ) -> Result<ClusterDriver> {
@@ -133,6 +134,19 @@ impl ClusterDriver {
                     r.nodes.len()
                 );
                 ensure!(r.w.len() == d, "checkpoint dim {} != problem dim {d}", r.w.len());
+                // The net scenario is not persisted in the checkpoint, but a
+                // jitter mismatch is detectable (the per-node stream words
+                // are) and silently dropping or re-seeding the noise stream
+                // would break the bit-exact-resume guarantee — fail loudly.
+                let model_jitter = matches!(model, crate::net::NetModel::Jitter { .. });
+                let ckpt_jitter = r.nodes.iter().any(|n| n.jitter.is_some());
+                ensure!(
+                    model_jitter == ckpt_jitter,
+                    "checkpoint {} a jitter noise stream but this run's --net model {}; \
+                     resume under the original --net scenario",
+                    if ckpt_jitter { "carries" } else { "does not carry" },
+                    if model_jitter { "expects one" } else { "does not use one" }
+                );
                 let last = r.clone();
                 (Some(Arc::new(r)), last)
             }
@@ -142,7 +156,7 @@ impl ClusterDriver {
             name: name.to_string(),
             dataset: dataset.to_string(),
             n_nodes,
-            sim,
+            model,
             node_fn,
             resume,
             last,
@@ -158,11 +172,13 @@ impl ClusterDriver {
             gate: Mutex::new(Some(EpochGate { tx: tx_rep, rx: rx_dir })),
             resume: self.resume.clone(),
         });
-        let (mut eps, stats) = build(self.n_nodes, self.sim);
+        let (mut eps, stats) = build_with_model(self.n_nodes, &self.model);
         if let Some(r) = self.resume.as_deref() {
             stats.preload(&r.comm);
             for ep in eps.iter_mut() {
-                ep.restore_clock_state(r.nodes[ep.id()].clock);
+                let ns = &r.nodes[ep.id()];
+                ep.restore_clock_state(ns.clock);
+                ep.restore_jitter(ns.jitter);
             }
         }
         self.stats = Some(stats);
@@ -248,6 +264,16 @@ impl Drop for ClusterDriver {
             let _ = r.handle.join(); // swallow panics — we're already unwinding
         }
     }
+}
+
+/// Assemble this node's resumable [`NodeState`]: the algorithm-owned RNG
+/// words and extras plus the network-plane state the endpoint owns (the
+/// simulated clock and, under a `--net jitter` model, the per-message
+/// noise stream's PCG words). Every algorithm builds its node states
+/// through this helper so no scenario state is ever dropped from a
+/// checkpoint.
+pub fn net_node_state(ep: &mut Endpoint, rng: Option<[u64; 4]>, extra: Vec<f64>) -> NodeState {
+    NodeState { rng, jitter: ep.jitter_words(), clock: ep.clock_state(), extra }
 }
 
 /// Helper the monitor nodes share: assemble the per-node state vector from

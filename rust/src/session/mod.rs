@@ -49,6 +49,10 @@ pub struct StepEvent {
     pub objective: f64,
     /// Simulated cluster time at the monitor node, seconds.
     pub sim_time: f64,
+    /// Per-node clock skew at the epoch boundary (max − min simulated node
+    /// time, seconds; 0 for single-node drivers) — the straggler
+    /// observability metric.
+    pub skew: f64,
     /// Host wall-clock of this session, seconds (contention-polluted).
     pub wall_time: f64,
     /// Cumulative stochastic-gradient evaluations.
@@ -69,21 +73,28 @@ pub struct StepEvent {
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct NodeState {
     pub rng: Option<[u64; 4]>,
+    /// The net-model jitter stream's PCG words (runs under
+    /// `--net jitter`; `None` on jitter-free models) — restored before the
+    /// node thread starts so a resume replays the exact noise tail.
+    pub jitter: Option<[u64; 4]>,
     pub clock: ClockState,
     pub extra: Vec<f64>,
 }
 
 impl NodeState {
     /// Flatten for the evaluation plane (uncounted, exact `f64`): layout
-    /// `[has_rng, rng0..rng3 (bit-cast), clock, nic_out, nic_in, extra...]`.
+    /// `[has_rng, rng0..rng3 (bit-cast), has_jitter, j0..j3 (bit-cast),
+    /// clock, nic_out, nic_in, extra...]`.
     pub(crate) fn pack(&self) -> Vec<f64> {
-        let mut v = Vec::with_capacity(8 + self.extra.len());
-        match self.rng {
-            Some(words) => {
-                v.push(1.0);
-                v.extend(words.iter().map(|&w| f64::from_bits(w)));
+        let mut v = Vec::with_capacity(13 + self.extra.len());
+        for words in [self.rng, self.jitter] {
+            match words {
+                Some(w) => {
+                    v.push(1.0);
+                    v.extend(w.iter().map(|&x| f64::from_bits(x)));
+                }
+                None => v.extend([0.0; 5]),
             }
-            None => v.extend([0.0; 5]),
         }
         v.push(self.clock.clock);
         v.push(self.clock.nic_out);
@@ -93,16 +104,20 @@ impl NodeState {
     }
 
     pub(crate) fn unpack(v: &[f64]) -> NodeState {
-        assert!(v.len() >= 8, "node state payload too short ({})", v.len());
-        let rng = if v[0] != 0.0 {
-            Some([v[1].to_bits(), v[2].to_bits(), v[3].to_bits(), v[4].to_bits()])
-        } else {
-            None
+        assert!(v.len() >= 13, "node state payload too short ({})", v.len());
+        let words_at = |at: usize| -> Option<[u64; 4]> {
+            if v[at] != 0.0 {
+                let w = [v[at + 1], v[at + 2], v[at + 3], v[at + 4]];
+                Some(w.map(f64::to_bits))
+            } else {
+                None
+            }
         };
         NodeState {
-            rng,
-            clock: ClockState { clock: v[5], nic_out: v[6], nic_in: v[7] },
-            extra: v[8..].to_vec(),
+            rng: words_at(0),
+            jitter: words_at(5),
+            clock: ClockState { clock: v[10], nic_out: v[11], nic_in: v[12] },
+            extra: v[13..].to_vec(),
         }
     }
 }
@@ -174,6 +189,22 @@ pub struct EpochReport {
 pub struct FinishOut {
     pub w: Vec<f64>,
     pub totals: CommTotals,
+}
+
+/// Per-node clock skew of an epoch boundary: max − min simulated node
+/// time over the report's node states (0 for single-node or clock-free
+/// drivers). This is what makes straggler runs measurable.
+fn clock_skew(nodes: &[NodeState]) -> f64 {
+    if nodes.len() < 2 {
+        return 0.0;
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for n in nodes {
+        lo = lo.min(n.clock.clock);
+        hi = hi.max(n.clock.clock);
+    }
+    hi - lo
 }
 
 /// A steppable algorithm execution: one outer epoch per [`Driver::step`].
@@ -466,6 +497,7 @@ impl<'d> SessionBuilder<'d> {
             trace.push(TracePoint {
                 outer: 0,
                 sim_time: 0.0,
+                skew: 0.0,
                 wall_time: 0.0,
                 scalars: 0,
                 bytes: 0,
@@ -548,6 +580,7 @@ impl<'d> Session<'d> {
             epoch: report.epoch,
             objective,
             sim_time: report.sim_time,
+            skew: clock_skew(&report.nodes),
             wall_time: self.wall.seconds(),
             grads: report.grads,
             scalars: report.scalars,
@@ -557,6 +590,7 @@ impl<'d> Session<'d> {
         self.trace.push(TracePoint {
             outer: ev.epoch,
             sim_time: ev.sim_time,
+            skew: ev.skew,
             wall_time: ev.wall_time,
             scalars: ev.scalars,
             bytes: ev.bytes,
@@ -713,11 +747,21 @@ mod tests {
     fn node_state_pack_round_trips() {
         let st = NodeState {
             rng: Some([1, u64::MAX, 0x8000_0000_0000_0000, 42]),
+            jitter: Some([7, 0, u64::MAX, 3]),
             clock: ClockState { clock: 1.5, nic_out: 2.5, nic_in: 0.25 },
             extra: vec![3.0, -4.0],
         };
         assert_eq!(NodeState::unpack(&st.pack()), st);
-        let none = NodeState { rng: None, clock: ClockState::default(), extra: vec![] };
+        let none =
+            NodeState { rng: None, jitter: None, clock: ClockState::default(), extra: vec![] };
         assert_eq!(NodeState::unpack(&none.pack()), none);
+        // mixed: jitter without an algorithm RNG (a monitor node under --net jitter)
+        let mixed = NodeState {
+            rng: None,
+            jitter: Some([1, 2, 3, 4]),
+            clock: ClockState::default(),
+            extra: vec![9.0],
+        };
+        assert_eq!(NodeState::unpack(&mixed.pack()), mixed);
     }
 }

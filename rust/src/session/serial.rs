@@ -98,6 +98,7 @@ impl SerialSvrgDriver {
     fn node_state(&self) -> NodeState {
         NodeState {
             rng: Some(self.st.sample_rng.state_words()),
+            jitter: None,
             clock: Default::default(),
             extra: self.st.option_rng.state_words().iter().map(|&w| f64::from_bits(w)).collect(),
         }
@@ -138,6 +139,7 @@ impl SerialSgdDriver {
     fn node_state(&self) -> NodeState {
         NodeState {
             rng: Some(self.st.rng.state_words()),
+            jitter: None,
             clock: Default::default(),
             extra: vec![self.st.step as f64],
         }

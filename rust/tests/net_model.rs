@@ -1,0 +1,215 @@
+//! net::model integration: the `Uniform` model must reproduce the legacy
+//! flat-`SimParams` charging **bit-exactly** (clocks, NIC horizons, and
+//! per-sender byte counters), degenerate scenario parameters must reduce
+//! every other variant to the uniform behaviour, and the non-degenerate
+//! scenarios must shape the clocks the way their names promise
+//! (stragglers stretch the run and open a clock skew; jitter is
+//! deterministic under a seed; cross-rack links charge per link).
+
+use fdsvrg::algs::{Algorithm, Problem, RunParams};
+use fdsvrg::cluster::run_cluster_model;
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::net::model::{LinkView, NetModel};
+use fdsvrg::net::{ClockState, LinkProfile, NetSpec, SimParams};
+use fdsvrg::testkit::check;
+
+fn problem(d: usize, n: usize, seed: u64) -> Problem {
+    Problem::logistic_l2(generate(&GenSpec::new("netm", d, n, 10).with_seed(seed)), 1e-3)
+}
+
+/// Reference implementation of the **legacy** (pre-model) Endpoint
+/// charging formulas, exactly as `net::Endpoint` wrote them before the
+/// model layer existed.
+struct Legacy {
+    sp: SimParams,
+    cs: Vec<ClockState>,
+}
+
+impl Legacy {
+    fn compute(&mut self, node: usize, cpu: f64) {
+        self.cs[node].clock += cpu;
+    }
+
+    fn send(&mut self, node: usize, bytes: usize) -> f64 {
+        let occ = self.sp.occupancy(bytes);
+        let c = &mut self.cs[node];
+        let wire_time = c.clock.max(c.nic_out) + occ;
+        c.nic_out = wire_time;
+        wire_time
+    }
+
+    fn recv(&mut self, node: usize, bytes: usize, send_time: f64) {
+        let at_nic = send_time + self.sp.latency;
+        let c = &mut self.cs[node];
+        let done = at_nic.max(c.nic_in) + self.sp.occupancy(bytes);
+        c.nic_in = done;
+        if done > c.clock {
+            c.clock = done;
+        }
+    }
+}
+
+/// Satellite pin: `NetModel::Uniform` reproduces the legacy `SimParams`
+/// node clocks bit-exactly — random link parameters, random operation
+/// scripts (compute laps, sends, receives), every clock/NIC word compared
+/// by bits against the legacy reference above.
+#[test]
+fn uniform_model_charges_bit_exactly_like_legacy_simparams() {
+    check("uniform model == legacy charging", 32, |g| {
+        let sp = SimParams {
+            latency: g.f64_in(0.0, 1e-2),
+            per_msg: g.f64_in(0.0, 1e-3),
+            sec_per_byte: g.f64_in(0.0, 1e-7),
+        };
+        let n = g.usize_in(2, 6);
+        let model = NetModel::Uniform(sp);
+        let mut views: Vec<LinkView> = (0..n).map(|i| model.node_view(i, n)).collect();
+        let mut cs = vec![ClockState::default(); n];
+        let mut legacy = Legacy { sp, cs: vec![ClockState::default(); n] };
+        for _ in 0..300 {
+            match g.usize_in(0, 2) {
+                0 => {
+                    let i = g.usize_in(0, n - 1);
+                    let cpu = g.f64_in(0.0, 1e-4);
+                    views[i].charge_compute(&mut cs[i], cpu);
+                    legacy.compute(i, cpu);
+                }
+                _ => {
+                    let i = g.usize_in(0, n - 1);
+                    let j = (i + g.usize_in(1, n - 1)) % n;
+                    let bytes = g.usize_in(0, 1_000_000);
+                    let (send_time, jitter) = views[i].charge_send(&mut cs[i], j, bytes);
+                    assert_eq!(jitter, 0.0, "uniform draws no jitter");
+                    let legacy_time = legacy.send(i, bytes);
+                    assert_eq!(send_time.to_bits(), legacy_time.to_bits());
+                    views[j].charge_recv(&mut cs[j], i, bytes, send_time, jitter);
+                    legacy.recv(j, bytes, legacy_time);
+                }
+            }
+        }
+        for i in 0..n {
+            assert_eq!(cs[i].clock.to_bits(), legacy.cs[i].clock.to_bits(), "node {i} clock");
+            assert_eq!(cs[i].nic_out.to_bits(), legacy.cs[i].nic_out.to_bits(), "node {i} nic_out");
+            assert_eq!(cs[i].nic_in.to_bits(), legacy.cs[i].nic_in.to_bits(), "node {i} nic_in");
+        }
+    });
+}
+
+/// Satellite pin, algorithm level: for every algorithm in
+/// `ALL_DISTRIBUTED`, a run under the default uniform overlay and runs
+/// under *degenerate* scenario parameters (0 stragglers; cross == local;
+/// amp == 0 jitter) produce bit-identical parameters and identical
+/// per-sender byte/message counters.
+#[test]
+fn degenerate_scenarios_reproduce_uniform_runs_for_all_distributed() {
+    check("degenerate scenarios == uniform", 3, |g| {
+        let p = problem(g.usize_in(60, 200), g.usize_in(30, 80), g.rng().next_u64());
+        let q = g.usize_in(2, 5);
+        let sim = SimParams::default();
+        let degenerate = [
+            NetSpec::Straggler { slow: 0, factor: 7.5 },
+            NetSpec::Hetero { cross: LinkProfile::from(sim), rack_size: 2 },
+            NetSpec::Jitter { amp: 0.0, seed: 1234 },
+        ];
+        for algo in Algorithm::ALL_DISTRIBUTED {
+            // the asynchronous racer is not run-to-run deterministic even
+            // against itself — counters race by design
+            if algo == Algorithm::AsySvrg {
+                continue;
+            }
+            let mut params = RunParams { q, outer: 2, servers: 2, sim, ..Default::default() };
+            let base = algo.run(&p, &params);
+            for spec in &degenerate {
+                params.net = spec.clone();
+                let run = algo.run(&p, &params);
+                assert_eq!(
+                    base.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    run.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{} under {:?}: w must be bit-identical",
+                    algo.name(),
+                    spec.name()
+                );
+                assert_eq!(base.node_comm, run.node_comm, "{} per-sender counters", algo.name());
+                assert_eq!(base.total_bytes, run.total_bytes, "{} bytes", algo.name());
+                assert_eq!(base.total_messages, run.total_messages, "{} messages", algo.name());
+            }
+        }
+    });
+}
+
+/// Stragglers must stretch the simulated run and open a measurable
+/// per-node clock skew (the new RunResult/trace columns).
+#[test]
+fn straggler_runs_are_slower_and_report_clock_skew() {
+    let p = problem(200, 80, 5);
+    // network charges dominate measured-CPU noise at these parameters
+    let sim = SimParams { latency: 1e-3, per_msg: 1e-3, sec_per_byte: 1.25e-7 };
+    let mut params = RunParams { q: 4, outer: 2, sim, ..Default::default() };
+    let uniform = Algorithm::FdSvrg.run(&p, &params);
+    params.net = NetSpec::Straggler { slow: 1, factor: 16.0 };
+    let straggled = Algorithm::FdSvrg.run(&p, &params);
+    assert!(
+        straggled.total_sim_time > 2.0 * uniform.total_sim_time,
+        "straggler {:.4}s vs uniform {:.4}s",
+        straggled.total_sim_time,
+        uniform.total_sim_time
+    );
+    assert!(straggled.clock_skew > 0.0, "straggler run must report a positive clock skew");
+    let last = straggled.trace.points.last().unwrap();
+    assert_eq!(last.skew, straggled.clock_skew, "result skew mirrors the last trace point");
+    // identical numerics and traffic: the scenario only reshapes time
+    assert_eq!(uniform.total_bytes, straggled.total_bytes);
+    assert_eq!(
+        uniform.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        straggled.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+/// Cross-rack heterogeneity slows runs whose collectives must cross the
+/// rack boundary.
+#[test]
+fn cross_rack_heterogeneity_slows_the_run() {
+    let p = problem(200, 80, 6);
+    let sim = SimParams { latency: 1e-4, per_msg: 1e-4, sec_per_byte: 8.0 / 10e9 };
+    let mut params = RunParams { q: 4, outer: 2, sim, ..Default::default() };
+    let uniform = Algorithm::FdSvrg.run(&p, &params);
+    // racks of 2 over 5 nodes ⇒ most tree links cross racks at 20× latency
+    params.net = NetSpec::Hetero {
+        cross: LinkProfile { latency: 2e-3, per_msg: 1e-3, sec_per_byte: 8.0 / 1e9 },
+        rack_size: 2,
+    };
+    let hetero = Algorithm::FdSvrg.run(&p, &params);
+    assert!(
+        hetero.total_sim_time > uniform.total_sim_time,
+        "hetero {:.4}s vs uniform {:.4}s",
+        hetero.total_sim_time,
+        uniform.total_sim_time
+    );
+    assert_eq!(uniform.total_bytes, hetero.total_bytes, "only time reshapes, not traffic");
+}
+
+/// The jitter scenario is a pure function of its seed: two clusters with
+/// the same seed draw bit-identical per-message noise, a different seed
+/// draws a different sequence.
+#[test]
+fn jitter_noise_is_deterministic_under_the_seed() {
+    use fdsvrg::net::tags;
+    let collect = |seed: u64| -> Vec<u64> {
+        let model = NetModel::Jitter { base: SimParams::free(), amp: 1.0, seed };
+        let out = run_cluster_model(2, &model, |mut ep| {
+            if ep.id() == 0 {
+                for _ in 0..16 {
+                    ep.send(1, tags::PUSH, vec![1.0]);
+                }
+                Vec::new()
+            } else {
+                (0..16).map(|_| ep.recv_from(0, tags::PUSH).wire_jitter().to_bits()).collect()
+            }
+        });
+        out.results.into_iter().nth(1).unwrap()
+    };
+    let a = collect(77);
+    assert_eq!(a, collect(77), "same seed ⇒ bit-identical noise sequence");
+    assert_ne!(a, collect(78), "different seed ⇒ different sequence");
+    assert!(a.iter().any(|&b| f64::from_bits(b) > 0.0));
+}

@@ -112,6 +112,56 @@ fn fdsvrg_resume_is_bit_exact_under_costed_network() {
 }
 
 #[test]
+fn fdsvrg_resume_is_bit_exact_under_jitter() {
+    // `--net jitter`: the per-message latency noise is drawn from seeded
+    // per-node PCG streams whose words join the v2 checkpoint, so a
+    // resumed run must (a) reproduce the uninterrupted run's deterministic
+    // observables and (b) land every node's jitter stream on the *same*
+    // state words as the uninterrupted run — i.e. the noise tail was
+    // replayed, not re-seeded.
+    let p = tiny();
+    let mut params = fast_params(3, 6);
+    params.sim = SimParams::default();
+    params.net = fdsvrg::net::NetSpec::Jitter { amp: 1e-3, seed: 99 };
+
+    let mut s1 = SessionBuilder::new(Algorithm::FdSvrg, &p, params.clone()).build().unwrap();
+    while !s1.should_stop() {
+        s1.step();
+    }
+    let end_state_straight = s1.state();
+    let straight = s1.finish();
+
+    let st = checkpoint_after(Algorithm::FdSvrg, &p, &params, 3);
+    assert!(
+        st.resume.nodes.iter().all(|nd| nd.jitter.is_some()),
+        "every node of a jittered run must checkpoint its noise stream"
+    );
+    let bytes = SessionCheckpoint::new(st).to_bytes();
+    let restored = SessionCheckpoint::from_bytes(&bytes).unwrap().state;
+    let mut s2 =
+        SessionBuilder::new(Algorithm::FdSvrg, &p, params).resume(restored).build().unwrap();
+    while !s2.should_stop() {
+        s2.step();
+    }
+    let end_state_resumed = s2.state();
+    let resumed = s2.finish();
+
+    assert_runs_identical(&straight, &resumed, "fdsvrg+jitter");
+    for (i, (a, b)) in end_state_straight
+        .resume
+        .nodes
+        .iter()
+        .zip(end_state_resumed.resume.nodes.iter())
+        .enumerate()
+    {
+        assert_eq!(
+            a.jitter, b.jitter,
+            "node {i}: the resumed jitter stream must continue the checkpointed one, not restart"
+        );
+    }
+}
+
+#[test]
 fn dsvrg_resume_is_bit_exact() {
     // odd split: the round-robin duty rotation must continue mid-cycle
     let p = tiny();
@@ -195,8 +245,20 @@ fn resume_with_wrong_shape_or_algorithm_is_rejected() {
     // wrong wire format
     let mut f32_params = params.clone();
     f32_params.wire = fdsvrg::net::WireFmt::F32;
-    let err = SessionBuilder::new(Algorithm::FdSvrg, &p, f32_params).resume(st).build();
+    let err = SessionBuilder::new(Algorithm::FdSvrg, &p, f32_params).resume(st.clone()).build();
     assert!(err.is_err(), "wire-format mismatch must be rejected");
+
+    // jitter mismatch: the scenario is not persisted, but the per-node
+    // noise-stream words are — resuming a uniform checkpoint under
+    // `--net jitter` (or vice versa) must fail loudly rather than
+    // silently re-seeding/dropping the stream
+    let mut jitter_params = params.clone();
+    jitter_params.net = fdsvrg::net::NetSpec::Jitter { amp: 1e-3, seed: 5 };
+    let err = SessionBuilder::new(Algorithm::FdSvrg, &p, jitter_params.clone()).resume(st).build();
+    assert!(err.is_err(), "uniform checkpoint + jitter run must be rejected");
+    let jittered = checkpoint_after(Algorithm::FdSvrg, &p, &jitter_params, 2);
+    let err = SessionBuilder::new(Algorithm::FdSvrg, &p, params).resume(jittered).build();
+    assert!(err.is_err(), "jitter checkpoint + uniform run must be rejected");
 }
 
 #[test]
