@@ -1,0 +1,141 @@
+//! Sparse-kernel engine benchmark: the threads sweep for the two
+//! wall-clock-dominant kernels (`Dᵀw` partial products, `Dc` gradient
+//! aggregation) at d ∈ {100k, 1M}, plus the epoch-buffer allocation-churn
+//! before/after pair.
+//!
+//! A full (unfiltered) run rewrites `BENCH_kernels.json` in the working
+//! directory — commit it from the repo root to refresh the perf-trajectory
+//! baseline. Every timed case is also checked bit-identical against the
+//! serial kernel, so a correctness regression cannot hide behind a good
+//! number.
+//!
+//! ```text
+//! cargo bench --bench bench_kernels             # full sweep + JSON
+//! cargo bench --bench bench_kernels -- churn    # smallest case (CI smoke)
+//! ```
+
+use fdsvrg::algs::Workspace;
+use fdsvrg::bench::Bench;
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::sparse::CscMatrix;
+use fdsvrg::util::{Pcg64, Pool};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// Would any kernel entry of this matrix run under the active filter?
+/// (Guards the expensive dataset generation + reference passes when the
+/// bench is invoked filtered, e.g. the CI churn smoke.)
+fn tag_enabled(b: &Bench, tag: &str) -> bool {
+    THREADS
+        .iter()
+        .any(|k| b.enabled(&format!("DTw {tag} k={k}")) || b.enabled(&format!("Dc {tag} k={k}")))
+}
+
+fn bench_matrix(b: &mut Bench, tag: &str, x: &CscMatrix) {
+    let d = x.rows();
+    let n = x.cols();
+    let mut rng = Pcg64::seed_from_u64(3);
+    let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let c: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let inv_n = 1.0 / n as f64;
+
+    // serial references (bit-exactness oracle for every pool width)
+    let mut dtw_ref = vec![0.0f64; n];
+    x.transpose_matvec(&w, &mut dtw_ref);
+    let mut dc_ref = vec![0.0f64; d];
+    x.matvec_accumulate_scaled(&c, inv_n, &mut dc_ref);
+    x.ensure_mirror(); // off the timed path, as the drivers do
+
+    for k in THREADS {
+        let pool = Pool::new(k);
+        let mut out_n = vec![0.0f64; n];
+        b.bench(&format!("DTw {tag} k={k}"), || {
+            x.transpose_matvec_pool(&w, &mut out_n, &pool);
+            std::hint::black_box(&out_n);
+        });
+        // the closure only ran if the entry passed the filter — never
+        // compare a buffer a skipped entry left untouched
+        if b.enabled(&format!("DTw {tag} k={k}")) {
+            assert_eq!(out_n, dtw_ref, "DTw {tag} k={k} diverged from serial");
+        }
+
+        let mut out_d = vec![0.0f64; d];
+        b.bench(&format!("Dc {tag} k={k}"), || {
+            out_d.iter_mut().for_each(|v| *v = 0.0);
+            x.matvec_accumulate_scaled_pool(&c, inv_n, &mut out_d, &pool);
+            std::hint::black_box(&out_d);
+        });
+        if b.enabled(&format!("Dc {tag} k={k}")) {
+            assert_eq!(out_d, dc_ref, "Dc {tag} k={k} diverged from serial");
+        }
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_args("kernels").with_iters(2, 7);
+
+    // d = 100k: ~200k nnz (2k instances x ~100 nnz)
+    if tag_enabled(&b, "d=100k") {
+        let small = generate(&GenSpec::new("k100k", 100_000, 2_000, 100).with_seed(11));
+        bench_matrix(&mut b, "d=100k", &small.x);
+    }
+
+    // d = 1M: ~800k nnz (4k instances x ~200 nnz) — the acceptance case:
+    // DTw at k=4 must come in >= 2x faster than k=1
+    if tag_enabled(&b, "d=1M") {
+        let big = generate(&GenSpec::new("k1m", 1_000_000, 4_000, 200).with_seed(12));
+        bench_matrix(&mut b, "d=1M", &big.x);
+    }
+
+    // epoch-buffer allocation churn: what every epoch loop used to do
+    // (fresh margins vector + a fresh partial vector per inner batch)
+    // vs the Workspace reuse all drivers run now
+    let n = 50_000usize;
+    let batches = 200usize;
+    let u = 100usize;
+    b.bench("churn alloc-per-epoch (before)", || {
+        let mut margins = vec![0.0f64; n];
+        margins[7] = 1.0;
+        std::hint::black_box(&margins);
+        for _ in 0..batches {
+            let mut partial = vec![0.0f64; u];
+            partial[3] = 1.0;
+            std::hint::black_box(&partial);
+        }
+    });
+    let mut ws = Workspace::new(1);
+    b.bench("churn workspace-reuse (after)", || {
+        Workspace::reset(&mut ws.margins, n);
+        ws.margins[7] = 1.0;
+        std::hint::black_box(&ws.margins);
+        for _ in 0..batches {
+            Workspace::reset(&mut ws.partial, u);
+            ws.partial[3] = 1.0;
+            std::hint::black_box(&ws.partial);
+        }
+    });
+
+    // speedup readout + baseline persistence (full runs only: a filtered
+    // run must not overwrite the committed baseline with a partial one)
+    if !b.is_filtered() {
+        let mean = |name: &str| {
+            b.samples()
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| s.mean_s)
+                .expect("entry present in a full run")
+        };
+        for tag in ["d=100k", "d=1M"] {
+            for kernel in ["DTw", "Dc"] {
+                let s1 = mean(&format!("{kernel} {tag} k=1"));
+                let s4 = mean(&format!("{kernel} {tag} k=4"));
+                println!("{kernel} {tag}: k=4 speedup {:.2}x", s1 / s4);
+            }
+        }
+        let note = "sparse-kernel engine baseline; regenerate from the repo root \
+                    with `cargo bench --bench bench_kernels`";
+        b.write_json("BENCH_kernels.json", note).expect("write BENCH_kernels.json");
+        println!("baseline written to BENCH_kernels.json");
+    }
+    b.finish();
+}

@@ -14,7 +14,7 @@
 //! design); tests assert convergence and counter identities only.
 
 use super::ps::PsTopology;
-use super::{Problem, RunParams};
+use super::{Problem, RunParams, Workspace};
 use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
@@ -51,7 +51,11 @@ pub(crate) fn driver(
     // ~N/q inner iterations)
     let m_pushes = if params.m_inner == 0 { n } else { params.m_inner };
     let topo = PsTopology::new(p, q, d);
-    let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
+    let shards: Vec<InstanceShard> = by_instances(&problem.ds.x, q);
+    for shard in &shards {
+        shard.prewarm(params.threads);
+    }
+    let shards: Arc<Vec<InstanceShard>> = Arc::new(shards);
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let dataset = problem.ds.name.clone();
     let model = params.net_model();
@@ -94,24 +98,23 @@ fn server(
         resume.map(|r| r.w[lo..hi].to_vec()).unwrap_or_else(|| vec![0.0f64; dk]);
     let mut grads = resume.map(|r| r.grads).unwrap_or(0);
     let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
-    let mut full_w =
-        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; topo.d]);
+    let mut ws = Workspace::new(params.threads);
 
     loop {
         // synchronous full-gradient phase (Algorithm 5 lines 3–6)
         comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::BCAST, &w_k);
-        let mut z_k = vec![0.0f64; dk];
+        Workspace::reset(&mut ws.zx, dk);
         for l in 0..q {
             let msg = ep.recv_from(topo.worker_node(l), tags::REDUCE);
-            msg.add_into(&mut z_k);
+            msg.add_into(&mut ws.zx);
         }
-        linalg::scale(1.0 / n as f64, &mut z_k);
+        linalg::scale(1.0 / n as f64, &mut ws.zx);
         grads += n as u64;
 
         // asynchronous inner phase: serve pulls, apply pushes, stop at M
         let mut pushes = 0usize;
         let mut done_workers = 0usize;
-        let mut push_buf = vec![0.0f64; dk];
+        Workspace::reset(&mut ws.partial, dk);
         // Finished workers' session-state snapshots can land while this
         // server is still draining the epoch. They must be parked OUTSIDE
         // the endpoint stash until the loop ends: recv_any serves the
@@ -133,9 +136,9 @@ fn server(
                 tags::PUSH => {
                     if pushes < m_pushes {
                         // w̃ ← w̃ − η(∇ + z + ∇g(w̃)), Algorithm 5 line 13
-                        msg.decode_into(&mut push_buf);
+                        msg.decode_into(&mut ws.partial);
                         for i in 0..dk {
-                            w_k[i] -= eta * (push_buf[i] + z_k[i] + lambda * w_k[i]);
+                            w_k[i] -= eta * (ws.partial[i] + ws.zx[i] + lambda * w_k[i]);
                         }
                         pushes += 1;
                         grads += 1;
@@ -156,6 +159,7 @@ fn server(
         // evaluation plane (same shape as SynSVRG)
         epoch += 1;
         let stop = if let Some(gate) = gate {
+            let mut full_w = vec![0.0f64; topo.d];
             full_w[lo..hi].copy_from_slice(&w_k);
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
@@ -168,7 +172,7 @@ fn server(
             let (scalars, bytes, per_node) = comm_snapshot(ep);
             let directive = gate.exchange(EpochReport {
                 epoch,
-                w: full_w.clone(),
+                w: Arc::new(full_w),
                 grads,
                 sim_time,
                 scalars,
@@ -220,7 +224,10 @@ fn worker(
     };
     let mut w_t = vec![0.0f64; topo.d];
     let mut w_m = vec![0.0f64; topo.d];
-    let mut margins0 = vec![0.0f64; n_local];
+    let mut ws = Workspace::new(params.threads);
+    // reusable sparse-gradient staging (see the SynSVRG worker): only
+    // instance i's rows are touched, re-zeroed after each push
+    let mut grad = vec![0.0f64; topo.d];
     // reusable per-server decode buffers for `[flag, w_k...]` pull
     // responses (no allocation in the pull/compute/push race)
     let mut resp_bufs: Vec<Vec<f64>> = (0..topo.p)
@@ -236,17 +243,17 @@ fn worker(
             let (lo, hi) = topo.key_range(k);
             comm.recv_into(ep, topo.server_node(k), tags::BCAST, &mut w_t[lo..hi]);
         }
-        shard.data.transpose_matvec(&w_t, &mut margins0);
-        let mut zsum = vec![0.0f64; topo.d];
+        Workspace::reset(&mut ws.margins, n_local);
+        shard.data.transpose_matvec_pool(&w_t, &mut ws.margins, &ws.pool);
+        Workspace::reset(&mut ws.c0, n_local);
         for i in 0..n_local {
-            let c = loss.derivative(margins0[i], y[shard.col_idx[i]]);
-            if c != 0.0 {
-                shard.data.col_axpy(i, c, &mut zsum);
-            }
+            ws.c0[i] = loss.derivative(ws.margins[i], y[shard.col_idx[i]]);
         }
+        Workspace::reset(&mut ws.grad, topo.d);
+        shard.data.matvec_accumulate_pool(&ws.c0, &mut ws.grad, &ws.pool);
         for k in 0..topo.p {
             let (lo, hi) = topo.key_range(k);
-            comm.send(ep, topo.server_node(k), tags::REDUCE, &zsum[lo..hi]);
+            comm.send(ep, topo.server_node(k), tags::REDUCE, &ws.grad[lo..hi]);
         }
 
         // asynchronous inner loop
@@ -270,13 +277,15 @@ fn worker(
             }
             let i = rng.below(n_local);
             let yi = y[shard.col_idx[i]];
-            let delta =
-                loss.derivative(shard.data.col_dot(i, &w_m), yi) - loss.derivative(margins0[i], yi);
-            let mut grad = vec![0.0f64; topo.d];
+            let delta = loss.derivative(shard.data.col_dot(i, &w_m), yi)
+                - loss.derivative(ws.margins[i], yi);
             shard.data.col_axpy(i, delta, &mut grad);
             for k in 0..topo.p {
                 let (lo, hi) = topo.key_range(k);
                 comm.send(ep, topo.server_node(k), tags::PUSH, &grad[lo..hi]);
+            }
+            for (r, _) in shard.data.col_iter(i) {
+                grad[r as usize] = 0.0;
             }
         }
         for k in 0..topo.p {

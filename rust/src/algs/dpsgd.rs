@@ -164,7 +164,7 @@ fn worker(
             let (scalars, bytes, per_node) = comm_snapshot(ep);
             let directive = gate.exchange(EpochReport {
                 epoch: t,
-                w: avg,
+                w: Arc::new(avg),
                 grads: grads * q as u64, // all workers step in parallel
                 sim_time,
                 scalars,

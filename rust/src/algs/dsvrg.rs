@@ -15,7 +15,7 @@
 //! during the inner loop — the serial fraction the paper contrasts with
 //! FD-SVRG's fully-parallel inner loop.
 
-use super::{Problem, RunParams};
+use super::{Problem, RunParams, Workspace};
 use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
@@ -46,7 +46,11 @@ pub(crate) fn driver(
     let n = problem.n();
     let eta = params.effective_eta(problem);
     let m_inner = if params.m_inner == 0 { (n / q).max(1) } else { params.m_inner };
-    let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
+    let shards: Vec<InstanceShard> = by_instances(&problem.ds.x, q);
+    for shard in &shards {
+        shard.prewarm(params.threads);
+    }
+    let shards: Arc<Vec<InstanceShard>> = Arc::new(shards);
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let dataset = problem.ds.name.clone();
     let model = params.net_model();
@@ -80,25 +84,29 @@ fn center(
     let resume = cx.resume.as_deref();
     let mut grads = resume.map(|r| r.grads).unwrap_or(0);
     let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
-    let mut w = resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; d]);
+    // the center's w is replaced wholesale each epoch, so it lives behind
+    // the same Arc the report carries — no per-epoch clone
+    let mut w: Arc<Vec<f64>> =
+        resume.map(|r| r.w.clone()).unwrap_or_else(|| Arc::new(vec![0.0f64; d]));
+    let mut ws = Workspace::new(params.threads);
 
     loop {
         // (1) broadcast w_t (one encode, Arc fan-out), gather gradient sums
         comm.send_all(ep, 1..=q, tags::BCAST, &w);
-        let mut z = vec![0.0f64; d];
+        Workspace::reset(&mut ws.grad, d);
         for l in 1..=q {
             let msg = ep.recv_from(l, tags::REDUCE);
-            msg.add_into(&mut z);
+            msg.add_into(&mut ws.grad);
         }
         let inv_n = 1.0 / n as f64;
-        linalg::scale(inv_n, &mut z);
+        linalg::scale(inv_n, &mut ws.grad);
         grads += n as u64;
 
         // (2) on-duty machine J runs the inner loop
         let j = 1 + (epoch % q);
-        comm.send(ep, j, tags::RING, &z);
+        comm.send(ep, j, tags::RING, &ws.grad);
         let msg = ep.recv_from(j, tags::RING);
-        w = msg.to_vec(d);
+        w = Arc::new(msg.to_vec(d));
         grads += m_inner as u64;
 
         // evaluation plane: collect states, report the boundary
@@ -109,7 +117,7 @@ fn center(
         epoch += 1;
         let directive = gate.exchange(EpochReport {
             epoch,
-            w: w.clone(),
+            w: w.clone(), // Arc clone — the buffer is shared, not copied
             grads,
             sim_time,
             scalars,
@@ -155,19 +163,22 @@ fn worker(
         _ => (Pcg64::seed_from_u64(params.seed ^ (0xD5 + l as u64)), 0usize),
     };
 
+    let mut ws = Workspace::new(params.threads);
+    let mut w_t = vec![0.0f64; d];
+
     loop {
-        // (1) receive w_t, return local loss-gradient sum
-        let w_t = comm.recv_vec(ep, 0, tags::BCAST, d);
-        let mut zsum = vec![0.0f64; d];
-        let mut margins0 = vec![0.0f64; n_local];
-        shard.data.transpose_matvec(&w_t, &mut margins0);
+        // (1) receive w_t, return local loss-gradient sum (the Dᵀw and Dc
+        // kernels run on the workspace pool, bit-exact at any width)
+        comm.recv_into(ep, 0, tags::BCAST, &mut w_t);
+        Workspace::reset(&mut ws.margins, n_local);
+        shard.data.transpose_matvec_pool(&w_t, &mut ws.margins, &ws.pool);
+        Workspace::reset(&mut ws.c0, n_local);
         for i in 0..n_local {
-            let c = loss.derivative(margins0[i], y[shard.col_idx[i]]);
-            if c != 0.0 {
-                shard.data.col_axpy(i, c, &mut zsum);
-            }
+            ws.c0[i] = loss.derivative(ws.margins[i], y[shard.col_idx[i]]);
         }
-        comm.send(ep, 0, tags::REDUCE, &zsum);
+        Workspace::reset(&mut ws.grad, d);
+        shard.data.matvec_accumulate_pool(&ws.c0, &mut ws.grad, &ws.pool);
+        comm.send(ep, 0, tags::REDUCE, &ws.grad);
 
         // (2) if on duty this epoch, run the inner loop and return w
         if l == t % q {
@@ -177,7 +188,7 @@ fn worker(
                 let i = rng.below(n_local);
                 let yi = y[shard.col_idx[i]];
                 let zi = shard.data.col_dot(i, &w);
-                let delta = loss.derivative(zi, yi) - loss.derivative(margins0[i], yi);
+                let delta = loss.derivative(zi, yi) - loss.derivative(ws.margins[i], yi);
                 if use_l2 {
                     linalg::axpby(-eta, &z, 1.0 - eta * lambda, &mut w);
                 } else {

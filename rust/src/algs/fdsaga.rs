@@ -26,7 +26,7 @@
 //! where `a` is the coefficient table (shared by construction) and
 //! `ā^(l) = (1/N) Σ_i a_i x_i^(l)` is the slab of the table average.
 
-use super::{Problem, RunParams};
+use super::{Problem, RunParams, Workspace};
 use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint, NodeId};
@@ -63,6 +63,8 @@ pub(crate) fn driver(
     let m_inner = if params.m_inner == 0 { n } else { params.m_inner };
     let u = params.batch.max(1);
     // naive dense O(d_l)-per-step update ⇒ row-balanced cut (see partition)
+    // (no mirror prewarm: this algorithm has no full-gradient Dᵀw/Dc
+    // pass, so the pool kernels — and the CSR mirror — are never used)
     let slabs: Arc<Vec<FeatureSlab>> = Arc::new(by_features_rows(&problem.ds.x, q));
     let _ = by_features; // nnz-balanced variant kept for the lazy path
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
@@ -100,17 +102,18 @@ fn coordinator(
     let resume = cx.resume.as_deref();
     let mut grads = resume.map(|r| r.grads).unwrap_or(0);
     let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
-    let mut w = resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; d]);
+    let mut ws = Workspace::new(params.threads);
 
     loop {
         let mut m = 0usize;
         while m < m_inner {
             let b = u.min(m_inner - m);
-            let mut partial = vec![0.0f64; b];
-            comm.allreduce(ep, group, &mut partial);
+            comm.allreduce(ep, group, Workspace::reset(&mut ws.partial, b));
             grads += b as u64;
             m += b;
         }
+        // fresh buffer per epoch: ownership moves into the report's Arc
+        let mut w = vec![0.0f64; d];
         for (l, slab) in slabs.iter().enumerate() {
             let msg = ep.recv_eval_from(l + 1, tags::EVAL);
             msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
@@ -122,7 +125,7 @@ fn coordinator(
         epoch += 1;
         let directive = gate.exchange(EpochReport {
             epoch,
-            w: w.clone(),
+            w: Arc::new(w),
             grads,
             sim_time,
             scalars,
@@ -198,20 +201,24 @@ fn worker(
         }
     }
 
+    let mut ws = Workspace::new(params.threads);
+    let mut batch_idx: Vec<usize> = Vec::with_capacity(u);
+
     loop {
         let mut m = 0usize;
-        let mut batch_idx = Vec::with_capacity(u);
         while m < m_inner {
             let b = u.min(m_inner - m);
             batch_idx.clear();
             for _ in 0..b {
                 batch_idx.push(sample_rng.below(n));
             }
-            let mut partial: Vec<f64> =
-                batch_idx.iter().map(|&i| slab.data.col_dot(i, &w_l)).collect();
-            comm.allreduce(ep, group, &mut partial);
+            Workspace::reset(&mut ws.partial, b);
             for (k, &i) in batch_idx.iter().enumerate() {
-                let c = loss.derivative(partial[k], y[i]);
+                ws.partial[k] = slab.data.col_dot(i, &w_l);
+            }
+            comm.allreduce(ep, group, &mut ws.partial);
+            for (k, &i) in batch_idx.iter().enumerate() {
+                let c = loss.derivative(ws.partial[k], y[i]);
                 let delta = c - a[i];
                 // dense part: table average + L2 shrink
                 linalg::axpby(-eta, &abar_l, 1.0 - eta * lambda, &mut w_l);

@@ -24,7 +24,7 @@
 //! (parameter blocks are disjoint, so no other source of drift exists) —
 //! see `rust/tests/equivalence.rs`.
 
-use super::{Problem, RunParams};
+use super::{Problem, RunParams, Workspace};
 use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint, NodeId};
@@ -59,11 +59,17 @@ pub(crate) fn driver(
     // Partition to balance the inner loop's dominant cost: the lazy path
     // does O(nnz) work per step (nnz-balanced cut); the naive path does
     // O(d_l) dense work per step (row-balanced cut) — see by_features_rows.
-    let slabs: Arc<Vec<FeatureSlab>> = Arc::new(if params.lazy {
+    let slabs: Vec<FeatureSlab> = if params.lazy {
         by_features(&problem.ds.x, q)
     } else {
         by_features_rows(&problem.ds.x, q)
-    });
+    };
+    // multi-threaded runs build the CSR mirrors once here, outside every
+    // node's simulated clock and ahead of the first timed epoch
+    for slab in &slabs {
+        slab.prewarm(params.threads);
+    }
+    let slabs: Arc<Vec<FeatureSlab>> = Arc::new(slabs);
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let group: Vec<NodeId> = (0..=q).collect();
     let dataset = problem.ds.name.clone();
@@ -99,26 +105,27 @@ fn coordinator(
     let resume = cx.resume.as_deref();
     let mut grads = resume.map(|r| r.grads).unwrap_or(0);
     let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
-    let mut w =
-        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; slabs.last().unwrap().row_hi]);
+    let d_total = slabs.last().unwrap().row_hi;
+    let mut ws = Workspace::new(params.threads);
 
     loop {
         // --- full-gradient phase: allreduce of partial products (root) ---
-        let mut margins = vec![0.0f64; n];
-        comm.allreduce(ep, group, &mut margins);
+        comm.allreduce(ep, group, Workspace::reset(&mut ws.margins, n));
         grads += n as u64;
 
         // --- inner loop: one scalar-batch allreduce per mini-batch ---
         let mut m = 0usize;
         while m < m_inner {
             let b = u.min(m_inner - m);
-            let mut partial = vec![0.0f64; b];
-            comm.allreduce(ep, group, &mut partial);
+            comm.allreduce(ep, group, Workspace::reset(&mut ws.partial, b));
             grads += b as u64;
             m += b;
         }
 
         // --- evaluation plane: collect w slabs + worker states, report ---
+        // assembled into a fresh buffer whose ownership moves into the
+        // report's Arc — the session and resume state share it, no clone
+        let mut w = vec![0.0f64; d_total];
         for (l, slab) in slabs.iter().enumerate() {
             let msg = ep.recv_eval_from(l + 1, tags::EVAL);
             msg.decode_into(&mut w[slab.row_lo..slab.row_hi]);
@@ -130,7 +137,7 @@ fn coordinator(
         epoch += 1;
         let directive = gate.exchange(EpochReport {
             epoch,
-            w: w.clone(),
+            w: Arc::new(w),
             grads,
             sim_time,
             scalars,
@@ -185,25 +192,24 @@ fn worker(
         _ => (vec![0.0f64; dl], Pcg64::seed_from_u64(params.seed)),
     };
     let mut z_l = vec![0.0f64; dl];
-    let mut c0 = vec![0.0f64; n];
+    let mut ws = Workspace::new(params.threads);
+    let mut batch_idx: Vec<usize> = Vec::with_capacity(u);
     // shared sampling stream — identical on every worker (paper §4.3:
     // "make the parameter identical for different machines")
 
     loop {
-        // --- full gradient phase (Alg. 1 lines 3–5) ---
-        let mut margins = vec![0.0f64; n];
-        slab.data.transpose_matvec(&w_l, &mut margins);
-        comm.allreduce(ep, group, &mut margins);
+        // --- full gradient phase (Alg. 1 lines 3–5): both sparse kernels
+        // run on the workspace pool, bit-exact at any --threads width ---
+        Workspace::reset(&mut ws.margins, n);
+        slab.data.transpose_matvec_pool(&w_l, &mut ws.margins, &ws.pool);
+        comm.allreduce(ep, group, &mut ws.margins);
+        Workspace::reset(&mut ws.c0, n);
         for i in 0..n {
-            c0[i] = loss.derivative(margins[i], y[i]);
+            ws.c0[i] = loss.derivative(ws.margins[i], y[i]);
         }
         z_l.iter_mut().for_each(|v| *v = 0.0);
         let inv_n = 1.0 / n as f64;
-        for i in 0..n {
-            if c0[i] != 0.0 {
-                slab.data.col_axpy(i, c0[i] * inv_n, &mut z_l);
-            }
-        }
+        slab.data.matvec_accumulate_scaled_pool(&ws.c0, inv_n, &mut z_l, &ws.pool);
 
         // --- inner loop (Alg. 1 lines 7–12) ---
         if params.lazy && use_l2_fast_path {
@@ -211,26 +217,25 @@ fn worker(
             // sparsely; per-step cost drops from O(d_l) to O(nnz_l(i)).
             // Partial margins come from α·(vᵀx) + γ·(zᵀx) with zᵀx
             // precomputed once per outer iteration (one O(nnz_l) pass).
-            let mut zx = vec![0.0f64; n];
-            slab.data.transpose_matvec(&z_l, &mut zx);
+            Workspace::reset(&mut ws.zx, n);
+            slab.data.transpose_matvec_pool(&z_l, &mut ws.zx, &ws.pool);
             let beta = 1.0 - eta * lambda;
             let mut alpha = 1.0f64;
             let mut gamma = 0.0f64;
             let mut m = 0usize;
-            let mut batch_idx = Vec::with_capacity(u);
             while m < m_inner {
                 let b = u.min(m_inner - m);
                 batch_idx.clear();
                 for _ in 0..b {
                     batch_idx.push(sample_rng.below(n));
                 }
-                let mut partial: Vec<f64> = batch_idx
-                    .iter()
-                    .map(|&i| alpha * slab.data.col_dot(i, &w_l) + gamma * zx[i])
-                    .collect();
-                comm.allreduce(ep, group, &mut partial);
+                Workspace::reset(&mut ws.partial, b);
                 for (k, &i) in batch_idx.iter().enumerate() {
-                    let delta = loss.derivative(partial[k], y[i]) - c0[i];
+                    ws.partial[k] = alpha * slab.data.col_dot(i, &w_l) + gamma * ws.zx[i];
+                }
+                comm.allreduce(ep, group, &mut ws.partial);
+                for (k, &i) in batch_idx.iter().enumerate() {
+                    let delta = loss.derivative(ws.partial[k], y[i]) - ws.c0[i];
                     alpha *= beta;
                     gamma = beta * gamma - eta;
                     // Renormalize (v ← α·v, α ← 1; preserves w̃ = α·v + γ·z)
@@ -254,7 +259,6 @@ fn worker(
             }
         } else {
             let mut m = 0usize;
-            let mut batch_idx = Vec::with_capacity(u);
             while m < m_inner {
                 let b = u.min(m_inner - m);
                 batch_idx.clear();
@@ -262,13 +266,15 @@ fn worker(
                     batch_idx.push(sample_rng.below(n));
                 }
                 // u partial inner products, communicated together (§4.4.1)
-                let mut partial: Vec<f64> =
-                    batch_idx.iter().map(|&i| slab.data.col_dot(i, &w_l)).collect();
-                comm.allreduce(ep, group, &mut partial);
+                Workspace::reset(&mut ws.partial, b);
+                for (k, &i) in batch_idx.iter().enumerate() {
+                    ws.partial[k] = slab.data.col_dot(i, &w_l);
+                }
+                comm.allreduce(ep, group, &mut ws.partial);
                 // apply the b variance-reduced updates (line 11), each using
                 // the margin taken before this batch's updates
                 for (k, &i) in batch_idx.iter().enumerate() {
-                    let delta = loss.derivative(partial[k], y[i]) - c0[i];
+                    let delta = loss.derivative(ws.partial[k], y[i]) - ws.c0[i];
                     if use_l2_fast_path {
                         linalg::axpby(-eta, &z_l, 1.0 - eta * lambda, &mut w_l);
                     } else {

@@ -31,6 +31,7 @@ use crate::loss::{Loss, LossKind, Regularizer};
 use crate::net::collectives::Comm;
 use crate::net::{NetModel, NetSpec, SimParams, WireFmt};
 use crate::sparse::libsvm::Dataset;
+use crate::util::pool::Pool;
 use std::sync::Arc;
 
 /// The optimization problem (paper eq. 1): dataset + loss + regularizer.
@@ -160,6 +161,12 @@ pub struct RunParams {
     /// O(d_l)-per-step dense update. Numerically equal up to roundoff;
     /// the §Perf optimization of EXPERIMENTS.md.
     pub lazy: bool,
+    /// Host threads per node for the sparse compute kernels (`--threads`,
+    /// `run.threads`; default 1 = today's serial loops). The parallel
+    /// kernels are bit-exact at any width and the pool credits worker CPU
+    /// back to the node's simulated clock, so `threads` changes host
+    /// wall-clock only — `w`, traces and counters are invariant.
+    pub threads: usize,
 }
 
 impl Default for RunParams {
@@ -179,6 +186,7 @@ impl Default for RunParams {
             star_reduce: false,
             wire: WireFmt::F64,
             lazy: false,
+            threads: 1,
         }
     }
 }
@@ -202,6 +210,56 @@ impl RunParams {
     /// (`net`) applied to the base link parameters (`sim`).
     pub fn net_model(&self) -> NetModel {
         self.net.resolve(self.sim)
+    }
+}
+
+/// Reusable per-node scratch for the epoch loops: the margin / derivative
+/// / partial-dot buffers every algorithm used to `vec!` afresh each epoch
+/// (and each inner batch), plus the node's deterministic compute pool.
+///
+/// One `Workspace` lives on each simulated node's stack for the node's
+/// whole lifetime; `Workspace::reset` re-lengths a buffer without giving
+/// its capacity back, so after the first epoch the loops run
+/// allocation-free. Fields are public (rather than accessor methods) so a
+/// loop can hold disjoint buffers simultaneously under the borrow checker.
+pub struct Workspace {
+    /// Deterministic compute pool, [`RunParams::threads`] wide.
+    pub pool: Pool,
+    /// N-length margin scratch (`Dᵀw` partial products).
+    pub margins: Vec<f64>,
+    /// N-length loss-derivative scratch (`c0`).
+    pub c0: Vec<f64>,
+    /// N-length `zᵀx` scratch (the FD-SVRG lazy path).
+    pub zx: Vec<f64>,
+    /// Batch-length partial-dot scratch (inner-loop allreduce payload).
+    pub partial: Vec<f64>,
+    /// d-length gradient / reduce scratch.
+    pub grad: Vec<f64>,
+}
+
+impl Workspace {
+    pub fn new(threads: usize) -> Workspace {
+        Workspace {
+            pool: Pool::new(threads),
+            margins: Vec::new(),
+            c0: Vec::new(),
+            zx: Vec::new(),
+            partial: Vec::new(),
+            grad: Vec::new(),
+        }
+    }
+
+    /// Reset `buf` to `len` zeros, reusing its capacity. Returns the
+    /// buffer for call-chaining into collectives
+    /// (`comm.allreduce(ep, group, Workspace::reset(&mut ws.margins, n))`).
+    ///
+    /// An associated function on purpose: taking `&mut self` here would
+    /// lock the whole workspace while a loop still reads its other
+    /// buffers.
+    pub fn reset(buf: &mut Vec<f64>, len: usize) -> &mut Vec<f64> {
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
     }
 }
 

@@ -84,9 +84,6 @@ fn server(
         resume.map(|r| r.w[lo..hi].to_vec()).unwrap_or_else(|| vec![0.0f64; hi - lo]);
     let mut grads = resume.map(|r| r.grads).unwrap_or(0);
     let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
-    let mut full_w =
-        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; topo.d]);
-
     loop {
         // event loop for one epoch: serve sparse pulls, apply sparse pushes.
         // Finished workers' session-state snapshots can land while this
@@ -135,6 +132,7 @@ fn server(
         // epoch boundary: evaluate on the monitor
         epoch += 1;
         let stop = if let Some(gate) = gate {
+            let mut full_w = vec![0.0f64; topo.d];
             full_w[lo..hi].copy_from_slice(&w_k);
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
@@ -147,7 +145,7 @@ fn server(
             let (scalars, bytes, per_node) = comm_snapshot(ep);
             let directive = gate.exchange(EpochReport {
                 epoch,
-                w: full_w.clone(),
+                w: Arc::new(full_w),
                 grads,
                 sim_time,
                 scalars,

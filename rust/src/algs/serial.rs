@@ -17,6 +17,7 @@
 use super::Problem;
 use crate::linalg;
 use crate::metrics::{Trace, TracePoint};
+use crate::util::pool::Pool;
 use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 
@@ -41,6 +42,10 @@ pub struct SvrgState {
     c0: Vec<f64>,
     z: Vec<f64>,
     w_snapshot_m: Vec<f64>,
+    /// Compute pool for the full-gradient kernels (`Dᵀw`, `Dc`); width 1
+    /// by default. The parallel kernels are bit-exact with the serial
+    /// ones, so widening the pool never perturbs a trajectory.
+    pool: Pool,
 }
 
 impl SvrgState {
@@ -57,6 +62,7 @@ impl SvrgState {
             c0: vec![0.0f64; problem.n()],
             z: vec![0.0f64; problem.d()],
             w_snapshot_m: Vec::new(),
+            pool: Pool::serial(),
         }
     }
 
@@ -75,7 +81,14 @@ impl SvrgState {
             c0: vec![0.0f64; problem.n()],
             z: vec![0.0f64; problem.d()],
             w_snapshot_m: Vec::new(),
+            pool: Pool::serial(),
         }
+    }
+
+    /// Widen the compute pool to `threads` (see [`super::RunParams::threads`]).
+    pub fn with_threads(mut self, threads: usize) -> SvrgState {
+        self.pool = Pool::new(threads);
+        self
     }
 }
 
@@ -99,18 +112,15 @@ pub fn svrg_epoch(
     let m_inner = if m_inner == 0 { n } else { m_inner };
     let mut grads = 0u64;
 
-    // full (loss-part) gradient at w_t
-    x.transpose_matvec(&st.w, &mut st.margins);
+    // full (loss-part) gradient at w_t: Dᵀw then D(c0/N), both through
+    // the state's pool (bit-exact with the serial kernels at any width)
+    x.transpose_matvec_pool(&st.w, &mut st.margins, &st.pool);
     for i in 0..n {
         st.c0[i] = loss.derivative(st.margins[i], y[i]);
     }
     st.z.iter_mut().for_each(|v| *v = 0.0);
     let inv_n = 1.0 / n as f64;
-    for i in 0..n {
-        if st.c0[i] != 0.0 {
-            x.col_axpy(i, st.c0[i] * inv_n, &mut st.z);
-        }
-    }
+    x.matvec_accumulate_scaled_pool(&st.c0, inv_n, &mut st.z, &st.pool);
     grads += n as u64;
 
     // inner loop on w̃ (= w, updated in place)

@@ -9,7 +9,7 @@
 //! inner round.
 
 use super::ps::PsTopology;
-use super::{Problem, RunParams};
+use super::{Problem, RunParams, Workspace};
 use crate::linalg;
 use crate::metrics::RunResult;
 use crate::net::{tags, Endpoint};
@@ -46,7 +46,11 @@ pub(crate) fn driver(
     // consumes one instance per worker in parallel
     let m_rounds = if params.m_inner == 0 { (n / q).max(1) } else { params.m_inner };
     let topo = PsTopology::new(p, q, d);
-    let shards: Arc<Vec<InstanceShard>> = Arc::new(by_instances(&problem.ds.x, q));
+    let shards: Vec<InstanceShard> = by_instances(&problem.ds.x, q);
+    for shard in &shards {
+        shard.prewarm(params.threads);
+    }
+    let shards: Arc<Vec<InstanceShard>> = Arc::new(shards);
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
     let dataset = problem.ds.name.clone();
     let model = params.net_model();
@@ -89,40 +93,41 @@ fn server(
         resume.map(|r| r.w[lo..hi].to_vec()).unwrap_or_else(|| vec![0.0f64; dk]);
     let mut grads = resume.map(|r| r.grads).unwrap_or(0);
     let mut epoch = resume.map(|r| r.epoch).unwrap_or(0);
-    let mut full_w =
-        resume.map(|r| r.w.clone()).unwrap_or_else(|| vec![0.0f64; topo.d]);
+    let mut ws = Workspace::new(params.threads);
 
     loop {
         // full-gradient phase: fan w_t^(k) out to all workers (one
         // encode, Arc clones), sum their z_l^(k)
         comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::BCAST, &w_k);
-        let mut z_k = vec![0.0f64; dk];
+        Workspace::reset(&mut ws.zx, dk);
         for l in 0..q {
             let msg = ep.recv_from(topo.worker_node(l), tags::REDUCE);
-            msg.add_into(&mut z_k);
+            msg.add_into(&mut ws.zx);
         }
-        linalg::scale(1.0 / n as f64, &mut z_k);
+        linalg::scale(1.0 / n as f64, &mut ws.zx);
         grads += n as u64;
 
         // inner rounds (Algorithm 3 lines 7–12)
         for _ in 0..m_rounds {
             comm.send_all(ep, (0..q).map(|l| topo.worker_node(l)), tags::PULL_RESP, &w_k);
-            let mut grad_k = vec![0.0f64; dk];
+            Workspace::reset(&mut ws.grad, dk);
             for l in 0..q {
                 let msg = ep.recv_from(topo.worker_node(l), tags::PUSH);
-                msg.add_into(&mut grad_k);
+                msg.add_into(&mut ws.grad);
             }
-            linalg::scale(1.0 / q as f64, &mut grad_k);
+            linalg::scale(1.0 / q as f64, &mut ws.grad);
             // w̃ ← w̃ − η(∇̄ + z + ∇g(w̃))
             for i in 0..dk {
-                w_k[i] -= eta * (grad_k[i] + z_k[i] + lambda * w_k[i]);
+                w_k[i] -= eta * (ws.grad[i] + ws.zx[i] + lambda * w_k[i]);
             }
             grads += q as u64;
         }
 
-        // evaluation plane: monitor assembles w, reports the boundary
+        // evaluation plane: monitor assembles w (into a fresh buffer whose
+        // ownership moves into the report's Arc), reports the boundary
         epoch += 1;
         let stop = if let Some(gate) = gate {
+            let mut full_w = vec![0.0f64; topo.d];
             full_w[lo..hi].copy_from_slice(&w_k);
             for s in 1..topo.p {
                 let msg = ep.recv_eval_from(topo.server_node(s), tags::EVAL);
@@ -135,7 +140,7 @@ fn server(
             let (scalars, bytes, per_node) = comm_snapshot(ep);
             let directive = gate.exchange(EpochReport {
                 epoch,
-                w: full_w.clone(),
+                w: Arc::new(full_w),
                 grads,
                 sim_time,
                 scalars,
@@ -188,7 +193,11 @@ fn worker(
     };
     let mut w_t = vec![0.0f64; topo.d];
     let mut w_m = vec![0.0f64; topo.d];
-    let mut margins0 = vec![0.0f64; n_local];
+    let mut ws = Workspace::new(params.threads);
+    // reusable sparse-gradient staging: only instance i's nonzero rows are
+    // ever touched, so re-zeroing those O(nnz_i) slots after each send
+    // restores the all-zero state without an O(d) pass
+    let mut grad = vec![0.0f64; topo.d];
 
     loop {
         // assemble w_t from all servers
@@ -196,18 +205,19 @@ fn worker(
             let (lo, hi) = topo.key_range(k);
             comm.recv_into(ep, topo.server_node(k), tags::BCAST, &mut w_t[lo..hi]);
         }
-        // local loss-gradient sum, split to servers
-        shard.data.transpose_matvec(&w_t, &mut margins0);
-        let mut zsum = vec![0.0f64; topo.d];
+        // local loss-gradient sum, split to servers (Dᵀw and Dc on the
+        // workspace pool — bit-exact at any --threads width)
+        Workspace::reset(&mut ws.margins, n_local);
+        shard.data.transpose_matvec_pool(&w_t, &mut ws.margins, &ws.pool);
+        Workspace::reset(&mut ws.c0, n_local);
         for i in 0..n_local {
-            let c = loss.derivative(margins0[i], y[shard.col_idx[i]]);
-            if c != 0.0 {
-                shard.data.col_axpy(i, c, &mut zsum);
-            }
+            ws.c0[i] = loss.derivative(ws.margins[i], y[shard.col_idx[i]]);
         }
+        Workspace::reset(&mut ws.grad, topo.d);
+        shard.data.matvec_accumulate_pool(&ws.c0, &mut ws.grad, &ws.pool);
         for k in 0..topo.p {
             let (lo, hi) = topo.key_range(k);
-            comm.send(ep, topo.server_node(k), tags::REDUCE, &zsum[lo..hi]);
+            comm.send(ep, topo.server_node(k), tags::REDUCE, &ws.grad[lo..hi]);
         }
 
         // inner rounds (Algorithm 4 lines 5–10)
@@ -218,13 +228,15 @@ fn worker(
             }
             let i = rng.below(n_local);
             let yi = y[shard.col_idx[i]];
-            let delta =
-                loss.derivative(shard.data.col_dot(i, &w_m), yi) - loss.derivative(margins0[i], yi);
-            let mut grad = vec![0.0f64; topo.d];
+            let delta = loss.derivative(shard.data.col_dot(i, &w_m), yi)
+                - loss.derivative(ws.margins[i], yi);
             shard.data.col_axpy(i, delta, &mut grad);
             for k in 0..topo.p {
                 let (lo, hi) = topo.key_range(k);
                 comm.send(ep, topo.server_node(k), tags::PUSH, &grad[lo..hi]);
+            }
+            for (r, _) in shard.data.col_iter(i) {
+                grad[r as usize] = 0.0;
             }
         }
 

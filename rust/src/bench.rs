@@ -48,7 +48,9 @@ impl Bench {
         self
     }
 
-    fn enabled(&self, name: &str) -> bool {
+    /// Whether an entry named `name` would run under the active filter
+    /// (benches use this to skip expensive setup for filtered-out cases).
+    pub fn enabled(&self, name: &str) -> bool {
         self.filter.as_deref().map(|f| name.contains(f)).unwrap_or(true)
     }
 
@@ -96,6 +98,48 @@ impl Bench {
             median_s: t,
             stddev_s: 0.0,
         });
+    }
+
+    /// All samples recorded so far (benches that persist a baseline file
+    /// read these back out before `finish`).
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Whether a `cargo bench -- <filter>` filter is active. Baseline
+    /// writers skip persisting under a filter — a partial run must never
+    /// overwrite a full baseline.
+    pub fn is_filtered(&self) -> bool {
+        self.filter.is_some()
+    }
+
+    /// Serialize the recorded samples as a small JSON document (no
+    /// `serde` offline — the format is flat enough to emit by hand).
+    pub fn to_json(&self, note: &str) -> String {
+        let esc = crate::metrics::json::esc;
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"suite\": \"{}\",\n", esc(&self.suite)));
+        out.push_str(&format!("  \"note\": \"{}\",\n", esc(note)));
+        out.push_str("  \"entries\": [\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iters\": {}, \"mean_s\": {:.6e}, \"median_s\": {:.6e}, \"stddev_s\": {:.6e}}}{}\n",
+                esc(&s.name),
+                s.iters,
+                s.mean_s,
+                s.median_s,
+                s.stddev_s,
+                if i + 1 < self.samples.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(&self, path: &str, note: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(note))
     }
 
     /// Print the suite footer; call at the end of main().

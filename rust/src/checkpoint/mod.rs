@@ -432,7 +432,7 @@ impl SessionCheckpoint {
                 lambda,
                 wire,
                 trace,
-                resume: ResumeState { epoch, grads, w, comm, nodes },
+                resume: ResumeState { epoch, grads, w: std::sync::Arc::new(w), comm, nodes },
             },
         })
     }
@@ -549,7 +549,7 @@ mod tests {
             resume: ResumeState {
                 epoch: 1,
                 grads: 60,
-                w: vec![0.25, -1.0, 3.5],
+                w: std::sync::Arc::new(vec![0.25, -1.0, 3.5]),
                 comm: vec![
                     NodeComm { scalars: 40, bytes: 320, messages: 4 },
                     NodeComm { scalars: 60, bytes: 480, messages: 6 },

@@ -188,6 +188,10 @@ pub struct ExperimentConfig {
     pub wire: crate::net::WireFmt,
     /// FD-SVRG lazy inner loop (§Perf).
     pub lazy: bool,
+    /// Host threads per node for the sparse compute kernels
+    /// (`run.threads`, CLI `--threads`); 1 = serial (default). Bit-exact
+    /// at any width — changes host wall-clock only.
+    pub threads: usize,
     /// Network scenario kind (`net.model = "uniform"|"hetero"|"straggler"|
     /// "jitter"`, CLI `--net`); resolved with the `net.*` scenario table
     /// below by [`ExperimentConfig::net_spec`].
@@ -235,6 +239,7 @@ impl Default for ExperimentConfig {
             bandwidth_gbps: 10.0, // paper §5: 10GbE
             wire: crate::net::WireFmt::F64,
             lazy: false,
+            threads: 1,
             net_model: "uniform".into(),
             rack_size: 4,
             // cross-rack defaults: an oversubscribed spine — >10× the
@@ -273,6 +278,7 @@ impl ExperimentConfig {
                 crate::net::WireFmt::parse_or_err(s).unwrap_or_else(|e| panic!("run.wire: {e}"))
             },
             lazy: cfg.bool_or("run.lazy", d.lazy),
+            threads: cfg.usize_or("run.threads", d.threads).max(1),
             net_model: cfg.str_or("net.model", &d.net_model).to_string(),
             rack_size: cfg.usize_or("net.rack_size", d.rack_size),
             cross_latency: cfg.f64_or("net.cross_latency", d.cross_latency),
@@ -339,6 +345,7 @@ impl ExperimentConfig {
             star_reduce: false,
             wire: self.wire,
             lazy: self.lazy,
+            threads: self.threads,
         }
     }
 }
@@ -410,6 +417,19 @@ latency = 5e-5
         // default stays bit-exact f64
         let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
         assert_eq!(e.wire, crate::net::WireFmt::F64);
+    }
+
+    #[test]
+    fn threads_parse_from_config_and_default_to_serial() {
+        let c = Config::parse("[run]\nthreads = 4\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.threads, 4);
+        assert_eq!(e.run_params().threads, 4);
+        let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(e.threads, 1, "default stays the serial loops");
+        // 0 is clamped: a pool always has at least the caller thread
+        let c = Config::parse("[run]\nthreads = 0\n").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).threads, 1);
     }
 
     #[test]

@@ -5,11 +5,21 @@
 //! kernels are deliberately allocation-free — the inner loops of SVRG call
 //! them millions of times.
 
-/// `y += alpha * x`
+/// `y += alpha * x` — 4-way unrolled over exact blocks (elementwise, so
+/// unrolling cannot change any bit; the block body gives LLVM a clean
+/// bounds-check-free vectorization target).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let mut yc = y.chunks_exact_mut(4);
+    let mut xc = x.chunks_exact(4);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        yb[0] += alpha * xb[0];
+        yb[1] += alpha * xb[1];
+        yb[2] += alpha * xb[2];
+        yb[3] += alpha * xb[3];
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
         *yi += alpha * *xi;
     }
 }
@@ -72,11 +82,21 @@ pub fn dist2(x: &[f64], y: &[f64]) -> f64 {
     s.sqrt()
 }
 
-/// `y = beta*y + alpha*x` (general update used by the SVRG dense step).
+/// `y = beta*y + alpha*x` (general update used by the SVRG dense step) —
+/// the O(d)-per-inner-step hot loop of every naive SVRG path; unrolled
+/// like [`axpy`] (elementwise, bit-identical to the scalar loop).
 #[inline]
 pub fn axpby(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
     assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+    let mut yc = y.chunks_exact_mut(4);
+    let mut xc = x.chunks_exact(4);
+    for (yb, xb) in (&mut yc).zip(&mut xc) {
+        yb[0] = beta * yb[0] + alpha * xb[0];
+        yb[1] = beta * yb[1] + alpha * xb[1];
+        yb[2] = beta * yb[2] + alpha * xb[2];
+        yb[3] = beta * yb[3] + alpha * xb[3];
+    }
+    for (yi, xi) in yc.into_remainder().iter_mut().zip(xc.remainder().iter()) {
         *yi = beta * *yi + alpha * *xi;
     }
 }

@@ -47,6 +47,10 @@ const USAGE: &str = "usage:
                --dataset <profile|path.libsvm> [--q N] [--servers P] [--lambda L]
                [--eta E] [--outer T] [--batch U] [--seed S] [--config file.toml]
                [--out dir] [--star] [--lazy] [--gap-target G]
+               [--threads K]   (host threads per node for the sparse
+               kernels; w/traces/counters are bit-identical at every K
+               and the simulated clock still charges the serial compute,
+               so K changes host wall-clock only; default 1)
                [--wire f64|f32|sparse]   (payload codec for counted traffic:
                f64 = bit-exact default, f32 = half the wire bytes,
                sparse = (u32,f32) pairs for the nonzeros only)
@@ -93,6 +97,7 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.batch = args.get_or("batch", cfg.batch);
     cfg.seed = args.get_or("seed", cfg.seed);
     cfg.gap_target = args.get_or("gap-target", cfg.gap_target);
+    cfg.threads = args.get_or("threads", cfg.threads).max(1);
     if let Some(v) = args.get("wire") {
         cfg.wire = fdsvrg::net::WireFmt::parse_or_err(v).map_err(|e| anyhow::anyhow!(e))?;
     }
@@ -140,7 +145,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine_kind = args.get("engine").unwrap_or("native");
 
     println!(
-        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, net={}, engine={engine_kind})",
+        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, net={}, threads={}, engine={engine_kind})",
         algo.name(),
         cfg.dataset,
         problem.d(),
@@ -150,6 +155,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         if cfg.eta > 0.0 { format!("{}", cfg.eta) } else { format!("auto={:.3}", problem.default_eta()) },
         params.wire.name(),
         params.net.name(),
+        params.threads,
     );
     let res = match engine_kind {
         // "native" keeps its historical meaning: the sparse CSC algorithms,
@@ -271,7 +277,9 @@ fn cmd_predict(args: &Args) -> Result<()> {
         fdsvrg::checkpoint::Loaded::Weights(c) => (1, c.algorithm, c.dataset, c.lambda, c.w),
         fdsvrg::checkpoint::Loaded::Session(sc) => {
             let st = sc.state;
-            (2, st.algorithm, st.dataset, st.lambda, st.resume.w)
+            // freshly loaded ⇒ the Arc is uniquely held; unwrap without a copy
+            let w = std::sync::Arc::try_unwrap(st.resume.w).unwrap_or_else(|a| (*a).clone());
+            (2, st.algorithm, st.dataset, st.lambda, w)
         }
     };
     let ds_name = args.get("dataset").map(|s| s.to_string()).unwrap_or_else(|| dataset.clone());

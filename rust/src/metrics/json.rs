@@ -8,8 +8,9 @@ use anyhow::{Context, Result};
 use std::io::Write;
 use std::path::Path;
 
-/// Escape a string for a JSON literal.
-fn esc(s: &str) -> String {
+/// Escape a string for a JSON literal (shared with [`crate::bench`]'s
+/// baseline writer).
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {

@@ -309,17 +309,24 @@ impl Endpoint {
 
     /// Charge the thread CPU time burned since the last network operation
     /// to this node's simulated clock (through the model — stragglers run
-    /// their compute at `factor×`).
+    /// their compute at `factor×`). The lap includes the *foreign* CPU the
+    /// deterministic compute pool burned on worker threads on this node's
+    /// behalf ([`crate::util::pool::take_foreign_cpu`]): the simulated
+    /// clock charges the serial cost of the kernels regardless of
+    /// `--threads`, so host parallelism never masquerades as faster
+    /// simulated hardware.
     #[inline]
     pub fn tick(&mut self) {
-        let lap = self.cpu.lap();
+        let lap = self.cpu.lap() + crate::util::pool::take_foreign_cpu();
         self.net.charge_compute(&mut self.cs, lap);
     }
 
     /// Discard CPU time burned since the last network op (evaluation /
-    /// bookkeeping that a real deployment would do off the critical path).
+    /// bookkeeping that a real deployment would do off the critical path),
+    /// including any pool-worker CPU accumulated in the same window.
     pub fn discard_cpu(&mut self) {
         let _ = self.cpu.lap();
+        let _ = crate::util::pool::take_foreign_cpu();
     }
 
     /// Current simulated time at this node.

@@ -43,13 +43,26 @@ fn hinge_deriv(z: f32, y: f32, gamma: f32) -> f32 {
     }
 }
 
-/// Dot of `w` against tile column `j` (instance `j` of the block).
+/// Dot of `w` against tile column `j` (instance `j` of the block) —
+/// 4-way unrolled with a single left-to-right accumulation chain, so the
+/// result is bit-identical to the scalar loop (the xla_runtime suite
+/// compares this engine's kernels against the f64 reference).
 #[inline]
 fn col_dot(w: &[f32], d_block: &[f32], j: usize) -> f32 {
     let col = &d_block[j * BLOCK_D..(j + 1) * BLOCK_D];
+    let n = w.len().min(col.len());
+    let chunks = n / 4;
     let mut acc = 0f32;
-    for (a, b) in w.iter().zip(col.iter()) {
-        acc += a * b;
+    for c in 0..chunks {
+        let i = 4 * c;
+        let p0 = w[i] * col[i];
+        let p1 = w[i + 1] * col[i + 1];
+        let p2 = w[i + 2] * col[i + 2];
+        let p3 = w[i + 3] * col[i + 3];
+        acc = acc + p0 + p1 + p2 + p3;
+    }
+    for i in 4 * chunks..n {
+        acc += w[i] * col[i];
     }
     acc
 }

@@ -37,6 +37,7 @@ use crate::session::{
 use crate::util::time::Stopwatch;
 use crate::util::Pcg64;
 use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
 
 /// Blocked dense mirror of one dataset: `blocks[l][b]` is the
 /// `(BLOCK_D × BLOCK_N)` zero-padded dense tile of feature slab `l`,
@@ -116,6 +117,12 @@ pub struct BlockedDriver<'e> {
     z: Vec<Vec<f32>>,
     margins: Vec<f32>,
     c0: Vec<f32>,
+    /// per-batch scratch (inner loop runs allocation-free)
+    idx: Vec<i32>,
+    dots: Vec<f32>,
+    yb: Vec<f32>,
+    c0b: Vec<f32>,
+    c_scaled: Vec<f32>,
     rng: Pcg64,
     epoch: usize,
     grads: u64,
@@ -163,6 +170,11 @@ impl<'e> BlockedDriver<'e> {
             z: vec![vec![0f32; BLOCK_D]; q],
             margins: vec![0f32; data.n_blocks * BLOCK_N],
             c0: vec![0f32; data.n_blocks * BLOCK_N],
+            idx: Vec::with_capacity(BLOCK_U),
+            dots: Vec::with_capacity(BLOCK_U),
+            yb: Vec::with_capacity(BLOCK_U),
+            c0b: Vec::with_capacity(BLOCK_U),
+            c_scaled: Vec::with_capacity(BLOCK_N),
             rng: Pcg64::seed_from_u64(params.seed),
             epoch: 0,
             grads: 0,
@@ -248,14 +260,13 @@ impl<'e> BlockedDriver<'e> {
             let coef = self.engine.logistic_coef(mb, &self.data.y_blocks[b])?;
             let lo = b * BLOCK_N;
             let valid = (n - lo).min(BLOCK_N);
-            let c_scaled: Vec<f32> = coef
-                .iter()
-                .enumerate()
-                .map(|(j, &v)| if j < valid { v * inv_n } else { 0.0 })
-                .collect();
+            self.c_scaled.clear();
+            for (j, &v) in coef.iter().enumerate() {
+                self.c_scaled.push(if j < valid { v * inv_n } else { 0.0 });
+            }
             self.c0[lo..lo + BLOCK_N].copy_from_slice(&coef);
             for (l, zl) in self.z.iter_mut().enumerate() {
-                let zb = self.engine.coef_matvec(&self.data.blocks[l][b], &c_scaled)?;
+                let zb = self.engine.coef_matvec(&self.data.blocks[l][b], &self.c_scaled)?;
                 for (zv, nv) in zl.iter_mut().zip(zb.iter()) {
                     *zv += nv;
                 }
@@ -270,32 +281,34 @@ impl<'e> BlockedDriver<'e> {
             let gi = self.rng.below(n);
             let b = gi / BLOCK_N;
             let valid = (n - b * BLOCK_N).min(BLOCK_N);
-            let idx: Vec<i32> = (0..BLOCK_U).map(|_| self.rng.below(valid) as i32).collect();
+            self.idx.clear();
+            self.idx.extend((0..BLOCK_U).map(|_| self.rng.below(valid) as i32));
 
             // batch partial products, summed across slabs ("tree allreduce")
-            let mut dots = vec![0f32; BLOCK_U];
+            self.dots.clear();
+            self.dots.resize(BLOCK_U, 0.0);
             for (l, wl) in self.w.iter().enumerate() {
-                let part = self.engine.batch_dots(wl, &self.data.blocks[l][b], &idx)?;
-                for (dv, pv) in dots.iter_mut().zip(part.iter()) {
+                let part = self.engine.batch_dots(wl, &self.data.blocks[l][b], &self.idx)?;
+                for (dv, pv) in self.dots.iter_mut().zip(part.iter()) {
                     *dv += pv;
                 }
             }
             self.scalars += 2 * q as u64 * BLOCK_U as u64;
             self.messages += 2 * q as u64;
 
-            let yb: Vec<f32> =
-                idx.iter().map(|&i| self.data.y_blocks[b][i as usize]).collect();
-            let c0b: Vec<f32> =
-                idx.iter().map(|&i| self.c0[b * BLOCK_N + i as usize]).collect();
+            self.yb.clear();
+            self.yb.extend(self.idx.iter().map(|&i| self.data.y_blocks[b][i as usize]));
+            self.c0b.clear();
+            self.c0b.extend(self.idx.iter().map(|&i| self.c0[b * BLOCK_N + i as usize]));
             for (l, wl) in self.w.iter_mut().enumerate() {
                 *wl = self.engine.batch_update(
                     wl,
                     &self.z[l],
                     &self.data.blocks[l][b],
-                    &idx,
-                    &dots,
-                    &yb,
-                    &c0b,
+                    &self.idx,
+                    &self.dots,
+                    &self.yb,
+                    &self.c0b,
                     self.eta,
                     self.lambda,
                 )?;
@@ -321,7 +334,7 @@ impl Driver for BlockedDriver<'_> {
         self.epoch += 1;
         EpochReport {
             epoch: self.epoch,
-            w: self.assemble(),
+            w: Arc::new(self.assemble()),
             grads: self.grads,
             sim_time: self.wall.seconds(),
             scalars: self.scalars,
@@ -335,7 +348,7 @@ impl Driver for BlockedDriver<'_> {
         ResumeState {
             epoch: self.epoch,
             grads: self.grads,
-            w: self.assemble(),
+            w: Arc::new(self.assemble()),
             comm: Vec::new(),
             nodes: vec![self.node_state()],
         }

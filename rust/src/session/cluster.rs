@@ -19,7 +19,10 @@
 //! the rest — paid per epoch, against the epoch's own O(N·nnz) compute,
 //! whether or not a checkpoint is ever taken. If a profile shows this,
 //! the CTRL reply has room for a "state wanted" flag to make shipping
-//! lazy.
+//! lazy. The assembled parameter itself is *not* re-copied: the monitor
+//! moves it into the report's `Arc<Vec<f64>>`, which the session's
+//! objective evaluation, this driver's boundary state and any checkpoint
+//! all share.
 //!
 //! The cluster itself runs on one background runner thread (which hosts
 //! the scoped per-node threads), spawned lazily on the first
@@ -251,7 +254,12 @@ impl Driver for ClusterDriver {
             // never spawned: the counters are whatever the resume carried
             None => CommTotals::from_node_comm(self.last.comm.clone()),
         };
-        FinishOut { w: std::mem::take(&mut self.last.w), totals }
+        // the final boundary buffer is usually uniquely held by now (the
+        // cluster has wound down) — unwrap the Arc without copying, and
+        // fall back to one clone if a checkpoint still shares it
+        let w = Arc::try_unwrap(std::mem::take(&mut self.last.w))
+            .unwrap_or_else(|shared| (*shared).clone());
+        FinishOut { w, totals }
     }
 }
 

@@ -36,6 +36,7 @@ use crate::net::{ClockState, NodeComm, WireFmt};
 use crate::util::time::Stopwatch;
 use anyhow::{ensure, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// What a completed epoch looked like — the typed payload every
 /// [`Observer`] receives and every [`StopPolicy`] is evaluated against.
@@ -130,8 +131,10 @@ impl NodeState {
 pub struct ResumeState {
     pub epoch: usize,
     pub grads: u64,
-    /// Full assembled parameter vector at the boundary.
-    pub w: Vec<f64>,
+    /// Full assembled parameter vector at the boundary. Behind `Arc`: the
+    /// driver's boundary copy, the epoch report and any checkpoint all
+    /// share one buffer instead of re-cloning a `d`-vector per epoch.
+    pub w: Arc<Vec<f64>>,
     /// Per-sender communication counters at the boundary.
     pub comm: Vec<NodeComm>,
     pub nodes: Vec<NodeState>,
@@ -144,7 +147,7 @@ impl ResumeState {
         ResumeState {
             epoch: 0,
             grads: 0,
-            w: vec![0.0; d],
+            w: Arc::new(vec![0.0; d]),
             comm: vec![NodeComm::default(); n_nodes],
             nodes: Vec::new(),
         }
@@ -176,7 +179,10 @@ pub struct SessionState {
 #[derive(Clone, Debug)]
 pub struct EpochReport {
     pub epoch: usize,
-    pub w: Vec<f64>,
+    /// Assembled parameter at the boundary, shared (`Arc`) with the
+    /// driver's resume copy — the monitor hands the buffer over instead of
+    /// the historical d-length clone per epoch.
+    pub w: Arc<Vec<f64>>,
     pub grads: u64,
     pub sim_time: f64,
     pub scalars: u64,

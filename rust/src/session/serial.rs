@@ -7,6 +7,7 @@ use crate::algs::serial::{sgd_epoch, svrg_epoch, SgdState, SvrgOption, SvrgState
 use crate::algs::{Problem, RunParams};
 use crate::metrics::CommTotals;
 use anyhow::{ensure, Result};
+use std::sync::Arc;
 
 /// Serial SVRG (Option I — the `Algorithm::SerialSvrg` dispatch) as a
 /// steppable driver.
@@ -39,10 +40,17 @@ impl SerialSvrgDriver {
                     node.extra[2].to_bits(),
                     node.extra[3].to_bits(),
                 ];
-                (SvrgState::restore(problem, r.w, sample, option), r.epoch, r.grads)
+                (SvrgState::restore(problem, r.w.to_vec(), sample, option), r.epoch, r.grads)
             }
             _ => (SvrgState::fresh(problem, params.seed), 0, 0),
         };
+        let st = st.with_threads(params.threads);
+        // build the CSR mirror at construction time (like the cluster
+        // drivers' partition-time prewarm) so the one-time O(nnz)
+        // transpose never lands inside the first timed epoch
+        if params.threads > 1 {
+            problem.ds.x.ensure_mirror();
+        }
         Ok(SerialSvrgDriver {
             problem: problem.clone(),
             eta,
@@ -69,7 +77,7 @@ impl Driver for SerialSvrgDriver {
         self.epoch += 1;
         EpochReport {
             epoch: self.epoch,
-            w: self.st.w.clone(),
+            w: Arc::new(self.st.w.clone()),
             grads: self.grads,
             sim_time: 0.0,
             scalars: 0,
@@ -83,7 +91,7 @@ impl Driver for SerialSvrgDriver {
         ResumeState {
             epoch: self.epoch,
             grads: self.grads,
-            w: self.st.w.clone(),
+            w: Arc::new(self.st.w.clone()),
             comm: Vec::new(),
             nodes: vec![self.node_state()],
         }
@@ -129,7 +137,7 @@ impl SerialSgdDriver {
                 let node = &r.nodes[0];
                 let rng = node.rng.ok_or_else(|| anyhow::anyhow!("missing RNG state"))?;
                 ensure!(node.extra.len() == 1, "serial-sgd node extra must hold the step counter");
-                (SgdState::restore(r.w, rng, node.extra[0] as u64), r.epoch)
+                (SgdState::restore(r.w.to_vec(), rng, node.extra[0] as u64), r.epoch)
             }
             _ => (SgdState::fresh(problem, params.seed), 0),
         };
@@ -160,7 +168,7 @@ impl Driver for SerialSgdDriver {
         self.epoch += 1;
         EpochReport {
             epoch: self.epoch,
-            w: self.st.w.clone(),
+            w: Arc::new(self.st.w.clone()),
             grads: self.st.step,
             sim_time: 0.0,
             scalars: 0,
@@ -174,7 +182,7 @@ impl Driver for SerialSgdDriver {
         ResumeState {
             epoch: self.epoch,
             grads: self.st.step,
-            w: self.st.w.clone(),
+            w: Arc::new(self.st.w.clone()),
             comm: Vec::new(),
             nodes: vec![self.node_state()],
         }

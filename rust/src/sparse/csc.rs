@@ -1,17 +1,86 @@
 //! CSC matrix — the canonical storage for the data matrix `D ∈ R^{d×N}`
 //! (features × instances, instance `i` = column `i`).
+//!
+//! The two kernels that dominate every algorithm's wall-clock — the
+//! full-gradient partial products `Dᵀw` ([`CscMatrix::transpose_matvec`])
+//! and the aggregation `Dc` ([`CscMatrix::matvec_accumulate`]) — have
+//! pool-parallel variants (`*_pool`) that are **bit-exact** with the
+//! serial kernels at every thread count:
+//!
+//! * `Dᵀw` is column-parallel: each output margin `s_c = x_cᵀw` is an
+//!   independent [`CscMatrix::col_dot`], so chunking the output changes
+//!   nothing about any element's arithmetic.
+//! * `Dc` is row-parallel over a lazily-built, cached **CSR mirror** of
+//!   the same matrix: the serial scatter-add visits columns in ascending
+//!   order, so the additions landing on row `r` arrive in ascending-column
+//!   order — exactly the order the mirror's row `r` stores them. The
+//!   per-row gather replays that sum term for term (including the
+//!   serial path's `c == 0` skip), so the result is bit-identical.
+//!
+//! The mirror costs `+4 B/nnz` (u32 column ids) `+8 B/nnz` (values) plus
+//! `8·(rows+1)` bytes of row pointers; it is built on first use (or via
+//! [`CscMatrix::ensure_mirror`]) and is *not* part of the matrix's value:
+//! equality ignores it.
 
 use crate::linalg;
+use crate::util::pool::Pool;
+use std::sync::OnceLock;
+
+/// Row-major companion arrays of a [`CscMatrix`] — the row-parallel `Dc`
+/// kernel's view. Column ids within each row are ascending (the building
+/// pass visits columns in order), which is what makes the per-row gather
+/// reproduce the serial scatter-add's summation order bit for bit.
+#[derive(Clone, Debug, Default)]
+struct CsrMirror {
+    row_ptr: Vec<usize>, // len rows+1
+    col_idx: Vec<u32>,   // len nnz, ascending within each row
+    values: Vec<f64>,    // len nnz
+}
+
+impl CsrMirror {
+    /// Row `row`'s share of `D·(scale·c)` starting from `init` — the same
+    /// FP operations, in the same order, as the serial column scatter:
+    /// terms in ascending-column order, coefficient formed as `c·scale`
+    /// first, columns with `c == 0` skipped entirely (the serial path
+    /// never touches them, and `x + 0.0` is not always a bit-level no-op).
+    #[inline]
+    fn row_gather(&self, row: usize, c: &[f64], scale: f64, init: f64) -> f64 {
+        let (s, e) = (self.row_ptr[row], self.row_ptr[row + 1]);
+        let mut acc = init;
+        for p in s..e {
+            let cv = c[self.col_idx[p] as usize];
+            if cv != 0.0 {
+                acc += (cv * scale) * self.values[p];
+            }
+        }
+        acc
+    }
+}
 
 /// Compressed sparse column matrix over `f64` values with `u32` row indices
 /// (the paper's largest dataset has d ≈ 3·10⁷ features, well within u32).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct CscMatrix {
     rows: usize,
     cols: usize,
     col_ptr: Vec<usize>, // len cols+1
     row_idx: Vec<u32>,   // len nnz, sorted within each column
     values: Vec<f64>,    // len nnz
+    /// Lazily-built CSR companion for the row-parallel `Dc` kernel.
+    /// Cache only — excluded from equality, rebuilt on demand.
+    mirror: OnceLock<CsrMirror>,
+}
+
+/// Equality is over the matrix *value* (shape + nonzeros); the CSR-mirror
+/// cache is ignored so `a == b` cannot depend on which kernels ran.
+impl PartialEq for CscMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows
+            && self.cols == other.cols
+            && self.col_ptr == other.col_ptr
+            && self.row_idx == other.row_idx
+            && self.values == other.values
+    }
 }
 
 impl CscMatrix {
@@ -47,11 +116,18 @@ impl CscMatrix {
                 assert!((last as usize) < rows, "row index out of bounds in column {c}");
             }
         }
-        CscMatrix { rows, cols, col_ptr, row_idx, values }
+        CscMatrix { rows, cols, col_ptr, row_idx, values, mirror: OnceLock::new() }
     }
 
     pub fn zero(rows: usize, cols: usize) -> Self {
-        CscMatrix { rows, cols, col_ptr: vec![0; cols + 1], row_idx: vec![], values: vec![] }
+        CscMatrix {
+            rows,
+            cols,
+            col_ptr: vec![0; cols + 1],
+            row_idx: vec![],
+            values: vec![],
+            mirror: OnceLock::new(),
+        }
     }
 
     pub fn rows(&self) -> usize {
@@ -95,25 +171,52 @@ impl CscMatrix {
     /// Sparse dot of column `col` against a dense vector: `x_colᵀ w`.
     ///
     /// This is the per-instance hot operation of the FD-SVRG inner loop
-    /// (paper Alg. 1 line 9).
+    /// (paper Alg. 1 line 9). The gather is 4-way unrolled — the four
+    /// indexed loads and multiplies of each block are independent and can
+    /// issue in parallel — while the accumulator keeps the exact
+    /// left-to-right summation order of the scalar loop, because every
+    /// pinned trajectory (equivalence suites, golden files) depends on
+    /// these bits.
     #[inline]
     pub fn col_dot(&self, col: usize, w: &[f64]) -> f64 {
         debug_assert_eq!(w.len(), self.rows);
         let (rows, vals) = self.col(col);
+        let chunks = rows.len() / 4;
         let mut acc = 0.0;
-        for (r, v) in rows.iter().zip(vals.iter()) {
-            acc += w[*r as usize] * *v;
+        for ch in 0..chunks {
+            let i = 4 * ch;
+            let p0 = w[rows[i] as usize] * vals[i];
+            let p1 = w[rows[i + 1] as usize] * vals[i + 1];
+            let p2 = w[rows[i + 2] as usize] * vals[i + 2];
+            let p3 = w[rows[i + 3] as usize] * vals[i + 3];
+            // left-associated: ((((acc+p0)+p1)+p2)+p3), the scalar order
+            acc = acc + p0 + p1 + p2 + p3;
+        }
+        for i in 4 * chunks..rows.len() {
+            acc += w[rows[i] as usize] * vals[i];
         }
         acc
     }
 
-    /// `out += alpha * x_col` (scatter-add of one instance).
+    /// `out += alpha * x_col` (scatter-add of one instance), 4-way
+    /// unrolled: row indices are strictly sorted within a column, so the
+    /// four stores of a block target distinct slots and issue
+    /// independently; each `out[r]` sees exactly one add, so unrolling
+    /// cannot change any bit.
     #[inline]
     pub fn col_axpy(&self, col: usize, alpha: f64, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.rows);
         let (rows, vals) = self.col(col);
-        for (r, v) in rows.iter().zip(vals.iter()) {
-            out[*r as usize] += alpha * *v;
+        let chunks = rows.len() / 4;
+        for ch in 0..chunks {
+            let i = 4 * ch;
+            out[rows[i] as usize] += alpha * vals[i];
+            out[rows[i + 1] as usize] += alpha * vals[i + 1];
+            out[rows[i + 2] as usize] += alpha * vals[i + 2];
+            out[rows[i + 3] as usize] += alpha * vals[i + 3];
+        }
+        for i in 4 * chunks..rows.len() {
+            out[rows[i] as usize] += alpha * vals[i];
         }
     }
 
@@ -121,23 +224,125 @@ impl CscMatrix {
     ///
     /// This is the full-gradient-phase hot operation (paper Alg. 1 line 3).
     pub fn transpose_matvec(&self, w: &[f64], out: &mut [f64]) {
+        self.transpose_matvec_pool(w, out, &Pool::serial());
+    }
+
+    /// Pool-parallel `Dᵀ w`: the output margins are chunked contiguously
+    /// and each is an independent [`CscMatrix::col_dot`] — bit-exact with
+    /// the serial kernel at any thread count.
+    pub fn transpose_matvec_pool(&self, w: &[f64], out: &mut [f64], pool: &Pool) {
         assert_eq!(w.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        for c in 0..self.cols {
-            out[c] = self.col_dot(c, w);
-        }
+        pool.for_each_chunk(out, |start, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = self.col_dot(start + j, w);
+            }
+        });
     }
 
     /// `D c` — accumulate `Σ_i c_i x_i` into `out` (caller zeroes `out`).
     pub fn matvec_accumulate(&self, c: &[f64], out: &mut [f64]) {
+        self.matvec_accumulate_scaled(c, 1.0, out);
+    }
+
+    /// `D (scale·c)` — accumulate `Σ_i (c_i·scale) x_i` into `out`,
+    /// skipping `c_i == 0` columns (the gradient-aggregation form: `c` is
+    /// the loss-derivative vector, `scale` the `1/N` normalization). The
+    /// coefficient is formed as `c_i·scale` *before* the scatter so the
+    /// row-parallel mirror kernel can replay the identical products.
+    pub fn matvec_accumulate_scaled(&self, c: &[f64], scale: f64, out: &mut [f64]) {
         assert_eq!(c.len(), self.cols);
         assert_eq!(out.len(), self.rows);
         for col in 0..self.cols {
             let ci = c[col];
             if ci != 0.0 {
-                self.col_axpy(col, ci, out);
+                self.col_axpy(col, ci * scale, out);
             }
         }
+    }
+
+    /// Pool-parallel `D c` over the CSR mirror (see
+    /// [`CscMatrix::matvec_accumulate_scaled_pool`]).
+    pub fn matvec_accumulate_pool(&self, c: &[f64], out: &mut [f64], pool: &Pool) {
+        self.matvec_accumulate_scaled_pool(c, 1.0, out, pool);
+    }
+
+    /// Pool-parallel `D (scale·c)`: output rows are chunked contiguously
+    /// and each row is gathered from the CSR mirror. Bit-exact with the
+    /// serial scatter at any thread count — the mirror stores each row's
+    /// terms in ascending-column order, which is exactly the order the
+    /// column-major scatter adds them, and the gather replays the same
+    /// `c == 0` skip and `c·scale` product (see `CsrMirror::row_gather`).
+    pub fn matvec_accumulate_scaled_pool(
+        &self,
+        c: &[f64],
+        scale: f64,
+        out: &mut [f64],
+        pool: &Pool,
+    ) {
+        if pool.threads() <= 1 {
+            return self.matvec_accumulate_scaled(c, scale, out);
+        }
+        assert_eq!(c.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        let m = self.mirror();
+        pool.for_each_chunk(out, |start, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = m.row_gather(start + j, c, scale, *o);
+            }
+        });
+    }
+
+    /// CSR-mirror dot of row `row` against a column-indexed vector:
+    /// `Σ_c c[col]·D[row,col]` with the serial scatter's `c == 0` skip —
+    /// equal to the CSC scatter's contribution to `out[row]` bit for bit.
+    pub fn row_dot(&self, row: usize, c: &[f64]) -> f64 {
+        assert_eq!(c.len(), self.cols);
+        assert!(row < self.rows);
+        self.mirror().row_gather(row, c, 1.0, 0.0)
+    }
+
+    /// Build (and cache) the CSR mirror now — drivers call this at setup
+    /// when `threads > 1` so the one-time O(nnz) transpose does not land
+    /// inside the first timed epoch. Idempotent; a no-op cost-wise once
+    /// built.
+    pub fn ensure_mirror(&self) {
+        let _ = self.mirror();
+    }
+
+    /// Bytes held by the CSR mirror (0 until built): `+4 B/nnz` column
+    /// ids, `+8 B/nnz` values, `8·(rows+1)` row pointers.
+    pub fn mirror_bytes(&self) -> usize {
+        match self.mirror.get() {
+            Some(m) => m.row_ptr.len() * 8 + m.col_idx.len() * 4 + m.values.len() * 8,
+            None => 0,
+        }
+    }
+
+    fn mirror(&self) -> &CsrMirror {
+        self.mirror.get_or_init(|| {
+            let mut row_ptr = vec![0usize; self.rows + 1];
+            for &r in &self.row_idx {
+                row_ptr[r as usize + 1] += 1;
+            }
+            for i in 0..self.rows {
+                row_ptr[i + 1] += row_ptr[i];
+            }
+            let mut cursor = row_ptr.clone();
+            let mut col_idx = vec![0u32; self.nnz()];
+            let mut values = vec![0f64; self.nnz()];
+            for c in 0..self.cols {
+                let (rs, vs) = self.col(c);
+                for (r, v) in rs.iter().zip(vs.iter()) {
+                    let p = cursor[*r as usize];
+                    col_idx[p] = c as u32;
+                    values[p] = *v;
+                    cursor[*r as usize] += 1;
+                }
+            }
+            // columns visited in ascending order ⇒ ascending within rows
+            CsrMirror { row_ptr, col_idx, values }
+        })
     }
 
     /// Squared Euclidean norm of column `col`.
@@ -159,36 +364,54 @@ impl CscMatrix {
 
     /// Dense column-major flattening of a *row slab* `[row_lo, row_hi)` of
     /// this matrix, in f32 — the layout the XLA dense engine consumes.
+    /// Each column's `[row_lo, row_hi)` window is binary-searched (rows
+    /// are sorted within columns, as in [`CscMatrix::slice_rows`]) instead
+    /// of range-testing every nonzero of every column.
     pub fn dense_slab_f32(&self, row_lo: usize, row_hi: usize) -> Vec<f32> {
         assert!(row_lo <= row_hi && row_hi <= self.rows);
         let dl = row_hi - row_lo;
         let mut out = vec![0f32; dl * self.cols];
         for c in 0..self.cols {
-            for (r, v) in self.col_iter(c) {
-                let r = r as usize;
-                if r >= row_lo && r < row_hi {
-                    out[c * dl + (r - row_lo)] = v as f32;
-                }
+            let (rs, vs) = self.col(c);
+            let lo = rs.partition_point(|&r| (r as usize) < row_lo);
+            let hi = rs.partition_point(|&r| (r as usize) < row_hi);
+            for p in lo..hi {
+                out[c * dl + (rs[p] as usize - row_lo)] = vs[p] as f32;
             }
         }
         out
     }
 
     /// Select a subset of columns (instance partition). Row dimension is
-    /// kept; `cols` become `idx.len()` in the given order.
+    /// kept; `cols` become `idx.len()` in the given order. Index/value
+    /// storage is reserved up front (the summed nnz of the selected
+    /// columns) so the build never regrows mid-copy.
     pub fn select_columns(&self, idx: &[usize]) -> CscMatrix {
+        let nnz: usize = idx
+            .iter()
+            .map(|&c| {
+                assert!(c < self.cols);
+                self.col_nnz(c)
+            })
+            .sum();
         let mut col_ptr = Vec::with_capacity(idx.len() + 1);
         col_ptr.push(0usize);
-        let mut row_idx = Vec::new();
-        let mut values = Vec::new();
+        let mut row_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
         for &c in idx {
-            assert!(c < self.cols);
             let (rs, vs) = self.col(c);
             row_idx.extend_from_slice(rs);
             values.extend_from_slice(vs);
             col_ptr.push(row_idx.len());
         }
-        CscMatrix { rows: self.rows, cols: idx.len(), col_ptr, row_idx, values }
+        CscMatrix {
+            rows: self.rows,
+            cols: idx.len(),
+            col_ptr,
+            row_idx,
+            values,
+            mirror: OnceLock::new(),
+        }
     }
 
     /// Extract the row slab `[row_lo, row_hi)` with row indices remapped to
@@ -212,7 +435,14 @@ impl CscMatrix {
             }
             col_ptr.push(row_idx.len());
         }
-        CscMatrix { rows: row_hi - row_lo, cols: self.cols, col_ptr, row_idx, values }
+        CscMatrix {
+            rows: row_hi - row_lo,
+            cols: self.cols,
+            col_ptr,
+            row_idx,
+            values,
+            mirror: OnceLock::new(),
+        }
     }
 
     /// Transpose into CSR-of-the-same-matrix, i.e. a `cols × rows` CSC.
@@ -243,6 +473,7 @@ impl CscMatrix {
             col_ptr: row_counts,
             row_idx: t_rows,
             values: t_vals,
+            mirror: OnceLock::new(),
         }
     }
 
@@ -397,5 +628,101 @@ mod tests {
     fn col_nrm2_sq_sample() {
         let m = sample();
         assert!((m.col_nrm2_sq(2) - (16.0 + 25.0 + 36.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_kernels_match_serial_bits() {
+        let m = sample();
+        let w = [1.0, -1.0, 2.0, 0.5];
+        let c = [0.25, 0.0, -1.5]; // includes a zero coefficient (skip path)
+        let mut s_serial = vec![0.0; 3];
+        m.transpose_matvec(&w, &mut s_serial);
+        let mut z_serial = vec![0.5, -0.25, 0.0, 1.0]; // nonzero initial out
+        m.matvec_accumulate(&c, &mut z_serial);
+        for threads in [2usize, 3, 8] {
+            let pool = Pool::new(threads);
+            let mut s = vec![0.0; 3];
+            m.transpose_matvec_pool(&w, &mut s, &pool);
+            assert_eq!(s, s_serial, "Dᵀw at k={threads}");
+            let mut z = vec![0.5, -0.25, 0.0, 1.0];
+            m.matvec_accumulate_pool(&c, &mut z, &pool);
+            assert_eq!(z, z_serial, "Dc at k={threads}");
+        }
+    }
+
+    #[test]
+    fn row_dot_matches_scatter_contribution() {
+        let m = sample();
+        let c = [2.0, -1.0, 0.5];
+        let mut out = vec![0.0; 4];
+        m.matvec_accumulate(&c, &mut out);
+        for r in 0..4 {
+            assert_eq!(m.row_dot(r, &c), out[r], "row {r}");
+        }
+    }
+
+    #[test]
+    fn mirror_is_cached_and_excluded_from_equality() {
+        let a = sample();
+        let b = sample();
+        assert_eq!(a.mirror_bytes(), 0, "mirror must be lazy");
+        a.ensure_mirror();
+        assert!(a.mirror_bytes() > 0);
+        // +4 B/nnz col ids, +8 B/nnz values, 8·(rows+1) row pointers
+        assert_eq!(a.mirror_bytes(), 12 * a.nnz() + 8 * (a.rows() + 1));
+        assert_eq!(a, b, "the cache must not affect equality");
+        assert_eq!(b, a);
+    }
+
+    #[test]
+    fn dense_slab_binary_search_matches_full_scan() {
+        // pin: the windowed build must reproduce the old range-test-every-
+        // nonzero output exactly (reimplemented here as the oracle)
+        let mut rng = crate::util::Pcg64::seed_from_u64(99);
+        let mut b = CooBuilder::new(60, 17);
+        for _ in 0..300 {
+            b.push(rng.below(60), rng.below(17), rng.range_f64(-2.0, 2.0));
+        }
+        let m = b.to_csc();
+        for (lo, hi) in [(0usize, 60usize), (10, 45), (0, 1), (59, 60), (20, 20)] {
+            let dl = hi - lo;
+            let mut want = vec![0f32; dl * m.cols()];
+            for c in 0..m.cols() {
+                for (r, v) in m.col_iter(c) {
+                    let r = r as usize;
+                    if r >= lo && r < hi {
+                        want[c * dl + (r - lo)] = v as f32;
+                    }
+                }
+            }
+            assert_eq!(m.dense_slab_f32(lo, hi), want, "slab [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn unrolled_gather_matches_naive_loops() {
+        // columns with ≥ 4 nonzeros exercise the unrolled body + tail
+        let mut rng = crate::util::Pcg64::seed_from_u64(7);
+        let mut b = CooBuilder::new(50, 9);
+        for _ in 0..260 {
+            b.push(rng.below(50), rng.below(9), rng.range_f64(-1.0, 1.0));
+        }
+        let m = b.to_csc();
+        let w: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        for c in 0..9 {
+            let (rows, vals) = m.col(c);
+            let mut naive = 0.0;
+            for (r, v) in rows.iter().zip(vals.iter()) {
+                naive += w[*r as usize] * *v;
+            }
+            assert_eq!(m.col_dot(c, &w), naive, "col_dot order must be unchanged");
+            let mut got = vec![0.1f64; 50];
+            let mut want = got.clone();
+            m.col_axpy(c, -0.3, &mut got);
+            for (r, v) in rows.iter().zip(vals.iter()) {
+                want[*r as usize] += -0.3 * *v;
+            }
+            assert_eq!(got, want, "col_axpy must be element-identical");
+        }
     }
 }

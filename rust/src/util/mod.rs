@@ -1,9 +1,12 @@
-//! Small shared utilities: PRNG, thread CPU-time clocks, logging.
+//! Small shared utilities: PRNG, thread CPU-time clocks, logging, and the
+//! deterministic compute pool ([`pool`]).
 
 pub mod logger;
+pub mod pool;
 pub mod rng;
 pub mod time;
 
+pub use pool::Pool;
 pub use rng::Pcg64;
 pub use time::ThreadCpuTimer;
 

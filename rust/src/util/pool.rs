@@ -1,0 +1,250 @@
+//! Deterministic compute pool — the multi-core engine of the sparse
+//! kernels (`std::thread` only; the crate keeps `anyhow` as its sole
+//! dependency).
+//!
+//! ## Determinism contract
+//!
+//! A parallel region splits an output slice into **fixed contiguous
+//! chunks** — chunk `t` of `k` over `n` elements is exactly
+//! `[t·n/k, (t+1)·n/k)` — and every element of every chunk is computed by
+//! the same scalar code the serial kernel runs. No element is ever touched
+//! by two workers and no reduction crosses a chunk boundary, so the result
+//! is a pure function of `(input, n, k)`: bit-identical across runs,
+//! thread-scheduling, and — for the column/row-parallel kernels built on
+//! top ([`crate::sparse::CscMatrix`]) — across every thread count `k`.
+//!
+//! ## Execution model
+//!
+//! Workers are *scoped* threads spawned per region (`std::thread::scope`),
+//! not persistent: the regions this pool serves are the O(nnz) kernels
+//! `Dᵀw` and `Dc`, against which a few short-lived spawns are noise, and
+//! scoped borrows keep the API free of `unsafe` lifetime laundering. A
+//! pool of width 1 (the default) runs the region inline on the caller —
+//! the exact serial code path, zero overhead.
+//!
+//! ## Simulated-time invariance
+//!
+//! The cluster simulator charges each node the CPU time of *its own
+//! thread* ([`crate::util::time::ThreadCpuTimer`]). Work farmed out to
+//! pool workers would silently vanish from that clock — `--threads 8`
+//! would look 8× faster on the *simulated* cluster, conflating host
+//! parallelism with the modeled hardware. Instead every region measures
+//! its workers' thread-CPU time and credits the total to a thread-local
+//! accumulator on the caller ([`take_foreign_cpu`]); the network
+//! endpoint drains it into the simulated clock on its next `tick`. The
+//! modeled compute cost is therefore the *serial* CPU regardless of `k`
+//! (up to measurement noise, which the host clock carries anyway), and
+//! `NetModel::charge_compute` needs no change.
+
+use crate::util::time::ThreadCpuTimer;
+use std::cell::Cell;
+use std::ops::Range;
+
+thread_local! {
+    /// CPU seconds burned by pool workers on behalf of this thread since
+    /// the last [`take_foreign_cpu`] drain.
+    static FOREIGN_CPU: Cell<f64> = const { Cell::new(0.0) };
+}
+
+/// Drain the calling thread's foreign-CPU accumulator: seconds of worker
+/// thread-CPU time spent in pool regions this thread dispatched since the
+/// last drain. The simulator's `Endpoint::tick` adds this to the node's
+/// own lap so `--threads K` leaves the simulated clock's meaning intact.
+pub fn take_foreign_cpu() -> f64 {
+    FOREIGN_CPU.with(|c| c.replace(0.0))
+}
+
+fn credit_foreign_cpu(seconds: f64) {
+    if seconds > 0.0 {
+        FOREIGN_CPU.with(|c| c.set(c.get() + seconds));
+    }
+}
+
+/// The fixed contiguous chunk grid: `k` ranges covering `[0, n)` with
+/// `ranges[t] = t·n/k .. (t+1)·n/k`. Chunk sizes differ by at most one
+/// element and depend only on `(n, k)` — never on scheduling.
+pub fn chunk_ranges(n: usize, k: usize) -> Vec<Range<usize>> {
+    let k = k.max(1);
+    (0..k).map(|t| (t * n / k)..((t + 1) * n / k)).collect()
+}
+
+/// Deterministic data-parallel executor over fixed contiguous chunks.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool of `threads` workers (clamped to ≥ 1). Width 1 executes
+    /// every region inline on the caller — today's serial behavior.
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// The inline (single-thread) pool.
+    pub fn serial() -> Pool {
+        Pool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(start, chunk)` over the fixed contiguous chunks of `out`
+    /// (`start` is the chunk's offset into `out`). The caller thread
+    /// executes chunk 0; scoped workers execute the rest; worker CPU time
+    /// is credited to the caller's foreign-CPU accumulator (see the
+    /// module docs). Panics in a worker propagate to the caller.
+    pub fn for_each_chunk<F>(&self, out: &mut [f64], f: F)
+    where
+        F: Fn(usize, &mut [f64]) + Sync,
+    {
+        if out.is_empty() {
+            return;
+        }
+        let k = self.threads.min(out.len());
+        if k <= 1 {
+            f(0, out);
+            return;
+        }
+        // carve `out` into the fixed grid up front: disjoint &mut chunks
+        let ranges = chunk_ranges(out.len(), k);
+        let mut parts: Vec<(usize, &mut [f64])> = Vec::with_capacity(k);
+        let mut rest: &mut [f64] = out;
+        let mut at = 0usize;
+        for r in &ranges {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(r.end - at);
+            parts.push((at, head));
+            at = r.end;
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty(), "chunk grid must consume the whole slice");
+        let f = &f;
+        std::thread::scope(|s| {
+            let mut parts = parts.into_iter();
+            let (start0, chunk0) = parts.next().expect("k >= 1 chunks");
+            let handles: Vec<_> = parts
+                .map(|(start, chunk)| {
+                    s.spawn(move || {
+                        let mut cpu = ThreadCpuTimer::start();
+                        f(start, chunk);
+                        cpu.lap()
+                    })
+                })
+                .collect();
+            f(start0, chunk0);
+            let foreign: f64 = handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .sum();
+            credit_foreign_cpu(foreign);
+        });
+    }
+}
+
+impl Default for Pool {
+    fn default() -> Pool {
+        Pool::serial()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_grid_is_contiguous_and_total() {
+        for n in [0usize, 1, 2, 7, 100, 101] {
+            for k in [1usize, 2, 3, 8, 150] {
+                let rs = chunk_ranges(n, k);
+                assert_eq!(rs.len(), k);
+                assert_eq!(rs[0].start, 0);
+                assert_eq!(rs[k - 1].end, n);
+                for w in rs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+                let sizes: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+                let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "n={n} k={k}: uneven grid {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_covers_every_element_once() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = Pool::new(threads);
+            let mut out = vec![0.0f64; 103];
+            pool.for_each_chunk(&mut out, |start, chunk| {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    *o += (start + j) as f64 + 1.0;
+                }
+            });
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i as f64 + 1.0, "element {i} at k={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn results_are_identical_across_thread_counts() {
+        let compute = |threads: usize| -> Vec<f64> {
+            let mut out = vec![0.0f64; 67];
+            Pool::new(threads).for_each_chunk(&mut out, |start, chunk| {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    let i = (start + j) as f64;
+                    *o = (i * 0.1).sin() * (i + 0.3).sqrt();
+                }
+            });
+            out
+        };
+        let serial = compute(1);
+        for k in [2usize, 3, 8, 100] {
+            assert_eq!(serial, compute(k), "k={k} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_slices_work() {
+        let pool = Pool::new(8);
+        let mut empty: Vec<f64> = vec![];
+        pool.for_each_chunk(&mut empty, |_, _| panic!("no chunks for empty output"));
+        let mut one = vec![0.0f64];
+        pool.for_each_chunk(&mut one, |start, chunk| {
+            assert_eq!(start, 0);
+            chunk[0] = 7.0;
+        });
+        assert_eq!(one, vec![7.0]);
+    }
+
+    #[test]
+    fn foreign_cpu_accumulates_and_drains() {
+        let _ = take_foreign_cpu(); // clean slate
+        let pool = Pool::new(4);
+        let mut out = vec![0.0f64; 4_000];
+        pool.for_each_chunk(&mut out, |start, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for i in 0..2_000 {
+                    acc += ((start + j + i) as f64).sqrt();
+                }
+                *o = acc;
+            }
+        });
+        let foreign = take_foreign_cpu();
+        assert!(foreign >= 0.0);
+        assert_eq!(take_foreign_cpu(), 0.0, "drain must reset the accumulator");
+    }
+
+    #[test]
+    fn serial_pool_never_credits_foreign_cpu() {
+        let _ = take_foreign_cpu();
+        let mut out = vec![0.0f64; 1_000];
+        Pool::serial().for_each_chunk(&mut out, |start, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = (start + j) as f64;
+            }
+        });
+        assert_eq!(take_foreign_cpu(), 0.0, "inline execution is the caller's own CPU");
+    }
+}

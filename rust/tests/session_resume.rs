@@ -358,6 +358,6 @@ fn resume_at_target_epoch_runs_nothing() {
         .unwrap()
         .run_to_completion();
     assert_eq!(res.trace.points.last().unwrap().outer, 4);
-    assert_eq!(res.w, w_at_ckpt);
+    assert_eq!(res.w, *w_at_ckpt);
     assert_eq!(res.total_scalars, scalars_at_ckpt);
 }
