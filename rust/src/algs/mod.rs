@@ -29,7 +29,7 @@ pub mod synsvrg;
 
 use crate::loss::{Loss, LossKind, Regularizer};
 use crate::net::collectives::Comm;
-use crate::net::{NetModel, NetSpec, SimParams, WireFmt};
+use crate::net::{NetModel, NetSpec, SimParams, TransportKind, WireFmt};
 use crate::sparse::libsvm::Dataset;
 use crate::util::pool::Pool;
 use std::sync::Arc;
@@ -167,6 +167,14 @@ pub struct RunParams {
     /// back to the node's simulated clock, so `threads` changes host
     /// wall-clock only — `w`, traces and counters are invariant.
     pub threads: usize,
+    /// Message-plane backing (`--transport sim|tcp`): in-memory mailboxes
+    /// with one thread per node (default, bit-exact with the historical
+    /// plane), or localhost sockets with one OS process per node.
+    pub transport: TransportKind,
+    /// Config-format spec the tcp monitor hands each worker process so it
+    /// can rebuild the identical problem + params (`None` under sim; the
+    /// CLI fills it in for `--transport tcp`).
+    pub worker_spec: Option<Arc<String>>,
 }
 
 impl Default for RunParams {
@@ -187,6 +195,8 @@ impl Default for RunParams {
             wire: WireFmt::F64,
             lazy: false,
             threads: 1,
+            transport: TransportKind::Sim,
+            worker_spec: None,
         }
     }
 }
@@ -294,36 +304,50 @@ impl Algorithm {
         }
     }
 
+    /// Canonical names and aliases, in dispatch order, as a
+    /// [`crate::util::parse_enum`] table.
+    const TABLE: [(&'static str, Algorithm); 21] = [
+        ("fdsvrg", Algorithm::FdSvrg),
+        ("fd-svrg", Algorithm::FdSvrg),
+        ("fdsgd", Algorithm::FdSgd),
+        ("fd-sgd", Algorithm::FdSgd),
+        ("fdsaga", Algorithm::FdSaga),
+        ("fd-saga", Algorithm::FdSaga),
+        ("dsvrg", Algorithm::Dsvrg),
+        ("d-svrg", Algorithm::Dsvrg),
+        ("dpsgd", Algorithm::DPsgd),
+        ("d-psgd", Algorithm::DPsgd),
+        ("synsvrg", Algorithm::SynSvrg),
+        ("syn-svrg", Algorithm::SynSvrg),
+        ("asysvrg", Algorithm::AsySvrg),
+        ("asy-svrg", Algorithm::AsySvrg),
+        ("pslite-sgd", Algorithm::PsLiteSgd),
+        ("pslite", Algorithm::PsLiteSgd),
+        ("ps-sgd", Algorithm::PsLiteSgd),
+        ("serial-svrg", Algorithm::SerialSvrg),
+        ("svrg", Algorithm::SerialSvrg),
+        ("serial-sgd", Algorithm::SerialSgd),
+        ("sgd", Algorithm::SerialSgd),
+    ];
+
     /// Parse an algorithm name: case-insensitive and underscore-tolerant
     /// (`FD_SVRG`, `FdSvrg`, `fd-svrg` and `fdsvrg` all name
     /// [`Algorithm::FdSvrg`]).
     pub fn parse(s: &str) -> Option<Algorithm> {
-        let norm = s.trim().to_ascii_lowercase().replace('_', "-");
-        match norm.as_str() {
-            "fdsvrg" | "fd-svrg" => Some(Algorithm::FdSvrg),
-            "fdsgd" | "fd-sgd" => Some(Algorithm::FdSgd),
-            "fdsaga" | "fd-saga" => Some(Algorithm::FdSaga),
-            "dsvrg" | "d-svrg" => Some(Algorithm::Dsvrg),
-            "dpsgd" | "d-psgd" => Some(Algorithm::DPsgd),
-            "synsvrg" | "syn-svrg" => Some(Algorithm::SynSvrg),
-            "asysvrg" | "asy-svrg" => Some(Algorithm::AsySvrg),
-            "pslite-sgd" | "pslite" | "ps-sgd" => Some(Algorithm::PsLiteSgd),
-            "serial-svrg" | "svrg" => Some(Algorithm::SerialSvrg),
-            "serial-sgd" | "sgd" => Some(Algorithm::SerialSgd),
-            _ => None,
-        }
+        crate::util::parse_enum(s, &Self::TABLE)
     }
 
     /// [`Algorithm::parse`] with a CLI-grade error: the failure message
     /// lists every valid name instead of a bare "unknown algorithm".
     pub fn parse_or_err(s: &str) -> Result<Algorithm, String> {
-        Algorithm::parse(s).ok_or_else(|| {
-            let names: Vec<&str> = Algorithm::ALL.iter().map(|a| a.name()).collect();
-            format!(
-                "unknown algorithm {s:?}; valid names (case-insensitive, '_' ok): {}",
-                names.join(", ")
-            )
-        })
+        let names: Vec<&str> = Algorithm::ALL.iter().map(|a| a.name()).collect();
+        crate::util::parse_enum_or_err(
+            s,
+            "algorithm",
+            "names (case-insensitive, '_' ok)",
+            &names,
+            &Self::TABLE,
+        )
     }
 
     /// Every algorithm, in dispatch order.
@@ -361,9 +385,45 @@ impl Algorithm {
         crate::runtime::trainer::run(problem, params, engine)
     }
 
+    /// True for the cluster algorithms ([`Algorithm::make_cluster_driver`]
+    /// works); false for the two single-node serial baselines.
+    pub fn is_distributed(&self) -> bool {
+        !matches!(self, Algorithm::SerialSvrg | Algorithm::SerialSgd)
+    }
+
+    /// Build the *concrete* [`crate::session::cluster::ClusterDriver`] for
+    /// a distributed algorithm. The tcp launch path needs the concrete
+    /// type: the monitor injects the worker spec
+    /// ([`crate::session::cluster::ClusterDriver::processes`]) and a worker
+    /// process runs a single node
+    /// ([`crate::session::cluster::ClusterDriver::run_node`]). Errors for
+    /// the serial algorithms, which have no cluster.
+    pub fn make_cluster_driver(
+        &self,
+        problem: &Problem,
+        params: &RunParams,
+        resume: Option<crate::session::ResumeState>,
+    ) -> anyhow::Result<crate::session::cluster::ClusterDriver> {
+        match self {
+            Algorithm::FdSvrg => fdsvrg::driver(problem, params, resume),
+            Algorithm::FdSgd => fdsgd::driver(problem, params, resume),
+            Algorithm::FdSaga => fdsaga::driver(problem, params, resume),
+            Algorithm::Dsvrg => dsvrg::driver(problem, params, resume),
+            Algorithm::DPsgd => dpsgd::driver(problem, params, resume),
+            Algorithm::SynSvrg => synsvrg::driver(problem, params, resume),
+            Algorithm::AsySvrg => asysvrg::driver(problem, params, resume),
+            Algorithm::PsLiteSgd => pslite_sgd::driver(problem, params, resume),
+            Algorithm::SerialSvrg | Algorithm::SerialSgd => {
+                anyhow::bail!("{} is a serial algorithm: no cluster driver", self.name())
+            }
+        }
+    }
+
     /// Build the steppable [`crate::session::Driver`] for this algorithm
     /// (optionally resuming from a mid-run state). Callers normally go
-    /// through [`crate::session::SessionBuilder`] instead.
+    /// through [`crate::session::SessionBuilder`] instead. When
+    /// `params.transport` is [`TransportKind::Tcp`], the cluster driver is
+    /// switched to process launch mode using `params.worker_spec`.
     pub fn make_driver(
         &self,
         problem: &Problem,
@@ -371,19 +431,25 @@ impl Algorithm {
         resume: Option<crate::session::ResumeState>,
     ) -> anyhow::Result<Box<dyn crate::session::Driver>> {
         Ok(match self {
-            Algorithm::FdSvrg => Box::new(fdsvrg::driver(problem, params, resume)?),
-            Algorithm::FdSgd => Box::new(fdsgd::driver(problem, params, resume)?),
-            Algorithm::FdSaga => Box::new(fdsaga::driver(problem, params, resume)?),
-            Algorithm::Dsvrg => Box::new(dsvrg::driver(problem, params, resume)?),
-            Algorithm::DPsgd => Box::new(dpsgd::driver(problem, params, resume)?),
-            Algorithm::SynSvrg => Box::new(synsvrg::driver(problem, params, resume)?),
-            Algorithm::AsySvrg => Box::new(asysvrg::driver(problem, params, resume)?),
-            Algorithm::PsLiteSgd => Box::new(pslite_sgd::driver(problem, params, resume)?),
             Algorithm::SerialSvrg => {
                 Box::new(crate::session::serial::SerialSvrgDriver::new(problem, params, resume)?)
             }
             Algorithm::SerialSgd => {
                 Box::new(crate::session::serial::SerialSgdDriver::new(problem, params, resume)?)
+            }
+            _ => {
+                let driver = self.make_cluster_driver(problem, params, resume)?;
+                match params.transport {
+                    TransportKind::Sim => Box::new(driver),
+                    TransportKind::Tcp => {
+                        let spec = params.worker_spec.clone().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "--transport tcp requires a worker spec (the CLI builds one)"
+                            )
+                        })?;
+                        Box::new(driver.processes(spec))
+                    }
+                }
             }
         })
     }

@@ -214,6 +214,10 @@ pub struct ExperimentConfig {
     /// Jitter: dedicated noise-stream seed (`net.jitter_seed`),
     /// independent of the sampling seed so noise and sampling decouple.
     pub jitter_seed: u64,
+    /// Message-plane backing (`run.transport = "sim"|"tcp"`, CLI
+    /// `--transport`): in-memory mailboxes (default) or localhost sockets
+    /// with one OS process per node.
+    pub transport: String,
 }
 
 impl Default for ExperimentConfig {
@@ -252,9 +256,29 @@ impl Default for ExperimentConfig {
             // jitter default: 5× the base latency, a visibly noisy switch
             jitter_amp: 200e-6,
             jitter_seed: 20177,
+            transport: "sim".into(),
         }
     }
 }
+
+/// Private selector for [`ExperimentConfig::net_spec_for`]: the scenario
+/// *kind*, before this config's `net.*` table parameterizes it into a
+/// full [`crate::net::NetSpec`].
+#[derive(Clone, Copy)]
+enum NetKind {
+    Uniform,
+    Hetero,
+    Straggler,
+    Jitter,
+}
+
+const NET_KIND_TABLE: [(&str, NetKind); 5] = [
+    ("uniform", NetKind::Uniform),
+    ("hetero", NetKind::Hetero),
+    ("heterogeneous", NetKind::Hetero),
+    ("straggler", NetKind::Straggler),
+    ("jitter", NetKind::Jitter),
+];
 
 impl ExperimentConfig {
     pub fn from_config(cfg: &Config) -> ExperimentConfig {
@@ -288,6 +312,7 @@ impl ExperimentConfig {
             slow_factor: cfg.f64_or("net.factor", d.slow_factor),
             jitter_amp: cfg.f64_or("net.jitter_amp", d.jitter_amp),
             jitter_seed: cfg.usize_or("net.jitter_seed", d.jitter_seed as usize) as u64,
+            transport: cfg.str_or("run.transport", &d.transport).to_string(),
         }
     }
 
@@ -296,23 +321,26 @@ impl ExperimentConfig {
     /// lists every valid kind (the `parse_or_err` convention).
     pub fn net_spec_for(&self, kind: &str) -> Result<crate::net::NetSpec, String> {
         use crate::net::{LinkProfile, NetSpec};
-        match kind.trim().to_ascii_lowercase().as_str() {
-            "uniform" => Ok(NetSpec::Uniform),
-            "hetero" | "heterogeneous" => Ok(NetSpec::Hetero {
+        let k = crate::util::parse_enum_or_err(
+            kind,
+            "network model",
+            "models (case-insensitive)",
+            &NetSpec::KINDS,
+            &NET_KIND_TABLE,
+        )?;
+        Ok(match k {
+            NetKind::Uniform => NetSpec::Uniform,
+            NetKind::Hetero => NetSpec::Hetero {
                 cross: LinkProfile {
                     latency: self.cross_latency,
                     per_msg: self.cross_per_msg,
                     sec_per_byte: 8.0 / (self.cross_bandwidth_gbps * 1e9),
                 },
                 rack_size: self.rack_size.max(1),
-            }),
-            "straggler" => Ok(NetSpec::Straggler { slow: self.slow, factor: self.slow_factor }),
-            "jitter" => Ok(NetSpec::Jitter { amp: self.jitter_amp, seed: self.jitter_seed }),
-            _ => Err(format!(
-                "unknown network model {kind:?}; valid models (case-insensitive): {}",
-                NetSpec::KINDS.join(", ")
-            )),
-        }
+            },
+            NetKind::Straggler => NetSpec::Straggler { slow: self.slow, factor: self.slow_factor },
+            NetKind::Jitter => NetSpec::Jitter { amp: self.jitter_amp, seed: self.jitter_seed },
+        })
     }
 
     /// This config's network scenario (`net.model` / CLI `--net`).
@@ -346,7 +374,54 @@ impl ExperimentConfig {
             wire: self.wire,
             lazy: self.lazy,
             threads: self.threads,
+            transport: crate::net::TransportKind::parse_or_err(&self.transport)
+                .unwrap_or_else(|e| panic!("run.transport: {e}")),
+            worker_spec: None,
         }
+    }
+
+    /// Serialize this config — plus the CLI extras that live outside the
+    /// schema (`--test-frac`, `--star`, `--lazy`) — into the Config text a
+    /// `--transport tcp` worker process parses to rebuild the identical
+    /// problem and run parameters. `{}` float formatting is Rust's
+    /// shortest-round-trip form, so every value survives the text hop
+    /// bit-exactly. `run.transport` is deliberately omitted: a worker
+    /// always runs its single node over the socket mesh it was handed.
+    pub fn worker_spec(&self, test_frac: f64, star: bool, lazy: bool) -> String {
+        let lines = [
+            "[run]".to_string(),
+            format!("dataset = \"{}\"", self.dataset),
+            format!("algo = \"{}\"", self.algo),
+            format!("lambda = {}", self.lambda),
+            format!("eta = {}", self.eta),
+            format!("outer = {}", self.outer),
+            format!("q = {}", self.q),
+            format!("servers = {}", self.servers),
+            format!("batch = {}", self.batch),
+            format!("seed = {}", self.seed),
+            format!("gap_target = {}", self.gap_target),
+            format!("wire = \"{}\"", self.wire.name()),
+            format!("lazy = {}", self.lazy || lazy),
+            format!("threads = {}", self.threads),
+            format!("test_frac = {test_frac}"),
+            format!("star = {star}"),
+            "[net]".to_string(),
+            format!("latency = {}", self.latency),
+            format!("per_msg = {}", self.per_msg),
+            format!("bandwidth_gbps = {}", self.bandwidth_gbps),
+            format!("model = \"{}\"", self.net_model),
+            format!("rack_size = {}", self.rack_size),
+            format!("cross_latency = {}", self.cross_latency),
+            format!("cross_per_msg = {}", self.cross_per_msg),
+            format!("cross_bandwidth_gbps = {}", self.cross_bandwidth_gbps),
+            format!("slow = {}", self.slow),
+            format!("factor = {}", self.slow_factor),
+            format!("jitter_amp = {}", self.jitter_amp),
+            format!("jitter_seed = {}", self.jitter_seed),
+        ];
+        let mut spec = lines.join("\n");
+        spec.push('\n');
+        spec
     }
 }
 
@@ -474,6 +549,56 @@ latency = 5e-5
             }
             other => panic!("expected hetero, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn transport_parses_from_config_and_defaults_to_sim() {
+        use crate::net::TransportKind;
+        let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(e.transport, "sim");
+        assert_eq!(e.run_params().transport, TransportKind::Sim);
+        assert_eq!(e.run_params().worker_spec, None);
+        let c = Config::parse("[run]\ntransport = \"tcp\"\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.run_params().transport, TransportKind::Tcp);
+    }
+
+    #[test]
+    fn worker_spec_round_trips_every_field() {
+        let e = ExperimentConfig {
+            dataset: "news20-sim".into(),
+            algo: "dsvrg".into(),
+            lambda: 3e-7,
+            eta: 0.125,
+            outer: 7,
+            q: 3,
+            seed: 99,
+            wire: crate::net::WireFmt::Sparse,
+            net_model: "straggler".into(),
+            slow_factor: 6.5,
+            latency: 40e-6,
+            ..ExperimentConfig::default()
+        };
+        let spec = e.worker_spec(0.25, true, true);
+        let c = Config::parse(&spec).unwrap();
+        let back = ExperimentConfig::from_config(&c);
+        assert_eq!(back.dataset, e.dataset);
+        assert_eq!(back.algo, e.algo);
+        assert_eq!(back.lambda, e.lambda, "floats must round-trip exactly");
+        assert_eq!(back.eta, e.eta);
+        assert_eq!(back.outer, e.outer);
+        assert_eq!(back.q, e.q);
+        assert_eq!(back.seed, e.seed);
+        assert_eq!(back.wire, e.wire);
+        assert_eq!(back.net_model, e.net_model);
+        assert_eq!(back.slow_factor, e.slow_factor);
+        assert_eq!(back.latency, e.latency);
+        assert!(back.lazy, "merged lazy flag must cross");
+        // the out-of-schema extras ride along as plain config keys
+        assert_eq!(c.f64_or("run.test_frac", -1.0), 0.25);
+        assert!(c.bool_or("run.star", false));
+        // a worker never re-enters the process launcher
+        assert_eq!(back.transport, "sim");
     }
 
     #[test]

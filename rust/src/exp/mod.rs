@@ -473,6 +473,95 @@ pub fn netmodel_ablation(
     Ok(rows)
 }
 
+/// `exp calibrate`: hold the network model's predictions against real
+/// sockets. Each distributed algorithm runs the same tiny workload twice
+/// — once on the in-memory sim transport (the model's *prediction*) and
+/// once over `--transport tcp` with one OS process per cluster node (the
+/// *measurement*) — and the report lines up predicted simulated seconds /
+/// modeled payload bytes against measured wall-clock seconds / bytes that
+/// actually crossed the loopback sockets. Both runs share one seed and
+/// one spec, so the trajectories must agree bit for bit — AsySVRG
+/// excepted, whose pull/push loop races by design on either plane — and
+/// the `bit-exact` column proves the transport swap changed timing and
+/// framing only.
+/// Returns `(algorithm, sim_time, wall_time, model_bytes, socket_bytes)`
+/// rows.
+pub fn calibrate(ctx: &Ctx) -> Result<Vec<(String, f64, f64, u64, u64)>> {
+    use crate::net::TransportKind;
+    use std::sync::Arc;
+    let q = 2;
+    let cfg_base = ExperimentConfig {
+        dataset: "tiny".into(),
+        q,
+        servers: 2,
+        outer: ctx.epochs(6),
+        transport: "sim".into(),
+        ..ctx.cfg.clone()
+    };
+    let problem = ctx.problem("tiny", cfg_base.lambda)?;
+    let mut table = TextTable::new(vec![
+        "algorithm",
+        "sim time (s)",
+        "wall time (s)",
+        "wall/sim",
+        "model bytes",
+        "socket bytes",
+        "socket/model",
+        "bit-exact",
+    ]);
+    let mut rows = Vec::new();
+    println!("== Calibrate :: network model vs tcp sockets (tiny, q={q}) ==");
+    for algo in Algorithm::ALL_DISTRIBUTED {
+        let cfg = ExperimentConfig { algo: algo.name().into(), ..cfg_base.clone() };
+        let run = |params: RunParams| -> Result<RunResult> {
+            Ok(SessionBuilder::new(algo, &problem, params)
+                .build()
+                .with_context(|| format!("calibrate: {} session", algo.name()))?
+                .run_to_completion())
+        };
+        let sim = run(cfg.run_params())?;
+        let mut tcp_params = cfg.run_params();
+        tcp_params.transport = TransportKind::Tcp;
+        tcp_params.worker_spec = Some(Arc::new(cfg.worker_spec(0.0, false, false)));
+        let tcp = run(tcp_params)?;
+        let exact = sim.final_objective().to_bits() == tcp.final_objective().to_bits()
+            && sim.total_bytes == tcp.total_bytes
+            && sim.total_sim_time.to_bits() == tcp.total_sim_time.to_bits();
+        // AsySVRG's pull/push loop races by design on either plane, so
+        // trajectory equality is not a transport property there
+        let exact_cell = if matches!(algo, Algorithm::AsySvrg) {
+            "races"
+        } else if exact {
+            "yes"
+        } else {
+            "NO"
+        };
+        table.row(vec![
+            algo.name().to_string(),
+            format!("{:.4}", sim.total_sim_time),
+            format!("{:.4}", tcp.total_wall_time),
+            format!("{:.2}", tcp.total_wall_time / sim.total_sim_time.max(1e-12)),
+            format!("{}", sim.total_bytes),
+            format!("{}", tcp.total_socket_bytes),
+            format!("{:.2}", tcp.total_socket_bytes as f64 / sim.total_bytes.max(1) as f64),
+            exact_cell.to_string(),
+        ]);
+        rows.push((
+            algo.name().to_string(),
+            sim.total_sim_time,
+            tcp.total_wall_time,
+            sim.total_bytes,
+            tcp.total_socket_bytes,
+        ));
+    }
+    let report = table.render();
+    println!("{report}");
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let path = ctx.out_dir.join("calibrate.txt");
+    std::fs::write(&path, &report).with_context(|| format!("write {}", path.display()))?;
+    Ok(rows)
+}
+
 /// Table 1: dataset statistics of the `-sim` profiles.
 pub fn table1() -> Result<()> {
     let mut table =

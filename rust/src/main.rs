@@ -3,8 +3,8 @@
 //! ```text
 //! fdsvrg train --algo fdsvrg --dataset webspam-sim --q 16 [--lambda 1e-4]
 //!              [--eta 0.x] [--outer 30] [--batch u] [--servers p]
-//!              [--config exp.toml] [--out results] [--star]
-//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|all> [--out results] [--quick]
+//!              [--config exp.toml] [--out results] [--star] [--transport sim|tcp]
+//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|calibrate|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
 //! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
@@ -34,6 +34,8 @@ fn real_main() -> Result<()> {
         Some("exp") => cmd_exp(&args),
         Some("data") => cmd_data(&args),
         Some("check-engine") | Some("check-artifacts") => cmd_check_engine(&args),
+        // hidden: re-exec entrypoint for `--transport tcp` worker processes
+        Some("worker") => cmd_worker(),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
             println!("{USAGE}");
@@ -64,6 +66,12 @@ const USAGE: &str = "usage:
                [--engine native|block|xla]   (native = sparse CSC path,
                block = dense blocked trainer on the pure-Rust engine,
                xla = dense blocked trainer on PJRT, needs --features xla)
+               [--transport sim|tcp]   (message plane: sim = in-memory
+               mailboxes, one thread per node — the default, bit-exact
+               with every pinned trajectory; tcp = localhost sockets with
+               one OS process per node, same algorithms and wire codecs,
+               real socket bytes and wall-clock reported next to the
+               model's predictions; native engine only, no --resume/--ckpt)
                [--ckpt file --save-every K]   (write a v2 session checkpoint
                every K epochs; resumable mid-run snapshot)
                [--resume file]   (continue a run from a v2 session
@@ -72,7 +80,10 @@ const USAGE: &str = "usage:
   fdsvrg predict --ckpt file [--dataset profile|path.libsvm]
                (inference from a checkpoint of either version: v1 final
                weights or a v2 session snapshot)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|all> [--out dir] [--quick]
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|calibrate|all> [--out dir] [--quick]
+               (calibrate: run the distributed algorithms under the sim
+               transport and again over real localhost sockets, and report
+               predicted vs measured bytes and time per algorithm)
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|xla]
                (default: the build's own backend — xla when compiled in,
@@ -104,6 +115,11 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("net") {
         cfg.net_model = v.to_string();
     }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = v.to_string();
+    }
+    // validate up front so the CLI error lists every valid value
+    fdsvrg::net::TransportKind::parse_or_err(&cfg.transport).map_err(|e| anyhow::anyhow!(e))?;
     cfg.slow = args.get_or("net-slow", cfg.slow);
     cfg.slow_factor = args.get_or("net-factor", cfg.slow_factor);
     cfg.rack_size = args.get_or("net-rack", cfg.rack_size);
@@ -143,6 +159,32 @@ fn cmd_train(args: &Args) -> Result<()> {
     params.star_reduce = args.flag("star");
     params.lazy = params.lazy || args.flag("lazy");
     let engine_kind = args.get("engine").unwrap_or("native");
+    if params.transport == fdsvrg::net::TransportKind::Tcp {
+        anyhow::ensure!(
+            algo.is_distributed(),
+            "--transport tcp runs one OS process per cluster node; {} is a serial algorithm — \
+             drop the flag (the default sim transport runs it in-process)",
+            algo.name()
+        );
+        anyhow::ensure!(
+            engine_kind == "native",
+            "--transport tcp is available on the native sparse engine only (got --engine {engine_kind})"
+        );
+        anyhow::ensure!(
+            args.get("resume").is_none()
+                && args.get("ckpt").is_none()
+                && args.get("save-every").is_none(),
+            "checkpoint/resume is not available over --transport tcp \
+             (worker state lives in other processes)"
+        );
+        // everything a worker process needs to rebuild this run, including
+        // the CLI extras applied after run_params() above
+        params.worker_spec = Some(std::sync::Arc::new(cfg.worker_spec(
+            test_frac,
+            params.star_reduce,
+            params.lazy,
+        )));
+    }
 
     println!(
         "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, net={}, threads={}, engine={engine_kind})",
@@ -316,9 +358,47 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("table3") => exp::table3(&ctx).map(|_| ()),
         Some("wire") => exp::wire_ablation(&ctx).map(|_| ()),
         Some("netmodel") => exp::netmodel_ablation(&ctx).map(|_| ()),
+        Some("calibrate") => exp::calibrate(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),
     }
+}
+
+/// Hidden entrypoint: one `--transport tcp` cluster node, re-exec'd by the
+/// monitor process. The run spec and rendezvous coordinates arrive in
+/// environment variables; the node rebuilds the identical problem and
+/// parameters from the spec (same profile generators, same seeds), joins
+/// the socket mesh, and runs its node closure to completion.
+fn cmd_worker() -> Result<()> {
+    use fdsvrg::net::transport::tcp;
+    let spec = std::env::var(tcp::ENV_SPEC).context(tcp::ENV_SPEC)?;
+    let id: usize = std::env::var(tcp::ENV_ID).context(tcp::ENV_ID)?.parse()?;
+    let n_nodes: usize = std::env::var(tcp::ENV_NODES).context(tcp::ENV_NODES)?.parse()?;
+    let port: u16 = std::env::var(tcp::ENV_PORT).context(tcp::ENV_PORT)?.parse()?;
+    let doc = Config::parse(&spec).context("worker: malformed spec")?;
+    let cfg = ExperimentConfig::from_config(&doc);
+    let algo = Algorithm::parse_or_err(&cfg.algo).map_err(|e| anyhow::anyhow!(e))?;
+    let ds = load_dataset(&cfg.dataset)?;
+    // mirror the monitor's held-out split exactly (same frac, same seed)
+    let test_frac = doc.f64_or("run.test_frac", 0.0);
+    let ds = if test_frac > 0.0 {
+        fdsvrg::eval::train_test_split(&ds, test_frac, cfg.seed).0
+    } else {
+        ds
+    };
+    let problem = Problem::logistic_l2(ds, cfg.lambda);
+    let mut params: RunParams = cfg.run_params();
+    params.star_reduce = doc.bool_or("run.star", false);
+    let driver = algo.make_cluster_driver(&problem, &params, None)?;
+    let transport = tcp::worker_connect(id, n_nodes, port)
+        .with_context(|| format!("worker node {id}: rendezvous"))?;
+    // test hook: this node dies right after rendezvous, so teardown tests
+    // can assert the monitor names it instead of hanging
+    if std::env::var(tcp::ENV_TEST_EXIT).ok().as_deref() == Some(id.to_string().as_str()) {
+        return Ok(());
+    }
+    driver.run_node(id, Box::new(transport));
+    Ok(())
 }
 
 fn cmd_data(args: &Args) -> Result<()> {

@@ -51,6 +51,7 @@ pub fn run_result_to_json(res: &RunResult, f_opt: Option<f64>) -> String {
     s.push_str(&format!("  \"total_bytes\": {},\n", res.total_bytes));
     s.push_str(&format!("  \"busiest_node_bytes\": {},\n", res.busiest_node_bytes));
     s.push_str(&format!("  \"total_messages\": {},\n", res.total_messages));
+    s.push_str(&format!("  \"total_socket_bytes\": {},\n", res.total_socket_bytes));
     s.push_str(&format!("  \"clock_skew\": {},\n", num(res.clock_skew)));
     s.push_str(&format!(
         "  \"f_opt\": {},\n",
@@ -131,6 +132,7 @@ mod tests {
             total_bytes: 5120,
             busiest_node_bytes: 1280,
             total_messages: 32,
+            total_socket_bytes: 0,
             node_comm: Vec::new(),
         }
     }
@@ -144,6 +146,7 @@ mod tests {
         assert!(j.contains("\"total_bytes\": 5120"));
         assert!(j.contains("\"busiest_node_bytes\": 1280"));
         assert!(j.contains("\"total_messages\": 32"));
+        assert!(j.contains("\"total_socket_bytes\": 0"));
         assert!(j.contains("\"clock_skew\": 0.25"));
         assert!(j.contains("\"skew\": 0.25"));
         assert!(j.contains("\"bytes\": 5120"));
@@ -193,6 +196,7 @@ mod tests {
                 total_bytes: 5120,
                 busiest_node_bytes: 1280,
                 total_messages: 32,
+                total_socket_bytes: 0,
                 node_comm: Vec::new(),
             }
         }

@@ -135,11 +135,16 @@ pub struct CommTotals {
     pub total_bytes: u64,
     pub busiest_node_bytes: u64,
     pub total_messages: u64,
+    /// Real bytes written to sockets for counted traffic, framing
+    /// included (`--transport tcp`; 0 on the in-memory sim transport) —
+    /// the measurement `exp calibrate` holds against `total_bytes`.
+    pub total_socket_bytes: u64,
     pub node_comm: Vec<NodeComm>,
 }
 
 impl CommTotals {
-    /// Totals derived from a per-sender snapshot.
+    /// Totals derived from a per-sender snapshot (resume path; the
+    /// snapshot predates the tcp transport, so socket bytes read 0).
     pub fn from_node_comm(node_comm: Vec<NodeComm>) -> CommTotals {
         CommTotals {
             total_scalars: node_comm.iter().map(|n| n.scalars).sum(),
@@ -147,6 +152,7 @@ impl CommTotals {
             total_bytes: node_comm.iter().map(|n| n.bytes).sum(),
             busiest_node_bytes: node_comm.iter().map(|n| n.bytes).max().unwrap_or(0),
             total_messages: node_comm.iter().map(|n| n.messages).sum(),
+            total_socket_bytes: 0,
             node_comm,
         }
     }
@@ -159,6 +165,7 @@ impl CommTotals {
             total_bytes: stats.total_bytes(),
             busiest_node_bytes: stats.busiest_node_bytes(),
             total_messages: stats.total_messages(),
+            total_socket_bytes: stats.total_socket_bytes(),
             node_comm: stats.per_node(),
         }
     }
@@ -185,6 +192,9 @@ pub struct RunResult {
     pub total_bytes: u64,
     pub busiest_node_bytes: u64,
     pub total_messages: u64,
+    /// Real socket bytes for counted traffic, framing included
+    /// (`--transport tcp`; 0 under the sim transport).
+    pub total_socket_bytes: u64,
     /// Per-sender counters (scalars, bytes, messages), indexed by node id.
     pub node_comm: Vec<NodeComm>,
 }
@@ -215,6 +225,7 @@ impl RunResult {
             total_bytes: totals.total_bytes,
             busiest_node_bytes: totals.busiest_node_bytes,
             total_messages: totals.total_messages,
+            total_socket_bytes: totals.total_socket_bytes,
             node_comm: totals.node_comm,
         }
     }

@@ -36,19 +36,33 @@
 //! Collectives (tree/star allreduce, zero-copy broadcast) live in
 //! [`collectives`]; the codec layer ([`WireFmt`]/[`Payload`]) in
 //! [`payload`].
+//!
+//! How a message physically travels is the [`transport`] seam's job:
+//! every [`Endpoint`] delegates moving bytes to a [`Transport`] — the
+//! in-memory [`transport::SimTransport`] mailboxes (default, bit-exact
+//! with the pre-seam plane) or real localhost sockets with one OS
+//! process per node ([`transport::tcp::TcpTransport`], `--transport
+//! tcp`). All simulator semantics (clock charging, counting, selective
+//! receive) live here and apply identically over either transport; on
+//! TCP the simulated clock keeps running alongside wall-clock, which is
+//! exactly what lets `exp calibrate` compare predictions to
+//! measurements.
 
 pub mod collectives;
 pub mod model;
 pub mod payload;
 pub mod topology;
+pub mod transport;
 
 pub use model::{LinkProfile, NetModel, NetSpec};
 pub use payload::{Payload, WireFmt};
+pub use transport::{Transport, TransportKind};
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+
+use transport::Arrival;
 
 use crate::util::time::ThreadCpuTimer;
 
@@ -143,6 +157,9 @@ pub struct CommStats {
     scalars: Vec<AtomicU64>,
     bytes: Vec<AtomicU64>,
     messages: Vec<AtomicU64>,
+    /// Real socket bytes per node (counted frames incl. framing; stays 0
+    /// on the in-memory transport).
+    socket: Vec<AtomicU64>,
 }
 
 impl CommStats {
@@ -151,6 +168,7 @@ impl CommStats {
             scalars: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
             bytes: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
             messages: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
+            socket: (0..n_nodes).map(|_| AtomicU64::new(0)).collect(),
         })
     }
 
@@ -212,6 +230,29 @@ impl CommStats {
         }
     }
 
+    /// Real socket bytes written across all nodes (0 under the sim
+    /// transport) — what `exp calibrate` holds against the simulated
+    /// byte counters.
+    pub fn total_socket_bytes(&self) -> u64 {
+        self.socket.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Store one node's counters absolutely. The TCP path uses this:
+    /// each worker process counts its own sends locally and ships the
+    /// totals to the monitor at epoch boundaries, so the monitor
+    /// overwrites its slot rather than accumulating.
+    pub fn set_node(&self, id: NodeId, nc: NodeComm) {
+        self.scalars[id].store(nc.scalars, Ordering::Relaxed);
+        self.bytes[id].store(nc.bytes, Ordering::Relaxed);
+        self.messages[id].store(nc.messages, Ordering::Relaxed);
+    }
+
+    /// Store one node's real socket-byte count absolutely (see
+    /// [`CommStats::set_node`]).
+    pub fn set_node_socket(&self, id: NodeId, socket_bytes: u64) {
+        self.socket[id].store(socket_bytes, Ordering::Relaxed);
+    }
+
     fn record(&self, from: NodeId, scalars: usize, bytes: usize) {
         self.scalars[from].fetch_add(scalars as u64, Ordering::Relaxed);
         self.bytes[from].fetch_add(bytes as u64, Ordering::Relaxed);
@@ -270,9 +311,16 @@ impl Msg {
 pub struct Endpoint {
     id: NodeId,
     n_nodes: usize,
-    senders: Vec<Sender<Msg>>,
-    rx: Receiver<Msg>,
+    /// Where messages physically travel: in-memory mailboxes (sim) or
+    /// localhost sockets (tcp). All semantics above this line are
+    /// transport-independent.
+    transport: Box<dyn Transport>,
     stash: VecDeque<Msg>,
+    /// Peers whose link has closed ([`Arrival::Gone`] observed): a
+    /// selective receive waiting on one of these fails fast instead of
+    /// blocking forever, because per-link FIFO means nothing from a gone
+    /// peer can still be in flight (only, possibly, in the stash).
+    gone: Vec<bool>,
     /// Simulated clock + NIC occupancy horizons; every mutation goes
     /// through the model layer's charging rules.
     cs: ClockState,
@@ -284,6 +332,29 @@ pub struct Endpoint {
 }
 
 impl Endpoint {
+    /// Build one endpoint over an arbitrary transport. The sim cluster
+    /// builds all of its endpoints at once ([`build_with_model`]); a TCP
+    /// worker process builds exactly one, over its socket mesh.
+    pub fn with_transport(
+        id: NodeId,
+        n_nodes: usize,
+        transport: Box<dyn Transport>,
+        model: &NetModel,
+        stats: Arc<CommStats>,
+    ) -> Endpoint {
+        Endpoint {
+            id,
+            n_nodes,
+            transport,
+            stash: VecDeque::new(),
+            gone: vec![false; n_nodes],
+            cs: ClockState::default(),
+            cpu: ThreadCpuTimer::start(),
+            net: model.node_view(id, n_nodes),
+            stats,
+        }
+    }
+
     pub fn id(&self) -> NodeId {
         self.id
     }
@@ -305,6 +376,18 @@ impl Endpoint {
 
     pub fn stats(&self) -> &Arc<CommStats> {
         &self.stats
+    }
+
+    /// True when peers live in other OS processes (the TCP transport) —
+    /// the session layer ships comm counters over the wire in that case.
+    pub fn is_remote(&self) -> bool {
+        self.transport.is_remote()
+    }
+
+    /// Real bytes this node has written to sockets for counted frames,
+    /// framing included (0 on the sim transport).
+    pub fn socket_bytes(&self) -> u64 {
+        self.transport.socket_bytes()
     }
 
     /// Charge the thread CPU time burned since the last network operation
@@ -382,11 +465,11 @@ impl Endpoint {
         self.stats.record(self.id, payload.scalars(), bytes);
         let (wire_time, jitter) = self.net.charge_send(&mut self.cs, to, bytes);
         let msg = Msg { from: self.id, tag, payload, send_time: wire_time, jitter, counted: true };
-        // A disconnected peer means the run is being torn down (e.g. a
-        // worker panicked); panicking here unwinds this node too.
-        self.senders[to].send(msg).unwrap_or_else(|_| {
-            panic!("node {}: peer {to} disconnected on send (tag {tag})", self.id)
-        });
+        // A down link means the run is being torn down (e.g. a worker
+        // panicked); panicking here unwinds this node too.
+        if self.gone[to] || self.transport.send(to, msg).is_err() {
+            panic!("node {}: peer {to} disconnected on send (tag {tag})", self.id);
+        }
     }
 
     /// Evaluation-plane send: not counted, no clock effect on either side.
@@ -400,9 +483,9 @@ impl Endpoint {
             jitter: 0.0,
             counted: false,
         };
-        self.senders[to].send(msg).unwrap_or_else(|_| {
-            panic!("node {}: peer {to} disconnected on eval send (tag {tag})", self.id)
-        });
+        if self.gone[to] || self.transport.send(to, msg).is_err() {
+            panic!("node {}: peer {to} disconnected on eval send (tag {tag})", self.id);
+        }
     }
 
     fn deliver(&mut self, msg: &Msg) {
@@ -417,6 +500,16 @@ impl Endpoint {
         }
     }
 
+    /// Record a closed link; panics (unwinding this node) if it belongs
+    /// to the peer a selective receive is blocked on — nothing from a
+    /// gone peer can still be in flight, so waiting on would hang.
+    fn peer_gone(&mut self, peer: NodeId, waiting_on: Option<NodeId>, tag: Tag) {
+        self.gone[peer] = true;
+        if waiting_on == Some(peer) {
+            panic!("node {}: peer {peer} disconnected while receiving (tag {tag})", self.id);
+        }
+    }
+
     /// Blocking selective receive: first message matching `from` and `tag`.
     pub fn recv_from(&mut self, from: NodeId, tag: Tag) -> Msg {
         self.tick();
@@ -425,18 +518,24 @@ impl Endpoint {
             self.deliver(&msg);
             return msg;
         }
+        if self.gone[from] {
+            panic!("node {}: peer {from} disconnected while receiving (tag {tag})", self.id);
+        }
         loop {
-            let msg = self.rx.recv().unwrap_or_else(|_| {
-                panic!(
+            match self.transport.recv() {
+                None => panic!(
                     "node {}: all peers disconnected while receiving (expected peer {from}, tag {tag})",
                     self.id
-                )
-            });
-            if msg.from == from && msg.tag == tag {
-                self.deliver(&msg);
-                return msg;
+                ),
+                Some(Arrival::Gone(peer)) => self.peer_gone(peer, Some(from), tag),
+                Some(Arrival::Msg(msg)) => {
+                    if msg.from == from && msg.tag == tag {
+                        self.deliver(&msg);
+                        return msg;
+                    }
+                    self.stash.push_back(msg);
+                }
             }
-            self.stash.push_back(msg);
         }
     }
 
@@ -449,32 +548,52 @@ impl Endpoint {
             return msg;
         }
         loop {
-            let msg = self.rx.recv().unwrap_or_else(|_| {
-                panic!(
+            match self.transport.recv() {
+                None => panic!(
                     "node {}: all peers disconnected while receiving (any peer, tag {tag})",
                     self.id
-                )
-            });
-            if msg.tag == tag {
-                self.deliver(&msg);
-                return msg;
+                ),
+                Some(Arrival::Gone(peer)) => self.peer_gone(peer, None, tag),
+                Some(Arrival::Msg(msg)) => {
+                    if msg.tag == tag {
+                        self.deliver(&msg);
+                        return msg;
+                    }
+                    self.stash.push_back(msg);
+                }
             }
-            self.stash.push_back(msg);
         }
     }
 
-    /// Blocking receive of any message at all (parameter-server event loop).
+    /// Blocking receive of any message at all (parameter-server event
+    /// loop).
+    ///
+    /// **Redelivery order guarantee:** the stash is served FIFO, and
+    /// *before* any fresh mailbox message — a message returned via
+    /// [`Endpoint::stash_back`] is re-observed by the next `recv_any`
+    /// ahead of everything that arrived after it. TCP event loops rely
+    /// on this: out-of-band traffic parked during an epoch drain must be
+    /// reprocessed before new traffic can be misordered past it (pinned
+    /// by the `stash_back_redelivers_before_fresh_messages` test).
     pub fn recv_any(&mut self) -> Msg {
         self.tick();
         if let Some(msg) = self.stash.pop_front() {
             self.deliver(&msg);
             return msg;
         }
-        let msg = self.rx.recv().unwrap_or_else(|_| {
-            panic!("node {}: all peers disconnected while receiving (any peer, any tag)", self.id)
-        });
-        self.deliver(&msg);
-        msg
+        loop {
+            match self.transport.recv() {
+                None => panic!(
+                    "node {}: all peers disconnected while receiving (any peer, any tag)",
+                    self.id
+                ),
+                Some(Arrival::Gone(peer)) => self.gone[peer] = true,
+                Some(Arrival::Msg(msg)) => {
+                    self.deliver(&msg);
+                    return msg;
+                }
+            }
+        }
     }
 
     /// Return a message to the stash so a later *selective* receive can
@@ -499,17 +618,31 @@ impl Endpoint {
         if let Some(pos) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
             return self.stash.remove(pos).unwrap();
         }
+        if self.gone[from] {
+            panic!("node {}: peer {from} disconnected while receiving (eval tag {tag})", self.id);
+        }
         loop {
-            let msg = self.rx.recv().unwrap_or_else(|_| {
-                panic!(
+            match self.transport.recv() {
+                None => panic!(
                     "node {}: all peers disconnected while receiving (expected peer {from}, eval tag {tag})",
                     self.id
-                )
-            });
-            if msg.from == from && msg.tag == tag {
-                return msg;
+                ),
+                Some(Arrival::Gone(peer)) => {
+                    self.gone[peer] = true;
+                    if peer == from {
+                        panic!(
+                            "node {}: peer {from} disconnected while receiving (eval tag {tag})",
+                            self.id
+                        );
+                    }
+                }
+                Some(Arrival::Msg(msg)) => {
+                    if msg.from == from && msg.tag == tag {
+                        return msg;
+                    }
+                    self.stash.push_back(msg);
+                }
             }
-            self.stash.push_back(msg);
         }
     }
 }
@@ -522,39 +655,14 @@ pub fn build(n_nodes: usize, params: SimParams) -> (Vec<Endpoint>, Arc<CommStats
 }
 
 /// Build a fully-connected network of `n_nodes` endpoints, each charging
-/// time through its [`model::LinkView`] of `model`.
+/// time through its [`model::LinkView`] of `model`, over the in-memory
+/// [`transport::SimTransport`] mesh.
 pub fn build_with_model(n_nodes: usize, model: &NetModel) -> (Vec<Endpoint>, Arc<CommStats>) {
     let stats = CommStats::new(n_nodes);
-    let mut txs = Vec::with_capacity(n_nodes);
-    let mut rxs = Vec::with_capacity(n_nodes);
-    for _ in 0..n_nodes {
-        let (tx, rx) = channel::<Msg>();
-        txs.push(tx);
-        rxs.push(rx);
-    }
-    let endpoints = rxs
+    let endpoints = transport::SimTransport::mesh(n_nodes)
         .into_iter()
         .enumerate()
-        .map(|(id, rx)| {
-            let mut senders = txs.clone();
-            // Replace the self-sender with a disconnected one: nodes never
-            // send to themselves, and holding a live self-sender would keep
-            // a node's own receive channel open forever — turning a peer
-            // panic into a deadlock instead of a clean cascade failure.
-            let (dead_tx, _) = channel::<Msg>();
-            senders[id] = dead_tx;
-            Endpoint {
-                id,
-                n_nodes,
-                senders,
-                rx,
-                stash: VecDeque::new(),
-                cs: ClockState::default(),
-                cpu: ThreadCpuTimer::start(),
-                net: model.node_view(id, n_nodes),
-                stats: stats.clone(),
-            }
-        })
+        .map(|(id, t)| Endpoint::with_transport(id, n_nodes, Box::new(t), model, stats.clone()))
         .collect();
     (endpoints, stats)
 }
@@ -813,5 +921,71 @@ mod tests {
             msg.contains("node 0") && msg.contains("peer 1") && msg.contains("tag 5"),
             "panic message must name sender, peer and tag: {msg}"
         );
+    }
+
+    #[test]
+    fn stash_back_redelivers_before_fresh_messages() {
+        let (mut eps, _) = build(2, SimParams::free());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let h = thread::spawn(move || {
+            a.send(1, tags::PUSH, vec![1.0]);
+            a.send(1, tags::PUSH, vec![2.0]);
+        });
+        let first = b.recv_any();
+        assert_eq!(first.value(0), 1.0, "per-sender FIFO");
+        b.stash_back(first);
+        let again = b.recv_any();
+        assert_eq!(again.value(0), 1.0, "stashed message must be re-observed before fresh ones");
+        let second = b.recv_any();
+        assert_eq!(second.value(0), 2.0);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn receive_from_early_exited_peer_panics_naming_the_peer() {
+        // Node 1 *returns* (no panic) while node 2 still expects its
+        // message: the waiter must fail fast with the peer's name, not
+        // hang — node 0 is alive, so the mailbox never closes on its own.
+        let (mut eps, _) = build(3, SimParams::free());
+        let mut c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let _a = eps.remove(0);
+        drop(b); // node 1 finishes early
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.recv_from(1, tags::REDUCE);
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().expect("formatted String payload");
+        assert!(
+            msg.contains("node 2") && msg.contains("peer 1"),
+            "panic must name the early-exited peer: {msg}"
+        );
+    }
+
+    #[test]
+    fn unrelated_peer_exit_does_not_disturb_selective_receive() {
+        let (mut eps, _) = build(3, SimParams::free());
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        drop(a); // node 0 exits; node 2 still expects node 1's message
+        let h = thread::spawn(move || b.send(2, tags::REDUCE, vec![5.0]));
+        let m = c.recv_from(1, tags::REDUCE);
+        assert_eq!(m.to_vec(1), vec![5.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn sim_transport_reports_zero_socket_bytes() {
+        let (mut eps, stats) = build(2, SimParams::free());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert!(!a.is_remote());
+        let h = thread::spawn(move || a.send(1, tags::CTRL, vec![1.0; 16]));
+        b.recv_from(0, tags::CTRL);
+        h.join().unwrap();
+        assert_eq!(b.socket_bytes(), 0);
+        assert_eq!(stats.total_socket_bytes(), 0);
     }
 }

@@ -37,26 +37,25 @@ pub enum WireFmt {
 impl WireFmt {
     pub const ALL: [WireFmt; 3] = [WireFmt::F64, WireFmt::F32, WireFmt::Sparse];
 
+    const TABLE: [(&'static str, WireFmt); 3] =
+        [("f64", WireFmt::F64), ("f32", WireFmt::F32), ("sparse", WireFmt::Sparse)];
+    const NAMES: [&'static str; 3] = ["f64", "f32", "sparse"];
+
     /// Parse a wire-format name, case-insensitively (`F64`, `f64`, …).
     pub fn parse(s: &str) -> Option<WireFmt> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "f64" => Some(WireFmt::F64),
-            "f32" => Some(WireFmt::F32),
-            "sparse" => Some(WireFmt::Sparse),
-            _ => None,
-        }
+        crate::util::parse_enum(s, &Self::TABLE)
     }
 
     /// [`WireFmt::parse`] with a CLI-grade error: the failure message
     /// lists every valid format instead of a bare "unknown wire format".
     pub fn parse_or_err(s: &str) -> Result<WireFmt, String> {
-        WireFmt::parse(s).ok_or_else(|| {
-            let names: Vec<&str> = WireFmt::ALL.iter().map(|f| f.name()).collect();
-            format!(
-                "unknown wire format {s:?}; valid formats (case-insensitive): {}",
-                names.join(", ")
-            )
-        })
+        crate::util::parse_enum_or_err(
+            s,
+            "wire format",
+            "formats (case-insensitive)",
+            &Self::NAMES,
+            &Self::TABLE,
+        )
     }
 
     pub fn name(self) -> &'static str {
@@ -233,6 +232,104 @@ impl Payload {
             },
         }
     }
+
+    /// Serialize for the TCP transport's frame body: `[kind u8]`
+    /// `[count u32 LE]` `[data…]`, where kind 0 = dense f64 (8 bytes per
+    /// element), 1 = dense f32 (4 bytes per element) and 2 = sparse
+    /// (`count` = nnz, then `4·nnz` index bytes followed by `4·nnz` value
+    /// bytes). All integers and floats are little-endian.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            Payload::DenseF64(v) => {
+                out.push(0);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for &x in v.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::DenseF32(v) => {
+                out.push(1);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for &x in v.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Payload::Sparse { idx, val } => {
+                out.push(2);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for &i in idx.iter() {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for &x in val.iter() {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode a [`Payload::write_bytes`] encoding from the front of `buf`,
+    /// returning the payload and the number of bytes consumed.
+    ///
+    /// The input is untrusted (TCP framing feeds this sockets bytes): the
+    /// declared size is computed with checked arithmetic and validated
+    /// against `buf` *before* anything is allocated, truncated input
+    /// errors instead of panicking, and no byte past the declared size is
+    /// ever read.
+    pub fn read_bytes(buf: &[u8]) -> Result<(Payload, usize), String> {
+        if buf.len() < 5 {
+            return Err(format!("payload header truncated: {} bytes, need 5", buf.len()));
+        }
+        let kind = buf[0];
+        let count = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]) as usize;
+        let elem_bytes: usize = match kind {
+            0 => 8,
+            1 => 4,
+            2 => 8, // 4 index + 4 value bytes per nonzero
+            k => return Err(format!("unknown payload kind {k}")),
+        };
+        let data_bytes = count
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| format!("payload element count {count} overflows"))?;
+        let total = 5usize
+            .checked_add(data_bytes)
+            .ok_or_else(|| format!("payload element count {count} overflows"))?;
+        if buf.len() < total {
+            return Err(format!(
+                "payload truncated: {} bytes, need {total} for kind {kind} count {count}",
+                buf.len()
+            ));
+        }
+        let body = &buf[5..total];
+        let payload = match kind {
+            0 => {
+                let mut v = Vec::with_capacity(count);
+                for c in body.chunks_exact(8) {
+                    v.push(f64::from_le_bytes(c.try_into().unwrap()));
+                }
+                Payload::DenseF64(v.into())
+            }
+            1 => {
+                let mut v = Vec::with_capacity(count);
+                for c in body.chunks_exact(4) {
+                    v.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                Payload::DenseF32(v.into())
+            }
+            _ => {
+                let (ib, vb) = body.split_at(4 * count);
+                let mut idx = Vec::with_capacity(count);
+                for c in ib.chunks_exact(4) {
+                    idx.push(u32::from_le_bytes(c.try_into().unwrap()));
+                }
+                let mut val = Vec::with_capacity(count);
+                for c in vb.chunks_exact(4) {
+                    val.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                Payload::Sparse { idx: idx.into(), val: val.into() }
+            }
+        };
+        Ok((payload, total))
+    }
 }
 
 #[cfg(test)]
@@ -342,5 +439,91 @@ mod tests {
             assert!(err.contains(fmt.name()), "error must list {:?}: {err}", fmt.name());
         }
         assert_eq!(WireFmt::parse_or_err("SPARSE"), Ok(WireFmt::Sparse));
+    }
+
+    #[test]
+    fn byte_codec_round_trips_all_formats() {
+        crate::testkit::check("payload byte round-trip", 24, |g| {
+            let n = g.usize_in(0, 40);
+            let data = g.vec_f64(n, -3.0, 3.0);
+            for fmt in WireFmt::ALL {
+                let p = fmt.encode(&data);
+                let mut buf = Vec::new();
+                p.write_bytes(&mut buf);
+                let (back, used) = Payload::read_bytes(&buf).unwrap();
+                assert_eq!(used, buf.len(), "{}", fmt.name());
+                assert_eq!(back.to_vec(n), p.to_vec(n), "{}", fmt.name());
+                assert_eq!(back.wire_bytes(), p.wire_bytes(), "{}", fmt.name());
+                assert_eq!(back.scalars(), p.scalars(), "{}", fmt.name());
+            }
+        });
+    }
+
+    #[test]
+    fn byte_codec_round_trips_empty_payloads() {
+        // zero-length dense payloads in every format …
+        for fmt in WireFmt::ALL {
+            let mut buf = Vec::new();
+            fmt.encode(&[]).write_bytes(&mut buf);
+            let (back, used) = Payload::read_bytes(&buf).unwrap();
+            assert_eq!(used, 5, "{}", fmt.name());
+            assert_eq!(back.scalars(), 0, "{}", fmt.name());
+            assert_eq!(back.to_vec(0), Vec::<f64>::new(), "{}", fmt.name());
+        }
+        // … and an all-zero vector, which Sparse encodes as an empty payload
+        let p = WireFmt::Sparse.encode(&[0.0, 0.0, 0.0]);
+        assert_eq!(p.scalars(), 0);
+        let mut buf = Vec::new();
+        p.write_bytes(&mut buf);
+        let (back, _) = Payload::read_bytes(&buf).unwrap();
+        assert_eq!(back.to_vec(3), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn truncated_byte_streams_error_cleanly() {
+        crate::testkit::check("payload truncation errors", 16, |g| {
+            let n = g.usize_in(0, 20);
+            let data = g.vec_f64(n, -2.0, 2.0);
+            for fmt in WireFmt::ALL {
+                let mut buf = Vec::new();
+                fmt.encode(&data).write_bytes(&mut buf);
+                for cut in 0..buf.len() {
+                    assert!(
+                        Payload::read_bytes(&buf[..cut]).is_err(),
+                        "{}: prefix of {cut}/{} bytes must error, not decode",
+                        fmt.name(),
+                        buf.len()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn adversarial_bytes_never_panic_or_over_read() {
+        crate::testkit::check("payload adversarial decode", 32, |g| {
+            let len = g.usize_in(0, 64);
+            let mut buf: Vec<u8> = (0..len).map(|_| g.usize_in(0, 255) as u8).collect();
+            if !buf.is_empty() {
+                // bias the kind byte so valid headers are actually exercised
+                buf[0] = g.usize_in(0, 3) as u8;
+            }
+            match Payload::read_bytes(&buf) {
+                Ok((p, used)) => {
+                    assert!(used <= buf.len(), "decoder must never over-read");
+                    assert!(p.wire_bytes() <= used, "decoded size must fit the input");
+                }
+                Err(e) => assert!(!e.is_empty()),
+            }
+        });
+    }
+
+    #[test]
+    fn huge_declared_count_errors_without_allocating() {
+        for kind in [0u8, 1, 2] {
+            let mut buf = vec![kind];
+            buf.extend_from_slice(&u32::MAX.to_le_bytes());
+            assert!(Payload::read_bytes(&buf).is_err(), "kind {kind}");
+        }
     }
 }

@@ -1,0 +1,289 @@
+//! The transport seam: where a [`Msg`] actually travels.
+//!
+//! [`crate::net::Endpoint`] owns all simulator semantics — clock charging,
+//! byte/scalar accounting, selective receive, the stash — and delegates
+//! *moving* messages to a [`Transport`]:
+//!
+//! * [`SimTransport`] — the in-memory mailboxes the simulator has always
+//!   used: one mpsc channel per node, every peer holds a sender clone.
+//!   Bit-exact with the pre-seam message plane (the equivalence, resume
+//!   and exactness suites pin it).
+//! * [`tcp::TcpTransport`] — length-prefixed frames over localhost
+//!   sockets, one OS process per node (`--transport tcp`). The frame
+//!   body reuses the [`Payload`] byte codecs, so the same [`WireFmt`]
+//!   selection governs real socket bytes.
+//!
+//! Both transports deliver [`Arrival`]s: either a message or a
+//! [`Arrival::Gone`] sentinel announcing that a peer's link closed.
+//! `SimTransport` broadcasts `Gone` from its `Drop` impl — which runs
+//! during unwinding, so a panicking or early-returning node notifies
+//! every peer that is still blocked on it. Because mpsc channels are
+//! FIFO per sender, `Gone(x)` always arrives *after* every message `x`
+//! sent, so a receiver that observes `Gone(x)` while waiting on `x` can
+//! fail fast: nothing from `x` can still be in flight. The TCP reader
+//! threads emit the same sentinel on EOF or a broken stream.
+
+pub mod tcp;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::payload::Payload;
+use super::{Msg, NodeId, Tag};
+
+/// Marker error: the destination's link is down (peer thread or process
+/// gone). The endpoint owns the panic message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkDown;
+
+/// What a blocking transport receive can yield.
+pub enum Arrival {
+    /// A delivered message.
+    Msg(Msg),
+    /// The link to this peer closed; nothing more from it is in flight.
+    Gone(NodeId),
+}
+
+/// Moves messages between nodes. Implementations carry no simulator
+/// semantics: no clock, no counters, no selective receive — the
+/// [`crate::net::Endpoint`] layers those on top, identically for every
+/// transport.
+pub trait Transport: Send {
+    /// Deliver `msg` to node `to`; errors iff the link is down.
+    fn send(&mut self, to: NodeId, msg: Msg) -> Result<(), LinkDown>;
+
+    /// Block for the next arrival; `None` once every peer's link has
+    /// closed (after each closure was reported as [`Arrival::Gone`]).
+    fn recv(&mut self) -> Option<Arrival>;
+
+    /// Real bytes this node has written to sockets for *counted* frames,
+    /// including framing overhead (0 for in-memory transports).
+    fn socket_bytes(&self) -> u64 {
+        0
+    }
+
+    /// True when peers live in other OS processes (the TCP path) — the
+    /// session layer ships comm counters over the wire in that case.
+    fn is_remote(&self) -> bool {
+        false
+    }
+}
+
+/// Which transport backs the message plane (`--transport sim|tcp`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-memory mailboxes, one thread per node (the default).
+    #[default]
+    Sim,
+    /// Localhost TCP sockets, one OS process per node.
+    Tcp,
+}
+
+impl TransportKind {
+    pub const NAMES: [&'static str; 2] = ["sim", "tcp"];
+
+    const TABLE: [(&'static str, TransportKind); 2] =
+        [("sim", TransportKind::Sim), ("tcp", TransportKind::Tcp)];
+
+    /// Parse a transport name, case-insensitively.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        crate::util::parse_enum(s, &Self::TABLE)
+    }
+
+    /// [`TransportKind::parse`] with a CLI-grade error listing the valid
+    /// transports.
+    pub fn parse_or_err(s: &str) -> Result<TransportKind, String> {
+        crate::util::parse_enum_or_err(
+            s,
+            "transport",
+            "transports (case-insensitive)",
+            &Self::NAMES,
+            &Self::TABLE,
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Sim => "sim",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// The in-memory transport: node `i`'s mailbox is an mpsc channel whose
+/// sender every peer clones. Dropping a `SimTransport` broadcasts
+/// [`Arrival::Gone`] to every peer (best-effort) *before* the sender
+/// clones it holds are released, so waiters fail fast instead of
+/// deadlocking on a vanished node.
+pub struct SimTransport {
+    id: NodeId,
+    /// `peers[p]` is the sender into `p`'s mailbox; `None` at `p == id`
+    /// (nodes never send to themselves, and holding a live self-sender
+    /// would keep this node's own mailbox open forever).
+    peers: Vec<Option<Sender<Arrival>>>,
+    rx: Receiver<Arrival>,
+}
+
+impl SimTransport {
+    /// Build the fully-connected mesh of `n_nodes` transports.
+    pub fn mesh(n_nodes: usize) -> Vec<SimTransport> {
+        let mut txs = Vec::with_capacity(n_nodes);
+        let mut rxs = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let (tx, rx) = channel::<Arrival>();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(id, rx)| {
+                let peers = txs
+                    .iter()
+                    .enumerate()
+                    .map(|(p, tx)| if p == id { None } else { Some(tx.clone()) })
+                    .collect();
+                SimTransport { id, peers, rx }
+            })
+            .collect()
+    }
+}
+
+impl Transport for SimTransport {
+    fn send(&mut self, to: NodeId, msg: Msg) -> Result<(), LinkDown> {
+        match &self.peers[to] {
+            Some(tx) => tx.send(Arrival::Msg(msg)).map_err(|_| LinkDown),
+            None => Err(LinkDown),
+        }
+    }
+
+    fn recv(&mut self) -> Option<Arrival> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for SimTransport {
+    fn drop(&mut self) {
+        for tx in self.peers.iter().flatten() {
+            let _ = tx.send(Arrival::Gone(self.id));
+        }
+    }
+}
+
+/// Frame a message for a socket: a little-endian `u32` body length, then
+/// `[from u32] [tag u32] [counted u8] [send_time f64] [jitter f64]`
+/// followed by the payload's [`Payload::write_bytes`] encoding.
+pub(crate) fn encode_frame(msg: &Msg) -> Vec<u8> {
+    let mut body = Vec::with_capacity(25 + 5 + msg.payload.wire_bytes());
+    body.extend_from_slice(&(msg.from as u32).to_le_bytes());
+    body.extend_from_slice(&msg.tag.to_le_bytes());
+    body.push(msg.counted as u8);
+    body.extend_from_slice(&msg.send_time.to_le_bytes());
+    body.extend_from_slice(&msg.jitter.to_le_bytes());
+    msg.payload.write_bytes(&mut body);
+    let mut frame = Vec::with_capacity(4 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&body);
+    frame
+}
+
+/// Decode a frame *body* (the length prefix already stripped). Errors on
+/// anything malformed — truncated header, bad flag byte, payload decode
+/// failure, or trailing garbage.
+pub(crate) fn decode_frame(body: &[u8]) -> Result<Msg, String> {
+    if body.len() < 25 {
+        return Err(format!("frame header truncated: {} bytes, need 25", body.len()));
+    }
+    let from = u32::from_le_bytes(body[0..4].try_into().unwrap()) as NodeId;
+    let tag = u32::from_le_bytes(body[4..8].try_into().unwrap()) as Tag;
+    let counted = match body[8] {
+        0 => false,
+        1 => true,
+        b => return Err(format!("bad counted flag {b}")),
+    };
+    let send_time = f64::from_le_bytes(body[9..17].try_into().unwrap());
+    let jitter = f64::from_le_bytes(body[17..25].try_into().unwrap());
+    let (payload, used) = Payload::read_bytes(&body[25..])?;
+    if 25 + used != body.len() {
+        return Err(format!("{} trailing bytes after payload", body.len() - 25 - used));
+    }
+    Ok(Msg { from, tag, payload, send_time, jitter, counted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::tags;
+    use crate::net::WireFmt;
+
+    fn msg(from: NodeId, tag: Tag, data: &[f64], fmt: WireFmt, counted: bool) -> Msg {
+        Msg { from, tag, payload: fmt.encode(data), send_time: 1.25, jitter: 0.5, counted }
+    }
+
+    #[test]
+    fn frame_round_trips_every_wire_format() {
+        for fmt in WireFmt::ALL {
+            for counted in [true, false] {
+                let m = msg(3, tags::REDUCE, &[1.0, 0.0, -2.5], fmt, counted);
+                let frame = encode_frame(&m);
+                let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) as usize;
+                assert_eq!(len + 4, frame.len());
+                let back = decode_frame(&frame[4..]).unwrap();
+                assert_eq!(back.from, 3);
+                assert_eq!(back.tag, tags::REDUCE);
+                assert_eq!(back.send_time, 1.25);
+                assert_eq!(back.wire_jitter(), 0.5);
+                assert_eq!(back.counted, counted);
+                assert_eq!(back.to_vec(3), m.to_vec(3), "{}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error() {
+        let frame = encode_frame(&msg(1, tags::BCAST, &[4.0, 5.0], WireFmt::F64, true));
+        for cut in 0..frame.len() - 4 {
+            assert!(decode_frame(&frame[4..4 + cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage is rejected too
+        let mut long = frame[4..].to_vec();
+        long.push(0);
+        assert!(decode_frame(&long).is_err());
+    }
+
+    #[test]
+    fn transport_parse_and_names() {
+        assert_eq!(TransportKind::parse("sim"), Some(TransportKind::Sim));
+        assert_eq!(TransportKind::parse(" TCP "), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("udp"), None);
+        assert_eq!(TransportKind::default(), TransportKind::Sim);
+        let err = TransportKind::parse_or_err("udp").unwrap_err();
+        assert!(err.contains("sim") && err.contains("tcp"), "{err}");
+        for k in [TransportKind::Sim, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn sim_gone_arrives_after_the_peers_messages() {
+        let mut mesh = SimTransport::mesh(2);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        a.send(1, msg(0, tags::PUSH, &[7.0], WireFmt::F64, true)).unwrap();
+        drop(a); // broadcasts Gone(0) after the message, per-sender FIFO
+        match b.recv() {
+            Some(Arrival::Msg(m)) => assert_eq!(m.to_vec(1), vec![7.0]),
+            _ => panic!("message must precede the Gone sentinel"),
+        }
+        match b.recv() {
+            Some(Arrival::Gone(0)) => {}
+            _ => panic!("peer 0's drop must deliver Gone(0)"),
+        }
+        assert!(b.recv().is_none(), "all senders gone: mailbox must close");
+    }
+
+    #[test]
+    fn sim_self_send_is_link_down() {
+        let mut mesh = SimTransport::mesh(2);
+        let m = msg(0, tags::CTRL, &[1.0], WireFmt::F64, true);
+        assert_eq!(mesh[0].send(0, m).unwrap_err(), LinkDown);
+    }
+}

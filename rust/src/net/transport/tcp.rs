@@ -1,0 +1,383 @@
+//! Localhost TCP transport: one OS process per node.
+//!
+//! ## Frame format
+//!
+//! Every message is one frame: a little-endian `u32` body length followed
+//! by the body ([`super::encode_frame`]): `[from u32] [tag u32]
+//! [counted u8] [send_time f64] [jitter f64] [payload bytes]`, the
+//! payload in [`crate::net::Payload::write_bytes`] encoding. Decoding
+//! treats the bytes as untrusted: bad lengths, bad flags and truncation
+//! close the link instead of panicking.
+//!
+//! ## Rendezvous
+//!
+//! The monitor process (node 0) binds a loopback listener and spawns one
+//! worker process per node via its own executable (`fdsvrg worker`, an
+//! internal entrypoint), passing the experiment spec and the rendezvous
+//! port through `FDSVRG_WORKER_*` environment variables. Each worker
+//! binds its own mesh listener, dials the monitor, and sends `HELLO
+//! [id u32] [mesh_port u32]`. Once all q workers have checked in, the
+//! monitor replies on every control stream with the port map (`u32` mesh
+//! ports for nodes `1..=q`); workers then dial every lower-id worker
+//! (announcing `[id u32]`) and accept every higher-id worker. The
+//! control stream doubles as the node-0 ↔ worker data link. Every wait
+//! in the protocol is bounded: the monitor polls `accept` while checking
+//! child processes for early exits, so a worker that dies during
+//! rendezvous surfaces as an error naming the node, never a hang.
+//!
+//! ## Reading
+//!
+//! Each established stream gets a detached reader thread that decodes
+//! frames into the transport's mailbox and emits [`Arrival::Gone`] on
+//! EOF or any malformed frame. Dropping the transport shuts the sockets
+//! down, which unblocks and retires the readers.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::process::Child;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::{decode_frame, encode_frame, Arrival, LinkDown, Transport};
+use crate::net::{Msg, NodeId};
+
+/// Experiment spec (config text) handed to worker processes.
+pub const ENV_SPEC: &str = "FDSVRG_WORKER_SPEC";
+/// The worker's node id (`1..=q`).
+pub const ENV_ID: &str = "FDSVRG_WORKER_ID";
+/// Total node count (q workers + the monitor).
+pub const ENV_NODES: &str = "FDSVRG_WORKER_NODES";
+/// The monitor's rendezvous port on 127.0.0.1.
+pub const ENV_PORT: &str = "FDSVRG_WORKER_PORT";
+/// Test hook: the worker with this node id exits(0) right after
+/// rendezvous, so teardown paths can be exercised deterministically.
+pub const ENV_TEST_EXIT: &str = "FDSVRG_TEST_WORKER_EXIT";
+
+/// Every rendezvous wait gives up after this long.
+const RENDEZVOUS_SECS: u64 = 30;
+
+/// Frames above this are treated as stream corruption.
+const MAX_FRAME: usize = 1 << 30;
+
+/// The socket-backed [`Transport`]: per-peer writer streams plus one
+/// reader thread per peer feeding a shared mailbox.
+pub struct TcpTransport {
+    /// `writers[p]` is the stream to peer `p`; `None` at our own slot.
+    writers: Vec<Option<TcpStream>>,
+    rx: Receiver<Arrival>,
+    /// Counted-frame bytes written, including framing overhead.
+    socket_bytes: u64,
+}
+
+impl TcpTransport {
+    /// Wrap established per-peer streams: spawn one reader per stream.
+    fn assemble(n_nodes: usize, streams: Vec<Option<TcpStream>>) -> Result<TcpTransport> {
+        let (tx, rx) = channel::<Arrival>();
+        let mut writers = Vec::with_capacity(n_nodes);
+        for (peer, stream) in streams.into_iter().enumerate() {
+            let Some(stream) = stream else {
+                writers.push(None);
+                continue;
+            };
+            stream.set_nodelay(true).ok();
+            let reader = stream.try_clone().context("clone stream for reader")?;
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("tcp-reader-{peer}"))
+                .spawn(move || reader_loop(peer, reader, tx))
+                .context("spawn reader thread")?;
+            writers.push(Some(stream));
+        }
+        // `tx` drops here: the mailbox closes exactly when every reader
+        // has exited (each sends its Gone sentinel first).
+        Ok(TcpTransport { writers, rx, socket_bytes: 0 })
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&mut self, to: NodeId, msg: Msg) -> Result<(), LinkDown> {
+        let frame = encode_frame(&msg);
+        let writer = self.writers[to].as_mut().ok_or(LinkDown)?;
+        if writer.write_all(&frame).is_err() {
+            return Err(LinkDown);
+        }
+        if msg.counted {
+            self.socket_bytes += frame.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Option<Arrival> {
+        self.rx.recv().ok()
+    }
+
+    fn socket_bytes(&self) -> u64 {
+        self.socket_bytes
+    }
+
+    fn is_remote(&self) -> bool {
+        true
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        for writer in self.writers.iter().flatten() {
+            let _ = writer.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+fn reader_loop(peer: NodeId, mut stream: TcpStream, tx: Sender<Arrival>) {
+    loop {
+        let mut len4 = [0u8; 4];
+        if stream.read_exact(&mut len4).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > MAX_FRAME {
+            break;
+        }
+        let mut body = vec![0u8; len];
+        if stream.read_exact(&mut body).is_err() {
+            break;
+        }
+        let Ok(msg) = decode_frame(&body) else {
+            break;
+        };
+        if tx.send(Arrival::Msg(msg)).is_err() {
+            break;
+        }
+    }
+    let _ = tx.send(Arrival::Gone(peer));
+}
+
+/// Bind the monitor's rendezvous listener (port 0 = OS-assigned).
+pub fn listen() -> Result<(TcpListener, u16)> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind rendezvous listener")?;
+    let port = listener.local_addr().context("read rendezvous port")?.port();
+    Ok((listener, port))
+}
+
+/// Monitor side of the rendezvous: accept `n_nodes - 1` worker HELLOs,
+/// send the port map, and assemble node 0's transport. `poll` runs each
+/// time `accept` would block — the process launcher uses it to detect
+/// workers that died before checking in.
+pub fn accept_workers(
+    listener: &TcpListener,
+    n_nodes: usize,
+    mut poll: impl FnMut(&[Option<TcpStream>]) -> Result<()>,
+) -> Result<TcpTransport> {
+    listener.set_nonblocking(true).context("rendezvous listener nonblocking")?;
+    let deadline = Instant::now() + Duration::from_secs(RENDEZVOUS_SECS);
+    let mut streams: Vec<Option<TcpStream>> = (0..n_nodes).map(|_| None).collect();
+    let mut ports = vec![0u16; n_nodes];
+    let mut pending = n_nodes - 1;
+    while pending > 0 {
+        match listener.accept() {
+            Ok((mut stream, _addr)) => {
+                stream.set_nonblocking(false).context("worker stream blocking")?;
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(RENDEZVOUS_SECS)))
+                    .context("worker stream timeout")?;
+                let mut hello = [0u8; 8];
+                stream.read_exact(&mut hello).context("read worker hello")?;
+                let id = u32::from_le_bytes(hello[0..4].try_into().unwrap()) as usize;
+                let mesh_port = u32::from_le_bytes(hello[4..8].try_into().unwrap()) as u16;
+                if id == 0 || id >= n_nodes {
+                    bail!("worker hello announced bogus node id {id}");
+                }
+                if streams[id].is_some() {
+                    bail!("two workers announced node id {id}");
+                }
+                stream.set_read_timeout(None).context("worker stream timeout")?;
+                ports[id] = mesh_port;
+                streams[id] = Some(stream);
+                pending -= 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                poll(&streams)?;
+                if Instant::now() > deadline {
+                    bail!(
+                        "rendezvous timed out after {RENDEZVOUS_SECS}s \
+                         waiting for {pending} worker(s)"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accept worker connection"),
+        }
+    }
+    let mut map = Vec::with_capacity(4 * (n_nodes - 1));
+    for p in ports.iter().skip(1) {
+        map.extend_from_slice(&(*p as u32).to_le_bytes());
+    }
+    for stream in streams.iter_mut().flatten() {
+        stream.write_all(&map).context("send port map")?;
+    }
+    TcpTransport::assemble(n_nodes, streams)
+}
+
+/// Monitor-side `poll` hook for [`accept_workers`]: error out (naming
+/// the node) if any worker process exited before completing rendezvous.
+pub fn check_children(
+    children: &mut [(NodeId, Child)],
+    streams: &[Option<TcpStream>],
+) -> Result<()> {
+    for (id, child) in children.iter_mut() {
+        if streams[*id].is_none() {
+            if let Some(status) = child.try_wait().context("poll worker process")? {
+                bail!("worker process for node {id} exited during rendezvous ({status})");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Worker side of the rendezvous: dial the monitor, exchange
+/// HELLO/port-map, then mesh with the other workers (dial lower ids,
+/// accept higher ids). Returns this node's assembled transport.
+pub fn worker_connect(id: NodeId, n_nodes: usize, parent_port: u16) -> Result<TcpTransport> {
+    let mesh = TcpListener::bind("127.0.0.1:0").context("bind mesh listener")?;
+    let mesh_port = mesh.local_addr().context("read mesh port")?.port();
+    let mut ctrl = TcpStream::connect(("127.0.0.1", parent_port)).context("dial monitor")?;
+    let mut hello = Vec::with_capacity(8);
+    hello.extend_from_slice(&(id as u32).to_le_bytes());
+    hello.extend_from_slice(&(mesh_port as u32).to_le_bytes());
+    ctrl.write_all(&hello).context("send hello")?;
+    ctrl.set_read_timeout(Some(Duration::from_secs(RENDEZVOUS_SECS)))
+        .context("control stream timeout")?;
+    let mut map = vec![0u8; 4 * (n_nodes - 1)];
+    ctrl.read_exact(&mut map).context("read port map")?;
+    ctrl.set_read_timeout(None).context("control stream timeout")?;
+    let mut ports = vec![0u16; n_nodes];
+    for (off, chunk) in map.chunks_exact(4).enumerate() {
+        ports[off + 1] = u32::from_le_bytes(chunk.try_into().unwrap()) as u16;
+    }
+    let mut streams: Vec<Option<TcpStream>> = (0..n_nodes).map(|_| None).collect();
+    streams[0] = Some(ctrl);
+    // Dial every lower-id worker, announcing our id …
+    for peer in 1..id {
+        let mut stream = TcpStream::connect(("127.0.0.1", ports[peer]))
+            .with_context(|| format!("dial worker {peer}"))?;
+        stream.write_all(&(id as u32).to_le_bytes()).context("send mesh announce")?;
+        streams[peer] = Some(stream);
+    }
+    // … and accept every higher-id worker (each announces itself).
+    mesh.set_nonblocking(true).context("mesh listener nonblocking")?;
+    let deadline = Instant::now() + Duration::from_secs(RENDEZVOUS_SECS);
+    let mut pending = n_nodes - 1 - id;
+    while pending > 0 {
+        match mesh.accept() {
+            Ok((mut stream, _addr)) => {
+                stream.set_nonblocking(false).context("mesh stream blocking")?;
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(RENDEZVOUS_SECS)))
+                    .context("mesh stream timeout")?;
+                let mut ann = [0u8; 4];
+                stream.read_exact(&mut ann).context("read mesh announce")?;
+                let peer = u32::from_le_bytes(ann) as usize;
+                if peer <= id || peer >= n_nodes || streams[peer].is_some() {
+                    bail!("bogus mesh announce from node {peer}");
+                }
+                stream.set_read_timeout(None).context("mesh stream timeout")?;
+                streams[peer] = Some(stream);
+                pending -= 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    bail!("node {id}: mesh rendezvous timed out waiting for {pending} peer(s)");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accept mesh connection"),
+        }
+    }
+    TcpTransport::assemble(n_nodes, streams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{tags, WireFmt};
+    use std::thread;
+
+    fn msg(from: NodeId, tag: u32, data: &[f64], counted: bool) -> Msg {
+        Msg {
+            from,
+            tag,
+            payload: WireFmt::F64.encode(data),
+            send_time: 0.25,
+            jitter: 0.0,
+            counted,
+        }
+    }
+
+    /// Full 3-node rendezvous on loopback, inside one process: the
+    /// monitor half runs [`accept_workers`] on this thread while two
+    /// "worker" threads run [`worker_connect`].
+    fn loopback_mesh() -> (TcpTransport, TcpTransport, TcpTransport) {
+        let (listener, port) = listen().unwrap();
+        let h1 = thread::spawn(move || worker_connect(1, 3, port).unwrap());
+        let h2 = thread::spawn(move || worker_connect(2, 3, port).unwrap());
+        let t0 = accept_workers(&listener, 3, |_| Ok(())).unwrap();
+        (t0, h1.join().unwrap(), h2.join().unwrap())
+    }
+
+    #[test]
+    fn loopback_mesh_round_trips_messages() {
+        let (mut t0, mut t1, mut t2) = loopback_mesh();
+        t0.send(1, msg(0, tags::BCAST, &[1.0, 2.0], true)).unwrap();
+        t1.send(2, msg(1, tags::RING, &[3.0], true)).unwrap();
+        t2.send(0, msg(2, tags::REDUCE, &[4.0, 5.0, 6.0], true)).unwrap();
+        for (t, from, tag, want) in [
+            (&mut t1, 0, tags::BCAST, vec![1.0, 2.0]),
+            (&mut t2, 1, tags::RING, vec![3.0]),
+            (&mut t0, 2, tags::REDUCE, vec![4.0, 5.0, 6.0]),
+        ] {
+            match t.recv() {
+                Some(Arrival::Msg(m)) => {
+                    assert_eq!(m.from, from);
+                    assert_eq!(m.tag, tag);
+                    assert_eq!(m.to_vec(want.len()), want);
+                    assert_eq!(m.send_time, 0.25, "clock stamp must survive the wire");
+                }
+                _ => panic!("expected a message from {from}"),
+            }
+        }
+    }
+
+    #[test]
+    fn socket_bytes_count_counted_frames_only() {
+        let (mut t0, mut t1, _t2) = loopback_mesh();
+        assert_eq!(t0.socket_bytes(), 0);
+        t0.send(1, msg(0, tags::BCAST, &[1.0, 2.0], true)).unwrap();
+        let counted = t0.socket_bytes();
+        // frame = 4 (len) + 25 (header) + 5 + 16 (payload) bytes
+        assert_eq!(counted, 50);
+        t0.send(1, msg(0, tags::EVAL, &[9.0; 8], false)).unwrap();
+        assert_eq!(t0.socket_bytes(), counted, "eval frames are not counted");
+        // …but the eval frame still arrives
+        for _ in 0..2 {
+            match t1.recv() {
+                Some(Arrival::Msg(_)) => {}
+                _ => panic!("both frames must arrive"),
+            }
+        }
+        assert!(t0.is_remote());
+    }
+
+    #[test]
+    fn dropped_peer_delivers_gone_sentinel() {
+        let (t0, mut t1, _t2) = loopback_mesh();
+        drop(t0);
+        match t1.recv() {
+            Some(Arrival::Gone(0)) => {}
+            Some(Arrival::Gone(p)) => panic!("expected Gone(0), got Gone({p})"),
+            Some(Arrival::Msg(_)) => panic!("expected Gone(0), got a message"),
+            None => panic!("expected Gone(0) before the mailbox closes"),
+        }
+    }
+}

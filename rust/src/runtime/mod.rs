@@ -44,24 +44,28 @@ impl EngineKind {
     /// of truth for [`EngineKind::parse`] error listings.
     pub const NAMES: [&'static str; 4] = ["native", "block", "xla", "pjrt"];
 
+    const TABLE: [(&'static str, EngineKind); 4] = [
+        ("native", EngineKind::Native),
+        ("block", EngineKind::Native),
+        ("xla", EngineKind::Xla),
+        ("pjrt", EngineKind::Xla),
+    ];
+
     /// Parse an engine name, case-insensitively (`Native`, `XLA`, …).
     pub fn parse(s: &str) -> Option<EngineKind> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "native" | "block" => Some(EngineKind::Native),
-            "xla" | "pjrt" => Some(EngineKind::Xla),
-            _ => None,
-        }
+        crate::util::parse_enum(s, &Self::TABLE)
     }
 
     /// [`EngineKind::parse`] with a CLI-grade error: the failure message
     /// lists every valid name instead of a bare "unknown engine".
     pub fn parse_or_err(s: &str) -> Result<EngineKind, String> {
-        EngineKind::parse(s).ok_or_else(|| {
-            format!(
-                "unknown engine {s:?}; valid engines (case-insensitive): {}",
-                EngineKind::NAMES.join(", ")
-            )
-        })
+        crate::util::parse_enum_or_err(
+            s,
+            "engine",
+            "engines (case-insensitive)",
+            &Self::NAMES,
+            &Self::TABLE,
+        )
     }
 
     pub fn name(&self) -> &'static str {

@@ -362,6 +362,7 @@ impl Driver for BlockedDriver<'_> {
             total_bytes: self.bytes_per_scalar * self.scalars,
             busiest_node_bytes: self.bytes_per_scalar * (self.scalars / q),
             total_messages: self.messages,
+            total_socket_bytes: 0,
             node_comm: Vec::new(),
         };
         FinishOut { w: self.assemble(), totals }

@@ -37,8 +37,10 @@
 use super::{Driver, EpochReport, FinishOut, NodeState, ResumeState};
 use crate::cluster::run_endpoints;
 use crate::metrics::CommTotals;
+use crate::net::transport::{tcp, Transport};
 use crate::net::{build_with_model, CommStats, Endpoint, NetModel, NodeComm};
 use anyhow::{ensure, Result};
+use std::process::Child;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -97,6 +99,17 @@ struct Running {
     handle: JoinHandle<()>,
 }
 
+/// How the cluster's nodes are hosted (`--transport sim|tcp`).
+#[derive(Clone)]
+enum Launch {
+    /// Every node on its own thread, in this process (the simulator).
+    Threads,
+    /// One OS process per worker node over localhost TCP; the monitor
+    /// node runs in this process. `spec` is the serialized experiment
+    /// config handed to each `fdsvrg worker` child.
+    Processes { spec: Arc<String> },
+}
+
 /// Generic cluster-backed [`Driver`]: owns the runner thread, the gate
 /// channels and the boundary state. Algorithm modules construct one via
 /// [`ClusterDriver::new`] with their node function; everything else
@@ -113,6 +126,10 @@ pub struct ClusterDriver {
     last: ResumeState,
     stats: Option<Arc<CommStats>>,
     running: Option<Running>,
+    launch: Launch,
+    /// Worker processes (tcp launch only): waited in `finish`, killed on
+    /// drop so an aborted session never leaks children.
+    children: Vec<(usize, Child)>,
 }
 
 impl ClusterDriver {
@@ -165,7 +182,29 @@ impl ClusterDriver {
             last,
             stats: None,
             running: None,
+            launch: Launch::Threads,
+            children: Vec::new(),
         })
+    }
+
+    /// Switch to process-per-node launch (`--transport tcp`): the q
+    /// worker nodes run as child processes of the current executable
+    /// (the internal `fdsvrg worker` entrypoint), each rebuilding the
+    /// experiment from `spec`; the monitor node stays in this process.
+    pub fn processes(mut self, spec: Arc<String>) -> ClusterDriver {
+        self.launch = Launch::Processes { spec };
+        self
+    }
+
+    /// Run a single node of this cluster over an established transport —
+    /// the worker-process entrypoint. The epoch gate stays with the
+    /// monitor process, so this node gets a gateless context (worker
+    /// roles never claim it).
+    pub fn run_node(self, id: usize, transport: Box<dyn Transport>) {
+        let stats = CommStats::new(self.n_nodes);
+        let ep = Endpoint::with_transport(id, self.n_nodes, transport, &self.model, stats);
+        let ctx = ClusterCtx { gate: Mutex::new(None), resume: None };
+        (self.node_fn)(ep, &ctx);
     }
 
     fn spawn(&mut self) {
@@ -175,24 +214,79 @@ impl ClusterDriver {
             gate: Mutex::new(Some(EpochGate { tx: tx_rep, rx: rx_dir })),
             resume: self.resume.clone(),
         });
-        let (mut eps, stats) = build_with_model(self.n_nodes, &self.model);
-        if let Some(r) = self.resume.as_deref() {
-            stats.preload(&r.comm);
-            for ep in eps.iter_mut() {
-                let ns = &r.nodes[ep.id()];
-                ep.restore_clock_state(ns.clock);
-                ep.restore_jitter(ns.jitter);
-            }
-        }
-        self.stats = Some(stats);
         let node_fn = self.node_fn.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("session-{}", self.name))
-            .spawn(move || {
-                run_endpoints(eps, move |ep| node_fn(ep, &ctx));
-            })
-            .expect("spawn cluster runner thread");
+        let spec = match &self.launch {
+            Launch::Threads => None,
+            Launch::Processes { spec } => Some(spec.clone()),
+        };
+        let handle = match spec {
+            None => {
+                let (mut eps, stats) = build_with_model(self.n_nodes, &self.model);
+                if let Some(r) = self.resume.as_deref() {
+                    stats.preload(&r.comm);
+                    for ep in eps.iter_mut() {
+                        let ns = &r.nodes[ep.id()];
+                        ep.restore_clock_state(ns.clock);
+                        ep.restore_jitter(ns.jitter);
+                    }
+                }
+                self.stats = Some(stats);
+                std::thread::Builder::new()
+                    .name(format!("session-{}", self.name))
+                    .spawn(move || {
+                        run_endpoints(eps, move |ep| node_fn(ep, &ctx));
+                    })
+                    .expect("spawn cluster runner thread")
+            }
+            Some(spec) => {
+                assert!(
+                    self.resume.is_none(),
+                    "resume is not supported over --transport tcp (CLI rejects it)"
+                );
+                let transport = self.rendezvous(&spec);
+                let stats = CommStats::new(self.n_nodes);
+                let ep0 = Endpoint::with_transport(
+                    0,
+                    self.n_nodes,
+                    Box::new(transport),
+                    &self.model,
+                    stats.clone(),
+                );
+                self.stats = Some(stats);
+                std::thread::Builder::new()
+                    .name(format!("session-{}", self.name))
+                    .spawn(move || node_fn(ep0, &ctx))
+                    .expect("spawn monitor thread")
+            }
+        };
         self.running = Some(Running { reports: rx_rep, directives: tx_dir, handle });
+    }
+
+    /// Spawn the q worker processes and complete the TCP rendezvous,
+    /// leaving the children registered for teardown. Failures here are
+    /// launch failures, not algorithm failures — panic with the cause
+    /// (the session layer surfaces it like any cluster failure).
+    fn rendezvous(&mut self, spec: &Arc<String>) -> tcp::TcpTransport {
+        let (listener, port) =
+            tcp::listen().unwrap_or_else(|e| panic!("tcp rendezvous failed: {e:#}"));
+        let exe = std::env::current_exe().expect("locate own executable");
+        let mut children: Vec<(usize, Child)> = Vec::new();
+        for id in 1..self.n_nodes {
+            let child = std::process::Command::new(&exe)
+                .arg("worker")
+                .env(tcp::ENV_SPEC, spec.as_str())
+                .env(tcp::ENV_ID, id.to_string())
+                .env(tcp::ENV_NODES, self.n_nodes.to_string())
+                .env(tcp::ENV_PORT, port.to_string())
+                .spawn()
+                .unwrap_or_else(|e| panic!("spawn worker process for node {id}: {e}"));
+            children.push((id, child));
+        }
+        let accepted = tcp::accept_workers(&listener, self.n_nodes, |streams| {
+            tcp::check_children(&mut children, streams)
+        });
+        self.children = children;
+        accepted.unwrap_or_else(|e| panic!("tcp rendezvous failed: {e:#}"))
     }
 
     /// Re-raise a cluster panic on the session thread with the runner's
@@ -249,6 +343,16 @@ impl Driver for ClusterDriver {
                 std::panic::resume_unwind(payload);
             }
         }
+        // tcp launch: the monitor has told every worker to stop, so the
+        // children are exiting — reap them, loudly if one failed. (If the
+        // monitor itself panicked we never get here; Drop kills them.)
+        for (id, mut child) in self.children.drain(..) {
+            match child.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => panic!("worker process for node {id} exited with {status}"),
+                Err(e) => panic!("wait for worker process {id}: {e}"),
+            }
+        }
         let totals = match &self.stats {
             Some(st) => CommTotals::from_stats(st),
             // never spawned: the counters are whatever the resume carried
@@ -271,6 +375,12 @@ impl Drop for ClusterDriver {
             let _ = r.directives.send(Directive::Stop);
             let _ = r.handle.join(); // swallow panics — we're already unwinding
         }
+        // …and never leak worker processes (tcp launch, aborted run).
+        for (_id, child) in self.children.iter_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.children.clear();
     }
 }
 
@@ -286,6 +396,12 @@ pub fn net_node_state(ep: &mut Endpoint, rng: Option<[u64; 4]>, extra: Vec<f64>)
 
 /// Helper the monitor nodes share: assemble the per-node state vector from
 /// the STATE eval messages of `peers` (own state goes at `own_id`).
+///
+/// On a remote (tcp) transport each STATE payload arrives with the
+/// sender's comm-counter envelope prepended (see [`send_node_state`]);
+/// the counters are absorbed into the monitor's [`CommStats`] — stored
+/// absolutely, since they are totals the worker counted itself — and
+/// stripped before the node state is unpacked.
 pub fn collect_node_states(
     ep: &mut Endpoint,
     own_id: usize,
@@ -293,24 +409,58 @@ pub fn collect_node_states(
     peers: impl IntoIterator<Item = usize>,
     n_nodes: usize,
 ) -> Vec<NodeState> {
+    let remote = ep.is_remote();
     let mut nodes = vec![NodeState::default(); n_nodes];
     nodes[own_id] = own;
     for peer in peers {
         let msg = ep.recv_eval_from(peer, crate::net::tags::STATE);
         let buf = msg.to_vec(msg.scalars());
-        nodes[peer] = NodeState::unpack(&buf);
+        let body = if remote {
+            let nc = NodeComm {
+                scalars: buf[0].to_bits(),
+                bytes: buf[1].to_bits(),
+                messages: buf[2].to_bits(),
+            };
+            ep.stats().set_node(peer, nc);
+            ep.stats().set_node_socket(peer, buf[3].to_bits());
+            &buf[4..]
+        } else {
+            &buf[..]
+        };
+        nodes[peer] = NodeState::unpack(body);
     }
     nodes
 }
 
 /// Helper the non-monitor nodes share: ship this node's resumable state to
 /// the monitor over the uncounted evaluation plane.
+///
+/// On a remote (tcp) transport the monitor cannot see this process's
+/// counters, so the payload is prefixed with `[scalars, bytes, messages,
+/// socket_bytes]`, each `u64` bit-cast into an `f64` lane for exact
+/// transfer over the scalar wire.
 pub fn send_node_state(ep: &mut Endpoint, monitor: usize, state: &NodeState) {
-    ep.send_eval(monitor, crate::net::tags::STATE, state.pack());
+    let packed = state.pack();
+    if ep.is_remote() {
+        let id = ep.id();
+        let stats = ep.stats().clone();
+        let mut v = Vec::with_capacity(4 + packed.len());
+        v.push(f64::from_bits(stats.node_scalars(id)));
+        v.push(f64::from_bits(stats.node_bytes(id)));
+        v.push(f64::from_bits(stats.node_messages(id)));
+        v.push(f64::from_bits(ep.socket_bytes()));
+        v.extend_from_slice(&packed);
+        ep.send_eval(monitor, crate::net::tags::STATE, v);
+    } else {
+        ep.send_eval(monitor, crate::net::tags::STATE, packed);
+    }
 }
 
-/// Snapshot helper for the monitor's report.
+/// Snapshot helper for the monitor's report. Folds the monitor's own
+/// real socket-byte count into the stats first (workers' counts arrive
+/// via the [`send_node_state`] envelopes; a no-op 0 under sim).
 pub fn comm_snapshot(ep: &Endpoint) -> (u64, u64, Vec<NodeComm>) {
     let stats = ep.stats();
+    stats.set_node_socket(ep.id(), ep.socket_bytes());
     (stats.total_scalars(), stats.total_bytes(), stats.per_node())
 }

@@ -10,6 +10,28 @@ pub use pool::Pool;
 pub use rng::Pcg64;
 pub use time::ThreadCpuTimer;
 
+/// Case-insensitive enum-name lookup shared by every CLI/config parser
+/// (`Algorithm`, `WireFmt`, `EngineKind`, `TransportKind`, the `--net`
+/// scenario names): trims the input, lowercases it, folds `_` to `-`,
+/// then matches it against `table` (whose keys must be lowercase).
+pub fn parse_enum<T: Clone>(s: &str, table: &[(&str, T)]) -> Option<T> {
+    let key = s.trim().to_ascii_lowercase().replace('_', "-");
+    table.iter().find(|(name, _)| *name == key).map(|(_, v)| v.clone())
+}
+
+/// [`parse_enum`] with the uniform CLI error shape:
+/// `unknown {what} {input:?}; valid {note}: a, b, c`.
+pub fn parse_enum_or_err<T: Clone>(
+    s: &str,
+    what: &str,
+    note: &str,
+    names: &[&str],
+    table: &[(&str, T)],
+) -> Result<T, String> {
+    parse_enum(s, table)
+        .ok_or_else(|| format!("unknown {what} {s:?}; valid {note}: {}", names.join(", ")))
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -66,5 +88,30 @@ mod tests {
     #[test]
     fn stddev_constant_is_zero() {
         assert_eq!(stddev(&[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn parse_enum_is_case_and_underscore_tolerant() {
+        let table = [("fd-svrg", 1u8), ("sim", 2u8)];
+        assert_eq!(parse_enum(" FD_SVRG ", &table), Some(1));
+        assert_eq!(parse_enum("fd-svrg", &table), Some(1));
+        assert_eq!(parse_enum("Sim", &table), Some(2));
+        assert_eq!(parse_enum("bogus", &table), None);
+    }
+
+    #[test]
+    fn parse_enum_or_err_lists_valid_values() {
+        let table = [("sim", 0u8), ("tcp", 1u8)];
+        let err = parse_enum_or_err(
+            "udp",
+            "transport",
+            "transports (case-insensitive)",
+            &["sim", "tcp"],
+            &table,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown transport"), "{err}");
+        assert!(err.contains("\"udp\""), "{err}");
+        assert!(err.contains("sim, tcp"), "{err}");
     }
 }

@@ -36,6 +36,32 @@ fn coordinator_panic_fails_run_loudly() {
     });
 }
 
+// A worker that *returns* early (no panic, no goodbye message) is just as
+// fatal as one that crashes: a peer blocked on it must get a loud error
+// naming the dead node, never a hang. The transport broadcasts a
+// `Gone(id)` marker when a node's endpoint drops, and the mailbox FIFO
+// guarantees it sorts after everything the node actually sent.
+#[test]
+#[should_panic(expected = "peer 2 disconnected while receiving")]
+fn early_exiting_worker_is_named_not_hung() {
+    run_cluster(4, SimParams::free(), |mut ep| {
+        // node 2 exits cleanly without sending; node 1 blocks on it
+        if ep.id() == 1 {
+            let _ = ep.recv_from(2, fdsvrg::net::tags::REDUCE);
+        }
+    });
+}
+
+#[test]
+#[should_panic(expected = "peer 0 disconnected while receiving")]
+fn early_exiting_coordinator_is_named_not_hung() {
+    run_cluster(3, SimParams::free(), |mut ep| {
+        if ep.id() != 0 {
+            let _ = ep.recv_from(0, fdsvrg::net::tags::BCAST);
+        }
+    });
+}
+
 // ---------- libsvm format ----------
 
 #[test]

@@ -1,0 +1,123 @@
+//! `--transport tcp` end to end, driving the real binary: one OS process
+//! per cluster node over localhost sockets must reproduce the default sim
+//! transport's trajectory bit for bit (same final objective, same modeled
+//! wire traffic), and a worker process that dies mid-run must fail the
+//! monitor loudly — naming the dead node — instead of hanging the run.
+
+use std::process::{Command, Output};
+
+const BIN: &str = env!("CARGO_BIN_EXE_fdsvrg");
+
+/// `fdsvrg train` on the tiny profile with a 2-worker FD-SVRG cluster.
+fn train(transport: &str, envs: &[(&str, &str)]) -> Output {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "train",
+        "--dataset",
+        "tiny",
+        "--algo",
+        "fdsvrg",
+        "--q",
+        "2",
+        "--outer",
+        "2",
+        "--batch",
+        "20",
+        "--transport",
+        transport,
+    ]);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    output_within(cmd, 120)
+}
+
+/// Run to completion with a deadline: the teardown tests must *fail* on a
+/// hung cluster, not stall the suite.
+fn output_within(mut cmd: Command, secs: u64) -> Output {
+    use std::process::Stdio;
+    use std::time::{Duration, Instant};
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn fdsvrg");
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if child.try_wait().expect("poll fdsvrg").is_some() {
+            return child.wait_with_output().expect("collect output");
+        }
+        if Instant::now() >= deadline {
+            child.kill().ok();
+            let out = child.wait_with_output().expect("collect output");
+            panic!(
+                "fdsvrg did not exit within {secs}s (teardown hang?); stderr:\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The `final objective 0.xxxxxxxx` token printed at the end of a run.
+fn final_objective(stdout: &str) -> &str {
+    stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("final objective "))
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no final-objective line in:\n{stdout}"))
+}
+
+/// The `{N} bytes on the wire in {M} messages` counters from the summary
+/// line — the *model's* accounting, which must not depend on the plane
+/// the bytes actually traveled on.
+fn wire_counters(stdout: &str) -> (&str, &str) {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains(" bytes on the wire in "))
+        .unwrap_or_else(|| panic!("no wire-summary line in:\n{stdout}"));
+    let (before, after) = line.split_once(" bytes on the wire in ").unwrap();
+    let bytes = before.rsplit(' ').next().expect("byte count");
+    let messages = after.split_whitespace().next().expect("message count");
+    (bytes, messages)
+}
+
+#[test]
+fn tcp_run_matches_sim_run_bit_for_bit() {
+    let sim = train("sim", &[]);
+    assert!(sim.status.success(), "sim run failed: {}", String::from_utf8_lossy(&sim.stderr));
+    let tcp = train("tcp", &[]);
+    assert!(tcp.status.success(), "tcp run failed: {}", String::from_utf8_lossy(&tcp.stderr));
+    let (sim_out, tcp_out) =
+        (String::from_utf8_lossy(&sim.stdout), String::from_utf8_lossy(&tcp.stdout));
+    assert_eq!(
+        final_objective(&sim_out),
+        final_objective(&tcp_out),
+        "the socket mesh must replay the sim trajectory exactly"
+    );
+    assert_eq!(
+        wire_counters(&sim_out),
+        wire_counters(&tcp_out),
+        "modeled traffic accounting must not depend on the transport"
+    );
+}
+
+#[test]
+fn tcp_worker_death_names_the_node_instead_of_hanging() {
+    // the test hook makes worker 1 exit cleanly right after rendezvous
+    let out = train("tcp", &[("FDSVRG_TEST_WORKER_EXIT", "1")]);
+    assert!(!out.status.success(), "a dead worker must fail the run");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("peer 1 disconnected"),
+        "failure must name the dead node; stderr:\n{stderr}"
+    );
+}
+
+#[test]
+fn tcp_rejects_serial_algorithms_with_a_clear_error() {
+    let out = Command::new(BIN)
+        .args(["train", "--dataset", "tiny", "--algo", "serial-svrg", "--transport", "tcp"])
+        .output()
+        .expect("spawn fdsvrg train");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("serial algorithm"), "stderr:\n{stderr}");
+}
