@@ -1,22 +1,27 @@
 //! Sparse-kernel engine benchmark: the threads sweep for the two
 //! wall-clock-dominant kernels (`Dᵀw` partial products, `Dc` gradient
-//! aggregation) at d ∈ {100k, 1M}, plus the epoch-buffer allocation-churn
-//! before/after pair.
+//! aggregation) at d ∈ {100k, 1M} — exact serial-chain and `--simd`
+//! multi-lane variants side by side — plus the mixed-precision engine's
+//! error-vs-speed pair and the epoch-buffer allocation-churn pair.
 //!
 //! A full (unfiltered) run rewrites `BENCH_kernels.json` in the working
 //! directory — commit it from the repo root to refresh the perf-trajectory
-//! baseline. Every timed case is also checked bit-identical against the
-//! serial kernel, so a correctness regression cannot hide behind a good
-//! number.
+//! baseline; `-- --json <path>` redirects the report (any run, filtered or
+//! not) without touching the committed file. Every timed case is also
+//! checked against the serial kernel — bit-identical for the exact pool
+//! kernels, documented tolerance for the reassociating simd lanes — so a
+//! correctness regression cannot hide behind a good number.
 //!
 //! ```text
 //! cargo bench --bench bench_kernels             # full sweep + JSON
 //! cargo bench --bench bench_kernels -- churn    # smallest case (CI smoke)
+//! cargo bench --bench bench_kernels -- simd     # multi-lane kernels only
 //! ```
 
 use fdsvrg::algs::Workspace;
 use fdsvrg::bench::Bench;
 use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::runtime::{ComputeEngine, MixedEngine, BLOCK_D, BLOCK_N};
 use fdsvrg::sparse::CscMatrix;
 use fdsvrg::util::{Pcg64, Pool};
 
@@ -26,9 +31,12 @@ const THREADS: [usize; 4] = [1, 2, 4, 8];
 /// (Guards the expensive dataset generation + reference passes when the
 /// bench is invoked filtered, e.g. the CI churn smoke.)
 fn tag_enabled(b: &Bench, tag: &str) -> bool {
-    THREADS
-        .iter()
-        .any(|k| b.enabled(&format!("DTw {tag} k={k}")) || b.enabled(&format!("Dc {tag} k={k}")))
+    THREADS.iter().any(|k| {
+        b.enabled(&format!("DTw {tag} k={k}"))
+            || b.enabled(&format!("Dc {tag} k={k}"))
+            || b.enabled(&format!("DTw simd {tag} k={k}"))
+            || b.enabled(&format!("Dc simd {tag} k={k}"))
+    })
 }
 
 fn bench_matrix(b: &mut Bench, tag: &str, x: &CscMatrix) {
@@ -68,6 +76,71 @@ fn bench_matrix(b: &mut Bench, tag: &str, x: &CscMatrix) {
         if b.enabled(&format!("Dc {tag} k={k}")) {
             assert_eq!(out_d, dc_ref, "Dc {tag} k={k} diverged from serial");
         }
+
+        // --simd variants: reassociated sums, so the check is the same
+        // tolerance contract tests/kernel_exactness.rs pins
+        let close = |got: f64, want: f64| (got - want).abs() <= 1e-10 * (1.0 + want.abs());
+        let mut out_n = vec![0.0f64; n];
+        b.bench(&format!("DTw simd {tag} k={k}"), || {
+            x.transpose_matvec_pool_simd(&w, &mut out_n, &pool);
+            std::hint::black_box(&out_n);
+        });
+        if b.enabled(&format!("DTw simd {tag} k={k}")) {
+            for j in 0..n {
+                assert!(close(out_n[j], dtw_ref[j]), "DTw simd {tag} k={k} col {j}");
+            }
+        }
+        let mut out_d = vec![0.0f64; d];
+        b.bench(&format!("Dc simd {tag} k={k}"), || {
+            out_d.iter_mut().for_each(|v| *v = 0.0);
+            x.matvec_accumulate_scaled_pool_simd(&c, inv_n, &mut out_d, &pool);
+            std::hint::black_box(&out_d);
+        });
+        if b.enabled(&format!("Dc simd {tag} k={k}")) {
+            for r in 0..d {
+                assert!(close(out_d[r], dc_ref[r]), "Dc simd {tag} k={k} row {r}");
+            }
+        }
+    }
+}
+
+/// Mixed-precision engine: time the f32 `partial_products` kernel against
+/// an f64 scalar evaluation of the same padded tile, and report the max
+/// absolute error the precision drop costs (the "error vs speed" row).
+fn bench_mixed(b: &mut Bench) {
+    let names = ["mixed f32 partial_products", "mixed f64 reference"];
+    if !names.iter().any(|n| b.enabled(n)) {
+        return;
+    }
+    let mut rng = Pcg64::seed_from_u64(29);
+    let w32: Vec<f32> = (0..BLOCK_D).map(|_| rng.normal() as f32).collect();
+    let tile32: Vec<f32> = (0..BLOCK_D * BLOCK_N)
+        .map(|_| if rng.next_f64() < 0.1 { rng.normal() as f32 } else { 0.0 })
+        .collect();
+    let w64: Vec<f64> = w32.iter().map(|&v| v as f64).collect();
+    let tile64: Vec<f64> = tile32.iter().map(|&v| v as f64).collect();
+    let engine = MixedEngine::new();
+    let mut s32 = vec![0f32; BLOCK_N];
+    b.bench(names[0], || {
+        s32 = engine.partial_products(&w32, &tile32).expect("kernel healthy");
+        std::hint::black_box(&s32);
+    });
+    let mut s64 = vec![0f64; BLOCK_N];
+    b.bench(names[1], || {
+        for (j, sv) in s64.iter_mut().enumerate() {
+            let col = &tile64[j * BLOCK_D..(j + 1) * BLOCK_D];
+            *sv = col.iter().zip(w64.iter()).map(|(&dv, &wv)| dv * wv).sum();
+        }
+        std::hint::black_box(&s64);
+    });
+    if names.iter().all(|n| b.enabled(n)) {
+        let max_err = s32
+            .iter()
+            .zip(s64.iter())
+            .map(|(&a, &bv)| (a as f64 - bv).abs())
+            .fold(0.0f64, f64::max);
+        println!("mixed partial_products: max |f32 - f64| = {max_err:.3e}");
+        assert!(max_err < 1e-3, "f32 kernel error blew past f32 rounding scale");
     }
 }
 
@@ -86,6 +159,10 @@ fn main() {
         let big = generate(&GenSpec::new("k1m", 1_000_000, 4_000, 200).with_seed(12));
         bench_matrix(&mut b, "d=1M", &big.x);
     }
+
+    // mixed-precision engine: f32 kernel speed next to the f64 scalar cost
+    // + the measured precision gap
+    bench_mixed(&mut b);
 
     // epoch-buffer allocation churn: what every epoch loop used to do
     // (fresh margins vector + a fresh partial vector per inner batch)
@@ -130,12 +207,21 @@ fn main() {
                 let s1 = mean(&format!("{kernel} {tag} k=1"));
                 let s4 = mean(&format!("{kernel} {tag} k=4"));
                 println!("{kernel} {tag}: k=4 speedup {:.2}x", s1 / s4);
+                let lanes = mean(&format!("{kernel} simd {tag} k=1"));
+                println!("{kernel} {tag}: simd lanes at k=1 {:.2}x vs serial chain", s1 / lanes);
             }
         }
         let note = "sparse-kernel engine baseline; regenerate from the repo root \
                     with `cargo bench --bench bench_kernels`";
-        b.write_json("BENCH_kernels.json", note).expect("write BENCH_kernels.json");
-        println!("baseline written to BENCH_kernels.json");
+        let path = b.json_path().unwrap_or("BENCH_kernels.json");
+        b.write_json(path, note).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("baseline written to {path}");
+    } else if let Some(path) = b.json_path() {
+        // filtered runs never touch the committed baseline, but an explicit
+        // --json destination still gets the partial report
+        let note = "partial (filtered) bench_kernels run";
+        b.write_json(path, note).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("filtered report written to {path}");
     }
     b.finish();
 }

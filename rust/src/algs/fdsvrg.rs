@@ -65,9 +65,14 @@ pub(crate) fn driver(
         by_features_rows(&problem.ds.x, q)
     };
     // multi-threaded runs build the CSR mirrors once here, outside every
-    // node's simulated clock and ahead of the first timed epoch
+    // node's simulated clock and ahead of the first timed epoch; the simd
+    // Dc kernel rides the mirror at every thread count, so --simd forces
+    // the build even single-threaded
     for slab in &slabs {
         slab.prewarm(params.threads);
+        if params.simd {
+            slab.data.ensure_mirror();
+        }
     }
     let slabs: Arc<Vec<FeatureSlab>> = Arc::new(slabs);
     let y: Arc<Vec<f64>> = Arc::new(problem.ds.y.clone());
@@ -197,11 +202,20 @@ fn worker(
     // shared sampling stream — identical on every worker (paper §4.3:
     // "make the parameter identical for different machines")
 
+    // --simd swaps every reduction kernel for its multi-lane variant
+    // (tolerance vs the pinned serial chain — see tests/kernel_exactness.rs);
+    // col_axpy scatters have no accumulator chain and stay as-is
+    let simd = params.simd;
+
     loop {
         // --- full gradient phase (Alg. 1 lines 3–5): both sparse kernels
         // run on the workspace pool, bit-exact at any --threads width ---
         Workspace::reset(&mut ws.margins, n);
-        slab.data.transpose_matvec_pool(&w_l, &mut ws.margins, &ws.pool);
+        if simd {
+            slab.data.transpose_matvec_pool_simd(&w_l, &mut ws.margins, &ws.pool);
+        } else {
+            slab.data.transpose_matvec_pool(&w_l, &mut ws.margins, &ws.pool);
+        }
         comm.allreduce(ep, group, &mut ws.margins);
         Workspace::reset(&mut ws.c0, n);
         for i in 0..n {
@@ -209,7 +223,11 @@ fn worker(
         }
         z_l.iter_mut().for_each(|v| *v = 0.0);
         let inv_n = 1.0 / n as f64;
-        slab.data.matvec_accumulate_scaled_pool(&ws.c0, inv_n, &mut z_l, &ws.pool);
+        if simd {
+            slab.data.matvec_accumulate_scaled_pool_simd(&ws.c0, inv_n, &mut z_l, &ws.pool);
+        } else {
+            slab.data.matvec_accumulate_scaled_pool(&ws.c0, inv_n, &mut z_l, &ws.pool);
+        }
 
         // --- inner loop (Alg. 1 lines 7–12) ---
         if params.lazy && use_l2_fast_path {
@@ -218,7 +236,11 @@ fn worker(
             // Partial margins come from α·(vᵀx) + γ·(zᵀx) with zᵀx
             // precomputed once per outer iteration (one O(nnz_l) pass).
             Workspace::reset(&mut ws.zx, n);
-            slab.data.transpose_matvec_pool(&z_l, &mut ws.zx, &ws.pool);
+            if simd {
+                slab.data.transpose_matvec_pool_simd(&z_l, &mut ws.zx, &ws.pool);
+            } else {
+                slab.data.transpose_matvec_pool(&z_l, &mut ws.zx, &ws.pool);
+            }
             let beta = 1.0 - eta * lambda;
             let mut alpha = 1.0f64;
             let mut gamma = 0.0f64;
@@ -231,7 +253,12 @@ fn worker(
                 }
                 Workspace::reset(&mut ws.partial, b);
                 for (k, &i) in batch_idx.iter().enumerate() {
-                    ws.partial[k] = alpha * slab.data.col_dot(i, &w_l) + gamma * ws.zx[i];
+                    let wx = if simd {
+                        slab.data.col_dot_simd(i, &w_l)
+                    } else {
+                        slab.data.col_dot(i, &w_l)
+                    };
+                    ws.partial[k] = alpha * wx + gamma * ws.zx[i];
                 }
                 comm.allreduce(ep, group, &mut ws.partial);
                 for (k, &i) in batch_idx.iter().enumerate() {
@@ -268,7 +295,11 @@ fn worker(
                 // u partial inner products, communicated together (§4.4.1)
                 Workspace::reset(&mut ws.partial, b);
                 for (k, &i) in batch_idx.iter().enumerate() {
-                    ws.partial[k] = slab.data.col_dot(i, &w_l);
+                    ws.partial[k] = if simd {
+                        slab.data.col_dot_simd(i, &w_l)
+                    } else {
+                        slab.data.col_dot(i, &w_l)
+                    };
                 }
                 comm.allreduce(ep, group, &mut ws.partial);
                 // apply the b variance-reduced updates (line 11), each using
@@ -453,6 +484,55 @@ mod tests {
         params.batch = 4;
         let res = run(&p, &params);
         assert!(res.final_objective() - f_opt < 1e-3);
+    }
+
+    #[test]
+    fn simd_kernels_track_the_default_trajectory() {
+        // --simd reassociates the reduction sums only; on this tiny, well-
+        // conditioned problem the trajectories must stay within roundoff
+        // scale of each other while the counted traffic is untouched
+        let p = tiny();
+        let base = fast_params(4, 5);
+        let r = run(&p, &base);
+        let rs = run(&p, &RunParams { simd: true, ..base.clone() });
+        assert_eq!(r.total_scalars, rs.total_scalars);
+        assert_eq!(r.total_bytes, rs.total_bytes);
+        let rel =
+            crate::linalg::dist2(&r.w, &rs.w) / (1.0 + crate::linalg::nrm2(&r.w).powi(2));
+        assert!(rel < 1e-10, "simd vs serial relative dist2 {rel:.3e}");
+        // and the lazy path's simd col_dot/zx precompute agree too
+        let rl = run(&p, &RunParams { lazy: true, ..base.clone() });
+        let rls = run(&p, &RunParams { lazy: true, simd: true, ..base });
+        let rel =
+            crate::linalg::dist2(&rl.w, &rls.w) / (1.0 + crate::linalg::nrm2(&rl.w).powi(2));
+        assert!(rel < 1e-10, "lazy simd vs serial relative dist2 {rel:.3e}");
+    }
+
+    #[test]
+    fn compressed_allreduce_cuts_bytes_and_still_converges() {
+        // top-k on the margin/batch-dot allreduces: fewer wire bytes at the
+        // same logical schedule, and the tiny problem still trains
+        let p = tiny();
+        let base = fast_params(4, 8);
+        let dense = run(&p, &base);
+        let k = p.n() / 8;
+        let topk =
+            run(&p, &RunParams { compress: crate::net::Compression::TopK(k), ..base });
+        // same logical schedule (every allreduce still happens), fewer
+        // scalars on the wire (the counters see kept coordinates only)
+        assert_eq!(dense.total_messages, topk.total_messages, "schedule unchanged");
+        assert!(topk.total_scalars < dense.total_scalars, "top-k must drop coordinates");
+        // only the N-vector margin allreduce compresses (the u-scalar batch
+        // dots are dense at 8 B either way), so with M = N the margin phase
+        // is half the bytes and top-k at N/8 shaves most of that half
+        assert!(
+            topk.total_bytes * 4 < dense.total_bytes * 3,
+            "top-k kept {} of {} bytes",
+            topk.total_bytes,
+            dense.total_bytes
+        );
+        let f0 = p.objective(&vec![0.0; p.d()]);
+        assert!(topk.final_objective() < f0 - 1e-2, "compressed run failed to train");
     }
 
     #[test]

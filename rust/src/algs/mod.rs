@@ -29,7 +29,7 @@ pub mod synsvrg;
 
 use crate::loss::{Loss, LossKind, Regularizer};
 use crate::net::collectives::Comm;
-use crate::net::{NetModel, NetSpec, SimParams, TransportKind, WireFmt};
+use crate::net::{Compression, NetModel, NetSpec, SimParams, TransportKind, WireFmt};
 use crate::sparse::libsvm::Dataset;
 use crate::util::pool::Pool;
 use std::sync::Arc;
@@ -156,6 +156,13 @@ pub struct RunParams {
     /// is bit-exact (the equivalence-suite default), `f32` halves wire
     /// bytes, `sparse` sends only nonzeros as `(u32, f32)` pairs.
     pub wire: WireFmt,
+    /// Opt-in gradient sparsification on counted vector sends
+    /// (`--compress none|topk:<k>|thresh:<t>`, `run.compress`). Off by
+    /// default — every counted send stays byte-identical to the plain
+    /// wire; when active, selected coordinates ride the sparse codec and
+    /// both the byte counters and the simulated transfer times shrink in
+    /// proportion.
+    pub compress: Compression,
     /// FD-SVRG inner loop implementation: lazy `w̃ = α·v + γ·z`
     /// representation (O(nnz) per step, L2 only) instead of the naive
     /// O(d_l)-per-step dense update. Numerically equal up to roundoff;
@@ -167,6 +174,13 @@ pub struct RunParams {
     /// back to the node's simulated clock, so `threads` changes host
     /// wall-clock only — `w`, traces and counters are invariant.
     pub threads: usize,
+    /// Opt-in SIMD sparse kernels (`--simd`, `run.simd`; default false).
+    /// Elementwise kernels vectorize bit-identically, but the reduction
+    /// kernels (`col_dot`, row gathers) use multiple accumulator lanes
+    /// that reassociate floating-point sums — trajectories agree with the
+    /// serial chain only to documented tolerance, so this never turns on
+    /// implicitly.
+    pub simd: bool,
     /// Message-plane backing (`--transport sim|tcp`): in-memory mailboxes
     /// with one thread per node (default, bit-exact with the historical
     /// plane), or localhost sockets with one OS process per node.
@@ -193,8 +207,10 @@ impl Default for RunParams {
             sim_time_cap: None,
             star_reduce: false,
             wire: WireFmt::F64,
+            compress: Compression::None,
             lazy: false,
             threads: 1,
+            simd: false,
             transport: TransportKind::Sim,
             worker_spec: None,
         }
@@ -211,9 +227,9 @@ impl RunParams {
     }
 
     /// The run's communication policy: every counted send goes through
-    /// this handle (codec + tree/star selection).
+    /// this handle (codec + tree/star selection + optional sparsifier).
     pub fn comm(&self) -> Comm {
-        Comm::new(self.wire, self.star_reduce)
+        Comm::new(self.wire, self.star_reduce).with_compress(self.compress)
     }
 
     /// The run's resolved network timing model: the scenario overlay

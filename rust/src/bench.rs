@@ -7,6 +7,10 @@
 //! their interesting output is the table itself, not nanosecond noise).
 //!
 //! `cargo bench -- <filter>` runs only matching entries, like criterion.
+//! `cargo bench -- --json <path>` redirects a suite's JSON report to
+//! `<path>` (suites that persist a repo baseline keep their default file
+//! when the flag is absent, and still refuse to overwrite it when a filter
+//! is active — see [`Bench::is_filtered`]).
 
 use crate::util::time::Stopwatch;
 use crate::util::{mean, median, stddev};
@@ -24,22 +28,51 @@ pub struct Sample {
 pub struct Bench {
     suite: String,
     filter: Option<String>,
+    json_path: Option<String>,
     warmup_iters: usize,
     measure_iters: usize,
     samples: Vec<Sample>,
 }
 
+/// Split bench argv into (filter, json path): the filter is the first
+/// non-dash token that is not the value of `--json`.
+fn parse_argv(argv: &[String]) -> (Option<String>, Option<String>) {
+    let mut filter = None;
+    let mut json_path = None;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--json" {
+            if let Some(v) = argv.get(i + 1) {
+                json_path = Some(v.clone());
+                i += 2;
+                continue;
+            }
+        } else if !argv[i].starts_with('-') && filter.is_none() {
+            filter = Some(argv[i].clone());
+        }
+        i += 1;
+    }
+    (filter, json_path)
+}
+
 impl Bench {
-    /// Build from process args (`cargo bench -- <filter>`).
+    /// Build from process args (`cargo bench -- [filter] [--json path]`).
     pub fn from_args(suite: &str) -> Bench {
-        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let (filter, json_path) = parse_argv(&argv);
         Bench {
             suite: suite.to_string(),
             filter,
+            json_path,
             warmup_iters: 2,
             measure_iters: 5,
             samples: Vec::new(),
         }
+    }
+
+    /// The `--json <path>` override, when given on the bench command line.
+    pub fn json_path(&self) -> Option<&str> {
+        self.json_path.as_deref()
     }
 
     pub fn with_iters(mut self, warmup: usize, measure: usize) -> Bench {
@@ -157,6 +190,7 @@ mod tests {
         let mut b = Bench {
             suite: "t".into(),
             filter: None,
+            json_path: None,
             warmup_iters: 1,
             measure_iters: 3,
             samples: vec![],
@@ -173,6 +207,7 @@ mod tests {
         let mut b = Bench {
             suite: "t".into(),
             filter: Some("keep".into()),
+            json_path: None,
             warmup_iters: 0,
             measure_iters: 1,
             samples: vec![],
@@ -189,6 +224,7 @@ mod tests {
         let mut b = Bench {
             suite: "t".into(),
             filter: None,
+            json_path: None,
             warmup_iters: 5,
             measure_iters: 5,
             samples: vec![],
@@ -196,5 +232,27 @@ mod tests {
         let mut count = 0;
         b.once("single", || count += 1);
         assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn parse_argv_splits_filter_and_json() {
+        let to = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(parse_argv(&to(&[])), (None, None));
+        assert_eq!(parse_argv(&to(&["simd"])), (Some("simd".into()), None));
+        assert_eq!(
+            parse_argv(&to(&["--json", "out.json"])),
+            (None, Some("out.json".into())),
+        );
+        // the --json value must not be mistaken for the filter, in either order
+        assert_eq!(
+            parse_argv(&to(&["--json", "out.json", "simd"])),
+            (Some("simd".into()), Some("out.json".into())),
+        );
+        assert_eq!(
+            parse_argv(&to(&["simd", "--json", "out.json"])),
+            (Some("simd".into()), Some("out.json".into())),
+        );
+        // cargo's own --bench-ish dashed args are ignored; bare --json too
+        assert_eq!(parse_argv(&to(&["--bench", "--json"])), (None, None));
     }
 }

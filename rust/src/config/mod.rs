@@ -186,12 +186,18 @@ pub struct ExperimentConfig {
     pub bandwidth_gbps: f64,
     /// Wire format for counted payloads (`run.wire = "f64"|"f32"|"sparse"`).
     pub wire: crate::net::WireFmt,
+    /// Gradient sparsification on counted sends (`run.compress =
+    /// "none"|"topk:<k>"|"thresh:<t>"`, CLI `--compress`).
+    pub compress: crate::net::Compression,
     /// FD-SVRG lazy inner loop (§Perf).
     pub lazy: bool,
     /// Host threads per node for the sparse compute kernels
     /// (`run.threads`, CLI `--threads`); 1 = serial (default). Bit-exact
     /// at any width — changes host wall-clock only.
     pub threads: usize,
+    /// SIMD sparse kernels (`run.simd`, CLI `--simd`); opt-in because the
+    /// reduction kernels reassociate sums (tolerance, not bit-exactness).
+    pub simd: bool,
     /// Network scenario kind (`net.model = "uniform"|"hetero"|"straggler"|
     /// "jitter"`, CLI `--net`); resolved with the `net.*` scenario table
     /// below by [`ExperimentConfig::net_spec`].
@@ -242,8 +248,10 @@ impl Default for ExperimentConfig {
             per_msg: 10e-6,
             bandwidth_gbps: 10.0, // paper §5: 10GbE
             wire: crate::net::WireFmt::F64,
+            compress: crate::net::Compression::None,
             lazy: false,
             threads: 1,
+            simd: false,
             net_model: "uniform".into(),
             rack_size: 4,
             // cross-rack defaults: an oversubscribed spine — >10× the
@@ -301,8 +309,14 @@ impl ExperimentConfig {
                 let s = cfg.str_or("run.wire", d.wire.name());
                 crate::net::WireFmt::parse_or_err(s).unwrap_or_else(|e| panic!("run.wire: {e}"))
             },
+            compress: {
+                let s = cfg.str_or("run.compress", &d.compress.spec()).to_string();
+                crate::net::Compression::parse_or_err(&s)
+                    .unwrap_or_else(|e| panic!("run.compress: {e}"))
+            },
             lazy: cfg.bool_or("run.lazy", d.lazy),
             threads: cfg.usize_or("run.threads", d.threads).max(1),
+            simd: cfg.bool_or("run.simd", d.simd),
             net_model: cfg.str_or("net.model", &d.net_model).to_string(),
             rack_size: cfg.usize_or("net.rack_size", d.rack_size),
             cross_latency: cfg.f64_or("net.cross_latency", d.cross_latency),
@@ -372,8 +386,10 @@ impl ExperimentConfig {
             sim_time_cap: None,
             star_reduce: false,
             wire: self.wire,
+            compress: self.compress,
             lazy: self.lazy,
             threads: self.threads,
+            simd: self.simd,
             transport: crate::net::TransportKind::parse_or_err(&self.transport)
                 .unwrap_or_else(|e| panic!("run.transport: {e}")),
             worker_spec: None,
@@ -401,8 +417,10 @@ impl ExperimentConfig {
             format!("seed = {}", self.seed),
             format!("gap_target = {}", self.gap_target),
             format!("wire = \"{}\"", self.wire.name()),
+            format!("compress = \"{}\"", self.compress.spec()),
             format!("lazy = {}", self.lazy || lazy),
             format!("threads = {}", self.threads),
+            format!("simd = {}", self.simd),
             format!("test_frac = {test_frac}"),
             format!("star = {star}"),
             "[net]".to_string(),
@@ -508,6 +526,24 @@ latency = 5e-5
     }
 
     #[test]
+    fn compress_and_simd_parse_from_config_and_default_off() {
+        use crate::net::Compression;
+        let c = Config::parse("[run]\ncompress = \"topk:64\"\nsimd = true\n").unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.compress, Compression::TopK(64));
+        assert!(e.simd);
+        let p = e.run_params();
+        assert_eq!(p.compress, Compression::TopK(64));
+        assert!(p.simd);
+        // defaults: no sparsification, serial kernels — the bit-exact paths
+        let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
+        assert_eq!(e.compress, Compression::None);
+        assert!(!e.simd);
+        let c = Config::parse("[run]\ncompress = \"thresh:1e-4\"\n").unwrap();
+        assert_eq!(ExperimentConfig::from_config(&c).compress, Compression::Threshold(1e-4));
+    }
+
+    #[test]
     fn net_model_parses_from_config() {
         use crate::net::NetSpec;
         let c = Config::parse("[net]\nmodel = \"straggler\"\nslow = 3\nfactor = 6.5\n").unwrap();
@@ -574,6 +610,8 @@ latency = 5e-5
             q: 3,
             seed: 99,
             wire: crate::net::WireFmt::Sparse,
+            compress: crate::net::Compression::TopK(37),
+            simd: true,
             net_model: "straggler".into(),
             slow_factor: 6.5,
             latency: 40e-6,
@@ -590,6 +628,8 @@ latency = 5e-5
         assert_eq!(back.q, e.q);
         assert_eq!(back.seed, e.seed);
         assert_eq!(back.wire, e.wire);
+        assert_eq!(back.compress, e.compress);
+        assert!(back.simd, "simd flag must cross");
         assert_eq!(back.net_model, e.net_model);
         assert_eq!(back.slow_factor, e.slow_factor);
         assert_eq!(back.latency, e.latency);

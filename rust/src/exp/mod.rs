@@ -473,6 +473,95 @@ pub fn netmodel_ablation(
     Ok(rows)
 }
 
+/// Compression ablation (`exp compress`): the distributed algorithms
+/// under gradient sparsification — objective gap vs bytes on the wire vs
+/// simulated time on `url-sim`/`news20-sim`. Three modes per profile:
+/// the exact baseline, `topk:<k>` with `k = N/16` (every counted
+/// N-vector sheds ≥ 15/16 of its coordinates), and a magnitude
+/// threshold. This is the comm-side twin of the paper's low-communication
+/// claim: FD-SVRG already moves the fewest bytes, and sparsification
+/// should cut its wire total further at a matched gap. Returns
+/// `(profile, compress, algorithm, total_bytes, final_gap, sim_time)`
+/// rows.
+#[allow(clippy::type_complexity)]
+pub fn compress_ablation(
+    ctx: &Ctx,
+) -> Result<Vec<(String, String, &'static str, u64, f64, f64)>> {
+    use crate::net::Compression;
+    let mut rows = Vec::new();
+    for profile in ["url-sim", "news20-sim"] {
+        let q = profiles::paper_worker_count(profile);
+        let problem = ctx.problem(profile, ctx.cfg.lambda)?;
+        let (_, f_opt) = ctx.optimum(&problem);
+        let k = (problem.n() / 16).max(16);
+        let modes =
+            [Compression::None, Compression::TopK(k), Compression::Threshold(1e-3)];
+        for compress in modes {
+            let spec = compress.spec();
+            let mut table = TextTable::new(vec![
+                "algorithm",
+                "epochs",
+                "final gap",
+                "total bytes",
+                "busiest node bytes",
+                "sim time (s)",
+            ]);
+            let mut plot = AsciiPlot::new(
+                &format!(
+                    "Compression ablation :: {profile} / {spec} — objective gap vs bytes on the wire"
+                ),
+                "bytes on the wire",
+            );
+            println!(
+                "== Compression ablation :: {profile} / {spec} (q={q}, λ={:.0e}) ==",
+                ctx.cfg.lambda
+            );
+            for algo in Algorithm::ALL_DISTRIBUTED {
+                let mut params = ctx.base_params(q);
+                params.compress = compress;
+                let ps = matches!(algo, Algorithm::SynSvrg | Algorithm::AsySvrg);
+                let budget = if ps {
+                    ((default_epochs(algo) as f64) * ctx.ps_scale).round() as usize
+                } else {
+                    default_epochs(algo) / 3
+                };
+                params.outer = ctx.epochs(budget);
+                let gap = StopPolicy::GapReached { f_opt, target: ctx.cfg.gap_target / 10.0 };
+                let res = run_and_save(
+                    ctx,
+                    &problem,
+                    algo,
+                    &params,
+                    &[gap],
+                    f_opt,
+                    &format!("compress_{profile}_{spec}"),
+                );
+                let final_gap = res.final_objective() - f_opt;
+                plot.add(Series::gap_vs_comm(algo.name(), &res.trace, f_opt));
+                table.row(vec![
+                    algo.name().to_string(),
+                    format!("{}", res.trace.points.len() - 1),
+                    format!("{final_gap:.3e}"),
+                    format!("{}", res.total_bytes),
+                    format!("{}", res.busiest_node_bytes),
+                    format!("{:.4}", res.total_sim_time),
+                ]);
+                rows.push((
+                    profile.to_string(),
+                    spec.clone(),
+                    algo.name(),
+                    res.total_bytes,
+                    final_gap,
+                    res.total_sim_time,
+                ));
+            }
+            println!("{}", table.render());
+            println!("{}", plot.render());
+        }
+    }
+    Ok(rows)
+}
+
 /// `exp calibrate`: hold the network model's predictions against real
 /// sockets. Each distributed algorithm runs the same tiny workload twice
 /// — once on the in-memory sim transport (the model's *prediction*) and

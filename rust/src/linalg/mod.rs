@@ -4,13 +4,26 @@
 //! compiler clean autovectorization targets without unsafe code. These
 //! kernels are deliberately allocation-free — the inner loops of SVRG call
 //! them millions of times.
+//!
+//! The elementwise kernels ([`axpy`], [`axpby`]) additionally dispatch to
+//! explicit AVX2 lanes at runtime ([`simd`]): per-element the vector path
+//! performs the identical multiply and add (no FMA contraction), so the
+//! dispatch is invisible to every pinned trajectory and needs no opt-in.
+//! Reduction kernels keep their fixed summation order here; the
+//! reassociating multi-lane variants live on the sparse matrix behind
+//! `--simd`.
 
-/// `y += alpha * x` — 4-way unrolled over exact blocks (elementwise, so
-/// unrolling cannot change any bit; the block body gives LLVM a clean
-/// bounds-check-free vectorization target).
+pub mod simd;
+
+/// `y += alpha * x` — AVX2 over the 4-multiple prefix when available
+/// (bit-identical per element, see [`simd`]), then a 4-way unrolled scalar
+/// body that gives LLVM a clean bounds-check-free vectorization target on
+/// the remainder (or everything, off x86_64).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     assert_eq!(x.len(), y.len());
+    let done = simd::axpy_prefix(alpha, x, y);
+    let (x, y) = (&x[done..], &mut y[done..]);
     let mut yc = y.chunks_exact_mut(4);
     let mut xc = x.chunks_exact(4);
     for (yb, xb) in (&mut yc).zip(&mut xc) {
@@ -83,11 +96,14 @@ pub fn dist2(x: &[f64], y: &[f64]) -> f64 {
 }
 
 /// `y = beta*y + alpha*x` (general update used by the SVRG dense step) —
-/// the O(d)-per-inner-step hot loop of every naive SVRG path; unrolled
-/// like [`axpy`] (elementwise, bit-identical to the scalar loop).
+/// the O(d)-per-inner-step hot loop of every naive SVRG path; AVX2 prefix
+/// + unrolled scalar remainder like [`axpy`] (elementwise, bit-identical
+/// to the scalar loop).
 #[inline]
 pub fn axpby(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
     assert_eq!(x.len(), y.len());
+    let done = simd::axpby_prefix(alpha, x, beta, y);
+    let (x, y) = (&x[done..], &mut y[done..]);
     let mut yc = y.chunks_exact_mut(4);
     let mut xc = x.chunks_exact(4);
     for (yb, xb) in (&mut yc).zip(&mut xc) {

@@ -1,0 +1,156 @@
+//! Explicit AVX2 lanes for the elementwise dense kernels.
+//!
+//! Only the *elementwise* kernels dispatch here automatically: a 4-lane
+//! `y[i] = beta·y[i] + alpha·x[i]` performs exactly the same multiply and
+//! add per element as the scalar loop — one `vmulpd` plus one `vaddpd`,
+//! never a fused multiply-add — so the results are IEEE bit-identical and
+//! the runtime dispatch cannot move any pinned trajectory. Reduction
+//! kernels (dots, sparse gathers) must NOT route here implicitly: multiple
+//! accumulator lanes reassociate the sum, so they get explicit `_simd`
+//! entry points behind `RunParams::simd` instead (see
+//! [`crate::sparse::csc::CscMatrix`]).
+//!
+//! Everything is `x86_64`-gated with scalar fallbacks, and the feature
+//! check (`is_x86_feature_detected!("avx2")`) is cached after the first
+//! call; off x86_64 the prefix helpers report zero elements handled and
+//! the callers run their scalar bodies over the whole slice.
+
+/// Whether the AVX2 paths are usable on this machine (always false off
+/// x86_64). Cached after the first query.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// AVX2 `y += alpha·x` over the largest multiple-of-4 prefix; returns how
+/// many elements were handled (0 when AVX2 is unavailable) so the caller
+/// finishes the tail — or everything — in scalar. Bit-identical to the
+/// scalar loop per element.
+#[allow(unused_variables)]
+pub(crate) fn axpy_prefix(alpha: f64, x: &[f64], y: &mut [f64]) -> usize {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence just checked; the kernel stays within
+        // the slices' common length.
+        return unsafe { axpy_avx2(alpha, x, y) };
+    }
+    0
+}
+
+/// AVX2 `y = beta·y + alpha·x` over the multiple-of-4 prefix; same
+/// contract as [`axpy_prefix`].
+#[allow(unused_variables)]
+pub(crate) fn axpby_prefix(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) -> usize {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: AVX2 presence just checked; the kernel stays within
+        // the slices' common length.
+        return unsafe { axpby_avx2(alpha, x, beta, y) };
+    }
+    0
+}
+
+/// # Safety
+/// Caller must ensure AVX2 is available; `x` and `y` must have equal
+/// lengths (debug-asserted by the dispatchers).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) -> usize {
+    use std::arch::x86_64::*;
+    let n = x.len() / 4 * 4;
+    let a = _mm256_set1_pd(alpha);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i < n {
+        let xv = _mm256_loadu_pd(xp.add(i));
+        let yv = _mm256_loadu_pd(yp.add(i));
+        // separate mul + add (no FMA): the exact ops of the scalar loop
+        _mm256_storeu_pd(yp.add(i), _mm256_add_pd(yv, _mm256_mul_pd(a, xv)));
+        i += 4;
+    }
+    n
+}
+
+/// # Safety
+/// Same contract as [`axpy_avx2`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpby_avx2(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) -> usize {
+    use std::arch::x86_64::*;
+    let n = x.len() / 4 * 4;
+    let a = _mm256_set1_pd(alpha);
+    let b = _mm256_set1_pd(beta);
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut i = 0usize;
+    while i < n {
+        let xv = _mm256_loadu_pd(xp.add(i));
+        let yv = _mm256_loadu_pd(yp.add(i));
+        let by = _mm256_mul_pd(b, yv);
+        let ax = _mm256_mul_pd(a, xv);
+        _mm256_storeu_pd(yp.add(i), _mm256_add_pd(by, ax));
+        i += 4;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn avx2_prefix_is_bit_identical_to_scalar_axpy() {
+        let mut rng = crate::util::Pcg64::seed_from_u64(61);
+        for len in [0usize, 1, 3, 4, 7, 8, 33, 100] {
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let y0: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let alpha = rng.normal();
+            let mut fast = y0.clone();
+            let done = axpy_prefix(alpha, &x, &mut fast);
+            assert!(done <= len && done % 4 == 0, "len={len}: done={done}");
+            for i in done..len {
+                fast[i] += alpha * x[i];
+            }
+            let mut scalar = y0.clone();
+            for i in 0..len {
+                scalar[i] += alpha * x[i];
+            }
+            assert_eq!(bits(&fast), bits(&scalar), "axpy len={len}");
+        }
+    }
+
+    #[test]
+    fn avx2_prefix_is_bit_identical_to_scalar_axpby() {
+        let mut rng = crate::util::Pcg64::seed_from_u64(62);
+        for len in [0usize, 2, 4, 9, 64, 101] {
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let y0: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            let (alpha, beta) = (rng.normal(), 1.0 - 1e-4 * rng.normal().abs());
+            let mut fast = y0.clone();
+            let done = axpby_prefix(alpha, &x, beta, &mut fast);
+            for i in done..len {
+                fast[i] = beta * fast[i] + alpha * x[i];
+            }
+            let mut scalar = y0.clone();
+            for v in scalar.iter_mut().zip(x.iter()) {
+                *v.0 = beta * *v.0 + alpha * *v.1;
+            }
+            assert_eq!(bits(&fast), bits(&scalar), "axpby len={len}");
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //! fdsvrg train --algo fdsvrg --dataset webspam-sim --q 16 [--lambda 1e-4]
 //!              [--eta 0.x] [--outer 30] [--batch u] [--servers p]
 //!              [--config exp.toml] [--out results] [--star] [--transport sim|tcp]
-//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|calibrate|all> [--out results] [--quick]
+//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
 //! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
@@ -56,6 +56,15 @@ const USAGE: &str = "usage:
                [--wire f64|f32|sparse]   (payload codec for counted traffic:
                f64 = bit-exact default, f32 = half the wire bytes,
                sparse = (u32,f32) pairs for the nonzeros only)
+               [--compress none|topk:<k>|thresh:<t>]   (gradient
+               sparsification on counted vector sends: keep the k
+               largest-magnitude coordinates, or those with |v| >= t,
+               as (u32,f32) pairs — 8 wire bytes each; lossy, off by
+               default)
+               [--simd]   (vectorized sparse kernels: multi-lane
+               accumulators on the Dᵀw/Dc reductions; faster per core
+               but reassociates FP sums, so trajectories match the
+               serial default to tolerance rather than bit-exactly)
                [--net uniform|hetero|straggler|jitter]   (network timing
                model: uniform = the legacy flat SimParams (default,
                bit-exact), hetero = rack-local vs cross-rack links,
@@ -63,8 +72,10 @@ const USAGE: &str = "usage:
                latency noise; scenario knobs come from the config [net]
                table or --net-slow/--net-factor/--net-rack/
                --net-jitter-amp/--net-jitter-seed)
-               [--engine native|block|xla]   (native = sparse CSC path,
-               block = dense blocked trainer on the pure-Rust engine,
+               [--engine native|block|mixed|xla]   (native = sparse CSC
+               path, block = dense blocked trainer on the pure-Rust f32
+               engine, mixed = the same f32 kernels against f64 master
+               weights — f32 speed, f64-accumulated updates,
                xla = dense blocked trainer on PJRT, needs --features xla)
                [--transport sim|tcp]   (message plane: sim = in-memory
                mailboxes, one thread per node — the default, bit-exact
@@ -80,12 +91,14 @@ const USAGE: &str = "usage:
   fdsvrg predict --ckpt file [--dataset profile|path.libsvm]
                (inference from a checkpoint of either version: v1 final
                weights or a v2 session snapshot)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|calibrate|all> [--out dir] [--quick]
-               (calibrate: run the distributed algorithms under the sim
-               transport and again over real localhost sockets, and report
-               predicted vs measured bytes and time per algorithm)
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|all> [--out dir] [--quick]
+               (compress: gap vs wire bytes vs sim time for the top-k /
+               threshold gradient sparsifiers across the distributed
+               algorithms; calibrate: run the distributed algorithms under
+               the sim transport and again over real localhost sockets, and
+               report predicted vs measured bytes and time per algorithm)
   fdsvrg data <stats|gen> [--profile name] [--out file]
-  fdsvrg check-engine [--dir artifacts] [--engine block|xla]
+  fdsvrg check-engine [--dir artifacts] [--engine block|mixed|xla]
                (default: the build's own backend — xla when compiled in,
                the pure-Rust block engine otherwise)";
 
@@ -112,6 +125,10 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get("wire") {
         cfg.wire = fdsvrg::net::WireFmt::parse_or_err(v).map_err(|e| anyhow::anyhow!(e))?;
     }
+    if let Some(v) = args.get("compress") {
+        cfg.compress = fdsvrg::net::Compression::parse_or_err(v).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.simd = cfg.simd || args.flag("simd");
     if let Some(v) = args.get("net") {
         cfg.net_model = v.to_string();
     }
@@ -187,7 +204,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     println!(
-        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, net={}, threads={}, engine={engine_kind})",
+        "training {} on {} (d={}, N={}, q={}, λ={:.0e}, η={}, wire={}, compress={}, net={}, threads={}{}, engine={engine_kind})",
         algo.name(),
         cfg.dataset,
         problem.d(),
@@ -196,8 +213,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.lambda,
         if cfg.eta > 0.0 { format!("{}", cfg.eta) } else { format!("auto={:.3}", problem.default_eta()) },
         params.wire.name(),
+        params.compress.spec(),
         params.net.name(),
         params.threads,
+        if params.simd { "+simd" } else { "" },
     );
     let res = match engine_kind {
         // "native" keeps its historical meaning: the sparse CSC algorithms,
@@ -358,6 +377,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("table3") => exp::table3(&ctx).map(|_| ()),
         Some("wire") => exp::wire_ablation(&ctx).map(|_| ()),
         Some("netmodel") => exp::netmodel_ablation(&ctx).map(|_| ()),
+        Some("compress") => exp::compress_ablation(&ctx).map(|_| ()),
         Some("calibrate") => exp::calibrate(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),

@@ -18,35 +18,65 @@
 //! run's wire format and tree/star choice, so *every counted send* goes
 //! through one codec path.
 
+use super::compress::Compression;
 use super::payload::{Payload, WireFmt};
 use super::{tags, Endpoint, NodeId, Tag};
 
-/// A run's communication policy: which codec encodes counted payloads and
-/// whether allreduces use the Fig.-5 tree or the star ablation.
+/// A run's communication policy: which codec encodes counted payloads,
+/// whether allreduces use the Fig.-5 tree or the star ablation, and the
+/// optional gradient-sparsification stage applied before the codec.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Comm {
     pub wire: WireFmt,
     pub star: bool,
+    /// Opt-in sparsification of counted payloads (`--compress`). When
+    /// active it supersedes `wire` on vector sends: selected coordinates
+    /// travel as a [`Payload::Sparse`] regardless of the wire format.
+    pub compress: Compression,
 }
 
 impl Comm {
     pub fn new(wire: WireFmt, star: bool) -> Comm {
-        Comm { wire, star }
+        Comm { wire, star, compress: Compression::None }
+    }
+
+    /// Same policy with a sparsification stage attached.
+    pub fn with_compress(self, compress: Compression) -> Comm {
+        Comm { compress, ..self }
+    }
+
+    /// Encode one counted vector: sparsify if compression is on, else the
+    /// run's wire codec.
+    fn encode(&self, data: &[f64]) -> Payload {
+        if self.compress.is_none() {
+            self.wire.encode(data)
+        } else {
+            self.compress.encode(data)
+        }
+    }
+
+    /// Whether encode→decode can change values: a lossy codec or any
+    /// sparsifier. Drives the root/hub self-decode that keeps every node
+    /// identical after a collective.
+    fn lossy(&self) -> bool {
+        self.wire != WireFmt::F64 || !self.compress.is_none()
     }
 
     /// Allreduce (elementwise sum) over `group`; tree by default, star
     /// under the ablation flag.
     pub fn allreduce(&self, ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>) {
+        let enc = |d: &[f64]| self.encode(d);
         if self.star {
-            star_allreduce(ep, group, data, self.wire);
+            star_allreduce_enc(ep, group, data, &enc, self.lossy());
         } else {
-            tree_allreduce(ep, group, data, self.wire);
+            tree_reduce_enc(ep, group, data, &enc);
+            tree_broadcast_enc(ep, group, data, &enc, self.lossy());
         }
     }
 
     /// Encode and send one counted vector.
     pub fn send(&self, ep: &mut Endpoint, to: NodeId, tag: Tag, data: &[f64]) {
-        ep.send(to, tag, self.wire.encode(data));
+        ep.send(to, tag, self.encode(data));
     }
 
     /// Encode once, then fan the same `Arc` payload out to every peer
@@ -58,7 +88,7 @@ impl Comm {
         tag: Tag,
         data: &[f64],
     ) {
-        let payload = self.wire.encode(data);
+        let payload = self.encode(data);
         for peer in to {
             ep.send(peer, tag, payload.clone());
         }
@@ -89,6 +119,17 @@ impl Comm {
 /// contribution; on return `group[0]`'s buffer holds the sum (other
 /// buffers hold partial sums).
 pub fn tree_reduce(ep: &mut Endpoint, group: &[NodeId], data: &mut [f64], wire: WireFmt) {
+    tree_reduce_enc(ep, group, data, &|d| wire.encode(d));
+}
+
+/// [`tree_reduce`] generalized over the payload encoder (wire codec or
+/// sparsifier); internal — the public entry points fix the encoder.
+fn tree_reduce_enc(
+    ep: &mut Endpoint,
+    group: &[NodeId],
+    data: &mut [f64],
+    enc: &dyn Fn(&[f64]) -> Payload,
+) {
     let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
     let q = group.len();
     let mut mask = 1usize;
@@ -96,7 +137,7 @@ pub fn tree_reduce(ep: &mut Endpoint, group: &[NodeId], data: &mut [f64], wire: 
         if rank & (mask - 1) == 0 {
             if rank & mask != 0 {
                 // sender: pass partial sum down to (rank - mask), then leave
-                ep.send(group[rank - mask], tags::REDUCE, wire.encode(data));
+                ep.send(group[rank - mask], tags::REDUCE, enc(data));
                 break;
             } else if rank + mask < q {
                 let msg = ep.recv_from(group[rank + mask], tags::REDUCE);
@@ -113,6 +154,20 @@ pub fn tree_reduce(ep: &mut Endpoint, group: &[NodeId], data: &mut [f64], wire: 
 /// decode into their own buffer at the end. On non-root nodes `data` is
 /// overwritten.
 pub fn tree_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, wire: WireFmt) {
+    tree_broadcast_enc(ep, group, data, &|d| wire.encode(d), wire != WireFmt::F64);
+}
+
+/// [`tree_broadcast`] generalized over the payload encoder. `lossy` marks
+/// encoders whose decode differs from the root's buffer (non-f64 codec or
+/// any sparsifier): the root then adopts its own encoding so all nodes
+/// exit identical.
+fn tree_broadcast_enc(
+    ep: &mut Endpoint,
+    group: &[NodeId],
+    data: &mut Vec<f64>,
+    enc: &dyn Fn(&[f64]) -> Payload,
+    lossy: bool,
+) {
     let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
     let q = group.len();
     let mut mask = 1usize;
@@ -121,7 +176,7 @@ pub fn tree_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, 
     }
     mask >>= 1;
     // receive once from the parent, then forward to children in reverse order
-    let mut payload: Option<Payload> = if rank == 0 { Some(wire.encode(data)) } else { None };
+    let mut payload: Option<Payload> = if rank == 0 { Some(enc(data)) } else { None };
     while mask >= 1 {
         if rank & (mask - 1) == 0 {
             if payload.is_none() && rank & mask != 0 {
@@ -145,7 +200,7 @@ pub fn tree_broadcast(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, 
     // exact f64 path the root's buffer is already bit-identical and the
     // copy is skipped.
     let payload = payload.expect("tree broadcast: payload not received");
-    if rank != 0 || wire != WireFmt::F64 {
+    if rank != 0 || lossy {
         payload.decode_resize(data);
     }
 }
@@ -162,22 +217,34 @@ pub fn tree_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, 
 /// tree but `2(q−1)` sequential rounds at the hub and a hub hot-spot. The
 /// fan-out encodes once and clones the `Arc` payload per peer.
 pub fn star_allreduce(ep: &mut Endpoint, group: &[NodeId], data: &mut Vec<f64>, wire: WireFmt) {
+    star_allreduce_enc(ep, group, data, &|d| wire.encode(d), wire != WireFmt::F64);
+}
+
+/// [`star_allreduce`] generalized over the payload encoder; see
+/// [`tree_broadcast_enc`] for the `lossy` contract.
+fn star_allreduce_enc(
+    ep: &mut Endpoint,
+    group: &[NodeId],
+    data: &mut Vec<f64>,
+    enc: &dyn Fn(&[f64]) -> Payload,
+    lossy: bool,
+) {
     let rank = group.iter().position(|&n| n == ep.id()).expect("node not in group");
     if rank == 0 {
         for &peer in &group[1..] {
             let msg = ep.recv_from(peer, tags::REDUCE);
             msg.add_into(data);
         }
-        let payload = wire.encode(data);
+        let payload = enc(data);
         for &peer in &group[1..] {
             ep.send(peer, tags::BCAST, payload.clone());
         }
         // lossy codec: the hub keeps the same rounded values it fanned out
-        if wire != WireFmt::F64 {
+        if lossy {
             payload.decode_resize(data);
         }
     } else {
-        ep.send(group[0], tags::REDUCE, wire.encode(data));
+        ep.send(group[0], tags::REDUCE, enc(data));
         let msg = ep.recv_from(group[0], tags::BCAST);
         msg.payload.decode_resize(data);
     }
@@ -311,6 +378,64 @@ mod tests {
             sparse_stats.total_bytes(),
             dense_stats.total_bytes()
         );
+    }
+
+    #[test]
+    fn compressed_allreduce_drops_bytes_and_leaves_nodes_identical() {
+        // dense 64-vectors, top-8 compression: the reduce keeps summing
+        // whatever survives each hop, and every node (hub included) exits
+        // with the same sparsified result
+        for star in [false, true] {
+            let run = move |compress: Compression| {
+                let (results, stats) = run_group(5, move |ep, rank| {
+                    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+                    let comm = Comm::new(WireFmt::F64, star).with_compress(compress);
+                    let mut data: Vec<f64> =
+                        (0..64).map(|j| ((rank * 64 + j) % 13) as f64 - 6.0).collect();
+                    comm.allreduce(ep, &group, &mut data);
+                    data
+                });
+                (results, stats.total_bytes())
+            };
+            let (dense, dense_bytes) = run(Compression::None);
+            let (topk, topk_bytes) = run(Compression::TopK(8));
+            for (rank, r) in topk.iter().enumerate() {
+                assert_eq!(
+                    r, &topk[0],
+                    "star={star} rank={rank}: all nodes must agree under top-k"
+                );
+                assert!(
+                    r.iter().filter(|v| **v != 0.0).count() <= 8,
+                    "star={star}: final vector keeps at most k coordinates"
+                );
+            }
+            // Compression::None rides the sparse codec (f32 values, only
+            // nonzeros), so compare against a fully dense f64 run instead.
+            assert_eq!(dense.len(), 5);
+            assert!(dense_bytes > 0);
+            assert!(
+                topk_bytes * 2 < dense_bytes,
+                "star={star}: top-8 of 64 must cut wire bytes well below half \
+                 ({topk_bytes} vs {dense_bytes})"
+            );
+        }
+    }
+
+    #[test]
+    fn comm_send_with_compression_counts_kept_coordinates_only() {
+        let comm = Comm::new(WireFmt::F64, false).with_compress(Compression::TopK(2));
+        let (eps, stats) = build(2, SimParams::free());
+        let mut it = eps.into_iter();
+        let mut a = it.next().unwrap();
+        let mut b = it.next().unwrap();
+        let h = thread::spawn(move || {
+            comm.send(&mut a, 1, tags::PUSH, &[0.0, 5.0, 1.0, -7.0, 0.5]);
+        });
+        let msg = b.recv_from(0, tags::PUSH);
+        h.join().unwrap();
+        assert_eq!(msg.to_vec(5), vec![0.0, 5.0, 0.0, -7.0, 0.0]);
+        assert_eq!(stats.total_scalars(), 2, "only the kept coordinates are counted");
+        assert_eq!(stats.total_bytes(), 16, "8 wire bytes per kept coordinate");
     }
 
     #[test]

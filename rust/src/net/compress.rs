@@ -1,0 +1,214 @@
+//! Gradient sparsification for the counted collectives (`--compress`).
+//!
+//! A [`Compression`] policy turns a dense `f64` vector into a
+//! [`Payload::Sparse`] carrying only the *selected* coordinates as
+//! `(u32 index, f32 value)` pairs — 8 wire bytes per survivor — before the
+//! payload enters a counted send. Two selectors:
+//!
+//! * `topk:<k>` — keep the `k` coordinates of largest magnitude
+//!   (deterministic tie-break: the lower index wins), the classic top-k
+//!   gradient sparsification of distributed SGD/SAGA;
+//! * `thresh:<t>` — keep every coordinate with `|v| ≥ t`, the
+//!   magnitude-threshold variant (data-dependent payload size).
+//!
+//! Zeros are never selected (they carry no information and a
+//! [`Payload::Sparse`] scatter restores them for free), indices are
+//! emitted strictly ascending (the `Sparse` codec's invariant), and the
+//! whole pipe rides the existing byte-accurate accounting: the simulator
+//! charges `8·selected` bytes because that is exactly what the payload
+//! serializes to — nothing about [`crate::net::CommStats`] changes.
+//!
+//! Compression is lossy twice over (dropped coordinates *and* the `f32`
+//! value quantization of the sparse codec), so it is strictly opt-in:
+//! [`Compression::None`] is the default everywhere and leaves every
+//! counted send byte-identical to the pre-compression wire.
+
+use super::payload::Payload;
+
+/// Sparsification policy for counted payloads (`--compress
+/// none|topk:<k>|thresh:<t>`, config `run.compress`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Compression {
+    /// No sparsification: payloads go through the run's [`super::WireFmt`]
+    /// codec untouched (the bit-exact default).
+    #[default]
+    None,
+    /// Keep the `k` largest-magnitude coordinates.
+    TopK(usize),
+    /// Keep every coordinate with `|v| ≥ t`.
+    Threshold(f64),
+}
+
+impl Compression {
+    /// Spec names listed by parse errors.
+    pub const NAMES: [&'static str; 3] = ["none", "topk:<k>", "thresh:<t>"];
+
+    /// Parse a compression spec: `none`, `topk:<k>` or `thresh:<t>`
+    /// (case-insensitive; `top-k:`/`top_k:` also accepted via the usual
+    /// `_` → `-` folding done by hand here since the value part is free-form).
+    pub fn parse(s: &str) -> Option<Compression> {
+        let s = s.trim().to_ascii_lowercase().replace('_', "-");
+        if s == "none" || s.is_empty() {
+            return Some(Compression::None);
+        }
+        if let Some(k) = s.strip_prefix("topk:").or_else(|| s.strip_prefix("top-k:")) {
+            let k: usize = k.trim().parse().ok()?;
+            return if k == 0 { None } else { Some(Compression::TopK(k)) };
+        }
+        if let Some(t) = s.strip_prefix("thresh:").or_else(|| s.strip_prefix("threshold:")) {
+            let t: f64 = t.trim().parse().ok()?;
+            return if t > 0.0 && t.is_finite() { Some(Compression::Threshold(t)) } else { None };
+        }
+        None
+    }
+
+    /// [`Compression::parse`] with a CLI-grade error listing the valid
+    /// spec shapes.
+    pub fn parse_or_err(s: &str) -> Result<Compression, String> {
+        Compression::parse(s).ok_or_else(|| {
+            format!(
+                "unknown compression {s:?}; valid specs (case-insensitive): {} \
+                 (k ≥ 1, t > 0)",
+                Self::NAMES.join(", ")
+            )
+        })
+    }
+
+    /// The canonical spec string — round-trips through [`Compression::parse`]
+    /// (the tcp worker spec serializes this).
+    pub fn spec(&self) -> String {
+        match self {
+            Compression::None => "none".into(),
+            Compression::TopK(k) => format!("topk:{k}"),
+            Compression::Threshold(t) => format!("thresh:{t}"),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == Compression::None
+    }
+
+    /// Sparsify `data` into a [`Payload::Sparse`]. [`Compression::None`]
+    /// keeps every nonzero (identical to the sparse wire codec); the
+    /// selectors drop coordinates as documented above. Indices come out
+    /// strictly ascending and duplicate-free in every case.
+    pub fn encode(&self, data: &[f64]) -> Payload {
+        let keep: Vec<u32> = match *self {
+            Compression::None => {
+                (0..data.len()).filter(|&i| data[i] != 0.0).map(|i| i as u32).collect()
+            }
+            Compression::Threshold(t) => (0..data.len())
+                .filter(|&i| data[i] != 0.0 && data[i].abs() >= t)
+                .map(|i| i as u32)
+                .collect(),
+            Compression::TopK(k) => {
+                let mut nz: Vec<u32> =
+                    (0..data.len()).filter(|&i| data[i] != 0.0).map(|i| i as u32).collect();
+                if nz.len() > k {
+                    // largest magnitude first; ties broken toward the lower
+                    // index so the selection is deterministic across nodes
+                    nz.sort_unstable_by(|&a, &b| {
+                        data[b as usize]
+                            .abs()
+                            .total_cmp(&data[a as usize].abs())
+                            .then(a.cmp(&b))
+                    });
+                    nz.truncate(k);
+                    nz.sort_unstable();
+                }
+                nz
+            }
+        };
+        let val: Vec<f32> = keep.iter().map(|&i| data[i as usize] as f32).collect();
+        Payload::Sparse { idx: keep.into(), val: val.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decoded(c: Compression, data: &[f64]) -> Vec<f64> {
+        c.encode(data).to_vec(data.len())
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        for spec in ["none", "topk:64", "thresh:0.001"] {
+            let c = Compression::parse(spec).unwrap();
+            assert_eq!(Compression::parse(&c.spec()), Some(c), "{spec}");
+        }
+        assert_eq!(Compression::parse("TOPK:8"), Some(Compression::TopK(8)));
+        assert_eq!(Compression::parse("Top_K:8"), Some(Compression::TopK(8)));
+        assert_eq!(Compression::parse("threshold:1e-3"), Some(Compression::Threshold(1e-3)));
+        for bad in ["topk:0", "topk:x", "thresh:0", "thresh:-1", "thresh:nan", "gzip"] {
+            assert_eq!(Compression::parse(bad), None, "{bad}");
+        }
+        let err = Compression::parse_or_err("gzip").unwrap_err();
+        for name in Compression::NAMES {
+            assert!(err.contains(name), "error must list {name:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_with_ascending_indices() {
+        let data = [0.5, -3.0, 0.0, 2.0, -0.25, 1.0];
+        let p = Compression::TopK(2).encode(&data);
+        match &p {
+            Payload::Sparse { idx, val } => {
+                assert_eq!(idx.as_ref(), &[1, 3]);
+                assert_eq!(val.as_ref(), &[-3.0f32, 2.0]);
+            }
+            other => panic!("expected sparse payload, got {other:?}"),
+        }
+        assert_eq!(p.wire_bytes(), 16, "8 bytes per kept coordinate");
+        assert_eq!(decoded(Compression::TopK(2), &data), vec![0.0, -3.0, 0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_larger_than_nnz_keeps_all_nonzeros() {
+        let data = [0.0, 1.0, 0.0, -2.0];
+        assert_eq!(decoded(Compression::TopK(100), &data), data.to_vec());
+        assert_eq!(Compression::TopK(100).encode(&data).scalars(), 2);
+    }
+
+    #[test]
+    fn topk_breaks_magnitude_ties_toward_low_indices() {
+        let data = [1.0, -1.0, 1.0, -1.0];
+        let p = Compression::TopK(2).encode(&data);
+        match &p {
+            Payload::Sparse { idx, .. } => assert_eq!(idx.as_ref(), &[0, 1]),
+            other => panic!("expected sparse payload, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn threshold_drops_small_coordinates_only() {
+        let data = [1e-6, 0.5, -1e-4, 0.0, -2.0];
+        assert_eq!(
+            decoded(Compression::Threshold(1e-3), &data),
+            vec![0.0, 0.5, 0.0, 0.0, -2.0]
+        );
+        // at the boundary |v| == t the coordinate survives
+        assert_eq!(decoded(Compression::Threshold(0.5), &data), vec![0.0, 0.5, 0.0, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn none_matches_sparse_codec_selection() {
+        use crate::net::WireFmt;
+        let data = [0.0, 2.5, 0.0, -1.25, 0.0];
+        let a = Compression::None.encode(&data);
+        let b = WireFmt::Sparse.encode(&data);
+        assert_eq!(a.to_vec(5), b.to_vec(5));
+        assert_eq!(a.wire_bytes(), b.wire_bytes());
+    }
+
+    #[test]
+    fn empty_selection_encodes_an_empty_payload() {
+        let data = [1e-9, -1e-9, 0.0];
+        let p = Compression::Threshold(1.0).encode(&data);
+        assert_eq!(p.scalars(), 0);
+        assert_eq!(p.wire_bytes(), 0);
+        assert_eq!(p.to_vec(3), vec![0.0; 3]);
+    }
+}

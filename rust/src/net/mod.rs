@@ -49,11 +49,13 @@
 //! measurements.
 
 pub mod collectives;
+pub mod compress;
 pub mod model;
 pub mod payload;
 pub mod topology;
 pub mod transport;
 
+pub use compress::Compression;
 pub use model::{LinkProfile, NetModel, NetSpec};
 pub use payload::{Payload, WireFmt};
 pub use transport::{Transport, TransportKind};

@@ -480,6 +480,76 @@ mod tests {
     }
 
     #[test]
+    fn topk_outputs_round_trip_the_byte_codec() {
+        // Adversarial inputs for the compression stage: mostly-zero vectors
+        // with denormals, signed zeros, and magnitude ties. Whatever
+        // Payload::Sparse the encoder produces must survive the TCP byte
+        // codec with indices strictly ascending and duplicate-free.
+        use crate::net::Compression;
+        crate::testkit::check("top-k sparse round-trip", 32, |g| {
+            let n = g.usize_in(0, 50);
+            let mut data = vec![0.0f64; n];
+            for v in data.iter_mut() {
+                *v = match g.usize_in(0, 5) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f64::MIN_POSITIVE / 2.0, // subnormal, nonzero
+                    3 => g.normal(),
+                    // magnitude ties: ±1 forces the index tie-break
+                    _ => if g.bool() { 1.0 } else { -1.0 },
+                };
+            }
+            let k = g.usize_in(0, n + 2); // includes k = 0 edge and k ≥ nnz
+            let modes = [
+                Compression::TopK(k.max(1)),
+                Compression::Threshold(g.f64_in(1e-6, 2.0)),
+                Compression::None,
+            ];
+            for mode in modes {
+                let p = mode.encode(&data);
+                let (idx, val) = match &p {
+                    Payload::Sparse { idx, val } => (idx, val),
+                    _ => panic!("compression must encode sparse"),
+                };
+                assert_eq!(idx.len(), val.len());
+                assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must strictly ascend");
+                assert!(idx.iter().all(|&i| (i as usize) < n), "index out of range");
+                assert_eq!(p.wire_bytes(), 8 * p.scalars());
+                let mut buf = Vec::new();
+                p.write_bytes(&mut buf);
+                let (back, used) = Payload::read_bytes(&buf).unwrap();
+                assert_eq!(used, buf.len());
+                assert_eq!(back.to_vec(n), p.to_vec(n), "byte codec must be lossless");
+                // every surviving coordinate is the f32 rounding of the
+                // original — compression selects, it never rewrites
+                let dec = p.to_vec(n);
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    assert_eq!(dec[i as usize], v as f64);
+                    assert_eq!(v, data[i as usize] as f32);
+                    assert!(data[i as usize] != 0.0, "a zero must never be selected");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn empty_topk_selection_round_trips() {
+        // an all-zero vector compresses to the empty sparse payload, which
+        // must survive the byte codec and decode back to zeros
+        use crate::net::Compression;
+        for mode in [Compression::TopK(4), Compression::Threshold(0.5)] {
+            let p = mode.encode(&[0.0, -0.0, 0.0]);
+            assert_eq!(p.scalars(), 0);
+            assert_eq!(p.wire_bytes(), 0);
+            let mut buf = Vec::new();
+            p.write_bytes(&mut buf);
+            let (back, used) = Payload::read_bytes(&buf).unwrap();
+            assert_eq!(used, 5);
+            assert_eq!(back.to_vec(3), vec![0.0; 3]);
+        }
+    }
+
+    #[test]
     fn truncated_byte_streams_error_cleanly() {
         crate::testkit::check("payload truncation errors", 16, |g| {
             let n = g.usize_in(0, 20);

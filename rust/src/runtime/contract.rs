@@ -62,6 +62,16 @@ pub trait ComputeEngine {
     /// Short backend identifier (`"native"`, `"xla"`), used in run labels.
     fn name(&self) -> &'static str;
 
+    /// Whether the trainer should keep f64 master copies of the parameter
+    /// slabs and fold each kernel's f32 update into them as a delta
+    /// (`w64 += new32 − old32`, then `w32 = w64 as f32`). The kernels
+    /// themselves stay all-f32 — this only changes where the *state*
+    /// accumulates, so rounding errors stop compounding across epochs.
+    /// Default `false`: the f32 slabs are the state (pure-f32 engines).
+    fn master_weights(&self) -> bool {
+        false
+    }
+
     /// `s = Dᵀ w` over one padded block.
     fn partial_products(&self, w: &[f32], d_block: &[f32]) -> Result<Vec<f32>>;
 

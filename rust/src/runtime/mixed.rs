@@ -1,0 +1,134 @@
+//! Mixed-precision backend (`--engine mixed`): f32 compute, f64 state.
+//!
+//! Every kernel delegates to [`NativeEngine`] unchanged — same tiles, same
+//! f32 arithmetic, same padded-block contract — but
+//! [`ComputeEngine::master_weights`] returns `true`, which tells the
+//! blocked trainer to keep f64 master copies of the parameter slabs and
+//! fold each batch update into them as a delta:
+//!
+//! ```text
+//! w64[j] += new32[j] − old32[j];   w32[j] = w64[j] as f32
+//! ```
+//!
+//! The FLOP-heavy work (dots, scatters, the fused update) stays in f32 and
+//! runs at f32 speed/bandwidth; only the O(d) state fold is f64. What that
+//! buys: a pure-f32 state loses low-order update bits every time
+//! `|Δw| ≪ |w|` (the common case late in training, when steps shrink), and
+//! those losses compound over the `M·outer` inner steps. The f64 master
+//! absorbs each delta exactly, so the only rounding left is the final
+//! `as f32` cast the *next* kernel input sees — errors stop accumulating.
+//! The cost model is unchanged (same counted traffic as `native`); the
+//! accuracy-vs-speed tradeoff is measured per-kernel in `bench_kernels`
+//! and end-to-end in `tests/kernel_exactness.rs`.
+
+use super::contract::ComputeEngine;
+use super::native::NativeEngine;
+use anyhow::Result;
+
+/// f32-compute / f64-state engine. Stateless; construction never fails.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MixedEngine {
+    inner: NativeEngine,
+}
+
+impl MixedEngine {
+    pub fn new() -> MixedEngine {
+        MixedEngine { inner: NativeEngine::new() }
+    }
+}
+
+impl ComputeEngine for MixedEngine {
+    fn name(&self) -> &'static str {
+        "mixed"
+    }
+
+    fn master_weights(&self) -> bool {
+        true
+    }
+
+    fn partial_products(&self, w: &[f32], d_block: &[f32]) -> Result<Vec<f32>> {
+        self.inner.partial_products(w, d_block)
+    }
+
+    fn logistic_coef(&self, s: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        self.inner.logistic_coef(s, y)
+    }
+
+    fn hinge_coef(&self, s: &[f32], y: &[f32], gamma: f32) -> Result<Vec<f32>> {
+        self.inner.hinge_coef(s, y, gamma)
+    }
+
+    fn coef_matvec(&self, d_block: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        self.inner.coef_matvec(d_block, c)
+    }
+
+    fn batch_dots(&self, w: &[f32], d_block: &[f32], idx: &[i32]) -> Result<Vec<f32>> {
+        self.inner.batch_dots(w, d_block, idx)
+    }
+
+    fn batch_update(
+        &self,
+        w: &[f32],
+        z: &[f32],
+        d_block: &[f32],
+        idx: &[i32],
+        margins: &[f32],
+        y: &[f32],
+        c0: &[f32],
+        eta: f32,
+        lambda: f32,
+    ) -> Result<Vec<f32>> {
+        self.inner.batch_update(w, z, d_block, idx, margins, y, c0, eta, lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::contract::{BLOCK_D, BLOCK_N, BLOCK_U};
+    use super::super::trainer;
+    use super::*;
+    use crate::algs::{Problem, RunParams};
+    use crate::data::{generate, GenSpec};
+    use crate::net::SimParams;
+
+    #[test]
+    fn kernels_delegate_to_native_bitwise() {
+        let native = NativeEngine::new();
+        let mixed = MixedEngine::new();
+        assert_eq!(mixed.name(), "mixed");
+        assert!(mixed.master_weights() && !native.master_weights());
+        let mut rng = crate::util::Pcg64::seed_from_u64(31);
+        let w: Vec<f32> = (0..BLOCK_D).map(|_| rng.normal() as f32).collect();
+        let tile: Vec<f32> = (0..BLOCK_D * BLOCK_N)
+            .map(|_| if rng.next_f64() < 0.05 { rng.normal() as f32 } else { 0.0 })
+            .collect();
+        assert_eq!(
+            native.partial_products(&w, &tile).unwrap(),
+            mixed.partial_products(&w, &tile).unwrap(),
+        );
+        let idx: Vec<i32> = (0..BLOCK_U).map(|_| rng.below(BLOCK_N) as i32).collect();
+        assert_eq!(
+            native.batch_dots(&w, &tile, &idx).unwrap(),
+            mixed.batch_dots(&w, &tile, &idx).unwrap(),
+        );
+    }
+
+    #[test]
+    fn mixed_run_tracks_native_and_converges() {
+        let ds = generate(&GenSpec::new("mx", 120, 400, 10).with_seed(5));
+        let p = Problem::logistic_l2(ds, 1e-2);
+        let params = RunParams { outer: 4, sim: SimParams::free(), ..Default::default() };
+        let rn = trainer::run(&p, &params, &NativeEngine::new()).unwrap();
+        let rm = trainer::run(&p, &params, &MixedEngine::new()).unwrap();
+        // identical schedule and cost model — only the state precision moves
+        assert_eq!(rn.total_scalars, rm.total_scalars);
+        assert_eq!(rn.total_bytes, rm.total_bytes);
+        // the f64 masters can only keep the trajectory at f32-rounding
+        // distance from the pure-f32 run over 4 epochs
+        let rel = crate::linalg::dist2(&rn.w, &rm.w)
+            / (1.0 + crate::linalg::nrm2(&rn.w).powi(2));
+        assert!(rel < 1e-3, "mixed vs native relative dist2 {rel:.3e}");
+        let f0 = p.objective(&vec![0.0; p.d()]);
+        assert!(rm.final_objective() < f0 - 1e-2, "mixed engine failed to train");
+    }
+}

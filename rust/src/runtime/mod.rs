@@ -8,6 +8,7 @@
 //! | backend | module | availability |
 //! |---------|--------|--------------|
 //! | `native` | [`native`] — pure-Rust f32 | always (default build, offline) |
+//! | `mixed`  | [`mixed`] — f32 compute, f64 master weights | always |
 //! | `xla`    | [`xla_engine`] — PJRT + AOT HLO artifacts | `--features xla` |
 //!
 //! The artifact contract (block shapes, kernel signatures, padding rules)
@@ -15,6 +16,7 @@
 //! the same integration suite (`rust/tests/xla_runtime.rs`).
 
 pub mod contract;
+pub mod mixed;
 pub mod native;
 pub mod trainer;
 #[cfg(feature = "xla")]
@@ -23,6 +25,7 @@ pub mod xla_engine;
 pub use contract::{
     pad_slab, pad_vec, ComputeEngine, Kernel, ARTIFACTS, BLOCK_D, BLOCK_N, BLOCK_U,
 };
+pub use mixed::MixedEngine;
 pub use native::NativeEngine;
 #[cfg(feature = "xla")]
 pub use xla_engine::XlaEngine;
@@ -35,6 +38,8 @@ use std::path::Path;
 pub enum EngineKind {
     /// Pure-Rust f32 backend (always available).
     Native,
+    /// f32 compute with f64 master weights (always available).
+    Mixed,
     /// PJRT + AOT artifacts (requires the `xla` cargo feature).
     Xla,
 }
@@ -42,11 +47,12 @@ pub enum EngineKind {
 impl EngineKind {
     /// Every accepted engine name (canonical names + aliases), the source
     /// of truth for [`EngineKind::parse`] error listings.
-    pub const NAMES: [&'static str; 4] = ["native", "block", "xla", "pjrt"];
+    pub const NAMES: [&'static str; 5] = ["native", "block", "mixed", "xla", "pjrt"];
 
-    const TABLE: [(&'static str, EngineKind); 4] = [
+    const TABLE: [(&'static str, EngineKind); 5] = [
         ("native", EngineKind::Native),
         ("block", EngineKind::Native),
+        ("mixed", EngineKind::Mixed),
         ("xla", EngineKind::Xla),
         ("pjrt", EngineKind::Xla),
     ];
@@ -71,6 +77,7 @@ impl EngineKind {
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Native => "native",
+            EngineKind::Mixed => "mixed",
             EngineKind::Xla => "xla",
         }
     }
@@ -91,6 +98,7 @@ impl EngineKind {
 pub fn build_engine(kind: EngineKind, artifacts_dir: &Path) -> Result<Box<dyn ComputeEngine>> {
     match kind {
         EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+        EngineKind::Mixed => Ok(Box::new(MixedEngine::new())),
         #[cfg(feature = "xla")]
         EngineKind::Xla => Ok(Box::new(XlaEngine::load(artifacts_dir)?)),
         #[cfg(not(feature = "xla"))]
@@ -113,8 +121,16 @@ mod tests {
     fn engine_kind_parses_cli_names() {
         assert_eq!(EngineKind::parse("native"), Some(EngineKind::Native));
         assert_eq!(EngineKind::parse("block"), Some(EngineKind::Native));
+        assert_eq!(EngineKind::parse("mixed"), Some(EngineKind::Mixed));
         assert_eq!(EngineKind::parse("xla"), Some(EngineKind::Xla));
         assert_eq!(EngineKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn mixed_engine_always_builds() {
+        let e = build_engine(EngineKind::Mixed, Path::new("unused")).unwrap();
+        assert_eq!(e.name(), "mixed");
+        assert!(e.master_weights());
     }
 
     #[test]

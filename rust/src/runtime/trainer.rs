@@ -1,5 +1,5 @@
 //! Blocked dense FD-SVRG: the full Algorithm-1 loop executed through a
-//! [`ComputeEngine`] backend (`--engine block|xla` on the CLI).
+//! [`ComputeEngine`] backend (`--engine block|mixed|xla` on the CLI).
 //!
 //! Every FLOP of the training loop — partial products, logistic
 //! coefficients, gradient scatter, the fused inner-batch update — runs
@@ -114,6 +114,12 @@ pub struct BlockedDriver<'e> {
     bytes_per_scalar: u64,
     /// parameter + full-gradient slabs, padded to BLOCK_D
     w: Vec<Vec<f32>>,
+    /// f64 master copies of the parameter slabs — present iff the engine
+    /// asks for them ([`ComputeEngine::master_weights`], `--engine mixed`).
+    /// Kernels still consume `w` (f32); each batch update is folded into
+    /// the masters as a delta and `w` re-derived by rounding, so state
+    /// error stops compounding across inner steps.
+    w64: Option<Vec<Vec<f64>>>,
     z: Vec<Vec<f32>>,
     margins: Vec<f32>,
     c0: Vec<f32>,
@@ -167,6 +173,7 @@ impl<'e> BlockedDriver<'e> {
             // messages
             bytes_per_scalar: params.wire.dense_bytes_per_scalar(),
             w: vec![vec![0f32; BLOCK_D]; q],
+            w64: engine.master_weights().then(|| vec![vec![0f64; BLOCK_D]; q]),
             z: vec![vec![0f32; BLOCK_D]; q],
             margins: vec![0f32; data.n_blocks * BLOCK_N],
             c0: vec![0f32; data.n_blocks * BLOCK_N],
@@ -190,12 +197,16 @@ impl<'e> BlockedDriver<'e> {
                 let node = &r.nodes[0];
                 ensure!(node.extra.len() == 2, "blocked node extra = [scalars, messages]");
                 // f32 → f64 is exact, so the f64 checkpoint restores the
-                // f32 slabs bit-for-bit
+                // f32 slabs bit-for-bit; with master weights the checkpoint
+                // *is* the f64 state, restored verbatim
                 for (l, wl) in driver.w.iter_mut().enumerate() {
                     let lo = l * BLOCK_D;
                     let hi = (lo + BLOCK_D).min(driver.data.d);
                     for (j, src) in r.w[lo..hi].iter().enumerate() {
                         wl[j] = *src as f32;
+                        if let Some(masters) = driver.w64.as_mut() {
+                            masters[l][j] = *src;
+                        }
                     }
                 }
                 driver.rng = Pcg64::from_state_words(
@@ -213,11 +224,16 @@ impl<'e> BlockedDriver<'e> {
     fn assemble(&self) -> Vec<f64> {
         let d = self.data.d;
         let mut out = vec![0f64; d];
-        for (l, wl) in self.w.iter().enumerate() {
+        for l in 0..self.w.len() {
             let lo = l * BLOCK_D;
             let hi = (lo + BLOCK_D).min(d);
             for (j, o) in out[lo..hi].iter_mut().enumerate() {
-                *o = wl[j] as f64;
+                // reports and checkpoints carry the most precise state we
+                // hold: the f64 masters when present, else the f32 slabs
+                *o = match &self.w64 {
+                    Some(masters) => masters[l][j],
+                    None => self.w[l][j] as f64,
+                };
             }
         }
         out
@@ -301,7 +317,7 @@ impl<'e> BlockedDriver<'e> {
             self.c0b.clear();
             self.c0b.extend(self.idx.iter().map(|&i| self.c0[b * BLOCK_N + i as usize]));
             for (l, wl) in self.w.iter_mut().enumerate() {
-                *wl = self.engine.batch_update(
+                let new = self.engine.batch_update(
                     wl,
                     &self.z[l],
                     &self.data.blocks[l][b],
@@ -312,6 +328,19 @@ impl<'e> BlockedDriver<'e> {
                     self.eta,
                     self.lambda,
                 )?;
+                match self.w64.as_mut() {
+                    // mixed precision: fold the f32 update into the f64
+                    // master as an exact delta, then round the master back
+                    // down for the next kernel input
+                    Some(masters) => {
+                        let ml = &mut masters[l];
+                        for (j, (mv, wv)) in ml.iter_mut().zip(wl.iter_mut()).enumerate() {
+                            *mv += new[j] as f64 - *wv as f64;
+                            *wv = *mv as f32;
+                        }
+                    }
+                    None => *wl = new,
+                }
             }
             self.grads += BLOCK_U as u64;
             m += BLOCK_U;

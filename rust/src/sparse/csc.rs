@@ -55,6 +55,34 @@ impl CsrMirror {
         }
         acc
     }
+
+    /// Multi-lane variant of [`CsrMirror::row_gather`] (`--simd`): four
+    /// independent accumulators hide the gather-load latency behind the FP
+    /// adds instead of serializing on one chain. The lanes reassociate the
+    /// sum and the serial path's `c == 0` skip is dropped (a zero
+    /// coefficient contributes an exact `±0.0` product to its lane), so
+    /// the result matches [`CsrMirror::row_gather`] to summation-order
+    /// roundoff only — callers opt in and pin the tolerance.
+    #[inline]
+    fn row_gather_simd(&self, row: usize, c: &[f64], scale: f64, init: f64) -> f64 {
+        let (s, e) = (self.row_ptr[row], self.row_ptr[row + 1]);
+        let cols = &self.col_idx[s..e];
+        let vals = &self.values[s..e];
+        let chunks = cols.len() / 4;
+        let mut acc = [0.0f64; 4];
+        for ch in 0..chunks {
+            let i = 4 * ch;
+            acc[0] += (c[cols[i] as usize] * scale) * vals[i];
+            acc[1] += (c[cols[i + 1] as usize] * scale) * vals[i + 1];
+            acc[2] += (c[cols[i + 2] as usize] * scale) * vals[i + 2];
+            acc[3] += (c[cols[i + 3] as usize] * scale) * vals[i + 3];
+        }
+        let mut tail = init;
+        for i in 4 * chunks..cols.len() {
+            tail += (c[cols[i] as usize] * scale) * vals[i];
+        }
+        tail + (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
 }
 
 /// Compressed sparse column matrix over `f64` values with `u32` row indices
@@ -198,11 +226,48 @@ impl CscMatrix {
         acc
     }
 
+    /// Multi-lane variant of [`CscMatrix::col_dot`] (`--simd`): the same
+    /// 4-way unrolled gather, but with four *independent* accumulator
+    /// lanes so the adds pipeline instead of serializing on one FP chain —
+    /// the latency win explicit vectorization buys on an indexed gather
+    /// (AVX2 has no efficient f64 gather-multiply chain that beats this on
+    /// sparse index streams, so the lanes are portable scalar code the
+    /// compiler maps onto vector registers). Reassociates the sum: equal
+    /// to [`CscMatrix::col_dot`] only up to summation-order roundoff,
+    /// which is why it is opt-in behind `RunParams::simd` and pinned by
+    /// the kernel-exactness tolerance suite rather than bit-for-bit.
+    #[inline]
+    pub fn col_dot_simd(&self, col: usize, w: &[f64]) -> f64 {
+        debug_assert_eq!(w.len(), self.rows);
+        let (rows, vals) = self.col(col);
+        let chunks = rows.len() / 4;
+        let mut acc = [0.0f64; 4];
+        for ch in 0..chunks {
+            let i = 4 * ch;
+            acc[0] += w[rows[i] as usize] * vals[i];
+            acc[1] += w[rows[i + 1] as usize] * vals[i + 1];
+            acc[2] += w[rows[i + 2] as usize] * vals[i + 2];
+            acc[3] += w[rows[i + 3] as usize] * vals[i + 3];
+        }
+        let mut tail = 0.0;
+        for i in 4 * chunks..rows.len() {
+            tail += w[rows[i] as usize] * vals[i];
+        }
+        // pairwise lane fold: one more reassociation, two fewer serial adds
+        tail + (acc[0] + acc[1]) + (acc[2] + acc[3])
+    }
+
     /// `out += alpha * x_col` (scatter-add of one instance), 4-way
     /// unrolled: row indices are strictly sorted within a column, so the
     /// four stores of a block target distinct slots and issue
     /// independently; each `out[r]` sees exactly one add, so unrolling
     /// cannot change any bit.
+    ///
+    /// This is also the `--simd` form: a scatter-add has no accumulator
+    /// chain to split (every `out[r]` receives exactly one add) and x86
+    /// has no f64 scatter store short of AVX-512, so the unrolled
+    /// independent-store body *is* the vector-width-friendly shape — the
+    /// SIMD path reuses it unchanged, bit for bit.
     #[inline]
     pub fn col_axpy(&self, col: usize, alpha: f64, out: &mut [f64]) {
         debug_assert_eq!(out.len(), self.rows);
@@ -300,6 +365,54 @@ impl CscMatrix {
         assert_eq!(c.len(), self.cols);
         assert!(row < self.rows);
         self.mirror().row_gather(row, c, 1.0, 0.0)
+    }
+
+    /// Multi-lane [`CscMatrix::row_dot`] (`--simd`): four accumulator
+    /// lanes over the mirror row; reassociates the sum (tolerance, not
+    /// bits — see [`CscMatrix::col_dot_simd`]).
+    pub fn row_dot_simd(&self, row: usize, c: &[f64]) -> f64 {
+        assert_eq!(c.len(), self.cols);
+        assert!(row < self.rows);
+        self.mirror().row_gather_simd(row, c, 1.0, 0.0)
+    }
+
+    /// Pool-parallel multi-lane `Dᵀ w` (`--simd`): chunked like
+    /// [`CscMatrix::transpose_matvec_pool`] but each margin is a
+    /// [`CscMatrix::col_dot_simd`]. Same value at every thread count
+    /// (chunking never splits a column); differs from the serial kernel by
+    /// summation-order roundoff only.
+    pub fn transpose_matvec_pool_simd(&self, w: &[f64], out: &mut [f64], pool: &Pool) {
+        assert_eq!(w.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        pool.for_each_chunk(out, |start, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = self.col_dot_simd(start + j, w);
+            }
+        });
+    }
+
+    /// Pool-parallel multi-lane `D (scale·c)` (`--simd`): row-parallel
+    /// over the CSR mirror like
+    /// [`CscMatrix::matvec_accumulate_scaled_pool`], but gathering with
+    /// [`CsrMirror::row_gather_simd`] — and unlike the bit-exact kernel it
+    /// uses the mirror even at one thread, because the row gather is where
+    /// the lanes pay (the column scatter has no accumulator chain to
+    /// split). Same value at every thread count; tolerance vs serial.
+    pub fn matvec_accumulate_scaled_pool_simd(
+        &self,
+        c: &[f64],
+        scale: f64,
+        out: &mut [f64],
+        pool: &Pool,
+    ) {
+        assert_eq!(c.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        let m = self.mirror();
+        pool.for_each_chunk(out, |start, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = m.row_gather_simd(start + j, c, scale, *o);
+            }
+        });
     }
 
     /// Build (and cache) the CSR mirror now — drivers call this at setup
@@ -696,6 +809,78 @@ mod tests {
                 }
             }
             assert_eq!(m.dense_slab_f32(lo, hi), want, "slab [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn simd_reductions_match_serial_within_tolerance() {
+        // The `_simd` kernels reassociate sums, so they are pinned by
+        // tolerance rather than bits: |simd − serial| ≤ 1e-12·(1 + |serial|)
+        // is generous for the ~40-term sums here (the end-to-end contract
+        // lives in tests/kernel_exactness.rs).
+        let mut rng = crate::util::Pcg64::seed_from_u64(23);
+        let mut b = CooBuilder::new(80, 13);
+        for _ in 0..500 {
+            b.push(rng.below(80), rng.below(13), rng.range_f64(-1.0, 1.0));
+        }
+        let m = b.to_csc();
+        let w: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        let mut c: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
+        // zero coefficients exercise the skip the simd row gather drops
+        c[3] = 0.0;
+        c[7] = 0.0;
+        let close = |got: f64, want: f64| (got - want).abs() <= 1e-12 * (1.0 + want.abs());
+        for col in 0..13 {
+            assert!(close(m.col_dot_simd(col, &w), m.col_dot(col, &w)), "col {col}");
+        }
+        let mut dc_serial = vec![0.25; 80];
+        m.matvec_accumulate_scaled(&c, -0.5, &mut dc_serial);
+        for row in 0..80 {
+            assert!(close(m.row_dot_simd(row, &c), m.row_dot(row, &c)), "row {row}");
+        }
+        let mut dtw_serial = vec![0.0; 13];
+        m.transpose_matvec(&w, &mut dtw_serial);
+        for threads in [1usize, 2, 5] {
+            let pool = Pool::new(threads);
+            let mut dtw = vec![0.0; 13];
+            m.transpose_matvec_pool_simd(&w, &mut dtw, &pool);
+            for col in 0..13 {
+                assert!(close(dtw[col], dtw_serial[col]), "Dᵀw col {col} at k={threads}");
+            }
+            let mut dc = vec![0.25; 80];
+            m.matvec_accumulate_scaled_pool_simd(&c, -0.5, &mut dc, &pool);
+            for row in 0..80 {
+                assert!(close(dc[row], dc_serial[row]), "Dc row {row} at k={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_pool_kernels_are_thread_count_invariant() {
+        // chunking never splits a column/row, so the simd pool kernels must
+        // return the same bits at every thread count (only the serial-vs-
+        // simd delta is a tolerance; k is not a degree of freedom)
+        let mut rng = crate::util::Pcg64::seed_from_u64(24);
+        let mut b = CooBuilder::new(40, 11);
+        for _ in 0..200 {
+            b.push(rng.below(40), rng.below(11), rng.range_f64(-1.0, 1.0));
+        }
+        let m = b.to_csc();
+        let w: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..11).map(|_| rng.normal()).collect();
+        let one = Pool::new(1);
+        let mut dtw1 = vec![0.0; 11];
+        m.transpose_matvec_pool_simd(&w, &mut dtw1, &one);
+        let mut dc1 = vec![0.0; 40];
+        m.matvec_accumulate_scaled_pool_simd(&c, 1.0, &mut dc1, &one);
+        for threads in [3usize, 7] {
+            let pool = Pool::new(threads);
+            let mut dtw = vec![0.0; 11];
+            m.transpose_matvec_pool_simd(&w, &mut dtw, &pool);
+            assert_eq!(dtw, dtw1, "Dᵀw simd at k={threads}");
+            let mut dc = vec![0.0; 40];
+            m.matvec_accumulate_scaled_pool_simd(&c, 1.0, &mut dc, &pool);
+            assert_eq!(dc, dc1, "Dc simd at k={threads}");
         }
     }
 

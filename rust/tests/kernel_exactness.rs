@@ -8,6 +8,18 @@
 //! pinned **bit-identical** across `K ∈ {1, 2, 3, 8}` — kernel-level
 //! property tests on random matrices here, plus end-to-end runs for the
 //! distributed algorithms.
+//!
+//! The `--simd` fast path relaxes exactly one thing: reduction kernels
+//! split the accumulation chain into four lanes, which reassociates the
+//! sum. Its contract, pinned here: elementwise kernels (`axpy`/`axpby`,
+//! the `col_axpy` scatter) stay **bit-identical** — they perform the same
+//! multiply and add per element — while each reassociated reduction stays
+//! within `1e-12 · (1 + Σ|products|)` of the serial chain, and the
+//! end-to-end FD-SVRG trajectory stays within relative `1e-10` of the
+//! default run on the tiny pinned problem. The mixed-precision engine
+//! (`--engine mixed`) keeps the native engine's f32 kernels bit-identical
+//! and moves only the state to f64 masters; its end-to-end gap vs
+//! `--engine native` is bounded at relative `1e-3` (f32 rounding scale).
 
 use fdsvrg::algs::{Algorithm, Problem, RunParams};
 use fdsvrg::data::{generate, GenSpec};
@@ -83,6 +95,74 @@ fn csr_mirror_row_dots_match_csc_reference() {
                 "row {r} ({rows}x{cols})"
             );
         }
+    });
+}
+
+#[test]
+fn simd_reductions_stay_within_documented_tolerance() {
+    // the multi-lane kernels reassociate the sum, so the pin is the
+    // documented magnitude-aware bound: |simd − serial| ≤ 1e-12·(1 + Σ|pᵢ|)
+    // where the pᵢ are the summed products — loose enough for any lane
+    // count, tight enough to catch a wrong gather
+    check("simd reductions vs serial chain", 24, |g: &mut Gen| {
+        let rows = g.usize_in(1, 300);
+        let cols = g.usize_in(1, 90);
+        let nnz = g.usize_in(0, rows * cols / 3 + 1);
+        let m = g.sparse(rows, cols, nnz);
+        let w = g.vec_f64(rows, -3.0, 3.0);
+        let c: Vec<f64> = (0..cols).map(|_| if g.bool() { 0.0 } else { g.normal() }).collect();
+        for col in 0..cols {
+            let (ri, vs) = m.col(col);
+            let mag: f64 = ri.iter().zip(vs.iter()).map(|(&r, &v)| (w[r as usize] * v).abs()).sum();
+            let serial = m.col_dot(col, &w);
+            assert!(
+                (m.col_dot_simd(col, &w) - serial).abs() <= 1e-12 * (1.0 + mag),
+                "col {col} ({rows}x{cols})"
+            );
+        }
+        let mut scatter = vec![0.0f64; rows];
+        m.matvec_accumulate(&c, &mut scatter);
+        // Σ|products| per row is bounded by the crude global Σ|c|·max|v| —
+        // still 1e-12-scale here, and independent of the row
+        let mag: f64 = c.iter().map(|v| v.abs()).sum::<f64>() * vs_max(&m).max(1.0);
+        for r in 0..rows {
+            assert!(
+                (m.row_dot_simd(r, &c) - scatter[r]).abs() <= 1e-12 * (1.0 + mag),
+                "row {r} ({rows}x{cols})"
+            );
+        }
+    });
+}
+
+fn vs_max(m: &fdsvrg::sparse::CscMatrix) -> f64 {
+    (0..m.cols())
+        .flat_map(|c| m.col(c).1.iter().map(|v| v.abs()).collect::<Vec<_>>())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn simd_elementwise_kernels_are_bit_identical() {
+    // axpy/axpby auto-dispatch to AVX2 lanes; per element the vector path
+    // runs the identical mul + add, so the dispatch must be invisible
+    check("simd elementwise bit pins", 24, |g: &mut Gen| {
+        let n = g.usize_in(0, 200);
+        let x = g.vec_f64(n, -3.0, 3.0);
+        let y0 = g.vec_f64(n, -3.0, 3.0);
+        let (alpha, beta) = (g.normal(), g.normal());
+        let mut fast = y0.clone();
+        fdsvrg::linalg::axpy(alpha, &x, &mut fast);
+        let mut scalar = y0.clone();
+        for (yi, xi) in scalar.iter_mut().zip(x.iter()) {
+            *yi += alpha * *xi;
+        }
+        assert_eq!(bits(&fast), bits(&scalar), "axpy n={n}");
+        let mut fast = y0.clone();
+        fdsvrg::linalg::axpby(alpha, &x, beta, &mut fast);
+        let mut scalar = y0;
+        for (yi, xi) in scalar.iter_mut().zip(x.iter()) {
+            *yi = beta * *yi + alpha * *xi;
+        }
+        assert_eq!(bits(&fast), bits(&scalar), "axpby n={n}");
     });
 }
 
@@ -166,6 +246,55 @@ fn serial_svrg_driver_is_thread_count_invariant() {
         let threaded = run_with_threads(Algorithm::SerialSvrg, &p, k, false);
         assert_eq!(bits(&serial.w), bits(&threaded.w), "serial-svrg k={k}");
     }
+}
+
+#[test]
+fn fdsvrg_simd_is_thread_count_invariant_and_tracks_default() {
+    // --simd chunks identically to the exact kernels (never splits a
+    // column/row), so the fast path is itself pinned bit-identical across
+    // thread counts; vs the default path the gap is reassociation roundoff
+    // only, bounded at relative 1e-10 on the pinned tiny problem
+    let p = tiny();
+    let base = RunParams {
+        q: 3,
+        outer: 3,
+        batch: 4,
+        simd: true,
+        sim: SimParams::free(),
+        ..Default::default()
+    };
+    let simd1 = Algorithm::FdSvrg.run(&p, &RunParams { threads: 1, ..base.clone() });
+    for k in THREAD_SWEEP {
+        let simdk = Algorithm::FdSvrg.run(&p, &RunParams { threads: k, ..base.clone() });
+        assert_identical_runs(&simd1, &simdk, &format!("fdsvrg-simd k={k}"));
+    }
+    let default = Algorithm::FdSvrg.run(&p, &RunParams { simd: false, ..base });
+    assert_eq!(default.total_scalars, simd1.total_scalars, "simd must not touch traffic");
+    assert_eq!(default.total_bytes, simd1.total_bytes);
+    let rel = fdsvrg::linalg::dist2(&default.w, &simd1.w)
+        / (1.0 + fdsvrg::linalg::nrm2(&default.w).powi(2));
+    assert!(rel < 1e-10, "simd vs default relative dist2 {rel:.3e}");
+}
+
+#[test]
+fn mixed_engine_trajectory_gap_is_bounded() {
+    // --engine mixed runs the same f32 kernels against f64 master weights:
+    // identical schedule and counters, trajectory within f32 rounding
+    // scale (relative 1e-3 — the stated bound) of --engine native
+    let ds = generate(&GenSpec::new("kxmix", 300, 600, 20).with_seed(8));
+    let p = Problem::logistic_l2(ds, 1e-3);
+    let params = RunParams { outer: 3, sim: SimParams::free(), ..Default::default() };
+    let native = Algorithm::FdSvrg
+        .run_blocked(&p, &params, &fdsvrg::runtime::NativeEngine::new())
+        .unwrap();
+    let mixed = Algorithm::FdSvrg
+        .run_blocked(&p, &params, &fdsvrg::runtime::MixedEngine::new())
+        .unwrap();
+    assert_eq!(native.total_scalars, mixed.total_scalars);
+    assert_eq!(native.total_bytes, mixed.total_bytes);
+    let rel = fdsvrg::linalg::dist2(&native.w, &mixed.w)
+        / (1.0 + fdsvrg::linalg::nrm2(&native.w).powi(2));
+    assert!(rel < 1e-3, "mixed vs native relative dist2 {rel:.3e}");
 }
 
 #[test]
