@@ -189,6 +189,16 @@ pub struct RunParams {
     /// can rebuild the identical problem + params (`None` under sim; the
     /// CLI fills it in for `--transport tcp`).
     pub worker_spec: Option<Arc<String>>,
+    /// Seeded fault plan (`--faults`, `run.faults`): installed on every
+    /// sim endpoint at spawn, driving per-link drop/dup/reorder delays,
+    /// scheduled crashes (with automatic recovery) and partitions. `None`
+    /// (the default) keeps the message plane untouched — bit-exact with
+    /// every pinned suite.
+    pub faults: Option<Arc<crate::net::fault::FaultPlan>>,
+    /// TCP rendezvous deadline, seconds (`--rendezvous-timeout`): how long
+    /// the monitor waits for all workers to dial in, and the budget a
+    /// worker's dial retry loop honours.
+    pub rendezvous_secs: f64,
 }
 
 impl Default for RunParams {
@@ -213,6 +223,8 @@ impl Default for RunParams {
             simd: false,
             transport: TransportKind::Sim,
             worker_spec: None,
+            faults: None,
+            rendezvous_secs: crate::net::transport::tcp::DEFAULT_RENDEZVOUS_SECS,
         }
     }
 }
@@ -420,7 +432,7 @@ impl Algorithm {
         params: &RunParams,
         resume: Option<crate::session::ResumeState>,
     ) -> anyhow::Result<crate::session::cluster::ClusterDriver> {
-        match self {
+        let driver = match self {
             Algorithm::FdSvrg => fdsvrg::driver(problem, params, resume),
             Algorithm::FdSgd => fdsgd::driver(problem, params, resume),
             Algorithm::FdSaga => fdsaga::driver(problem, params, resume),
@@ -432,7 +444,16 @@ impl Algorithm {
             Algorithm::SerialSvrg | Algorithm::SerialSgd => {
                 anyhow::bail!("{} is a serial algorithm: no cluster driver", self.name())
             }
-        }
+        }?;
+        anyhow::ensure!(
+            params.faults.is_none() || params.transport == TransportKind::Sim,
+            "--faults requires the sim transport (fault injection over tcp is not wired yet)"
+        );
+        // Asynchronous algorithms absorb a crash from the latest epoch
+        // boundary; the synchronous ones barrier-and-restart from the
+        // newest durable snapshot.
+        let async_recovery = matches!(self, Algorithm::AsySvrg | Algorithm::PsLiteSgd);
+        driver.with_faults(params.faults.clone(), async_recovery)
     }
 
     /// Build the steppable [`crate::session::Driver`] for this algorithm
@@ -463,7 +484,7 @@ impl Algorithm {
                                 "--transport tcp requires a worker spec (the CLI builds one)"
                             )
                         })?;
-                        Box::new(driver.processes(spec))
+                        Box::new(driver.processes(spec, params.rendezvous_secs))
                     }
                 }
             }

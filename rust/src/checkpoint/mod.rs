@@ -59,7 +59,7 @@ use crate::net::{ClockState, NodeComm, WireFmt};
 use crate::session::{NodeState, ResumeState, SessionState};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"FDSVRGCK";
 const VERSION: u32 = 1;
@@ -83,18 +83,35 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Check magic + CRC; returns the CRC-covered body slice.
+/// Check magic + CRC; returns the CRC-covered body slice. Every failure
+/// names the offset and the expected-vs-got bytes so a corrupted file is
+/// diagnosable from the error alone.
 fn verify_envelope(bytes: &[u8]) -> Result<&[u8]> {
     if bytes.len() < MAGIC.len() + 12 + 8 {
-        bail!("checkpoint too short ({} bytes)", bytes.len());
+        bail!(
+            "checkpoint truncated: {} bytes, but even an empty checkpoint needs {} \
+             (8-byte magic + version + dim + 8-byte CRC trailer)",
+            bytes.len(),
+            MAGIC.len() + 12 + 8
+        );
     }
     if &bytes[..8] != MAGIC {
-        bail!("bad checkpoint magic");
+        bail!(
+            "bad checkpoint magic at offset 0: expected {:02x?} ({:?}), got {:02x?}",
+            MAGIC,
+            std::str::from_utf8(MAGIC).unwrap(),
+            &bytes[..8]
+        );
     }
     let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
     let want = u64::from_le_bytes(crc_bytes.try_into().unwrap());
-    if want != fnv1a(body) {
-        bail!("checkpoint CRC mismatch (corrupted file)");
+    let got = fnv1a(body);
+    if want != got {
+        bail!(
+            "checkpoint CRC mismatch: trailer at offset {} says {want:#018x}, \
+             body hashes to {got:#018x} — the file is corrupted",
+            body.len()
+        );
     }
     Ok(body)
 }
@@ -104,34 +121,42 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn get_u32(bytes: &[u8], at: &mut usize) -> Result<u32> {
-    let end = *at + 4;
-    if end > bytes.len() {
-        bail!("truncated checkpoint");
-    }
-    let v = u32::from_le_bytes(bytes[*at..end].try_into().unwrap());
+/// Checked cursor advance: `need` bytes at `*at`, or a loud error naming
+/// the offset, the field and the expected-vs-got byte counts. All reader
+/// arithmetic goes through here so an adversarial length field can
+/// neither wrap the cursor nor trigger an allocation/slice panic.
+fn take<'a>(bytes: &'a [u8], at: &mut usize, need: usize, what: &str) -> Result<&'a [u8]> {
+    let end = at
+        .checked_add(need)
+        .filter(|&end| end <= bytes.len())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "truncated checkpoint: {what} at offset {} needs {need} bytes, \
+                 but only {} of {} remain",
+                *at,
+                bytes.len().saturating_sub(*at),
+                bytes.len()
+            )
+        })?;
+    let slice = &bytes[*at..end];
     *at = end;
-    Ok(v)
+    Ok(slice)
+}
+
+fn get_u32(bytes: &[u8], at: &mut usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(bytes, at, 4, "u32 field")?.try_into().unwrap()))
 }
 
 fn get_u64(bytes: &[u8], at: &mut usize) -> Result<u64> {
-    let end = *at + 8;
-    if end > bytes.len() {
-        bail!("truncated checkpoint");
-    }
-    let v = u64::from_le_bytes(bytes[*at..end].try_into().unwrap());
-    *at = end;
-    Ok(v)
+    Ok(u64::from_le_bytes(take(bytes, at, 8, "u64 field")?.try_into().unwrap()))
 }
 
 fn get_str(bytes: &[u8], at: &mut usize) -> Result<String> {
     let len = get_u32(bytes, at)? as usize;
-    let end = *at + len;
-    if end > bytes.len() {
-        bail!("truncated checkpoint string");
-    }
-    let s = std::str::from_utf8(&bytes[*at..end]).context("checkpoint string not utf-8")?;
-    *at = end;
+    let start = *at;
+    let raw = take(bytes, at, len, "string")?;
+    let s = std::str::from_utf8(raw)
+        .with_context(|| format!("checkpoint string at offset {start} is not utf-8"))?;
     Ok(s.to_string())
 }
 
@@ -140,24 +165,20 @@ fn get_f64(bytes: &[u8], at: &mut usize) -> Result<f64> {
 }
 
 fn get_u8(bytes: &[u8], at: &mut usize) -> Result<u8> {
-    if *at >= bytes.len() {
-        bail!("truncated checkpoint");
-    }
-    let v = bytes[*at];
-    *at += 1;
-    Ok(v)
+    Ok(take(bytes, at, 1, "u8 field")?[0])
 }
 
 fn get_f64_vec(bytes: &[u8], at: &mut usize, len: usize) -> Result<Vec<f64>> {
-    let end = *at + 8 * len;
-    if end > bytes.len() {
-        bail!("truncated checkpoint vector");
-    }
-    let v = bytes[*at..end]
+    let need = len.checked_mul(8).ok_or_else(|| {
+        anyhow::anyhow!(
+            "corrupt checkpoint: vector length {len} at offset {} overflows the file size",
+            *at
+        )
+    })?;
+    let v = take(bytes, at, need, "f64 vector")?
         .chunks_exact(8)
         .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
         .collect();
-    *at = end;
     Ok(v)
 }
 
@@ -221,8 +242,14 @@ impl Checkpoint {
         let algorithm = get_str(bytes, &mut at)?;
         let dataset = get_str(bytes, &mut at)?;
         let lambda = f64::from_bits(get_u64(bytes, &mut at)?);
-        if version == VERSION && body.len() - at != 8 * d {
-            bail!("checkpoint dim {d} disagrees with payload");
+        if version == VERSION && d.checked_mul(8).and_then(|n| at.checked_add(n)) != Some(body.len())
+        {
+            bail!(
+                "checkpoint dim {d} disagrees with payload: {} bytes follow the header at \
+                 offset {at}, expected {}",
+                body.len().saturating_sub(at),
+                d.saturating_mul(8)
+            );
         }
         let w = get_f64_vec(bytes, &mut at, d)?;
         Ok(Checkpoint { algorithm, dataset, lambda, w })
@@ -423,7 +450,12 @@ impl SessionCheckpoint {
             nodes.push(NodeState { rng, jitter, clock, extra });
         }
         if at != body.len() {
-            bail!("session checkpoint has {} trailing bytes", body.len() - at);
+            bail!(
+                "session checkpoint layout error: parser stopped at offset {at}, but the \
+                 CRC-covered body ends at offset {} ({} bytes unaccounted for)",
+                body.len(),
+                body.len().abs_diff(at)
+            );
         }
         Ok(SessionCheckpoint {
             state: SessionState {
@@ -454,6 +486,93 @@ impl SessionCheckpoint {
             .read_to_end(&mut bytes)?;
         SessionCheckpoint::from_bytes(&bytes)
             .with_context(|| format!("parse {}", path.as_ref().display()))
+    }
+}
+
+/// Directory-backed rolling store of the last-k session snapshots
+/// (`ck-<epoch>.ckpt`, v2 format). This is what crash recovery respawns
+/// from: the session layer appends a snapshot per epoch (or every n-th),
+/// old snapshots are pruned, and [`CheckpointStore::latest`] hands back
+/// the newest snapshot that still *verifies* — a corrupted or truncated
+/// file is skipped with a warning, never trusted and never a panic, so a
+/// torn write during a crash costs one epoch of rollback, not the run.
+#[derive(Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a snapshot directory keeping the last
+    /// `keep` snapshots.
+    pub fn new<P: AsRef<Path>>(dir: P, keep: usize) -> Result<CheckpointStore> {
+        if keep == 0 {
+            bail!("checkpoint store must keep at least 1 snapshot");
+        }
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create checkpoint store {}", dir.display()))?;
+        Ok(CheckpointStore { dir, keep })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn snapshot_path(&self, epoch: usize) -> PathBuf {
+        self.dir.join(format!("ck-{epoch:08}.ckpt"))
+    }
+
+    /// Epochs with a snapshot on disk, ascending (existence only — a
+    /// listed snapshot may still fail verification when loaded).
+    pub fn epochs(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(num) = name.strip_prefix("ck-").and_then(|s| s.strip_suffix(".ckpt")) {
+                if let Ok(epoch) = num.parse::<usize>() {
+                    out.push(epoch);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Persist one snapshot and prune beyond the last `keep`.
+    pub fn save(&self, ck: &SessionCheckpoint) -> Result<PathBuf> {
+        let path = self.snapshot_path(ck.state.resume.epoch);
+        ck.save(&path)?;
+        let epochs = self.epochs();
+        if epochs.len() > self.keep {
+            for &old in &epochs[..epochs.len() - self.keep] {
+                std::fs::remove_file(self.snapshot_path(old)).ok();
+            }
+        }
+        Ok(path)
+    }
+
+    /// The newest snapshot that verifies (magic + CRC + full parse),
+    /// newest-first. Corrupt snapshots are skipped with a warning on
+    /// stderr; `None` when nothing on disk verifies.
+    pub fn latest(&self) -> Option<SessionCheckpoint> {
+        for epoch in self.epochs().into_iter().rev() {
+            let path = self.snapshot_path(epoch);
+            match SessionCheckpoint::load(&path) {
+                Ok(ck) => return Some(ck),
+                Err(e) => {
+                    crate::util::logger::log(
+                        crate::util::logger::Level::Warn,
+                        format_args!("skipping unreadable snapshot {}: {e:#}", path.display()),
+                    );
+                }
+            }
+        }
+        None
     }
 }
 
@@ -625,5 +744,137 @@ mod tests {
         // a v1 file is not a session snapshot
         let err = SessionCheckpoint::from_bytes(&demo().to_bytes()).unwrap_err();
         assert!(format!("{err}").contains("version 1"), "{err}");
+    }
+
+    // ---- adversarial-bytes hardening ------------------------------------
+    //
+    // Corrupt files must fail with a contextual error (offset, expected vs
+    // got), never a panic — even when the CRC trailer has been recomputed
+    // to match the damaged body.
+
+    /// Re-seal a tampered body with a fresh CRC so corruption survives
+    /// `verify_envelope` and exercises the field parsers themselves.
+    fn reseal(mut bytes: Vec<u8>) -> Vec<u8> {
+        let body_len = bytes.len() - 8;
+        let crc = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn crc_error_reports_expected_and_got() {
+        let mut bytes = demo().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01; // single bit flip
+        let err = format!("{}", Checkpoint::from_bytes(&bytes).unwrap_err());
+        assert!(err.contains("CRC mismatch"), "{err}");
+        assert!(err.contains("0x"), "must show both checksums: {err}");
+        assert!(err.contains("offset"), "must locate the trailer: {err}");
+    }
+
+    #[test]
+    fn truncation_error_names_offset_and_counts() {
+        let bytes = demo().to_bytes();
+        // cut mid-weights, then reseal so the envelope verifies and the
+        // truncation is caught by the field readers
+        let cut = reseal(bytes[..bytes.len() - 17].to_vec());
+        let err = format!("{}", Checkpoint::from_bytes(&cut).unwrap_err());
+        assert!(err.contains("offset"), "must name the failing offset: {err}");
+        assert!(err.contains("needs") || err.contains("disagrees"), "{err}");
+    }
+
+    #[test]
+    fn absurd_vector_length_fails_without_allocating() {
+        // overwrite the v2 dim field (offset 12) with u64::MAX: the parser
+        // must error on the length, not attempt a 2^64-element allocation
+        // or wrap the cursor
+        let mut bytes = demo_session().to_bytes();
+        bytes[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = format!("{}", SessionCheckpoint::from_bytes(&reseal(bytes)).unwrap_err());
+        assert!(
+            err.contains("overflows") || err.contains("needs"),
+            "huge length must fail loudly: {err}"
+        );
+    }
+
+    #[test]
+    fn oversized_string_length_is_an_error_not_a_panic() {
+        // the algo-string length field sits right after the dim (offset 20
+        // in a v2 file); make it claim more bytes than the file holds
+        let mut bytes = demo_session().to_bytes();
+        bytes[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = format!("{}", SessionCheckpoint::from_bytes(&reseal(bytes)).unwrap_err());
+        assert!(err.contains("offset") && err.contains("needs"), "{err}");
+    }
+
+    #[test]
+    fn every_single_byte_truncation_errors_cleanly() {
+        // no prefix of a valid file may panic, whatever the cut point
+        let bytes = demo_session().to_bytes();
+        for len in 0..bytes.len() {
+            assert!(
+                SessionCheckpoint::from_bytes(&bytes[..len]).is_err(),
+                "prefix of {len} bytes must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn every_byte_flip_is_detected_or_roundtrips() {
+        // flipping any single body byte must either fail loudly (CRC) or —
+        // never — be silently accepted; step 7 keeps the test fast
+        let bytes = demo_session().to_bytes();
+        for i in (0..bytes.len() - 8).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xff;
+            assert!(
+                SessionCheckpoint::from_bytes(&bad).is_err(),
+                "flip at byte {i} must be caught by the CRC"
+            );
+        }
+    }
+
+    // ---- checkpoint store -----------------------------------------------
+
+    fn session_at_epoch(epoch: usize) -> SessionCheckpoint {
+        let mut ck = demo_session();
+        ck.state.resume.epoch = epoch;
+        ck
+    }
+
+    #[test]
+    fn store_keeps_last_k_and_serves_newest() {
+        let dir = std::env::temp_dir().join("fdsvrg_ckpt_store_rotation");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 3).unwrap();
+        for epoch in 1..=6 {
+            store.save(&session_at_epoch(epoch)).unwrap();
+        }
+        assert_eq!(store.epochs(), vec![4, 5, 6], "last-3 rotation");
+        assert_eq!(store.latest().unwrap().state.resume.epoch, 6);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn store_latest_skips_corrupt_snapshots() {
+        let dir = std::env::temp_dir().join("fdsvrg_ckpt_store_corrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::new(&dir, 4).unwrap();
+        store.save(&session_at_epoch(1)).unwrap();
+        let newest = store.save(&session_at_epoch(2)).unwrap();
+        // damage the newest snapshot (torn write during a crash)
+        let mut bytes = std::fs::read(&newest).unwrap();
+        bytes.truncate(bytes.len() / 2);
+        std::fs::write(&newest, bytes).unwrap();
+        let got = store.latest().expect("older snapshot must still verify");
+        assert_eq!(got.state.resume.epoch, 1, "corrupt newest is skipped");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn store_rejects_keep_zero() {
+        let dir = std::env::temp_dir().join("fdsvrg_ckpt_store_zero");
+        assert!(CheckpointStore::new(&dir, 0).is_err());
+        std::fs::remove_dir_all(dir).ok();
     }
 }

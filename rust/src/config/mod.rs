@@ -224,6 +224,16 @@ pub struct ExperimentConfig {
     /// `--transport`): in-memory mailboxes (default) or localhost sockets
     /// with one OS process per node.
     pub transport: String,
+    /// Seeded fault-injection spec (`run.faults`, CLI `--faults`):
+    /// comma-separated clauses `crash:<node>@<t>`, `drop:<p>`, `dup:<p>`,
+    /// `reorder:<p>`, `partition:<a>+<b>@<t1>-<t2>`, `seed:<u64>`. Empty
+    /// (the default) or `"none"` disables the fault plane entirely — a
+    /// provable identity.
+    pub faults: String,
+    /// TCP rendezvous deadline, seconds (`run.rendezvous_timeout`, CLI
+    /// `--rendezvous-timeout`): how long the monitor waits for all worker
+    /// processes to dial in before failing the launch.
+    pub rendezvous_timeout: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -265,6 +275,8 @@ impl Default for ExperimentConfig {
             jitter_amp: 200e-6,
             jitter_seed: 20177,
             transport: "sim".into(),
+            faults: String::new(),
+            rendezvous_timeout: crate::net::transport::tcp::DEFAULT_RENDEZVOUS_SECS,
         }
     }
 }
@@ -327,6 +339,8 @@ impl ExperimentConfig {
             jitter_amp: cfg.f64_or("net.jitter_amp", d.jitter_amp),
             jitter_seed: cfg.usize_or("net.jitter_seed", d.jitter_seed as usize) as u64,
             transport: cfg.str_or("run.transport", &d.transport).to_string(),
+            faults: cfg.str_or("run.faults", &d.faults).to_string(),
+            rendezvous_timeout: cfg.f64_or("run.rendezvous_timeout", d.rendezvous_timeout),
         }
     }
 
@@ -393,6 +407,9 @@ impl ExperimentConfig {
             transport: crate::net::TransportKind::parse_or_err(&self.transport)
                 .unwrap_or_else(|e| panic!("run.transport: {e}")),
             worker_spec: None,
+            faults: crate::net::fault::FaultPlan::parse(&self.faults, self.seed)
+                .unwrap_or_else(|e| panic!("run.faults: {e}")),
+            rendezvous_secs: self.rendezvous_timeout,
         }
     }
 
@@ -423,6 +440,7 @@ impl ExperimentConfig {
             format!("simd = {}", self.simd),
             format!("test_frac = {test_frac}"),
             format!("star = {star}"),
+            format!("rendezvous_timeout = {}", self.rendezvous_timeout),
             "[net]".to_string(),
             format!("latency = {}", self.latency),
             format!("per_msg = {}", self.per_msg),
@@ -639,6 +657,26 @@ latency = 5e-5
         assert!(c.bool_or("run.star", false));
         // a worker never re-enters the process launcher
         assert_eq!(back.transport, "sim");
+    }
+
+    #[test]
+    fn faults_and_rendezvous_parse_from_config_and_default_off() {
+        let e = ExperimentConfig::from_config(&Config::parse("").unwrap());
+        assert!(e.faults.is_empty(), "fault plane defaults off");
+        assert!(e.run_params().faults.is_none(), "empty spec must build no plan");
+        assert_eq!(e.rendezvous_timeout, crate::net::transport::tcp::DEFAULT_RENDEZVOUS_SECS);
+        let c = Config::parse(
+            "[run]\nfaults = \"drop:0.1,crash:2@0.5\"\nrendezvous_timeout = 7.5\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_config(&c);
+        assert_eq!(e.faults, "drop:0.1,crash:2@0.5");
+        assert_eq!(e.rendezvous_timeout, 7.5);
+        let p = e.run_params();
+        assert_eq!(p.rendezvous_secs, 7.5);
+        let plan = p.faults.expect("spec with clauses must build a plan");
+        assert_eq!(plan.spec(), "drop:0.1,crash:2@0.5");
+        assert_eq!(plan.crashes().len(), 1);
     }
 
     #[test]

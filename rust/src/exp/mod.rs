@@ -651,6 +651,238 @@ pub fn calibrate(ctx: &Ctx) -> Result<Vec<(String, f64, f64, u64, u64)>> {
     Ok(rows)
 }
 
+/// One `exp faults` measurement: a (profile, algorithm, scenario) cell.
+#[derive(Clone, Debug)]
+pub struct FaultRow {
+    pub profile: String,
+    pub algorithm: &'static str,
+    pub scenario: &'static str,
+    pub spec: String,
+    pub sim_time: f64,
+    pub baseline_sim_time: f64,
+    /// Relative sim-time overhead vs the failure-free baseline.
+    pub overhead: f64,
+    pub final_gap: f64,
+    pub stats: crate::net::fault::FaultStats,
+    /// Final `w` bit-identical to the failure-free run (sync algorithms:
+    /// link faults reshape time only, and crash recovery replays to the
+    /// same state; AsySVRG races by design, so `false` is expected there).
+    pub bit_exact: bool,
+    /// `(epoch, objective, sim_time)` per reported boundary. A recovered
+    /// run repeats the replayed epoch numbers — the restart penalty is
+    /// visible in the trajectory, by design.
+    pub trajectory: Vec<(usize, f64, f64)>,
+}
+
+/// `exp faults`: the fault-tolerance measurement of DESIGN.md's fault
+/// plane. Every distributed algorithm runs on `url-sim`/`news20-sim`
+/// under a failure-free baseline and four seeded fault scenarios — lossy
+/// links, a composite link-noise mix, a mid-run worker crash with
+/// automatic recovery, and a healing partition — and the report holds the
+/// fault runs against the baseline: recovery counts, rolled-back sim
+/// time, sim-time overhead, and whether the final iterate stayed
+/// bit-identical (it must, for the synchronous algorithms). The crash
+/// column is the paper-relevant contrast: the synchronous algorithms
+/// (FD-SVRG, DSVRG, SynSVRG) barrier-and-restart from the last epoch
+/// boundary, while AsySVRG absorbs the loss and keeps going. Everything
+/// lands in `BENCH_faults.json` (trajectories included) next to the
+/// printed tables.
+pub fn faults(ctx: &Ctx) -> Result<Vec<FaultRow>> {
+    use crate::net::fault::FaultPlan;
+    let mut rows: Vec<FaultRow> = Vec::new();
+    // `--quick` (CI) smokes the whole matrix on the tiny profile; the
+    // full run measures the paper profiles at their paper worker counts.
+    let quick = ctx.scale < 1.0;
+    let profile_list: &[&str] = if quick { &["tiny"] } else { &["url-sim", "news20-sim"] };
+    for &profile in profile_list {
+        let q = if quick { 4 } else { profiles::paper_worker_count(profile) };
+        let problem = ctx.problem(profile, ctx.cfg.lambda)?;
+        let (_, f_opt) = ctx.optimum(&problem);
+        let mut table = TextTable::new(vec![
+            "algorithm",
+            "scenario",
+            "sim time (s)",
+            "overhead",
+            "recoveries",
+            "lost sim (s)",
+            "drops",
+            "holds",
+            "final gap",
+            "bit-exact",
+        ]);
+        println!("== Faults :: {profile} (q={q}, λ={:.0e}) ==", ctx.cfg.lambda);
+        for algo in Algorithm::ALL_DISTRIBUTED {
+            let mut params = ctx.base_params(q);
+            let ps = matches!(algo, Algorithm::SynSvrg | Algorithm::AsySvrg);
+            let budget = if ps {
+                ((default_epochs(algo) as f64) * ctx.ps_scale).round() as usize
+            } else {
+                default_epochs(algo) / 3
+            };
+            params.outer = ctx.epochs(budget);
+            // Failure-free baseline: no stop policies beyond the epoch
+            // budget, so every scenario runs the identical workload and
+            // the sim-time ratio is meaningful.
+            let base = run_and_save(
+                ctx,
+                &problem,
+                algo,
+                &params,
+                &[],
+                f_opt,
+                &format!("faults_{profile}_none"),
+            );
+            let t_base = base.total_sim_time;
+            rows.push(FaultRow {
+                profile: profile.to_string(),
+                algorithm: algo.name(),
+                scenario: "none",
+                spec: String::new(),
+                sim_time: t_base,
+                baseline_sim_time: t_base,
+                overhead: 0.0,
+                final_gap: base.final_objective() - f_opt,
+                stats: Default::default(),
+                bit_exact: true,
+                trajectory: base
+                    .trace
+                    .points
+                    .iter()
+                    .map(|p| (p.outer, p.objective, p.sim_time))
+                    .collect(),
+            });
+            // Scenario schedule derived from the baseline's sim time, so
+            // the crash lands mid-run and the partition window is inside
+            // the run on every (profile, algorithm) cell.
+            let scenarios: [(&'static str, String); 4] = [
+                ("drop", "drop:0.05".to_string()),
+                ("linknoise", "drop:0.03,dup:0.03,reorder:0.2".to_string()),
+                ("crash", format!("crash:2@{}", 0.5 * t_base)),
+                (
+                    "partition",
+                    format!("partition:1+2@{}-{}", 0.2 * t_base, 0.45 * t_base),
+                ),
+            ];
+            for (scenario, spec) in &scenarios {
+                let plan = FaultPlan::parse(spec, params.seed)
+                    .map_err(anyhow::Error::msg)?
+                    .expect("non-empty fault spec");
+                let mut fp = params.clone();
+                fp.faults = Some(plan.clone());
+                let res = run_and_save(
+                    ctx,
+                    &problem,
+                    algo,
+                    &fp,
+                    &[],
+                    f_opt,
+                    &format!("faults_{profile}_{scenario}"),
+                );
+                let stats = plan.stats();
+                let bit_exact = res.w.len() == base.w.len()
+                    && res
+                        .w
+                        .iter()
+                        .zip(base.w.iter())
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                rows.push(FaultRow {
+                    profile: profile.to_string(),
+                    algorithm: algo.name(),
+                    scenario: *scenario,
+                    spec: spec.clone(),
+                    sim_time: res.total_sim_time,
+                    baseline_sim_time: t_base,
+                    overhead: res.total_sim_time / t_base.max(1e-12) - 1.0,
+                    final_gap: res.final_objective() - f_opt,
+                    stats,
+                    bit_exact,
+                    trajectory: res
+                        .trace
+                        .points
+                        .iter()
+                        .map(|p| (p.outer, p.objective, p.sim_time))
+                        .collect(),
+                });
+            }
+            for row in rows.iter().rev().take(scenarios.len() + 1).collect::<Vec<_>>().into_iter().rev()
+            {
+                let exact_cell = if matches!(algo, Algorithm::AsySvrg) && row.scenario != "none"
+                {
+                    if row.bit_exact { "yes" } else { "races" }
+                } else if row.bit_exact {
+                    "yes"
+                } else {
+                    "NO"
+                };
+                table.row(vec![
+                    row.algorithm.to_string(),
+                    row.scenario.to_string(),
+                    format!("{:.4}", row.sim_time),
+                    format!("{:+.1}%", 100.0 * row.overhead),
+                    format!("{}", row.stats.recoveries),
+                    format!("{:.4}", row.stats.lost_sim_time),
+                    format!("{}", row.stats.drops),
+                    format!("{}", row.stats.partition_holds),
+                    format!("{:.3e}", row.final_gap),
+                    exact_cell.to_string(),
+                ]);
+            }
+        }
+        println!("{}", table.render());
+    }
+    write_faults_json(ctx, &rows)?;
+    Ok(rows)
+}
+
+/// Hand-rolled JSON for `BENCH_faults.json` — deliberately separate from
+/// [`crate::metrics::json::run_result_to_json`], whose byte layout is
+/// pinned by a golden test.
+fn write_faults_json(ctx: &Ctx, rows: &[FaultRow]) -> Result<()> {
+    fn esc(s: &str) -> String {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    }
+    let mut out = String::from("{\n  \"experiment\": \"faults\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let trajectory: Vec<String> = r
+            .trajectory
+            .iter()
+            .map(|(e, obj, t)| format!("[{e}, {obj}, {t}]"))
+            .collect();
+        out.push_str(&format!(
+            "    {{\"profile\": \"{}\", \"algorithm\": \"{}\", \"scenario\": \"{}\", \
+             \"spec\": \"{}\", \"sim_time\": {}, \"baseline_sim_time\": {}, \
+             \"overhead\": {}, \"final_gap\": {}, \"recoveries\": {}, \
+             \"lost_sim_time\": {}, \"drops\": {}, \"dups\": {}, \"reorders\": {}, \
+             \"partition_holds\": {}, \"crashes\": {}, \"bit_exact\": {}, \
+             \"trajectory\": [{}]}}{}\n",
+            esc(&r.profile),
+            r.algorithm,
+            r.scenario,
+            esc(&r.spec),
+            r.sim_time,
+            r.baseline_sim_time,
+            r.overhead,
+            r.final_gap,
+            r.stats.recoveries,
+            r.stats.lost_sim_time,
+            r.stats.drops,
+            r.stats.dups,
+            r.stats.reorders,
+            r.stats.partition_holds,
+            r.stats.crashes,
+            r.bit_exact,
+            trajectory.join(", "),
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let path = ctx.out_dir.join("BENCH_faults.json");
+    std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
+    println!("fault report written to {}", path.display());
+    Ok(())
+}
+
 /// Table 1: dataset statistics of the `-sim` profiles.
 pub fn table1() -> Result<()> {
     let mut table =

@@ -4,7 +4,7 @@
 //! fdsvrg train --algo fdsvrg --dataset webspam-sim --q 16 [--lambda 1e-4]
 //!              [--eta 0.x] [--outer 30] [--batch u] [--servers p]
 //!              [--config exp.toml] [--out results] [--star] [--transport sim|tcp]
-//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|all> [--out results] [--quick]
+//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
 //! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
@@ -83,6 +83,23 @@ const USAGE: &str = "usage:
                one OS process per node, same algorithms and wire codecs,
                real socket bytes and wall-clock reported next to the
                model's predictions; native engine only, no --resume/--ckpt)
+               [--rendezvous-timeout S]   (tcp only: seconds the monitor
+               waits for worker processes to dial in, and the budget each
+               worker's bounded dial-retry loop honours; default 30)
+               [--faults SPEC]   (seeded fault plan for the sim transport:
+               comma-separated clauses  crash:<node>@<t>  drop:<p>
+               dup:<p>  reorder:<p>  partition:<a>+<b>@<t1>-<t2>
+               seed:<u64>.
+               Link faults reshape simulated time only (drop = retransmit
+               after an RTO, dup = extra NIC charge, reorder = extra link
+               latency, partition = cross-cut traffic deferred to heal
+               time) so the trajectory stays bit-identical; crash kills
+               the node at sim-time t and the session respawns the
+               cluster from its last checkpoint (give --ckpt to get
+               durable snapshots; otherwise recovery replays from the
+               last epoch boundary). Decisions derive from seed:<u64>
+               (default: the run seed), so reruns are bit-identical;
+               node 0 is the monitor and cannot be crashed)
                [--ckpt file --save-every K]   (write a v2 session checkpoint
                every K epochs; resumable mid-run snapshot)
                [--resume file]   (continue a run from a v2 session
@@ -91,12 +108,16 @@ const USAGE: &str = "usage:
   fdsvrg predict --ckpt file [--dataset profile|path.libsvm]
                (inference from a checkpoint of either version: v1 final
                weights or a v2 session snapshot)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|all> [--out dir] [--quick]
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|all> [--out dir] [--quick]
                (compress: gap vs wire bytes vs sim time for the top-k /
                threshold gradient sparsifiers across the distributed
                algorithms; calibrate: run the distributed algorithms under
                the sim transport and again over real localhost sockets, and
-               report predicted vs measured bytes and time per algorithm)
+               report predicted vs measured bytes and time per algorithm;
+               faults: run the distributed algorithms across fault
+               scenarios — link faults, a mid-run crash with automatic
+               recovery, a healing partition — and report recovery counts
+               and sim-time overhead vs the failure-free baseline)
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|mixed|xla]
                (default: the build's own backend — xla when compiled in,
@@ -137,6 +158,18 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     }
     // validate up front so the CLI error lists every valid value
     fdsvrg::net::TransportKind::parse_or_err(&cfg.transport).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(v) = args.get("faults") {
+        cfg.faults = v.to_string();
+    }
+    // validate the fault spec up front so a typo fails with the grammar
+    // instead of panicking deep inside run_params()
+    fdsvrg::net::fault::FaultPlan::parse(&cfg.faults, cfg.seed).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.rendezvous_timeout = args.get_or("rendezvous-timeout", cfg.rendezvous_timeout);
+    anyhow::ensure!(
+        cfg.rendezvous_timeout > 0.0 && cfg.rendezvous_timeout.is_finite(),
+        "--rendezvous-timeout must be a positive number of seconds (got {})",
+        cfg.rendezvous_timeout
+    );
     cfg.slow = args.get_or("net-slow", cfg.slow);
     cfg.slow_factor = args.get_or("net-factor", cfg.slow_factor);
     cfg.rack_size = args.get_or("net-rack", cfg.rack_size);
@@ -176,6 +209,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     params.star_reduce = args.flag("star");
     params.lazy = params.lazy || args.flag("lazy");
     let engine_kind = args.get("engine").unwrap_or("native");
+    if params.faults.is_some() {
+        anyhow::ensure!(
+            params.transport == fdsvrg::net::TransportKind::Sim,
+            "--faults requires the sim transport (fault injection over tcp is not wired yet)"
+        );
+        anyhow::ensure!(
+            algo.is_distributed(),
+            "--faults injects failures into a cluster's message plane; {} is a serial algorithm",
+            algo.name()
+        );
+        anyhow::ensure!(
+            engine_kind == "native",
+            "--faults is available on the native sparse engine only (got --engine {engine_kind})"
+        );
+    }
     if params.transport == fdsvrg::net::TransportKind::Tcp {
         anyhow::ensure!(
             algo.is_distributed(),
@@ -246,6 +294,24 @@ fn cmd_train(args: &Args) -> Result<()> {
                 let every: usize = args.get_or("save-every", 1usize);
                 builder =
                     builder.observe(fdsvrg::session::CheckpointObserver::new(ckpt.clone(), every));
+                // Fault plane + durable snapshots: rotate the last few
+                // epoch snapshots into <ckpt>.d/ and attach the store to
+                // the plan, so an injected crash recovers from the newest
+                // on-disk snapshot instead of replaying from the latest
+                // in-memory boundary.
+                if let Some(plan) = &params.faults {
+                    if !plan.crashes().is_empty() {
+                        let store = std::sync::Arc::new(fdsvrg::checkpoint::CheckpointStore::new(
+                            format!("{ckpt}.d"),
+                            3,
+                        )?);
+                        plan.attach_store(store.clone());
+                        builder =
+                            builder.observe(fdsvrg::session::CheckpointObserver::rotating(
+                                store, every,
+                            ));
+                    }
+                }
             } else if args.get("save-every").is_some() {
                 bail!("--save-every needs --ckpt <path> to say where checkpoints go");
             }
@@ -379,6 +445,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("netmodel") => exp::netmodel_ablation(&ctx).map(|_| ()),
         Some("compress") => exp::compress_ablation(&ctx).map(|_| ()),
         Some("calibrate") => exp::calibrate(&ctx).map(|_| ()),
+        Some("faults") => exp::faults(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),
     }
@@ -410,7 +477,7 @@ fn cmd_worker() -> Result<()> {
     let mut params: RunParams = cfg.run_params();
     params.star_reduce = doc.bool_or("run.star", false);
     let driver = algo.make_cluster_driver(&problem, &params, None)?;
-    let transport = tcp::worker_connect(id, n_nodes, port)
+    let transport = tcp::worker_connect(id, n_nodes, port, cfg.rendezvous_timeout)
         .with_context(|| format!("worker node {id}: rendezvous"))?;
     // test hook: this node dies right after rendezvous, so teardown tests
     // can assert the monitor names it instead of hanging

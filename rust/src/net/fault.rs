@@ -1,0 +1,576 @@
+//! Fault plane: seeded, deterministic failure injection for the cluster
+//! simulator.
+//!
+//! A [`FaultPlan`] is parsed from `--faults` / `run.faults` and composes
+//! with any [`crate::net::NetModel`]: it never touches payloads, counters
+//! or the algorithm RNG streams — faults reshape **time** (and, for
+//! crashes, *which work has to be redone*), so the numerics stay exactly
+//! the failure-free numerics. The plan is resolved once per run and every
+//! decision is a pure function of `(fault seed, sender id, per-sender send
+//! index)` — never of host scheduling — which makes fault runs bit-stable
+//! across reruns and across `--threads K` (pinned by
+//! `rust/tests/fault_recovery.rs`).
+//!
+//! Spec grammar (comma-separated clauses):
+//!
+//! * `drop:<p>` — with probability `p` per counted message, the first
+//!   copy is lost on the wire. The sender already paid the NIC for it
+//!   (accounting runs before the transport seam), waits out a
+//!   retransmission timeout of two wire latencies, then pays the NIC
+//!   again for the copy that arrives. Delivery is therefore delayed,
+//!   never lost — the reliable-link model every algorithm here assumes.
+//! * `dup:<p>` — with probability `p`, a duplicate frame occupies the
+//!   sender's NIC a second time; the receiver's reliable layer discards
+//!   it, so only the sender's outgoing horizon moves.
+//! * `reorder:<p>` — with probability `p`, the message takes a slow path
+//!   and arrives one extra wire latency late, letting a later-sent
+//!   message overtake it; the endpoints' selective-receive stash absorbs
+//!   the logical reordering.
+//! * `crash:<node>@<t>` — node `<node>` (a worker; node 0 is the
+//!   monitor) goes dark the first time its simulated clock reaches `t`
+//!   seconds: its thread unwinds, its endpoint drops, and every peer
+//!   observes `Gone`. Fires once; the session layer's recovery protocol
+//!   (see [`crate::session::cluster::ClusterDriver`]) respawns the
+//!   cluster from the last snapshot.
+//! * `partition:<a>+<b>+…@<t1>-<t2>` — between sim-times `t1` and `t2`
+//!   the listed nodes are cut off from the rest; messages crossing the
+//!   cut are buffered and delivered when the partition heals at `t2`
+//!   (TCP riding out a short partition), charged as extra wire latency.
+//! * `seed:<u64>` — override the fault-plane seed (defaults to the run
+//!   seed, salted).
+//!
+//! **The empty plan is an identity.** With no plan installed (or a plan
+//! whose probabilities are all zero and whose schedules are empty) no
+//! stream is consumed and no charge is made — all pinned equivalence /
+//! resume / comm-accounting suites run bit-exact with the fault plane
+//! compiled in.
+
+use super::NodeId;
+use crate::util::Pcg64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Salt folded into the run seed so the fault streams never alias the
+/// algorithm sampling streams or the `--net jitter` noise streams.
+const FAULT_SEED_SALT: u64 = 0xFA17_0D0D_5EED_0001;
+
+/// One scheduled crash: the node goes dark the first time its simulated
+/// clock reaches `at` (fires at most once per run, tracked in
+/// [`FaultPlan::fired`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Crash {
+    pub node: NodeId,
+    pub at: f64,
+}
+
+/// One scheduled partition: `group` vs everyone else over `[from, until)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub group: Vec<NodeId>,
+    pub from: f64,
+    pub until: f64,
+}
+
+/// Counters the injection points bump (and the recovery protocol reads
+/// back) — all interior-mutable so one plan can be shared across every
+/// node thread.
+#[derive(Debug, Default)]
+struct FaultCounters {
+    drops: AtomicU64,
+    dups: AtomicU64,
+    reorders: AtomicU64,
+    partition_holds: AtomicU64,
+    crashes: AtomicU64,
+    recoveries: AtomicU64,
+    /// Simulated seconds of work rolled back by crash recoveries (crash
+    /// time minus the snapshot clock the cluster respawned from).
+    lost_sim_time: Mutex<f64>,
+}
+
+/// A read-only snapshot of the fault-plane counters after (or during) a
+/// run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    pub drops: u64,
+    pub dups: u64,
+    pub reorders: u64,
+    pub partition_holds: u64,
+    pub crashes: u64,
+    pub recoveries: u64,
+    pub lost_sim_time: f64,
+}
+
+/// The resolved, seeded fault plan for one run. Shared (`Arc`) between
+/// the session driver (crash recovery), every endpoint (per-link
+/// injection) and the caller (stats readout).
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    drop_p: f64,
+    dup_p: f64,
+    reorder_p: f64,
+    crashes: Vec<Crash>,
+    partitions: Vec<Partition>,
+    /// Per-crash one-shot latches (same order as `crashes`).
+    fired: Vec<AtomicBool>,
+    /// Crash awaiting recovery: set by the crashing node, consumed by the
+    /// cluster driver's recovery path. Stores the crash's scheduled time
+    /// as bits (NaN bits = empty).
+    pending: AtomicU64,
+    counters: FaultCounters,
+    /// Last-k snapshot store the recovery path respawns from (attached by
+    /// the launcher when durable snapshots are configured; recovery falls
+    /// back to the monitor-resident epoch state otherwise).
+    store: Mutex<Option<Arc<crate::checkpoint::CheckpointStore>>>,
+    /// Canonical spec string (for logs, JSON reports and `Debug`).
+    spec: String,
+}
+
+const PENDING_EMPTY: u64 = u64::MAX;
+
+impl FaultPlan {
+    /// Parse a `--faults` spec against the run seed. Empty / `none` specs
+    /// resolve to `None` — the caller installs nothing and the fault
+    /// plane stays a provable identity.
+    pub fn parse(spec: &str, run_seed: u64) -> Result<Option<Arc<FaultPlan>>, String> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec.eq_ignore_ascii_case("none") {
+            return Ok(None);
+        }
+        let mut plan = FaultPlan {
+            seed: run_seed ^ FAULT_SEED_SALT,
+            drop_p: 0.0,
+            dup_p: 0.0,
+            reorder_p: 0.0,
+            crashes: Vec::new(),
+            partitions: Vec::new(),
+            fired: Vec::new(),
+            pending: AtomicU64::new(PENDING_EMPTY),
+            counters: FaultCounters::default(),
+            store: Mutex::new(None),
+            spec: spec.to_string(),
+        };
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (kind, rest) = clause.split_once(':').ok_or_else(|| {
+                format!(
+                    "fault clause {clause:?} needs a value; valid clauses: \
+                     drop:<p>, dup:<p>, reorder:<p>, crash:<node>@<t>, \
+                     partition:<a>+<b>+..@<t1>-<t2>, seed:<u64>"
+                )
+            })?;
+            match kind.trim().to_ascii_lowercase().as_str() {
+                "drop" => plan.drop_p = parse_prob("drop", rest)?,
+                "dup" => plan.dup_p = parse_prob("dup", rest)?,
+                "reorder" => plan.reorder_p = parse_prob("reorder", rest)?,
+                "seed" => {
+                    plan.seed = rest
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|e| format!("fault seed {rest:?}: {e}"))?;
+                }
+                "crash" => {
+                    let (node, at) = rest.split_once('@').ok_or_else(|| {
+                        format!("crash spec {rest:?} must be <node>@<sim-time>, e.g. crash:2@1.5")
+                    })?;
+                    let node: NodeId = node
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("crash node {node:?}: {e}"))?;
+                    if node == 0 {
+                        return Err(
+                            "crash:0 is invalid: node 0 is the monitor/coordinator; \
+                             crash a worker node instead"
+                                .to_string(),
+                        );
+                    }
+                    let at: f64 =
+                        at.trim().parse().map_err(|e| format!("crash time {at:?}: {e}"))?;
+                    if !(at.is_finite() && at >= 0.0) {
+                        return Err(format!("crash time {at} must be finite and >= 0"));
+                    }
+                    plan.crashes.push(Crash { node, at });
+                }
+                "partition" => {
+                    let (nodes, window) = rest.split_once('@').ok_or_else(|| {
+                        format!(
+                            "partition spec {rest:?} must be <a>+<b>+..@<t1>-<t2>, \
+                             e.g. partition:1+2@0.5-1.0"
+                        )
+                    })?;
+                    let group = nodes
+                        .split('+')
+                        .map(|n| {
+                            n.trim()
+                                .parse::<NodeId>()
+                                .map_err(|e| format!("partition node {n:?}: {e}"))
+                        })
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if group.is_empty() {
+                        return Err(format!("partition {rest:?} lists no nodes"));
+                    }
+                    let (from, until) = window.split_once('-').ok_or_else(|| {
+                        format!("partition window {window:?} must be <t1>-<t2>")
+                    })?;
+                    let from: f64 = from
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("partition start {from:?}: {e}"))?;
+                    let until: f64 = until
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("partition end {until:?}: {e}"))?;
+                    if !(from.is_finite() && until.is_finite() && from >= 0.0 && until > from) {
+                        return Err(format!(
+                            "partition window [{from}, {until}) must be finite with t2 > t1 >= 0"
+                        ));
+                    }
+                    plan.partitions.push(Partition { group, from, until });
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault clause {other:?}; valid clauses: drop, dup, reorder, \
+                         crash, partition, seed"
+                    ));
+                }
+            }
+        }
+        plan.fired = plan.crashes.iter().map(|_| AtomicBool::new(false)).collect();
+        Ok(Some(Arc::new(plan)))
+    }
+
+    /// The canonical spec this plan was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// The resolved fault-plane seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Scheduled crashes (recovery-bearing runs).
+    pub fn crashes(&self) -> &[Crash] {
+        &self.crashes
+    }
+
+    /// True when any clause draws from the per-node random streams.
+    fn rand_active(&self) -> bool {
+        self.drop_p > 0.0 || self.dup_p > 0.0 || self.reorder_p > 0.0
+    }
+
+    /// Validate the plan against a concrete cluster shape.
+    pub fn validate(&self, n_nodes: usize) -> Result<(), String> {
+        for c in &self.crashes {
+            if c.node >= n_nodes {
+                return Err(format!(
+                    "crash:{}@{} names a node outside this {}-node cluster",
+                    c.node, c.at, n_nodes
+                ));
+            }
+        }
+        for p in &self.partitions {
+            for &n in &p.group {
+                if n >= n_nodes {
+                    return Err(format!(
+                        "partition names node {n} outside this {n_nodes}-node cluster"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// If `node`'s clock has crossed an unfired crash, latch it (exactly
+    /// once) and return its scheduled time; the caller unwinds the node.
+    pub fn crash_due(&self, node: NodeId, clock: f64) -> Option<f64> {
+        for (i, c) in self.crashes.iter().enumerate() {
+            if c.node == node
+                && clock >= c.at
+                && self.fired[i]
+                    .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.counters.crashes.fetch_add(1, Ordering::Relaxed);
+                self.pending.store(c.at.to_bits(), Ordering::SeqCst);
+                return Some(c.at);
+            }
+        }
+        None
+    }
+
+    /// Consume a crash awaiting recovery (cluster-driver side): returns
+    /// the crash's scheduled sim-time, at most once per fired crash.
+    pub fn take_pending_recovery(&self) -> Option<f64> {
+        let bits = self.pending.swap(PENDING_EMPTY, Ordering::SeqCst);
+        if bits == PENDING_EMPTY {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+
+    /// Record one completed recovery and the sim-time it rolled back.
+    pub fn record_recovery(&self, lost_sim_time: f64) {
+        self.counters.recoveries.fetch_add(1, Ordering::Relaxed);
+        *self.counters.lost_sim_time.lock().unwrap() += lost_sim_time.max(0.0);
+    }
+
+    /// If a message from `from` to `to` sent at `send_time` crosses an
+    /// active partition cut, return the heal time its delivery is
+    /// deferred to.
+    fn partition_hold(&self, from: NodeId, to: NodeId, send_time: f64) -> Option<f64> {
+        for p in &self.partitions {
+            if send_time >= p.from && send_time < p.until {
+                let a = p.group.contains(&from);
+                let b = p.group.contains(&to);
+                if a != b {
+                    return Some(p.until);
+                }
+            }
+        }
+        None
+    }
+
+    /// Attach the durable snapshot store the recovery path prefers over
+    /// the monitor-resident epoch state.
+    pub fn attach_store(&self, store: Arc<crate::checkpoint::CheckpointStore>) {
+        *self.store.lock().unwrap() = Some(store);
+    }
+
+    /// The attached snapshot store, if any.
+    pub fn store(&self) -> Option<Arc<crate::checkpoint::CheckpointStore>> {
+        self.store.lock().unwrap().clone()
+    }
+
+    /// Snapshot of the injection/recovery counters.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            drops: self.counters.drops.load(Ordering::Relaxed),
+            dups: self.counters.dups.load(Ordering::Relaxed),
+            reorders: self.counters.reorders.load(Ordering::Relaxed),
+            partition_holds: self.counters.partition_holds.load(Ordering::Relaxed),
+            crashes: self.counters.crashes.load(Ordering::Relaxed),
+            recoveries: self.counters.recoveries.load(Ordering::Relaxed),
+            lost_sim_time: *self.counters.lost_sim_time.lock().unwrap(),
+        }
+    }
+}
+
+fn parse_prob(what: &str, s: &str) -> Result<f64, String> {
+    let p: f64 = s.trim().parse().map_err(|e| format!("{what} probability {s:?}: {e}"))?;
+    if (0.0..=1.0).contains(&p) {
+        Ok(p)
+    } else {
+        Err(format!("{what} probability {p} must be in [0, 1]"))
+    }
+}
+
+/// What the fault plane does to one counted send (consumed by
+/// [`crate::net::Endpoint::send`], which owns the link profiles and
+/// charges the resulting time).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SendEffects {
+    /// First copy lost; sender retransmits (NIC paid again, delivery
+    /// delayed by the retransmission timeout).
+    pub dropped: bool,
+    /// Duplicate frame occupies the sender NIC once more.
+    pub duplicated: bool,
+    /// Message takes the slow path: one extra wire latency on delivery.
+    pub reordered: bool,
+    /// Partition cut: delivery deferred to this heal time.
+    pub hold_until: Option<f64>,
+}
+
+/// One node's handle on the shared plan: the plan plus this node's
+/// seeded decision stream. Decisions are drawn in this node's program
+/// order (one fixed triple per counted send while any probability clause
+/// is active), so they are independent of `--threads` and of how sibling
+/// nodes are scheduled.
+#[derive(Debug)]
+pub struct LinkFaults {
+    plan: Arc<FaultPlan>,
+    id: NodeId,
+    stream: Pcg64,
+}
+
+impl LinkFaults {
+    pub fn new(plan: Arc<FaultPlan>, id: NodeId) -> LinkFaults {
+        // Same per-node splitmix idiom as `model::node_stream`, against
+        // the fault-plane seed.
+        let stream = Pcg64::seed_from_u64(
+            plan.seed ^ (id as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        LinkFaults { plan, id, stream }
+    }
+
+    /// The shared plan (recovery bookkeeping lives there).
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+
+    /// Crash check at an injection point (see [`FaultPlan::crash_due`]).
+    pub fn crash_due(&self, clock: f64) -> Option<f64> {
+        self.plan.crash_due(self.id, clock)
+    }
+
+    /// Decide this send's fate. Draws exactly three uniforms per counted
+    /// send while any probability clause is active (none otherwise), so
+    /// the stream position is a pure function of the send index.
+    pub fn on_send(&mut self, to: NodeId, send_time: f64) -> SendEffects {
+        let mut eff = SendEffects::default();
+        if self.plan.rand_active() {
+            let d = self.stream.next_f64();
+            let u = self.stream.next_f64();
+            let r = self.stream.next_f64();
+            if d < self.plan.drop_p {
+                eff.dropped = true;
+                self.plan.counters.drops.fetch_add(1, Ordering::Relaxed);
+            }
+            if u < self.plan.dup_p {
+                eff.duplicated = true;
+                self.plan.counters.dups.fetch_add(1, Ordering::Relaxed);
+            }
+            if r < self.plan.reorder_p {
+                eff.reordered = true;
+                self.plan.counters.reorders.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if let Some(heal) = self.plan.partition_hold(self.id, to, send_time) {
+            eff.hold_until = Some(heal);
+            self.plan.counters.partition_holds.fetch_add(1, Ordering::Relaxed);
+        }
+        eff
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(spec: &str) -> Arc<FaultPlan> {
+        FaultPlan::parse(spec, 42).unwrap().expect("non-empty plan")
+    }
+
+    #[test]
+    fn empty_and_none_specs_resolve_to_no_plan() {
+        assert!(FaultPlan::parse("", 1).unwrap().is_none());
+        assert!(FaultPlan::parse("  ", 1).unwrap().is_none());
+        assert!(FaultPlan::parse("none", 1).unwrap().is_none());
+        assert!(FaultPlan::parse("NONE", 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn parses_combined_clauses() {
+        let p = plan("drop:0.1,dup:0.05,reorder:0.2,crash:2@1.5,partition:1+3@0.5-1.0");
+        assert_eq!(p.drop_p, 0.1);
+        assert_eq!(p.dup_p, 0.05);
+        assert_eq!(p.reorder_p, 0.2);
+        assert_eq!(p.crashes(), &[Crash { node: 2, at: 1.5 }]);
+        assert_eq!(
+            p.partitions,
+            vec![Partition { group: vec![1, 3], from: 0.5, until: 1.0 }]
+        );
+        assert!(p.validate(4).is_ok());
+        assert!(p.validate(3).is_err(), "partition node 3 outside a 3-node cluster");
+    }
+
+    #[test]
+    fn rejects_malformed_clauses() {
+        for bad in [
+            "drop",            // no value
+            "drop:1.5",        // out of range
+            "drop:-0.1",       // negative
+            "crash:2",         // no time
+            "crash:0@1.0",     // monitor crash
+            "crash:2@-1.0",    // negative time
+            "partition:@1-2",  // no nodes
+            "partition:1+2@2-1", // inverted window
+            "blorp:0.1",       // unknown clause
+        ] {
+            let got = FaultPlan::parse(bad, 7);
+            assert!(got.is_err(), "{bad:?} should be rejected, got {got:?}");
+        }
+    }
+
+    #[test]
+    fn decision_stream_is_a_pure_function_of_seed_and_node() {
+        let decide = |seed: u64, id: NodeId| -> Vec<(bool, bool, bool)> {
+            let p = FaultPlan::parse("drop:0.3,dup:0.3,reorder:0.3", seed).unwrap().unwrap();
+            let mut lf = LinkFaults::new(p, id);
+            (0..64)
+                .map(|i| {
+                    let e = lf.on_send(1 + (i % 3), 0.0);
+                    (e.dropped, e.duplicated, e.reordered)
+                })
+                .collect()
+        };
+        assert_eq!(decide(9, 1), decide(9, 1), "same seed+node replays identically");
+        assert_ne!(decide(9, 1), decide(9, 2), "sibling nodes draw independent streams");
+        assert_ne!(decide(9, 1), decide(10, 1), "the seed matters");
+    }
+
+    #[test]
+    fn crash_fires_exactly_once_and_hands_recovery_the_time() {
+        let p = plan("crash:2@1.5");
+        assert_eq!(p.crash_due(2, 1.0), None, "before the schedule");
+        assert_eq!(p.crash_due(1, 2.0), None, "wrong node");
+        assert_eq!(p.crash_due(2, 1.5), Some(1.5));
+        assert_eq!(p.crash_due(2, 9.0), None, "one-shot");
+        assert_eq!(p.take_pending_recovery(), Some(1.5));
+        assert_eq!(p.take_pending_recovery(), None, "consumed");
+        assert_eq!(p.stats().crashes, 1);
+    }
+
+    #[test]
+    fn partition_holds_only_cut_crossing_messages_inside_the_window() {
+        let p = plan("partition:1+2@0.5-1.0");
+        assert_eq!(p.partition_hold(1, 0, 0.7), Some(1.0), "inside the window, across");
+        assert_eq!(p.partition_hold(0, 2, 0.5), Some(1.0), "boundary start is inside");
+        assert_eq!(p.partition_hold(1, 2, 0.7), None, "both in the group");
+        assert_eq!(p.partition_hold(0, 3, 0.7), None, "both outside the group");
+        assert_eq!(p.partition_hold(1, 0, 0.4), None, "before the window");
+        assert_eq!(p.partition_hold(1, 0, 1.0), None, "healed at t2");
+    }
+
+    #[test]
+    fn passive_plan_consumes_no_randomness() {
+        // all probabilities zero: on_send must not draw, so two handles
+        // built from the same seed stay bit-identical however often one
+        // of them is consulted
+        let p = plan("crash:2@1e9");
+        let mut a = LinkFaults::new(p.clone(), 1);
+        for _ in 0..100 {
+            let e = a.on_send(0, 0.0);
+            assert!(!e.dropped && !e.duplicated && !e.reordered && e.hold_until.is_none());
+        }
+        let b = LinkFaults::new(p, 1);
+        assert_eq!(a.stream.state_words(), b.stream.state_words());
+    }
+
+    #[test]
+    fn stats_snapshot_counts_decisions() {
+        let p = FaultPlan::parse("drop:1.0,dup:1.0,reorder:1.0", 3).unwrap().unwrap();
+        let mut lf = LinkFaults::new(p.clone(), 1);
+        for _ in 0..5 {
+            lf.on_send(0, 0.0);
+        }
+        let st = p.stats();
+        assert_eq!((st.drops, st.dups, st.reorders), (5, 5, 5));
+        p.record_recovery(2.5);
+        p.record_recovery(1.0);
+        let st = p.stats();
+        assert_eq!(st.recoveries, 2);
+        assert!((st.lost_sim_time - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seed_clause_overrides_the_run_seed() {
+        let a = FaultPlan::parse("drop:0.5,seed:123", 1).unwrap().unwrap();
+        let b = FaultPlan::parse("drop:0.5,seed:123", 2).unwrap().unwrap();
+        assert_eq!(a.seed(), b.seed(), "explicit seed wins over the run seed");
+    }
+}

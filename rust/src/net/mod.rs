@@ -37,6 +37,15 @@
 //! [`collectives`]; the codec layer ([`WireFmt`]/[`Payload`]) in
 //! [`payload`].
 //!
+//! Seeded failure injection (message loss/duplication/reorder under a
+//! reliable-link model, scheduled crashes and healing partitions) is the
+//! [`fault`] plane's job: a [`fault::FaultPlan`] installs a per-node
+//! [`fault::LinkFaults`] hook on each endpoint and every counted send
+//! consults it *after* the model has charged the wire — faults reshape
+//! time, never payloads or counters. With no plan installed the hook is
+//! absent and every code path below is byte-for-byte the failure-free
+//! one.
+//!
 //! How a message physically travels is the [`transport`] seam's job:
 //! every [`Endpoint`] delegates moving bytes to a [`Transport`] — the
 //! in-memory [`transport::SimTransport`] mailboxes (default, bit-exact
@@ -50,6 +59,7 @@
 
 pub mod collectives;
 pub mod compress;
+pub mod fault;
 pub mod model;
 pub mod payload;
 pub mod topology;
@@ -331,6 +341,10 @@ pub struct Endpoint {
     /// jitter stream) — the [`model`] layer's per-node view.
     net: model::LinkView,
     stats: Arc<CommStats>,
+    /// Failure-injection hook (the [`fault`] plane). `None` — the
+    /// default — short-circuits every fault check, keeping the
+    /// failure-free paths bit-exact.
+    fault: Option<fault::LinkFaults>,
 }
 
 impl Endpoint {
@@ -354,7 +368,15 @@ impl Endpoint {
             cpu: ThreadCpuTimer::start(),
             net: model.node_view(id, n_nodes),
             stats,
+            fault: None,
         }
+    }
+
+    /// Install this node's handle on a shared [`fault::FaultPlan`]. Every
+    /// counted send/receive from here on consults the plan; endpoints
+    /// without a hook stay on the failure-free fast path.
+    pub fn install_faults(&mut self, hook: fault::LinkFaults) {
+        self.fault = Some(hook);
     }
 
     pub fn id(&self) -> NodeId {
@@ -462,10 +484,44 @@ impl Endpoint {
     /// traffic goes through [`collectives::Comm`].
     pub fn send(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
         self.tick();
+        self.check_injected_crash();
         let payload = payload.into();
         let bytes = payload.wire_bytes();
         self.stats.record(self.id, payload.scalars(), bytes);
-        let (wire_time, jitter) = self.net.charge_send(&mut self.cs, to, bytes);
+        let (mut wire_time, mut jitter) = self.net.charge_send(&mut self.cs, to, bytes);
+        if let Some(hook) = self.fault.as_mut() {
+            let eff = hook.on_send(to, wire_time);
+            let link_latency = self.net.link(to).latency;
+            if eff.dropped {
+                // The first copy was lost on the wire *after* the NIC was
+                // paid ("the sender paid the NIC"). Under the reliable-link
+                // model the sender waits out a retransmission timeout of
+                // one unacknowledged round trip, then pays the NIC again
+                // for the copy that actually arrives.
+                let (wt2, j2) = self.net.charge_send(&mut self.cs, to, bytes);
+                wire_time = wt2 + 2.0 * link_latency;
+                jitter = j2;
+            }
+            if eff.duplicated {
+                // A spurious duplicate occupies the sender's NIC once
+                // more; the receiver's reliable layer discards it, so only
+                // the sender's outgoing horizon moves.
+                let _ = self.net.charge_send(&mut self.cs, to, bytes);
+            }
+            if eff.reordered {
+                // Slow-path routing: one extra wire latency on delivery,
+                // enough for a later-sent message to overtake this one.
+                // The selective-receive stash absorbs the logical reorder.
+                jitter += link_latency;
+            }
+            if let Some(heal) = eff.hold_until {
+                // Partition cut: TCP rides it out — delivery is deferred
+                // to the heal time, charged as extra wire latency.
+                if heal > wire_time {
+                    jitter += heal - wire_time;
+                }
+            }
+        }
         let msg = Msg { from: self.id, tag, payload, send_time: wire_time, jitter, counted: true };
         // A down link means the run is being torn down (e.g. a worker
         // panicked); panicking here unwinds this node too.
@@ -487,6 +543,41 @@ impl Endpoint {
         };
         if self.gone[to] || self.transport.send(to, msg).is_err() {
             panic!("node {}: peer {to} disconnected on eval send (tag {tag})", self.id);
+        }
+    }
+
+    /// Fault-plane crash check: if this node's simulated clock has crossed
+    /// a scheduled (and still unfired) crash, unwind the node. The plan
+    /// latches the crash *before* the panic, so the session layer's
+    /// recovery path can tell an injected crash from a genuine failure
+    /// without parsing panic payloads.
+    #[inline]
+    fn check_injected_crash(&mut self) {
+        if let Some(hook) = self.fault.as_ref() {
+            if let Some(t) = hook.crash_due(self.cs.clock) {
+                panic!(
+                    "node {}: [fault] injected crash at sim-time {t:.6} (clock {:.6})",
+                    self.id, self.cs.clock
+                );
+            }
+        }
+    }
+
+    /// Names the peers already observed dead, for "all peers disconnected"
+    /// panics — so a surviving node's error identifies *who* died even
+    /// when it wasn't selectively waiting on them.
+    fn dead_peer_note(&self) -> String {
+        let dead: Vec<String> = self
+            .gone
+            .iter()
+            .enumerate()
+            .filter(|(_, &g)| g)
+            .map(|(i, _)| i.to_string())
+            .collect();
+        if dead.is_empty() {
+            String::new()
+        } else {
+            format!("; dead peers: [{}]", dead.join(", "))
         }
     }
 
@@ -515,6 +606,7 @@ impl Endpoint {
     /// Blocking selective receive: first message matching `from` and `tag`.
     pub fn recv_from(&mut self, from: NodeId, tag: Tag) -> Msg {
         self.tick();
+        self.check_injected_crash();
         if let Some(pos) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
             let msg = self.stash.remove(pos).unwrap();
             self.deliver(&msg);
@@ -526,8 +618,9 @@ impl Endpoint {
         loop {
             match self.transport.recv() {
                 None => panic!(
-                    "node {}: all peers disconnected while receiving (expected peer {from}, tag {tag})",
-                    self.id
+                    "node {}: all peers disconnected while receiving (expected peer {from}, tag {tag}){}",
+                    self.id,
+                    self.dead_peer_note()
                 ),
                 Some(Arrival::Gone(peer)) => self.peer_gone(peer, Some(from), tag),
                 Some(Arrival::Msg(msg)) => {
@@ -544,6 +637,7 @@ impl Endpoint {
     /// Blocking receive of any message with the given tag.
     pub fn recv_tag(&mut self, tag: Tag) -> Msg {
         self.tick();
+        self.check_injected_crash();
         if let Some(pos) = self.stash.iter().position(|m| m.tag == tag) {
             let msg = self.stash.remove(pos).unwrap();
             self.deliver(&msg);
@@ -552,10 +646,20 @@ impl Endpoint {
         loop {
             match self.transport.recv() {
                 None => panic!(
-                    "node {}: all peers disconnected while receiving (any peer, tag {tag})",
-                    self.id
+                    "node {}: all peers disconnected while receiving (any peer, tag {tag}){}",
+                    self.id,
+                    self.dead_peer_note()
                 ),
-                Some(Arrival::Gone(peer)) => self.peer_gone(peer, None, tag),
+                // An any-peer wait may be waiting on exactly the peer that
+                // died (a star hub collecting q reduces cannot finish with
+                // q−1): fail fast naming the dead node rather than hang.
+                Some(Arrival::Gone(peer)) => {
+                    self.gone[peer] = true;
+                    panic!(
+                        "node {}: peer {peer} disconnected while receiving (tag {tag})",
+                        self.id
+                    );
+                }
                 Some(Arrival::Msg(msg)) => {
                     if msg.tag == tag {
                         self.deliver(&msg);
@@ -579,6 +683,7 @@ impl Endpoint {
     /// by the `stash_back_redelivers_before_fresh_messages` test).
     pub fn recv_any(&mut self) -> Msg {
         self.tick();
+        self.check_injected_crash();
         if let Some(msg) = self.stash.pop_front() {
             self.deliver(&msg);
             return msg;
@@ -586,10 +691,22 @@ impl Endpoint {
         loop {
             match self.transport.recv() {
                 None => panic!(
-                    "node {}: all peers disconnected while receiving (any peer, any tag)",
-                    self.id
+                    "node {}: all peers disconnected while receiving (any peer, any tag){}",
+                    self.id,
+                    self.dead_peer_note()
                 ),
-                Some(Arrival::Gone(peer)) => self.gone[peer] = true,
+                // Event loops (parameter servers) block here for worker
+                // traffic that a dead worker can never send — treat the
+                // death as fatal, naming the node, instead of hanging
+                // (peers never exit mid-epoch in a healthy run: teardown
+                // is flagged over the eval plane first).
+                Some(Arrival::Gone(peer)) => {
+                    self.gone[peer] = true;
+                    panic!(
+                        "node {}: peer {peer} disconnected while receiving (any peer, any tag)",
+                        self.id
+                    );
+                }
                 Some(Arrival::Msg(msg)) => {
                     self.deliver(&msg);
                     return msg;

@@ -55,8 +55,52 @@ pub const ENV_PORT: &str = "FDSVRG_WORKER_PORT";
 /// rendezvous, so teardown paths can be exercised deterministically.
 pub const ENV_TEST_EXIT: &str = "FDSVRG_TEST_WORKER_EXIT";
 
-/// Every rendezvous wait gives up after this long.
-const RENDEZVOUS_SECS: u64 = 30;
+/// Default rendezvous deadline, seconds (`--rendezvous-timeout`): every
+/// wait in the rendezvous protocol gives up after this long unless the
+/// caller passes its own budget.
+pub const DEFAULT_RENDEZVOUS_SECS: f64 = 30.0;
+
+/// First dial-retry backoff; doubles per attempt up to [`MAX_BACKOFF`].
+const FIRST_BACKOFF: Duration = Duration::from_millis(50);
+const MAX_BACKOFF: Duration = Duration::from_millis(800);
+
+/// Clamp a caller-supplied deadline into a usable `Duration` (guards the
+/// `from_secs_f64` panics on non-finite/negative input).
+fn budget(secs: f64) -> Duration {
+    if secs.is_finite() && secs > 0.0 {
+        Duration::from_secs_f64(secs)
+    } else {
+        Duration::from_millis(1)
+    }
+}
+
+/// Dial `127.0.0.1:port` with bounded retry-with-backoff: a refused or
+/// reset connection (the peer's listener not up yet) retries with
+/// doubling sleeps until `deadline_secs` is spent, then fails with the
+/// attempt count, elapsed time and last error.
+fn dial_with_retry(port: u16, what: &str, deadline_secs: f64) -> Result<TcpStream> {
+    let start = Instant::now();
+    let deadline = start + budget(deadline_secs);
+    let mut backoff = FIRST_BACKOFF;
+    let mut attempts = 0u32;
+    loop {
+        attempts += 1;
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if Instant::now() + backoff > deadline {
+                    bail!(
+                        "dial {what} (127.0.0.1:{port}) failed after {attempts} attempt(s) \
+                         over {:.1}s: {e}",
+                        start.elapsed().as_secs_f64()
+                    );
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(MAX_BACKOFF);
+            }
+        }
+    }
+}
 
 /// Frames above this are treated as stream corruption.
 const MAX_FRAME: usize = 1 << 30;
@@ -164,14 +208,17 @@ pub fn listen() -> Result<(TcpListener, u16)> {
 /// Monitor side of the rendezvous: accept `n_nodes - 1` worker HELLOs,
 /// send the port map, and assemble node 0's transport. `poll` runs each
 /// time `accept` would block — the process launcher uses it to detect
-/// workers that died before checking in.
+/// workers that died before checking in. `deadline_secs` bounds every
+/// wait (`--rendezvous-timeout`; [`DEFAULT_RENDEZVOUS_SECS`]).
 pub fn accept_workers(
     listener: &TcpListener,
     n_nodes: usize,
+    deadline_secs: f64,
     mut poll: impl FnMut(&[Option<TcpStream>]) -> Result<()>,
 ) -> Result<TcpTransport> {
     listener.set_nonblocking(true).context("rendezvous listener nonblocking")?;
-    let deadline = Instant::now() + Duration::from_secs(RENDEZVOUS_SECS);
+    let wait = budget(deadline_secs);
+    let deadline = Instant::now() + wait;
     let mut streams: Vec<Option<TcpStream>> = (0..n_nodes).map(|_| None).collect();
     let mut ports = vec![0u16; n_nodes];
     let mut pending = n_nodes - 1;
@@ -179,9 +226,7 @@ pub fn accept_workers(
         match listener.accept() {
             Ok((mut stream, _addr)) => {
                 stream.set_nonblocking(false).context("worker stream blocking")?;
-                stream
-                    .set_read_timeout(Some(Duration::from_secs(RENDEZVOUS_SECS)))
-                    .context("worker stream timeout")?;
+                stream.set_read_timeout(Some(wait)).context("worker stream timeout")?;
                 let mut hello = [0u8; 8];
                 stream.read_exact(&mut hello).context("read worker hello")?;
                 let id = u32::from_le_bytes(hello[0..4].try_into().unwrap()) as usize;
@@ -201,8 +246,8 @@ pub fn accept_workers(
                 poll(&streams)?;
                 if Instant::now() > deadline {
                     bail!(
-                        "rendezvous timed out after {RENDEZVOUS_SECS}s \
-                         waiting for {pending} worker(s)"
+                        "rendezvous timed out after {deadline_secs}s waiting for \
+                         {pending} worker(s) (raise --rendezvous-timeout?)"
                     );
                 }
                 std::thread::sleep(Duration::from_millis(5));
@@ -238,17 +283,24 @@ pub fn check_children(
 
 /// Worker side of the rendezvous: dial the monitor, exchange
 /// HELLO/port-map, then mesh with the other workers (dial lower ids,
-/// accept higher ids). Returns this node's assembled transport.
-pub fn worker_connect(id: NodeId, n_nodes: usize, parent_port: u16) -> Result<TcpTransport> {
+/// accept higher ids). Returns this node's assembled transport. Dials
+/// retry with bounded backoff (a racing peer's listener may not be up
+/// yet); every wait honours `deadline_secs`.
+pub fn worker_connect(
+    id: NodeId,
+    n_nodes: usize,
+    parent_port: u16,
+    deadline_secs: f64,
+) -> Result<TcpTransport> {
+    let wait = budget(deadline_secs);
     let mesh = TcpListener::bind("127.0.0.1:0").context("bind mesh listener")?;
     let mesh_port = mesh.local_addr().context("read mesh port")?.port();
-    let mut ctrl = TcpStream::connect(("127.0.0.1", parent_port)).context("dial monitor")?;
+    let mut ctrl = dial_with_retry(parent_port, "monitor", deadline_secs)?;
     let mut hello = Vec::with_capacity(8);
     hello.extend_from_slice(&(id as u32).to_le_bytes());
     hello.extend_from_slice(&(mesh_port as u32).to_le_bytes());
     ctrl.write_all(&hello).context("send hello")?;
-    ctrl.set_read_timeout(Some(Duration::from_secs(RENDEZVOUS_SECS)))
-        .context("control stream timeout")?;
+    ctrl.set_read_timeout(Some(wait)).context("control stream timeout")?;
     let mut map = vec![0u8; 4 * (n_nodes - 1)];
     ctrl.read_exact(&mut map).context("read port map")?;
     ctrl.set_read_timeout(None).context("control stream timeout")?;
@@ -260,22 +312,20 @@ pub fn worker_connect(id: NodeId, n_nodes: usize, parent_port: u16) -> Result<Tc
     streams[0] = Some(ctrl);
     // Dial every lower-id worker, announcing our id …
     for peer in 1..id {
-        let mut stream = TcpStream::connect(("127.0.0.1", ports[peer]))
-            .with_context(|| format!("dial worker {peer}"))?;
+        let mut stream =
+            dial_with_retry(ports[peer], &format!("worker {peer}"), deadline_secs)?;
         stream.write_all(&(id as u32).to_le_bytes()).context("send mesh announce")?;
         streams[peer] = Some(stream);
     }
     // … and accept every higher-id worker (each announces itself).
     mesh.set_nonblocking(true).context("mesh listener nonblocking")?;
-    let deadline = Instant::now() + Duration::from_secs(RENDEZVOUS_SECS);
+    let deadline = Instant::now() + wait;
     let mut pending = n_nodes - 1 - id;
     while pending > 0 {
         match mesh.accept() {
             Ok((mut stream, _addr)) => {
                 stream.set_nonblocking(false).context("mesh stream blocking")?;
-                stream
-                    .set_read_timeout(Some(Duration::from_secs(RENDEZVOUS_SECS)))
-                    .context("mesh stream timeout")?;
+                stream.set_read_timeout(Some(wait)).context("mesh stream timeout")?;
                 let mut ann = [0u8; 4];
                 stream.read_exact(&mut ann).context("read mesh announce")?;
                 let peer = u32::from_le_bytes(ann) as usize;
@@ -288,7 +338,10 @@ pub fn worker_connect(id: NodeId, n_nodes: usize, parent_port: u16) -> Result<Tc
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() > deadline {
-                    bail!("node {id}: mesh rendezvous timed out waiting for {pending} peer(s)");
+                    bail!(
+                        "node {id}: mesh rendezvous timed out after {deadline_secs}s \
+                         waiting for {pending} peer(s) (raise --rendezvous-timeout?)"
+                    );
                 }
                 std::thread::sleep(Duration::from_millis(5));
             }
@@ -320,9 +373,11 @@ mod tests {
     /// "worker" threads run [`worker_connect`].
     fn loopback_mesh() -> (TcpTransport, TcpTransport, TcpTransport) {
         let (listener, port) = listen().unwrap();
-        let h1 = thread::spawn(move || worker_connect(1, 3, port).unwrap());
-        let h2 = thread::spawn(move || worker_connect(2, 3, port).unwrap());
-        let t0 = accept_workers(&listener, 3, |_| Ok(())).unwrap();
+        let h1 =
+            thread::spawn(move || worker_connect(1, 3, port, DEFAULT_RENDEZVOUS_SECS).unwrap());
+        let h2 =
+            thread::spawn(move || worker_connect(2, 3, port, DEFAULT_RENDEZVOUS_SECS).unwrap());
+        let t0 = accept_workers(&listener, 3, DEFAULT_RENDEZVOUS_SECS, |_| Ok(())).unwrap();
         (t0, h1.join().unwrap(), h2.join().unwrap())
     }
 
@@ -367,6 +422,51 @@ mod tests {
             }
         }
         assert!(t0.is_remote());
+    }
+
+    #[test]
+    fn configurable_deadline_bounds_the_monitor_wait() {
+        // nobody ever dials in: a short budget must fail fast, naming
+        // the missing workers and the knob that raises the budget
+        let (listener, _port) = listen().unwrap();
+        let start = Instant::now();
+        let err = accept_workers(&listener, 3, 0.2, |_| Ok(())).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "must honour the 0.2s budget");
+        let text = format!("{err:#}");
+        assert!(text.contains("timed out"), "got: {text}");
+        assert!(text.contains("2 worker(s)"), "got: {text}");
+        assert!(text.contains("--rendezvous-timeout"), "got: {text}");
+    }
+
+    #[test]
+    fn dial_retry_fails_loudly_within_its_budget() {
+        // grab a port and close the listener so the dial is refused
+        let port = {
+            let (listener, port) = listen().unwrap();
+            drop(listener);
+            port
+        };
+        let start = Instant::now();
+        let err = dial_with_retry(port, "monitor", 0.3).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "must honour the 0.3s budget");
+        let text = format!("{err:#}");
+        assert!(text.contains("dial monitor"), "got: {text}");
+        assert!(text.contains("attempt"), "got: {text}");
+    }
+
+    #[test]
+    fn dial_retry_survives_a_late_listener() {
+        // the listener comes up ~100ms after the first dial — the backoff
+        // loop must absorb the race that a bare connect() would lose
+        let (listener, port) = listen().unwrap();
+        drop(listener);
+        let accept = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(100));
+            let listener = TcpListener::bind(("127.0.0.1", port)).unwrap();
+            listener.accept().map(|_| ()).unwrap()
+        });
+        dial_with_retry(port, "worker 1", DEFAULT_RENDEZVOUS_SECS).unwrap();
+        accept.join().unwrap();
     }
 
     #[test]

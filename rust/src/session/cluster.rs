@@ -37,6 +37,7 @@
 use super::{Driver, EpochReport, FinishOut, NodeState, ResumeState};
 use crate::cluster::run_endpoints;
 use crate::metrics::CommTotals;
+use crate::net::fault::{FaultPlan, LinkFaults};
 use crate::net::transport::{tcp, Transport};
 use crate::net::{build_with_model, CommStats, Endpoint, NetModel, NodeComm};
 use anyhow::{ensure, Result};
@@ -130,6 +131,16 @@ pub struct ClusterDriver {
     /// Worker processes (tcp launch only): waited in `finish`, killed on
     /// drop so an aborted session never leaks children.
     children: Vec<(usize, Child)>,
+    /// Seeded fault plan (`--faults`): installed on every endpoint at
+    /// spawn; its latched crashes drive the automatic recovery in `step`.
+    faults: Option<Arc<FaultPlan>>,
+    /// Recovery policy: asynchronous algorithms (AsySVRG, PS-Lite) absorb
+    /// a crashed worker by restarting from the *latest* epoch boundary
+    /// (minimal rollback); synchronous ones barrier-and-restart from the
+    /// newest durable snapshot, paying the restart penalty.
+    async_recovery: bool,
+    /// TCP rendezvous deadline, seconds (`--rendezvous-timeout`).
+    rendezvous_secs: f64,
 }
 
 impl ClusterDriver {
@@ -184,15 +195,41 @@ impl ClusterDriver {
             running: None,
             launch: Launch::Threads,
             children: Vec::new(),
+            faults: None,
+            async_recovery: false,
+            rendezvous_secs: tcp::DEFAULT_RENDEZVOUS_SECS,
         })
+    }
+
+    /// Attach a seeded fault plan (`--faults`). `async_recovery` selects
+    /// the rollback policy a crash recovery uses (latest boundary for the
+    /// asynchronous algorithms, newest durable snapshot otherwise).
+    pub fn with_faults(
+        mut self,
+        plan: Option<Arc<FaultPlan>>,
+        async_recovery: bool,
+    ) -> Result<ClusterDriver> {
+        if let Some(p) = &plan {
+            ensure!(
+                matches!(self.launch, Launch::Threads),
+                "--faults requires the sim transport (fault injection over tcp is not wired yet)"
+            );
+            p.validate(self.n_nodes).map_err(anyhow::Error::msg)?;
+        }
+        self.faults = plan;
+        self.async_recovery = async_recovery;
+        Ok(self)
     }
 
     /// Switch to process-per-node launch (`--transport tcp`): the q
     /// worker nodes run as child processes of the current executable
     /// (the internal `fdsvrg worker` entrypoint), each rebuilding the
     /// experiment from `spec`; the monitor node stays in this process.
-    pub fn processes(mut self, spec: Arc<String>) -> ClusterDriver {
+    /// `rendezvous_secs` bounds every rendezvous wait
+    /// (`--rendezvous-timeout`).
+    pub fn processes(mut self, spec: Arc<String>, rendezvous_secs: f64) -> ClusterDriver {
         self.launch = Launch::Processes { spec };
+        self.rendezvous_secs = rendezvous_secs;
         self
     }
 
@@ -228,6 +265,11 @@ impl ClusterDriver {
                         let ns = &r.nodes[ep.id()];
                         ep.restore_clock_state(ns.clock);
                         ep.restore_jitter(ns.jitter);
+                    }
+                }
+                if let Some(plan) = &self.faults {
+                    for ep in eps.iter_mut() {
+                        ep.install_faults(LinkFaults::new(plan.clone(), ep.id()));
                     }
                 }
                 self.stats = Some(stats);
@@ -282,9 +324,10 @@ impl ClusterDriver {
                 .unwrap_or_else(|e| panic!("spawn worker process for node {id}: {e}"));
             children.push((id, child));
         }
-        let accepted = tcp::accept_workers(&listener, self.n_nodes, |streams| {
-            tcp::check_children(&mut children, streams)
-        });
+        let accepted =
+            tcp::accept_workers(&listener, self.n_nodes, self.rendezvous_secs, |streams| {
+                tcp::check_children(&mut children, streams)
+            });
         self.children = children;
         accepted.unwrap_or_else(|e| panic!("tcp rendezvous failed: {e:#}"))
     }
@@ -300,6 +343,60 @@ impl ClusterDriver {
         }
         panic!("cluster is not running");
     }
+
+    /// Automatic crash recovery. When the cluster dies while the fault
+    /// plan holds a latched (injected) crash, this absorbs the cascade
+    /// panic, rolls the boundary state back and respawns the cluster —
+    /// the recovery half of the fault plane:
+    ///
+    /// 1. detect — the node went dark mid-epoch; its peers saw `Gone`
+    ///    and unwound, so the report channel errored. The *plan's* latch
+    ///    (set before the injected panic) is the detection signal —
+    ///    panic payloads are never parsed.
+    /// 2. roll back — synchronous algorithms restart from the newest
+    ///    durable snapshot in the attached [`crate::checkpoint::CheckpointStore`]
+    ///    (falling back to the monitor-resident boundary state);
+    ///    asynchronous ones absorb the loss by restarting from the latest
+    ///    epoch boundary.
+    /// 3. respawn — the normal resume path: counters preloaded, per-node
+    ///    clocks/jitter restored, shards replayed by the node functions.
+    ///
+    /// Returns false when the failure was not an injected crash — the
+    /// caller re-raises it like any cluster failure.
+    fn try_recover(&mut self) -> bool {
+        let Some(plan) = self.faults.clone() else { return false };
+        let Some(crash_t) = plan.take_pending_recovery() else { return false };
+        if let Some(r) = self.running.take() {
+            // The runner unwound with the injected panic plus the peers'
+            // cascade panics — absorb them; this is the scheduled fault,
+            // not an algorithm failure.
+            let _ = r.handle.join();
+        }
+        let resume = if self.async_recovery {
+            self.last.clone()
+        } else {
+            plan.store()
+                .and_then(|s| s.latest())
+                .map(|ck| ck.state.resume)
+                .unwrap_or_else(|| self.last.clone())
+        };
+        let resumed_clock =
+            resume.nodes.iter().map(|n| n.clock.clock).fold(0.0f64, f64::max);
+        plan.record_recovery(crash_t - resumed_clock);
+        crate::util::logger::log(
+            crate::util::logger::Level::Warn,
+            format_args!(
+                "fault plane: injected crash at sim-time {crash_t:.4}s; respawning {} \
+                 from epoch {} ({:.4}s of simulated work rolled back)",
+                self.name,
+                resume.epoch,
+                (crash_t - resumed_clock).max(0.0)
+            ),
+        );
+        self.resume = if resume.is_fresh() { None } else { Some(Arc::new(resume.clone())) };
+        self.last = resume;
+        true
+    }
 }
 
 impl Driver for ClusterDriver {
@@ -312,24 +409,36 @@ impl Driver for ClusterDriver {
     }
 
     fn step(&mut self) -> EpochReport {
-        if self.running.is_none() {
-            self.spawn(); // nodes start their first epoch immediately
-        } else if self.running.as_ref().unwrap().directives.send(Directive::Continue).is_err() {
-            self.raise_cluster_failure();
+        loop {
+            if self.running.is_none() {
+                self.spawn(); // nodes start their first epoch immediately
+            } else if self.running.as_ref().unwrap().directives.send(Directive::Continue).is_err()
+            {
+                // the cluster died between boundaries — injected crash?
+                if self.try_recover() {
+                    continue;
+                }
+                self.raise_cluster_failure();
+            }
+            match self.running.as_ref().unwrap().reports.recv() {
+                Ok(report) => {
+                    self.last = ResumeState {
+                        epoch: report.epoch,
+                        grads: report.grads,
+                        w: report.w.clone(),
+                        comm: report.comm.clone(),
+                        nodes: report.nodes.clone(),
+                    };
+                    return report;
+                }
+                Err(_) => {
+                    if self.try_recover() {
+                        continue;
+                    }
+                    self.raise_cluster_failure();
+                }
+            }
         }
-        let received = self.running.as_ref().unwrap().reports.recv();
-        let report = match received {
-            Ok(rep) => rep,
-            Err(_) => self.raise_cluster_failure(),
-        };
-        self.last = ResumeState {
-            epoch: report.epoch,
-            grads: report.grads,
-            w: report.w.clone(),
-            comm: report.comm.clone(),
-            nodes: report.nodes.clone(),
-        };
-        report
     }
 
     fn state(&self) -> ResumeState {

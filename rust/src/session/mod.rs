@@ -328,18 +328,37 @@ impl<F: FnMut(&StepEvent)> Observer for FnObserver<F> {
     }
 }
 
+/// Where a [`CheckpointObserver`] persists its snapshots: one
+/// overwrite-in-place file (the classic `--ckpt` path) or a rolling
+/// last-k [`crate::checkpoint::CheckpointStore`] directory (what crash
+/// recovery reads back).
+enum CheckpointTarget {
+    File(PathBuf),
+    Store(Arc<crate::checkpoint::CheckpointStore>),
+}
+
 /// Observer that writes a version-2 session checkpoint every `every`
 /// epochs. Epochs that are not multiples of `every` are skipped — callers
 /// that need the final state on disk regardless (the CLI does) write one
 /// more checkpoint from [`Session::state`] after the run ends.
 pub struct CheckpointObserver {
-    path: PathBuf,
+    target: CheckpointTarget,
     every: usize,
 }
 
 impl CheckpointObserver {
+    /// Overwrite one checkpoint file in place every `every` epochs.
     pub fn new(path: impl Into<PathBuf>, every: usize) -> CheckpointObserver {
-        CheckpointObserver { path, every: every.max(1) }
+        CheckpointObserver { target: CheckpointTarget::File(path.into()), every: every.max(1) }
+    }
+
+    /// Append to a rolling last-k snapshot store every `every` epochs
+    /// (crash recovery respawns from the newest snapshot that verifies).
+    pub fn rotating(
+        store: Arc<crate::checkpoint::CheckpointStore>,
+        every: usize,
+    ) -> CheckpointObserver {
+        CheckpointObserver { target: CheckpointTarget::Store(store), every: every.max(1) }
     }
 }
 
@@ -349,7 +368,11 @@ impl Observer for CheckpointObserver {
             return;
         }
         let ckpt = crate::checkpoint::SessionCheckpoint::new(session.state());
-        if let Err(e) = ckpt.save(&self.path) {
+        let wrote = match &self.target {
+            CheckpointTarget::File(path) => ckpt.save(path),
+            CheckpointTarget::Store(store) => store.save(&ckpt).map(|_| ()),
+        };
+        if let Err(e) = wrote {
             crate::util::logger::log(
                 crate::util::logger::Level::Warn,
                 format_args!("checkpoint write failed at epoch {}: {e:#}", ev.epoch),

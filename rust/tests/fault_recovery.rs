@@ -1,0 +1,377 @@
+//! Fault-plane integration: seeded failure injection must be (a) an
+//! identity when passive, (b) deterministic under the plan seed, and
+//! (c) recoverable — a mid-run crash rolls the cluster back to its last
+//! snapshot and the recovered run still converges to the *bit-exact*
+//! failure-free answer, because faults reshape simulated time, never
+//! payloads or counters.
+//!
+//! The crash *epoch* is scheduled in simulated seconds, and the sim
+//! clock carries measured thread-CPU noise — so which boundary the
+//! rollback lands on varies between reruns. What is pinned is the part
+//! that cannot vary: every epoch boundary of a deterministic algorithm
+//! is bit-exact with the failure-free run, so the recovered final `w`,
+//! the final objective and the final comm totals are bit-identical no
+//! matter where the crash lands.
+
+use std::sync::Arc;
+
+use fdsvrg::algs::{Algorithm, Problem, RunParams};
+use fdsvrg::checkpoint::CheckpointStore;
+use fdsvrg::cluster::run_cluster;
+use fdsvrg::data::{generate, GenSpec};
+use fdsvrg::metrics::RunResult;
+use fdsvrg::net::fault::FaultPlan;
+use fdsvrg::net::{tags, SimParams};
+use fdsvrg::session::{CheckpointObserver, SessionBuilder};
+
+fn tiny() -> Problem {
+    let ds = generate(&GenSpec::new("sess", 150, 64, 10).with_seed(41));
+    Problem::logistic_l2(ds, 1e-2)
+}
+
+fn fast_params(q: usize, outer: usize) -> RunParams {
+    RunParams { q, outer, sim: SimParams::free(), ..Default::default() }
+}
+
+/// A costed network whose fault penalties (RTO = 2 × latency per drop,
+/// +1 latency per reorder) tower over the millisecond-scale CPU noise in
+/// the measured clock, so "faults inflate sim-time" can be asserted
+/// strictly.
+fn slow_net() -> SimParams {
+    SimParams { latency: 5e-3, ..SimParams::default() }
+}
+
+fn run(algo: Algorithm, params: &RunParams) -> RunResult {
+    SessionBuilder::new(algo, &tiny(), params.clone()).build().unwrap().run_to_completion()
+}
+
+fn plan(spec: &str, seed: u64) -> Arc<FaultPlan> {
+    FaultPlan::parse(spec, seed).unwrap().expect("non-empty fault plan")
+}
+
+fn assert_w_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_eq!(a.w.len(), b.w.len(), "{tag}: dim");
+    for (i, (x, y)) in a.w.iter().zip(b.w.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: w[{i}] {x:.17e} vs {y:.17e}");
+    }
+    assert_eq!(
+        a.final_objective().to_bits(),
+        b.final_objective().to_bits(),
+        "{tag}: final objective"
+    );
+}
+
+/// Everything deterministic: weights, objective, trace contents (minus
+/// the measured clocks), comm counters.
+fn assert_deterministic_fields_identical(a: &RunResult, b: &RunResult, tag: &str) {
+    assert_w_identical(a, b, tag);
+    assert_eq!(a.trace.points.len(), b.trace.points.len(), "{tag}: trace length");
+    for (i, (pa, pb)) in a.trace.points.iter().zip(b.trace.points.iter()).enumerate() {
+        assert_eq!(pa.outer, pb.outer, "{tag}: point {i} outer");
+        assert_eq!(pa.scalars, pb.scalars, "{tag}: point {i} scalars");
+        assert_eq!(pa.bytes, pb.bytes, "{tag}: point {i} bytes");
+        assert_eq!(pa.grads, pb.grads, "{tag}: point {i} grads");
+        assert_eq!(pa.objective.to_bits(), pb.objective.to_bits(), "{tag}: point {i} objective");
+    }
+    assert_eq!(a.total_scalars, b.total_scalars, "{tag}: total scalars");
+    assert_eq!(a.total_bytes, b.total_bytes, "{tag}: total bytes");
+    assert_eq!(a.total_messages, b.total_messages, "{tag}: total messages");
+    assert_eq!(a.node_comm, b.node_comm, "{tag}: per-sender counters");
+}
+
+// ---------- the passive plan is an identity ----------
+
+#[test]
+fn passive_fault_plan_is_bit_exact_identity() {
+    // A plan whose probabilities are zero, whose crash is scheduled far
+    // past the end of the run and whose partition window never opens
+    // installs the per-send hook on every endpoint — and must change
+    // *nothing* observable, not even the decision-stream position
+    // (no probability clause active ⇒ no draws).
+    let mut params = fast_params(4, 6);
+    params.sim = SimParams::default();
+    let baseline = run(Algorithm::FdSvrg, &params);
+
+    let passive = plan(
+        "drop:0,dup:0,reorder:0,crash:2@1000000000,partition:1+2@999999-1000000",
+        7,
+    );
+    let mut faulted_params = params.clone();
+    faulted_params.faults = Some(passive.clone());
+    let faulted = run(Algorithm::FdSvrg, &faulted_params);
+
+    assert_deterministic_fields_identical(&baseline, &faulted, "passive plan");
+    let stats = passive.stats();
+    assert_eq!(stats.drops + stats.dups + stats.reorders, 0, "no decisions may fire");
+    assert_eq!(stats.partition_holds, 0, "window never opened");
+    assert_eq!(stats.crashes, 0, "crash scheduled past the horizon");
+    assert_eq!(stats.recoveries, 0);
+}
+
+// ---------- link noise: time reshaped, payloads untouched ----------
+
+#[test]
+fn link_noise_inflates_sim_time_but_never_the_answer() {
+    let mut params = fast_params(4, 6);
+    params.sim = slow_net();
+    let baseline = run(Algorithm::FdSvrg, &params);
+
+    let noise = plan("drop:0.4,dup:0.3,reorder:0.8", 7);
+    let mut faulted_params = params.clone();
+    faulted_params.faults = Some(noise.clone());
+    let faulted = run(Algorithm::FdSvrg, &faulted_params);
+
+    // reliable-link model: every dropped frame is retransmitted, every
+    // duplicate is discarded — the numerics and the canonical counters
+    // cannot tell the runs apart
+    assert_deterministic_fields_identical(&baseline, &faulted, "link noise");
+
+    let stats = noise.stats();
+    assert!(stats.drops > 0, "drop:0.4 over a full run must fire");
+    assert!(stats.dups > 0, "dup:0.3 over a full run must fire");
+    assert!(stats.reorders > 0, "reorder:0.8 over a full run must fire");
+    // each drop charges a 10 ms retransmission timeout on this network —
+    // far above the CPU-measurement noise floor
+    assert!(
+        faulted.total_sim_time > baseline.total_sim_time,
+        "retransmissions must cost simulated time ({} vs {})",
+        faulted.total_sim_time,
+        baseline.total_sim_time
+    );
+}
+
+#[test]
+fn fault_decisions_are_seeded_and_thread_invariant() {
+    // Same seed ⇒ the same per-send decision triples, whatever the host
+    // parallelism: reruns and `--threads K` land on identical fault
+    // counters and identical weights.
+    let spec = "drop:0.3,dup:0.2,reorder:0.5";
+    let mut runs = Vec::new();
+    for threads in [1usize, 3, 1] {
+        let p = plan(spec, 1234);
+        let mut params = fast_params(4, 6);
+        params.sim = slow_net();
+        params.threads = threads;
+        params.faults = Some(p.clone());
+        let res = run(Algorithm::FdSvrg, &params);
+        runs.push((res, p.stats()));
+    }
+    let (first, first_stats) = &runs[0];
+    assert!(first_stats.drops > 0 && first_stats.reorders > 0);
+    for (i, (res, stats)) in runs.iter().enumerate().skip(1) {
+        assert_eq!(first_stats, stats, "run {i}: fault decisions must replay exactly");
+        assert_deterministic_fields_identical(first, res, &format!("seeded rerun {i}"));
+    }
+
+    // ... and a different plan seed really does move the decisions
+    let other = plan(spec, 99);
+    let mut params = fast_params(4, 6);
+    params.sim = slow_net();
+    params.faults = Some(other.clone());
+    let res = run(Algorithm::FdSvrg, &params);
+    assert_w_identical(first, &res, "different fault seed still never touches w");
+}
+
+// ---------- partitions hold, heal and deliver ----------
+
+#[test]
+fn partition_heals_and_the_run_completes_bit_exact() {
+    let mut params = fast_params(4, 6);
+    params.sim = SimParams::default();
+    let baseline = run(Algorithm::FdSvrg, &params);
+
+    // node 2 vs the rest, from t=0 until a heal time far beyond the
+    // failure-free horizon: every early cross-cut message is buffered and
+    // delivered at the heal, dragging the receiving clocks past it
+    let part = plan("partition:2@0-1000", 7);
+    let mut faulted_params = params.clone();
+    faulted_params.faults = Some(part.clone());
+    let faulted = run(Algorithm::FdSvrg, &faulted_params);
+
+    assert_deterministic_fields_identical(&baseline, &faulted, "partition");
+    assert!(part.stats().partition_holds > 0, "node 2's traffic must cross the cut");
+    assert!(
+        faulted.total_sim_time >= 1000.0,
+        "held deliveries land at the heal time (got {})",
+        faulted.total_sim_time
+    );
+}
+
+// ---------- crash → detect → roll back → respawn → same answer ----------
+
+#[test]
+fn crash_recovery_lands_on_the_failure_free_answer() {
+    let mut params = fast_params(4, 8);
+    params.sim = SimParams::default();
+    let baseline = run(Algorithm::FdSvrg, &params);
+
+    // schedule the crash mid-run, in this cell's own simulated seconds
+    let crash_at = 0.3 * baseline.total_sim_time;
+    let spec = format!("crash:2@{crash_at}");
+
+    let mut finals = Vec::new();
+    for rerun in 0..2 {
+        let p = plan(&spec, 7);
+        let mut faulted_params = params.clone();
+        faulted_params.faults = Some(p.clone());
+        let recovered = run(Algorithm::FdSvrg, &faulted_params);
+
+        let stats = p.stats();
+        assert_eq!(stats.crashes, 1, "rerun {rerun}: the scheduled crash must fire once");
+        assert_eq!(stats.recoveries, 1, "rerun {rerun}: one crash, one recovery");
+        assert!(stats.lost_sim_time >= 0.0);
+        assert_eq!(
+            recovered.trace.points.last().unwrap().outer,
+            8,
+            "rerun {rerun}: the respawned cluster must finish the full epoch budget"
+        );
+        assert!(
+            recovered.trace.points.len() >= baseline.trace.points.len(),
+            "rerun {rerun}: replayed epochs appear in the trace (restart penalty is visible)"
+        );
+        // every epoch boundary is bit-exact with the failure-free run, so
+        // rolling back to one and replaying must land on the same answer
+        assert_w_identical(&baseline, &recovered, &format!("crash recovery rerun {rerun}"));
+        assert_eq!(recovered.total_scalars, baseline.total_scalars, "rolled-back traffic is excluded");
+        assert_eq!(recovered.total_bytes, baseline.total_bytes);
+        assert_eq!(recovered.total_messages, baseline.total_messages);
+        finals.push(recovered.w.clone());
+    }
+    assert_eq!(finals[0], finals[1], "same-seed recovered reruns are bit-identical");
+}
+
+#[test]
+fn crash_recovery_prefers_the_durable_snapshot_store() {
+    let dir = std::env::temp_dir().join("fdsvrg_fault_store_test");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut params = fast_params(4, 8);
+    params.sim = SimParams::default();
+    let baseline = run(Algorithm::FdSvrg, &params);
+
+    let p = plan(&format!("crash:2@{}", 0.4 * baseline.total_sim_time), 7);
+    let store = Arc::new(CheckpointStore::new(&dir, 3).unwrap());
+    p.attach_store(store.clone());
+
+    let mut faulted_params = params.clone();
+    faulted_params.faults = Some(p.clone());
+    let recovered = SessionBuilder::new(Algorithm::FdSvrg, &tiny(), faulted_params)
+        .observe(CheckpointObserver::rotating(store.clone(), 1))
+        .build()
+        .unwrap()
+        .run_to_completion();
+
+    assert_eq!(p.stats().recoveries, 1, "crash must be absorbed via the store");
+    assert_w_identical(&baseline, &recovered, "store-backed recovery");
+    let latest = store.latest().expect("rotating observer must have left snapshots");
+    assert_eq!(latest.state.resume.epoch, 8, "last snapshot is the final boundary");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn dsvrg_crash_recovery_lands_on_the_failure_free_answer() {
+    // second sync algorithm: the round-robin duty rotation must survive a
+    // barrier-and-restart recovery mid-cycle
+    let mut params = fast_params(3, 7);
+    params.sim = SimParams::default();
+    let baseline = run(Algorithm::Dsvrg, &params);
+
+    let p = plan(&format!("crash:2@{}", 0.3 * baseline.total_sim_time), 7);
+    let mut faulted_params = params.clone();
+    faulted_params.faults = Some(p.clone());
+    let recovered = run(Algorithm::Dsvrg, &faulted_params);
+
+    assert_eq!(p.stats().recoveries, 1);
+    assert_w_identical(&baseline, &recovered, "dsvrg crash recovery");
+}
+
+#[test]
+fn asysvrg_crash_is_absorbed_and_the_run_continues() {
+    // the asynchronous algorithms race by design ⇒ no bit-exactness; a
+    // crash must still be detected, rolled back to the last boundary and
+    // the continuation must be a valid run
+    let mut params = fast_params(3, 6);
+    params.sim = SimParams::default();
+    params.servers = 2;
+    let baseline = run(Algorithm::AsySvrg, &params);
+
+    let p = plan(&format!("crash:2@{}", 0.25 * baseline.total_sim_time), 7);
+    let mut faulted_params = params.clone();
+    faulted_params.faults = Some(p.clone());
+    let recovered = run(Algorithm::AsySvrg, &faulted_params);
+
+    assert_eq!(p.stats().crashes, 1);
+    assert_eq!(p.stats().recoveries, 1);
+    assert_eq!(recovered.trace.points.last().unwrap().outer, 6);
+    assert!(recovered.final_objective().is_finite());
+}
+
+// ---------- a dying peer is named, never waited on ----------
+//
+// `recv_from` coverage lives in `robustness.rs`; these pin the any-peer
+// paths a parameter server or star hub blocks in. Nodes 1 and 3 stay
+// alive (parked on a release broadcast) so the only `Gone` the hub can
+// observe belongs to node 2 — the test would hang, not pass, if the hub
+// waited politely.
+
+#[test]
+#[should_panic(expected = "peer 2 disconnected while receiving")]
+fn recv_any_names_a_dead_peer_instead_of_hanging() {
+    run_cluster(4, SimParams::free(), |mut ep| {
+        match ep.id() {
+            0 => {
+                // expects three contributions; only two senders survive
+                for _ in 0..3 {
+                    let _ = ep.recv_any();
+                }
+                for peer in [1, 3] {
+                    ep.send(peer, tags::BCAST, vec![0.0]);
+                }
+            }
+            2 => { /* dies before contributing */ }
+            _ => {
+                ep.send(0, tags::REDUCE, vec![ep.id() as f64]);
+                let _ = ep.recv_from(0, tags::BCAST);
+            }
+        }
+    });
+}
+
+#[test]
+#[should_panic(expected = "peer 2 disconnected while receiving")]
+fn recv_tag_names_a_dead_peer_instead_of_hanging() {
+    run_cluster(4, SimParams::free(), |mut ep| {
+        match ep.id() {
+            0 => {
+                for _ in 0..3 {
+                    let _ = ep.recv_tag(tags::REDUCE);
+                }
+                for peer in [1, 3] {
+                    ep.send(peer, tags::BCAST, vec![0.0]);
+                }
+            }
+            2 => {}
+            _ => {
+                ep.send(0, tags::REDUCE, vec![ep.id() as f64]);
+                let _ = ep.recv_from(0, tags::BCAST);
+            }
+        }
+    });
+}
+
+#[test]
+#[should_panic(expected = "peer 1 disconnected while receiving")]
+fn injected_crash_tears_down_blocked_peers_loudly() {
+    // raw endpoint harness: node 1 carries a crash plan due at t=0, so
+    // its first counted send unwinds it; node 0, blocked on it, must be
+    // torn down naming node 1 rather than hang
+    let p = FaultPlan::parse("crash:1@0", 5).unwrap().unwrap();
+    run_cluster(2, SimParams::default(), move |mut ep| {
+        if ep.id() == 1 {
+            ep.install_faults(fdsvrg::net::fault::LinkFaults::new(p.clone(), 1));
+            ep.send(0, tags::REDUCE, vec![1.0]);
+        } else {
+            let _ = ep.recv_from(1, tags::REDUCE);
+        }
+    });
+}

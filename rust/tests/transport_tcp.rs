@@ -10,6 +10,10 @@ const BIN: &str = env!("CARGO_BIN_EXE_fdsvrg");
 
 /// `fdsvrg train` on the tiny profile with a 2-worker FD-SVRG cluster.
 fn train(transport: &str, envs: &[(&str, &str)]) -> Output {
+    train_with(transport, &[], envs)
+}
+
+fn train_with(transport: &str, extra: &[&str], envs: &[(&str, &str)]) -> Output {
     let mut cmd = Command::new(BIN);
     cmd.args([
         "train",
@@ -26,6 +30,7 @@ fn train(transport: &str, envs: &[(&str, &str)]) -> Output {
         "--transport",
         transport,
     ]);
+    cmd.args(extra);
     for (k, v) in envs {
         cmd.env(k, v);
     }
@@ -109,6 +114,35 @@ fn tcp_worker_death_names_the_node_instead_of_hanging() {
         stderr.contains("peer 1 disconnected"),
         "failure must name the dead node; stderr:\n{stderr}"
     );
+}
+
+#[test]
+fn rendezvous_timeout_flag_flows_end_to_end() {
+    // a generous explicit deadline must be accepted and plumbed through
+    // the monitor, the serialized worker spec and every worker's dial
+    // loop — the run completes exactly as with the default
+    let out = train_with("tcp", &["--rendezvous-timeout", "90"], &[]);
+    assert!(
+        out.status.success(),
+        "explicit rendezvous deadline broke the run: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // a nonsensical deadline is rejected up front, before any sockets
+    let out = train_with("tcp", &["--rendezvous-timeout", "0"], &[]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("rendezvous"), "stderr:\n{stderr}");
+}
+
+#[test]
+fn tcp_rejects_fault_injection_with_a_clear_error() {
+    // fault injection lives at the sim transport seam; over sockets it
+    // must refuse loudly instead of silently running failure-free
+    let out = train_with("tcp", &["--faults", "drop:0.1"], &[]);
+    assert!(!out.status.success(), "--faults over tcp must be rejected");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("sim transport"), "stderr:\n{stderr}");
 }
 
 #[test]
