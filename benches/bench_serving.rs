@@ -1,0 +1,120 @@
+//! Serving-plane microbenchmarks: the predict batch-path churn pair
+//! (fresh allocation per call vs `Workspace` reuse — satellite of the
+//! sharded inference plane), the shard partial-margin kernel on the exact
+//! f64 slab vs the f32-quantized snapshot, and two single-shot closed-loop
+//! serving sims pinning that batching beats batch=1 on simulated
+//! throughput.
+//!
+//! A full (unfiltered) run writes `BENCH_serving_micro.json` in the
+//! working directory — a different file from the `exp serving` report
+//! (`BENCH_serving.json`), which carries the latency/throughput grid.
+//!
+//! ```text
+//! cargo bench --bench bench_serving             # full sweep + JSON
+//! cargo bench --bench bench_serving -- churn    # predict pair (CI smoke)
+//! ```
+
+use fdsvrg::bench::Bench;
+use fdsvrg::config::ExperimentConfig;
+use fdsvrg::data::profiles;
+use fdsvrg::serve::{
+    dense_margins, simulate, ArrivalMode, BatchPolicy, QuerySource, ServeSpec, ShardServer,
+};
+use fdsvrg::util::Pcg64;
+
+fn main() {
+    let mut b = Bench::from_args("bench_serving");
+    let ds = profiles::load("tiny").expect("tiny profile");
+    let (d, n) = (ds.d(), ds.x.cols());
+    let mut rng = Pcg64::seed_from_u64(9);
+    let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+
+    // predict batch path: margins with a fresh allocation per call vs the
+    // reused Workspace buffer — same arithmetic, bit-equal outputs
+    let mut before = Vec::new();
+    b.bench("churn predict alloc-per-call (before)", || {
+        let mut margins = vec![0.0f64; n];
+        for (i, m) in margins.iter_mut().enumerate() {
+            *m = ds.x.col_dot(i, &w);
+        }
+        std::hint::black_box(&margins);
+        before = margins;
+    });
+    let mut buf = Vec::new();
+    b.bench("churn predict workspace-reuse (after)", || {
+        let margins = dense_margins(&ds.x, &w, &mut buf);
+        std::hint::black_box(margins);
+    });
+    if b.enabled("churn predict alloc-per-call (before)")
+        && b.enabled("churn predict workspace-reuse (after)")
+    {
+        let after = dense_margins(&ds.x, &w, &mut buf);
+        assert_eq!(before.len(), after.len());
+        for (x, y) in before.iter().zip(after) {
+            assert_eq!(x.to_bits(), y.to_bits(), "reused path diverged from alloc path");
+        }
+    }
+
+    // shard partial-margin kernel: exact f64 slab vs f32-quantized snapshot
+    let exact = ShardServer::from_snapshot(&w, 0, d, false);
+    let quant = ShardServer::from_snapshot(&w, 0, d, true);
+    let qidx: Vec<u32> = (0..d as u32).step_by(3).collect();
+    let qval: Vec<f64> = qidx.iter().map(|_| rng.normal()).collect();
+    b.bench("shard partial f64", || {
+        std::hint::black_box(exact.partial_margin(&qidx, &qval));
+    });
+    b.bench("shard partial f32-quantized", || {
+        std::hint::black_box(quant.partial_margin(&qidx, &qval));
+    });
+
+    // closed-loop serving sims (single-shot: each drives 2000 queries
+    // through a 5-node sim cluster); the in-sim throughput ordering is a
+    // correctness pin, not just a number
+    let cfg = ExperimentConfig::default();
+    let model = cfg.net_spec_for("uniform").unwrap().resolve(cfg.sim_params());
+    let source = QuerySource::Synthetic { d, nnz: 8 };
+    let sim = |max_batch: usize| {
+        simulate(&ServeSpec {
+            w: &w,
+            bounds: vec![(0, d / 2), (d / 2, d)],
+            model: model.clone(),
+            wire: fdsvrg::net::WireFmt::F64,
+            policy: BatchPolicy { max_batch, max_delay: 200e-6 },
+            queries: 2_000,
+            mode: ArrivalMode::Closed { concurrency: 64 },
+            seed: 5,
+            source: source.clone(),
+            collect_margins: false,
+        })
+        .report
+    };
+    let mut qps = (0.0f64, 0.0f64);
+    b.once("serve sim batch=1", || {
+        qps.0 = sim(1).qps;
+    });
+    b.once("serve sim batch=32", || {
+        qps.1 = sim(32).qps;
+    });
+    if b.enabled("serve sim batch=1") && b.enabled("serve sim batch=32") {
+        assert!(
+            qps.1 > qps.0,
+            "batch=32 ({:.0} qps) should beat batch=1 ({:.0} qps) in-sim",
+            qps.1,
+            qps.0
+        );
+        println!("in-sim qps: batch=1 {:.0}, batch=32 {:.0} ({:.2}x)", qps.0, qps.1, qps.1 / qps.0);
+    }
+
+    if !b.is_filtered() {
+        let note = "serving-plane microbench baseline; regenerate from the repo \
+                    root with `cargo bench --bench bench_serving`";
+        let path = b.json_path().unwrap_or("BENCH_serving_micro.json");
+        b.write_json(path, note).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("baseline written to {path}");
+    } else if let Some(path) = b.json_path() {
+        let note = "partial (filtered) bench_serving run";
+        b.write_json(path, note).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("filtered report written to {path}");
+    }
+    b.finish();
+}

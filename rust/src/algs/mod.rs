@@ -94,6 +94,27 @@ impl Problem {
         correct as f64 / n as f64
     }
 
+    /// `(objective, accuracy)` from precomputed margins `wᵀx_i` — one pass
+    /// over the data instead of two, with the margins coming from reused
+    /// scratch ([`crate::serve::dense_margins`]): the allocation-free
+    /// batch-predict path. Agrees with [`Problem::objective`] /
+    /// [`Problem::accuracy`] bit-exactly (same `col_dot` margins, same
+    /// summation order).
+    pub fn eval_margins(&self, margins: &[f64], w: &[f64]) -> (f64, f64) {
+        assert_eq!(margins.len(), self.n(), "need one margin per instance");
+        let loss = self.loss.build();
+        let n = self.n();
+        let mut acc = 0.0;
+        let mut correct = 0usize;
+        for (i, &z) in margins.iter().enumerate() {
+            acc += loss.value(z, self.ds.y[i]);
+            if (z >= 0.0) == (self.ds.y[i] > 0.0) {
+                correct += 1;
+            }
+        }
+        (acc / n as f64 + self.reg.value(w), correct as f64 / n as f64)
+    }
+
     /// Smoothness constant `L ≤ φ''_max · max_i ‖x_i‖² + λ` (instances are
     /// unit-normalized by the generators, but compute the max anyway).
     pub fn smoothness(&self) -> f64 {

@@ -324,6 +324,25 @@ pub fn load_any<P: AsRef<Path>>(path: P) -> Result<Loaded> {
     }
 }
 
+/// Load from a single checkpoint file *or* a rotating store directory
+/// (`CheckpointObserver::rotating`'s `<path>.d/`): directories resolve to
+/// the newest snapshot whose envelope verifies — corrupt or truncated
+/// files are skipped with a logged warning ([`CheckpointStore::latest`]'s
+/// contract) — so `predict`/`serve --ckpt` can point straight at a live
+/// training run's store.
+pub fn load_newest<P: AsRef<Path>>(path: P) -> Result<Loaded> {
+    let p = path.as_ref();
+    if p.is_dir() {
+        let store = CheckpointStore::new(p, usize::MAX)?;
+        let sc = store
+            .latest()
+            .with_context(|| format!("no valid checkpoint snapshot in {}", p.display()))?;
+        Ok(Loaded::Session(Box::new(sc)))
+    } else {
+        load_any(p)
+    }
+}
+
 impl SessionCheckpoint {
     pub fn new(state: SessionState) -> SessionCheckpoint {
         SessionCheckpoint { state }

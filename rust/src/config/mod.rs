@@ -234,6 +234,25 @@ pub struct ExperimentConfig {
     /// `--rendezvous-timeout`): how long the monitor waits for all worker
     /// processes to dial in before failing the launch.
     pub rendezvous_timeout: f64,
+    /// Serving plane: batch-close size (`serve.batch`, CLI
+    /// `--serve-batch`) — a batch dispatches when it holds this many
+    /// queries or when the delay window expires.
+    pub serve_batch: usize,
+    /// Serving plane: batch-close delay window, seconds (`serve.delay`,
+    /// CLI `--serve-delay`).
+    pub serve_delay: f64,
+    /// Serving plane: total queries the load generator drives
+    /// (`serve.queries`, CLI `--queries`).
+    pub serve_queries: usize,
+    /// Serving plane, closed mode: client-pool size (`serve.concurrency`,
+    /// CLI `--concurrency`).
+    pub serve_concurrency: usize,
+    /// Serving plane arrival discipline (`serve.mode = "closed"|"open"`,
+    /// CLI `--mode`).
+    pub serve_mode: String,
+    /// Serving plane, open mode: Poisson arrival rate, queries/second
+    /// (`serve.rate`, CLI `--rate`).
+    pub serve_rate: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -277,6 +296,14 @@ impl Default for ExperimentConfig {
             transport: "sim".into(),
             faults: String::new(),
             rendezvous_timeout: crate::net::transport::tcp::DEFAULT_RENDEZVOUS_SECS,
+            serve_batch: 32,
+            // 5× the base wire latency: long enough to fill batches under
+            // load, short enough to stay invisible at p50 when idle
+            serve_delay: 200e-6,
+            serve_queries: 10_000,
+            serve_concurrency: 64,
+            serve_mode: "closed".into(),
+            serve_rate: 50_000.0,
         }
     }
 }
@@ -341,6 +368,12 @@ impl ExperimentConfig {
             transport: cfg.str_or("run.transport", &d.transport).to_string(),
             faults: cfg.str_or("run.faults", &d.faults).to_string(),
             rendezvous_timeout: cfg.f64_or("run.rendezvous_timeout", d.rendezvous_timeout),
+            serve_batch: cfg.usize_or("serve.batch", d.serve_batch).max(1),
+            serve_delay: cfg.f64_or("serve.delay", d.serve_delay),
+            serve_queries: cfg.usize_or("serve.queries", d.serve_queries),
+            serve_concurrency: cfg.usize_or("serve.concurrency", d.serve_concurrency).max(1),
+            serve_mode: cfg.str_or("serve.mode", &d.serve_mode).to_string(),
+            serve_rate: cfg.f64_or("serve.rate", d.serve_rate),
         }
     }
 
@@ -374,6 +407,20 @@ impl ExperimentConfig {
     /// This config's network scenario (`net.model` / CLI `--net`).
     pub fn net_spec(&self) -> Result<crate::net::NetSpec, String> {
         self.net_spec_for(&self.net_model)
+    }
+
+    /// The serving plane's arrival discipline (`serve.mode` / CLI
+    /// `--mode`), parameterized by this config's concurrency/rate knobs.
+    pub fn serve_arrival_mode(&self) -> Result<crate::serve::ArrivalMode, String> {
+        match self.serve_mode.to_ascii_lowercase().as_str() {
+            "closed" => {
+                Ok(crate::serve::ArrivalMode::Closed { concurrency: self.serve_concurrency })
+            }
+            "open" => Ok(crate::serve::ArrivalMode::Open { rate: self.serve_rate }),
+            other => Err(format!(
+                "unknown serve mode {other:?}; modes (case-insensitive): closed, open"
+            )),
+        }
     }
 
     pub fn sim_params(&self) -> crate::net::SimParams {

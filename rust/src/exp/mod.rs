@@ -883,6 +883,150 @@ fn write_faults_json(ctx: &Ctx, rows: &[FaultRow]) -> Result<()> {
     Ok(())
 }
 
+/// The serving-plane ablation (`exp serving`): drive the sharded
+/// inference plane (see [`crate::serve`]) across network scenario ×
+/// shard count × wire format × batch size, closed-loop, plus one
+/// open-loop (Poisson) row per scenario/shard cell. Serving timing is
+/// independent of the weight *values*, so the model is a seeded synthetic
+/// w — the driver never touches the training path. Quick mode smokes the
+/// whole grid on the tiny profile; the full run measures news20-sim with
+/// 50k queries per cell (millions of simulated queries total). Everything
+/// lands in `BENCH_serving.json` next to the printed tables; the sim is
+/// entirely modeled time, so the report is bit-stable across reruns and
+/// `--threads`.
+pub fn serving(ctx: &Ctx) -> Result<Vec<crate::serve::ServeReport>> {
+    use crate::serve::{simulate, ArrivalMode, BatchPolicy, QuerySource, ServeSpec};
+    use crate::util::Pcg64;
+    let quick = ctx.scale < 1.0;
+    let profile = if quick { "tiny" } else { "news20-sim" };
+    let queries = if quick { 1_500 } else { 50_000 };
+    let concurrency = ctx.cfg.serve_concurrency;
+    let q_list: &[usize] = if quick { &[2, 4] } else { &[4, 8] };
+    let batch_list = [1usize, 8, 32];
+    let wires = [crate::net::WireFmt::F64, crate::net::WireFmt::F32];
+    let scenarios = ["uniform", "hetero", "straggler", "jitter"];
+    let ds = profiles::load(profile).context("profile")?;
+    let d = ds.d();
+    // per-q feature partitions, computed before the matrix moves into the
+    // shared query source
+    let bounds_for: Vec<Vec<(usize, usize)>> = q_list
+        .iter()
+        .map(|&q| {
+            crate::sparse::partition::by_features(&ds.x, q)
+                .iter()
+                .map(|s| (s.row_lo, s.row_hi))
+                .collect()
+        })
+        .collect();
+    let source = QuerySource::Columns(std::sync::Arc::new(ds.x));
+    let mut rng = Pcg64::seed_from_u64(ctx.cfg.seed ^ 0x7e57);
+    let inv = 1.0 / (d as f64).sqrt();
+    let w: Vec<f64> = (0..d).map(|_| rng.normal() * inv).collect();
+    let mut rows: Vec<crate::serve::ServeReport> = Vec::new();
+    for scenario in scenarios {
+        let model = ctx
+            .cfg
+            .net_spec_for(scenario)
+            .expect("built-in scenario kinds always parse")
+            .resolve(ctx.cfg.sim_params());
+        let mut table = TextTable::new(vec![
+            "q",
+            "wire",
+            "mode",
+            "batch",
+            "p50 (us)",
+            "p99 (us)",
+            "qps",
+            "B/query",
+        ]);
+        println!("== Serving :: {profile} / {scenario} ({queries} queries/run) ==");
+        for (qi, &q) in q_list.iter().enumerate() {
+            for wire in wires {
+                for &max_batch in &batch_list {
+                    let spec = ServeSpec {
+                        w: &w,
+                        bounds: bounds_for[qi].clone(),
+                        model: model.clone(),
+                        wire,
+                        policy: BatchPolicy { max_batch, max_delay: ctx.cfg.serve_delay },
+                        queries,
+                        mode: ArrivalMode::Closed { concurrency },
+                        seed: ctx.cfg.seed,
+                        source: source.clone(),
+                        collect_margins: false,
+                    };
+                    let r = simulate(&spec).report;
+                    table.row(vec![
+                        format!("{q}"),
+                        r.wire.to_string(),
+                        r.mode.to_string(),
+                        format!("{max_batch}"),
+                        format!("{:.1}", r.p50_us),
+                        format!("{:.1}", r.p99_us),
+                        format!("{:.0}", r.qps),
+                        format!("{:.1}", r.bytes_per_query),
+                    ]);
+                    rows.push(r);
+                }
+            }
+            // one open-loop row per (scenario, q): Poisson arrivals at the
+            // configured --rate against the full-batch f64 configuration
+            let spec = ServeSpec {
+                w: &w,
+                bounds: bounds_for[qi].clone(),
+                model: model.clone(),
+                wire: crate::net::WireFmt::F64,
+                policy: BatchPolicy { max_batch: 32, max_delay: ctx.cfg.serve_delay },
+                queries,
+                mode: ArrivalMode::Open { rate: ctx.cfg.serve_rate },
+                seed: ctx.cfg.seed,
+                source: source.clone(),
+                collect_margins: false,
+            };
+            let r = simulate(&spec).report;
+            table.row(vec![
+                format!("{q}"),
+                r.wire.to_string(),
+                format!("{}@{:.0}/s", r.mode, r.rate),
+                "32".to_string(),
+                format!("{:.1}", r.p50_us),
+                format!("{:.1}", r.p99_us),
+                format!("{:.0}", r.qps),
+                format!("{:.1}", r.bytes_per_query),
+            ]);
+            rows.push(r);
+        }
+        println!("{}", table.render());
+    }
+    write_serving_json(ctx, &rows)?;
+    Ok(rows)
+}
+
+/// Hand-rolled JSON for `BENCH_serving.json` — one row per simulated
+/// configuration, via [`crate::serve::ServeReport::to_json_row`].
+/// Deliberately separate from the golden-pinned
+/// [`crate::metrics::json::run_result_to_json`] layout.
+fn write_serving_json(ctx: &Ctx, rows: &[crate::serve::ServeReport]) -> Result<()> {
+    let mut out = String::from("{\n  \"experiment\": \"serving\",\n");
+    out.push_str(
+        "  \"note\": \"regenerate from the repo root with \
+         `cargo run --release -- exp serving --out .` \
+         (add --quick for the CI-sized tiny-profile grid)\",\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(&r.to_json_row());
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let path = ctx.out_dir.join("BENCH_serving.json");
+    std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
+    println!("serving report written to {}", path.display());
+    Ok(())
+}
+
 /// Table 1: dataset statistics of the `-sim` profiles.
 pub fn table1() -> Result<()> {
     let mut table =

@@ -45,6 +45,7 @@ pub mod metrics;
 pub mod multiclass;
 pub mod net;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sparse;
 pub mod testkit;

@@ -4,7 +4,9 @@
 //! fdsvrg train --algo fdsvrg --dataset webspam-sim --q 16 [--lambda 1e-4]
 //!              [--eta 0.x] [--outer 30] [--batch u] [--servers p]
 //!              [--config exp.toml] [--out results] [--star] [--transport sim|tcp]
-//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|all> [--out results] [--quick]
+//! fdsvrg serve --ckpt file-or-dir --dataset news20-sim --q 8 [--serve-batch 32]
+//!              [--queries 10000] [--mode closed|open] [--wire f64|f32]
+//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|serving|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
 //! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
@@ -31,6 +33,7 @@ fn real_main() -> Result<()> {
     match args.subcommand() {
         Some("train") => cmd_train(&args),
         Some("predict") => cmd_predict(&args),
+        Some("serve") => cmd_serve(&args),
         Some("exp") => cmd_exp(&args),
         Some("data") => cmd_data(&args),
         Some("check-engine") | Some("check-artifacts") => cmd_check_engine(&args),
@@ -105,10 +108,31 @@ const USAGE: &str = "usage:
                [--resume file]   (continue a run from a v2 session
                checkpoint; --outer counts total epochs incl. pre-resume)
                [--save file]     (write final weights as a v1 checkpoint)
-  fdsvrg predict --ckpt file [--dataset profile|path.libsvm]
+  fdsvrg predict --ckpt <file|dir> [--dataset profile|path.libsvm]
                (inference from a checkpoint of either version: v1 final
-               weights or a v2 session snapshot)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|all> [--out dir] [--quick]
+               weights or a v2 session snapshot; a directory means a
+               rotating checkpoint store from `train --ckpt X --save-every K`
+               — the newest valid snapshot wins, corrupt ones are skipped)
+  fdsvrg serve --ckpt <file|dir> [--dataset profile|path.libsvm] [--q N]
+               [--queries N] [--serve-batch B] [--serve-delay S]
+               [--mode closed|open] [--concurrency C] [--rate R]
+               [--wire f64|f32|sparse] [--net uniform|hetero|straggler|jitter]
+               [--seed S] [--out file.json]
+               (sharded margin-merge serving: the checkpoint's weights are
+               split over q feature shards — served from f32-quantized
+               read slabs under --wire f32, exact f64 otherwise — and a
+               router node batches seeded traffic drawn from the dataset's
+               instances, fans each batch to the shards and merges the
+               partial margins over the reduce tree. closed mode keeps
+               --concurrency clients in flight; open mode draws Poisson
+               arrivals at --rate qps. Batches close when full
+               (--serve-batch) or --serve-delay seconds after their oldest
+               query. Reports p50/p90/p99 latency, throughput and wire
+               bytes under the --net scenario; everything is simulated
+               time, so reports are bit-stable across reruns and
+               --threads. --ckpt accepts the same file-or-directory forms
+               as predict)
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|serving|all> [--out dir] [--quick]
                (compress: gap vs wire bytes vs sim time for the top-k /
                threshold gradient sparsifiers across the distributed
                algorithms; calibrate: run the distributed algorithms under
@@ -117,7 +141,10 @@ const USAGE: &str = "usage:
                faults: run the distributed algorithms across fault
                scenarios — link faults, a mid-run crash with automatic
                recovery, a healing partition — and report recovery counts
-               and sim-time overhead vs the failure-free baseline)
+               and sim-time overhead vs the failure-free baseline;
+               serving: latency/throughput ablation of the sharded
+               inference plane over batch size × wire format × network
+               scenario × shard count, written to BENCH_serving.json)
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|mixed|xla]
                (default: the build's own backend — xla when compiled in,
@@ -175,6 +202,16 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.rack_size = args.get_or("net-rack", cfg.rack_size);
     cfg.jitter_amp = args.get_or("net-jitter-amp", cfg.jitter_amp);
     cfg.jitter_seed = args.get_or("net-jitter-seed", cfg.jitter_seed);
+    cfg.serve_batch = args.get_or("serve-batch", cfg.serve_batch).max(1);
+    cfg.serve_delay = args.get_or("serve-delay", cfg.serve_delay);
+    cfg.serve_queries = args.get_or("queries", cfg.serve_queries);
+    cfg.serve_concurrency = args.get_or("concurrency", cfg.serve_concurrency).max(1);
+    if let Some(v) = args.get("mode") {
+        cfg.serve_mode = v.to_string();
+    }
+    cfg.serve_rate = args.get_or("rate", cfg.serve_rate);
+    // validate the arrival mode up front so the CLI error lists both modes
+    cfg.serve_arrival_mode().map_err(|e| anyhow::anyhow!(e))?;
     // validate the scenario kind up front so the CLI error lists every
     // valid value instead of panicking deep inside run_params()
     cfg.net_spec().map_err(|e| anyhow::anyhow!(e))?;
@@ -395,12 +432,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Inference from a saved checkpoint — v1 final weights or a v2 session
-/// snapshot (whose assembled `w` serves equally well). Exercises the
-/// backward-compat guarantee: v1 files keep loading after the v2 cut.
-fn cmd_predict(args: &Args) -> Result<()> {
-    let path = args.get("ckpt").context("predict needs --ckpt <file>")?;
-    let (version, algorithm, dataset, lambda, w) = match fdsvrg::checkpoint::load_any(path)? {
+/// Resolve a checkpoint argument — a v1/v2 file, or a rotating
+/// `CheckpointStore` directory where the newest valid snapshot wins — to
+/// `(version, algorithm, dataset, lambda, w)`.
+fn load_weights(path: &str) -> Result<(u32, String, String, f64, Vec<f64>)> {
+    Ok(match fdsvrg::checkpoint::load_newest(path)? {
         fdsvrg::checkpoint::Loaded::Weights(c) => (1, c.algorithm, c.dataset, c.lambda, c.w),
         fdsvrg::checkpoint::Loaded::Session(sc) => {
             let st = sc.state;
@@ -408,7 +444,17 @@ fn cmd_predict(args: &Args) -> Result<()> {
             let w = std::sync::Arc::try_unwrap(st.resume.w).unwrap_or_else(|a| (*a).clone());
             (2, st.algorithm, st.dataset, st.lambda, w)
         }
-    };
+    })
+}
+
+/// Inference from a saved checkpoint — v1 final weights or a v2 session
+/// snapshot (whose assembled `w` serves equally well). Exercises the
+/// backward-compat guarantee: v1 files keep loading after the v2 cut.
+/// The margin pass runs once through a reused [`fdsvrg::algs::Workspace`]
+/// buffer (no per-instance allocation) and both metrics derive from it.
+fn cmd_predict(args: &Args) -> Result<()> {
+    let path = args.get("ckpt").context("predict needs --ckpt <file-or-dir>")?;
+    let (version, algorithm, dataset, lambda, w) = load_weights(path)?;
     let ds_name = args.get("dataset").map(|s| s.to_string()).unwrap_or_else(|| dataset.clone());
     let ds = load_dataset(&ds_name)?;
     let problem = Problem::logistic_l2(ds, lambda);
@@ -418,13 +464,81 @@ fn cmd_predict(args: &Args) -> Result<()> {
         w.len(),
         problem.d()
     );
+    let mut buf = Vec::new();
+    let margins = fdsvrg::serve::dense_margins(&problem.ds.x, &w, &mut buf);
+    let (objective, accuracy) = problem.eval_margins(margins, &w);
     println!(
         "checkpoint {path} (v{version}, {algorithm} on {dataset}, λ={lambda:.0e}): \
-         objective {:.8}, accuracy {:.2}% on {ds_name} ({} instances)",
-        problem.objective(&w),
-        100.0 * problem.accuracy(&w),
+         objective {objective:.8}, accuracy {:.2}% on {ds_name} ({} instances)",
+        100.0 * accuracy,
         problem.n()
     );
+    Ok(())
+}
+
+/// Sharded margin-merge serving from a checkpoint: split the weights over
+/// `--q` feature shards (mirroring the training partition), batch seeded
+/// traffic at a router node under the `--serve-batch`/`--serve-delay`
+/// policy, and report the latency/throughput profile under the selected
+/// network scenario. Entirely simulated time — reports are bit-stable
+/// across reruns and `--threads`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fdsvrg::serve::{simulate, BatchPolicy, QuerySource, ServeSpec};
+    let cfg = build_experiment_config(args)?;
+    let path = args.get("ckpt").context("serve needs --ckpt <file-or-dir>")?;
+    let (version, algorithm, dataset, lambda, w) = load_weights(path)?;
+    let ds_name = args.get("dataset").map(|s| s.to_string()).unwrap_or_else(|| dataset.clone());
+    let ds = load_dataset(&ds_name)?;
+    anyhow::ensure!(
+        w.len() == ds.d(),
+        "checkpoint dim {} does not match dataset {ds_name:?} dim {}",
+        w.len(),
+        ds.d()
+    );
+    // serve the training layout: same balanced-nnz feature partition
+    let bounds: Vec<(usize, usize)> = fdsvrg::sparse::partition::by_features(&ds.x, cfg.q)
+        .iter()
+        .map(|s| (s.row_lo, s.row_hi))
+        .collect();
+    let model = cfg.net_spec().map_err(|e| anyhow::anyhow!(e))?.resolve(cfg.sim_params());
+    let mode = cfg.serve_arrival_mode().map_err(|e| anyhow::anyhow!(e))?;
+    let spec = ServeSpec {
+        w: &w,
+        bounds,
+        model,
+        wire: cfg.wire,
+        policy: BatchPolicy { max_batch: cfg.serve_batch, max_delay: cfg.serve_delay },
+        queries: cfg.serve_queries,
+        mode,
+        seed: cfg.seed,
+        source: QuerySource::Columns(std::sync::Arc::new(ds.x)),
+        collect_margins: false,
+    };
+    let r = simulate(&spec).report;
+    println!(
+        "serve {path} (v{version}, {algorithm} on {dataset}, λ={lambda:.0e}): \
+         q={}, wire={}, scenario={}, mode={}, batch≤{} \
+         ({} batches, mean {:.1} queries/batch)",
+        r.q, r.wire, r.scenario, r.mode, r.max_batch, r.batches, r.mean_batch
+    );
+    println!(
+        "  {} queries in {:.4}s sim: {:.0} qps, p50 {:.1}µs p90 {:.1}µs \
+         p99 {:.1}µs max {:.1}µs, {} wire bytes ({:.1} B/query)",
+        r.queries,
+        r.sim_time_s,
+        r.qps,
+        r.p50_us,
+        r.p90_us,
+        r.p99_us,
+        r.max_us,
+        r.wire_bytes,
+        r.bytes_per_query
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, format!("{}\n", r.to_json_row()))
+            .with_context(|| format!("writing {out}"))?;
+        println!("report written to {out}");
+    }
     Ok(())
 }
 
@@ -446,6 +560,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("compress") => exp::compress_ablation(&ctx).map(|_| ()),
         Some("calibrate") => exp::calibrate(&ctx).map(|_| ()),
         Some("faults") => exp::faults(&ctx).map(|_| ()),
+        Some("serving") => exp::serving(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),
     }

@@ -93,6 +93,9 @@ pub mod tags {
     pub const PUSH: Tag = 5;
     pub const CTRL: Tag = 6;
     pub const RING: Tag = 7;
+    /// Serving plane: a batched query fan-out from the router to every
+    /// shard server (the merged margins ride [`REDUCE`] back up the tree).
+    pub const QUERY: Tag = 8;
     pub const EVAL: Tag = 100;
     /// Session-layer state snapshots (evaluation plane, uncounted): each
     /// node ships its resumable state to the monitor at epoch boundaries.
@@ -345,6 +348,13 @@ pub struct Endpoint {
     /// default — short-circuits every fault check, keeping the
     /// failure-free paths bit-exact.
     fault: Option<fault::LinkFaults>,
+    /// Modeled-time mode (the serving plane): [`Endpoint::tick`] discards
+    /// measured thread CPU instead of charging it, so the simulated clock
+    /// moves *only* on deterministic model charges — send/receive
+    /// occupancy, [`Endpoint::advance_to`], and explicit
+    /// [`Endpoint::charge_modeled`] costs. Training keeps the default
+    /// (measured) charging.
+    modeled_time: bool,
 }
 
 impl Endpoint {
@@ -369,6 +379,7 @@ impl Endpoint {
             net: model.node_view(id, n_nodes),
             stats,
             fault: None,
+            modeled_time: false,
         }
     }
 
@@ -425,7 +436,33 @@ impl Endpoint {
     #[inline]
     pub fn tick(&mut self) {
         let lap = self.cpu.lap() + crate::util::pool::take_foreign_cpu();
+        if self.modeled_time {
+            // Modeled-time mode: host CPU never reaches the simulated
+            // clock, so a rerun (or a different `--threads`) produces
+            // bit-identical timestamps. The lap is still drained so a
+            // later switch back to measured charging starts clean.
+            return;
+        }
         self.net.charge_compute(&mut self.cs, lap);
+    }
+
+    /// Switch this endpoint to modeled time: from here on the simulated
+    /// clock is a pure function of model charges (message occupancy,
+    /// [`Endpoint::advance_to`], [`Endpoint::charge_modeled`]) — measured
+    /// thread CPU is discarded at every [`Endpoint::tick`]. The serving
+    /// plane runs in this mode so its latency report is bit-stable across
+    /// reruns and host thread counts.
+    pub fn set_modeled_time(&mut self, on: bool) {
+        self.discard_cpu();
+        self.modeled_time = on;
+    }
+
+    /// Charge an explicit modeled compute cost (seconds of *serial* work)
+    /// through this node's link view, so scenario compute scales (e.g. the
+    /// straggler factor) still apply. The deterministic companion of
+    /// [`Endpoint::tick`]'s measured charging.
+    pub fn charge_modeled(&mut self, secs: f64) {
+        self.net.charge_compute(&mut self.cs, secs);
     }
 
     /// Discard CPU time burned since the last network op (evaluation /

@@ -1,0 +1,253 @@
+//! Seeded load generation and latency accounting for the serving plane.
+//!
+//! [`LoadGen`] is the traffic source: a [`Pcg64`]-seeded stream of sparse
+//! queries drawn from a [`QuerySource`] (real dataset instances, a
+//! synthetic power-law generator, or a fixed list for tests), issued under
+//! one of two arrival disciplines ([`ArrivalMode`]): *closed* — a fixed
+//! pool of clients, each re-issuing the moment its response lands — or
+//! *open* — a Poisson process at a target rate, independent of completions.
+//!
+//! [`LatencyHistogram`] is the sink: log-spaced buckets (1 µs base,
+//! 2^(1/8) growth) so p50/p99 over millions of samples cost O(buckets)
+//! memory, with exact min/max/mean kept on the side. Every number either
+//! side produces is a pure function of the seed and the simulated
+//! timeline, which is what makes the serving reports bit-stable across
+//! reruns (see the determinism contract in DESIGN.md).
+
+use super::Query;
+use crate::sparse::CscMatrix;
+use crate::util::Pcg64;
+use std::sync::Arc;
+
+/// Arrival discipline of the generated traffic.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalMode {
+    /// `concurrency` clients, each with exactly one query outstanding:
+    /// all issue at t=0, and every completion re-issues immediately. The
+    /// canonical throughput-probing loop (offered load tracks capacity).
+    Closed { concurrency: usize },
+    /// Poisson arrivals at `rate` queries/second, independent of
+    /// completions — the overload/latency-probing mode (queues grow when
+    /// the offered rate beats the plane's capacity).
+    Open { rate: f64 },
+}
+
+impl ArrivalMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalMode::Closed { .. } => "closed",
+            ArrivalMode::Open { .. } => "open",
+        }
+    }
+}
+
+/// Where query payloads come from.
+#[derive(Clone)]
+pub enum QuerySource {
+    /// Sample real instances: each query is a uniformly drawn column of
+    /// the dataset's design matrix (realistic sparsity and index
+    /// distribution for the profile being served).
+    Columns(Arc<CscMatrix>),
+    /// Synthetic text-like queries: `nnz` distinct features drawn from a
+    /// zipf(1.05) power law over `[0, d)`, values standard normal.
+    Synthetic { d: usize, nnz: usize },
+    /// A fixed list, issued round-robin — property tests pin the sharded
+    /// margins against a local reference on exactly these queries.
+    Fixed(Arc<Vec<Query>>),
+}
+
+/// Seeded query stream. Deterministic: the k-th query is a pure function
+/// of `(seed, source)`, independent of arrival timing or batching.
+pub struct LoadGen {
+    rng: Pcg64,
+    source: QuerySource,
+    issued: usize,
+}
+
+impl LoadGen {
+    pub fn new(seed: u64, source: QuerySource) -> LoadGen {
+        // Domain-separated from the training streams (same seed flag on
+        // the CLI must not correlate serving traffic with minibatch order).
+        LoadGen { rng: Pcg64::seed_from_u64(seed ^ 0x5e54_11a6), source, issued: 0 }
+    }
+
+    /// Next query in the stream.
+    pub fn next_query(&mut self) -> Query {
+        let k = self.issued;
+        self.issued += 1;
+        match &self.source {
+            QuerySource::Columns(x) => {
+                let j = self.rng.below(x.cols());
+                let (idx, val) = x.col(j);
+                Query { idx: idx.to_vec(), val: val.to_vec() }
+            }
+            QuerySource::Synthetic { d, nnz } => {
+                let want = (*nnz).min(*d).max(1);
+                let mut idx: Vec<u32> = Vec::with_capacity(want);
+                // rejection-sample distinct features; the power law makes
+                // low indices hot, like real text features
+                while idx.len() < want {
+                    let i = self.rng.zipf(*d, 1.05) as u32;
+                    if !idx.contains(&i) {
+                        idx.push(i);
+                    }
+                }
+                idx.sort_unstable();
+                let val: Vec<f64> = (0..want).map(|_| self.rng.normal()).collect();
+                Query { idx, val }
+            }
+            QuerySource::Fixed(qs) => qs[k % qs.len()].clone(),
+        }
+    }
+
+    /// Exponential inter-arrival gap for [`ArrivalMode::Open`] at `rate`
+    /// arrivals/second (inverse-CDF on the same seeded stream).
+    pub fn exp_gap(&mut self, rate: f64) -> f64 {
+        let u = self.rng.next_f64();
+        -(1.0 - u).max(f64::MIN_POSITIVE).ln() / rate.max(1e-9)
+    }
+}
+
+/// Log-bucketed latency histogram: bucket `i` covers
+/// `[BASE·G^i, BASE·G^(i+1))` with `BASE` = 1 µs and `G` = 2^(1/8)
+/// (~9% resolution), plus exact min/max/mean. Quantiles interpolate
+/// geometrically inside the winning bucket — a deterministic pure
+/// function of the recorded counts.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BASE_S: f64 = 1e-6;
+/// Buckets per octave: G = 2^(1/8).
+const PER_OCTAVE: f64 = 8.0;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: Vec::new(),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(latency_s: f64) -> usize {
+        if latency_s <= BASE_S {
+            return 0;
+        }
+        ((latency_s / BASE_S).log2() * PER_OCTAVE).floor() as usize
+    }
+
+    /// Lower edge of bucket `i`, seconds.
+    fn edge(i: usize) -> f64 {
+        BASE_S * (2.0f64).powf(i as f64 / PER_OCTAVE)
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        let b = Self::bucket_of(latency_s);
+        if b >= self.buckets.len() {
+            self.buckets.resize(b + 1, 0);
+        }
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += latency_s;
+        self.min = self.min.min(latency_s);
+        self.max = self.max.max(latency_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Quantile `p` in `[0, 1]`, seconds: find the bucket holding the
+    /// `⌈p·count⌉`-th sample, interpolate geometrically by its position
+    /// inside the bucket, clamp to the exact observed min/max.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let frac = (rank - cum) as f64 / c as f64;
+                let lo = Self::edge(i);
+                let hi = Self::edge(i + 1);
+                let v = lo * (hi / lo).powf(frac);
+                return v.clamp(self.min, self.max);
+            }
+            cum += c;
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for k in 1..=1000 {
+            h.record(k as f64 * 1e-6); // 1µs .. 1ms uniform
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 > 3e-4 && p50 < 7e-4, "p50 {p50}");
+        assert!(p99 > 8.5e-4 && p99 <= 1e-3, "p99 {p99}");
+        assert!(h.quantile(1.0) == h.max());
+        assert!(h.mean() > 4.5e-4 && h.mean() < 5.5e-4);
+    }
+
+    #[test]
+    fn loadgen_streams_are_reproducible() {
+        let src = QuerySource::Synthetic { d: 500, nnz: 12 };
+        let mut a = LoadGen::new(7, src.clone());
+        let mut b = LoadGen::new(7, src);
+        for _ in 0..50 {
+            let (qa, qb) = (a.next_query(), b.next_query());
+            assert_eq!(qa.idx, qb.idx);
+            assert_eq!(qa.val, qb.val);
+            assert!(qa.idx.windows(2).all(|w| w[0] < w[1]), "ascending, distinct");
+        }
+        // the exponential gaps ride the same stream deterministically
+        assert_eq!(a.exp_gap(1e4), b.exp_gap(1e4));
+    }
+}

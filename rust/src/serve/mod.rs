@@ -1,0 +1,707 @@
+//! Sharded inference plane: batched margin-merge serving over the
+//! feature-distributed layout.
+//!
+//! Training ends, the layout stays: a d-dimensional linear model trained
+//! feature-distributed is *served* feature-distributed. Node 0 is the
+//! [`Router`] front-end; nodes `1..=q` each hold one contiguous feature
+//! shard of the weight vector (the same nnz-balanced partition
+//! [`crate::sparse::partition::by_features`] gives the trainer) as a
+//! [`ShardServer`]. A query's margin factors over shards exactly like the
+//! trainer's partial products:
+//!
+//! ```text
+//!   wᵀx = Σ_l  w^(l)ᵀ x^(l)
+//! ```
+//!
+//! so serving one batch is: router fans the encoded batch to all shards
+//! ([`crate::net::tags::QUERY`]), each shard computes its partial margins
+//! against a read-optimized weight snapshot ([`ShardWeights`]: exact `f64`
+//! or an `f32`-quantized slab riding the `--wire f32` machinery), and the
+//! partials merge back with the Fig.-5 binomial
+//! [`crate::net::collectives::tree_reduce`] rooted at the router.
+//!
+//! **Batching policy** ([`BatchPolicy`]): a batch closes when it reaches
+//! `max_batch` queries or `max_delay` seconds after its first admitted
+//! query, whichever comes first; the router dispatches one batch at a
+//! time. Batching is where the throughput comes from — the per-message
+//! overhead (`per_msg`, wire latency, one reduce round-trip) amortizes
+//! over the whole batch.
+//!
+//! **Determinism contract**: the simulation runs on
+//! [`Endpoint::set_modeled_time`] — the clock moves only on model charges
+//! (message occupancy, explicit [`cost`] constants via
+//! [`Endpoint::charge_modeled`]) — and all traffic comes from a seeded
+//! [`LoadGen`]. Every reported number (p50/p99/QPS/bytes/margin checksum)
+//! is therefore a pure function of `(spec, seed)`: bit-identical across
+//! reruns and `--threads K`.
+
+mod loadgen;
+
+pub use loadgen::{ArrivalMode, LatencyHistogram, LoadGen, QuerySource};
+
+use crate::cluster::run_cluster_model;
+use crate::net::collectives::tree_reduce;
+use crate::net::{tags, Endpoint, NetModel, NodeId, Payload, WireFmt};
+use crate::sparse::CscMatrix;
+use std::collections::VecDeque;
+
+/// The front-end node id (shards are `1..=q`).
+pub const ROUTER: NodeId = 0;
+
+/// Deterministic modeled compute costs (seconds of serial work) charged
+/// through [`Endpoint::charge_modeled`]. These replace measured thread CPU
+/// on the serving plane — the clock must be a pure function of the spec —
+/// and sit in one place so the model is auditable. Scenario compute
+/// scales (the straggler factor) still multiply them.
+pub mod cost {
+    /// Shard: one in-range nonzero product against the exact f64 shard.
+    pub const SHARD_PER_NZ_F64: f64 = 2.0e-9;
+    /// Shard: one in-range nonzero product against the f32-quantized
+    /// slab (half the memory traffic of the f64 path).
+    pub const SHARD_PER_NZ_F32: f64 = 1.2e-9;
+    /// Shard: per-query overhead (batch walk, bounds filter).
+    pub const SHARD_PER_QUERY: f64 = 60.0e-9;
+    /// Shard: per-batch overhead (decode, partial buffer reset).
+    pub const SHARD_PER_BATCH: f64 = 2.0e-6;
+    /// Router: per-query admission (validation + batch encode share).
+    pub const ROUTER_PER_QUERY: f64 = 120.0e-9;
+    /// Router: per-batch overhead (close decision, fan-out setup).
+    pub const ROUTER_PER_BATCH: f64 = 1.5e-6;
+}
+
+/// One sparse query: feature indices (strictly ascending) and values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Query {
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl Query {
+    /// Build from unordered pairs (sorts by index; duplicates survive and
+    /// are caught by [`Query::validate`]).
+    pub fn from_pairs(mut pairs: Vec<(u32, f64)>) -> Query {
+        pairs.sort_by_key(|p| p.0);
+        Query {
+            idx: pairs.iter().map(|p| p.0).collect(),
+            val: pairs.iter().map(|p| p.1).collect(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Admission check against a `d`-feature model. Empty queries are
+    /// fine (margin 0); duplicate, descending, or out-of-range indices
+    /// are rejected with enough context to debug the client.
+    pub fn validate(&self, d: usize) -> Result<(), String> {
+        if self.idx.len() != self.val.len() {
+            return Err(format!(
+                "query index/value length mismatch: {} indices vs {} values",
+                self.idx.len(),
+                self.val.len()
+            ));
+        }
+        for (k, &i) in self.idx.iter().enumerate() {
+            if i as usize >= d {
+                return Err(format!(
+                    "query feature index {i} out of range for a d={d} model"
+                ));
+            }
+            if k > 0 {
+                if i == self.idx[k - 1] {
+                    return Err(format!("duplicate feature index {i} in query"));
+                }
+                if i < self.idx[k - 1] {
+                    return Err(format!(
+                        "query indices must be ascending: {} after {}",
+                        i,
+                        self.idx[k - 1]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Batch close policy: dispatch at `max_batch` queries or `max_delay`
+/// seconds after the first admitted query, whichever comes first.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: f64,
+}
+
+/// A shard's read-optimized weight snapshot: the exact f64 reference, or
+/// the f32-quantized slab (the serving twin of the `--wire f32` codec and
+/// the trainer's `dense_slab_f32` mirrors — half the bytes, ~2× the scan
+/// rate, one rounding per weight).
+pub enum ShardWeights {
+    Exact(Vec<f64>),
+    Quantized(Vec<f32>),
+}
+
+impl ShardWeights {
+    pub fn new(w: &[f64], lo: usize, hi: usize, quantize: bool) -> ShardWeights {
+        if quantize {
+            ShardWeights::Quantized(w[lo..hi].iter().map(|&v| v as f32).collect())
+        } else {
+            ShardWeights::Exact(w[lo..hi].to_vec())
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, ShardWeights::Quantized(_))
+    }
+
+    /// Snapshot bytes held by this shard.
+    pub fn bytes(&self) -> usize {
+        match self {
+            ShardWeights::Exact(v) => 8 * v.len(),
+            ShardWeights::Quantized(v) => 4 * v.len(),
+        }
+    }
+
+    fn per_nz_cost(&self) -> f64 {
+        match self {
+            ShardWeights::Exact(_) => cost::SHARD_PER_NZ_F64,
+            ShardWeights::Quantized(_) => cost::SHARD_PER_NZ_F32,
+        }
+    }
+}
+
+/// One shard server: feature range `[lo, hi)` plus its weight snapshot.
+pub struct ShardServer {
+    pub lo: usize,
+    pub hi: usize,
+    pub weights: ShardWeights,
+}
+
+impl ShardServer {
+    pub fn from_snapshot(w: &[f64], lo: usize, hi: usize, quantize: bool) -> ShardServer {
+        ShardServer { lo, hi, weights: ShardWeights::new(w, lo, hi, quantize) }
+    }
+
+    /// Partial margin of one query restricted to this shard's range: a
+    /// serial ascending-index chain, f64 accumulation in both weight
+    /// forms (only the stored weights are quantized).
+    pub fn partial_margin(&self, idx: &[u32], val: &[f64]) -> f64 {
+        let (lo, hi) = (self.lo as u32, self.hi as u32);
+        let mut acc = 0.0f64;
+        match &self.weights {
+            ShardWeights::Exact(w) => {
+                for (k, &i) in idx.iter().enumerate() {
+                    if (lo..hi).contains(&i) {
+                        acc += val[k] * w[(i - lo) as usize];
+                    }
+                }
+            }
+            ShardWeights::Quantized(w) => {
+                for (k, &i) in idx.iter().enumerate() {
+                    if (lo..hi).contains(&i) {
+                        acc += val[k] * w[(i - lo) as usize] as f64;
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Decode a flat query batch (see [`encode_batch`]) and write one
+    /// partial margin per query into `out`. Returns the number of
+    /// in-range nonzeros actually multiplied (the modeled-cost driver).
+    pub fn batch_partials(&self, flat: &[f64], out: &mut Vec<f64>) -> usize {
+        let nq = flat[0] as usize;
+        out.clear();
+        out.reserve(nq);
+        let (lo, hi) = (self.lo as u32, self.hi as u32);
+        let mut scanned = 0usize;
+        let mut pos = 1usize;
+        for _ in 0..nq {
+            let nnz = flat[pos] as usize;
+            let idx = &flat[pos + 1..pos + 1 + nnz];
+            let val = &flat[pos + 1 + nnz..pos + 1 + 2 * nnz];
+            let mut acc = 0.0f64;
+            match &self.weights {
+                ShardWeights::Exact(w) => {
+                    for (iv, &v) in idx.iter().zip(val) {
+                        let i = *iv as u32;
+                        if (lo..hi).contains(&i) {
+                            acc += v * w[(i - lo) as usize];
+                            scanned += 1;
+                        }
+                    }
+                }
+                ShardWeights::Quantized(w) => {
+                    for (iv, &v) in idx.iter().zip(val) {
+                        let i = *iv as u32;
+                        if (lo..hi).contains(&i) {
+                            acc += v * w[(i - lo) as usize] as f64;
+                            scanned += 1;
+                        }
+                    }
+                }
+            }
+            out.push(acc);
+            pos += 1 + 2 * nnz;
+        }
+        scanned
+    }
+
+    /// Modeled serial cost of one decoded batch.
+    pub fn batch_cost(&self, nq: usize, scanned_nz: usize) -> f64 {
+        cost::SHARD_PER_BATCH
+            + cost::SHARD_PER_QUERY * nq as f64
+            + self.weights.per_nz_cost() * scanned_nz as f64
+    }
+}
+
+/// Flat wire layout of a query batch (always exact f64 — quantizing
+/// *queries* would corrupt indices):
+/// `[nq, nnz_1, idx_1.., val_1.., nnz_2, ...]` — u32 indices are exact
+/// as f64.
+pub fn encode_batch(queries: &[Query]) -> Vec<f64> {
+    let scalars = 1 + queries.iter().map(|q| 1 + 2 * q.nnz()).sum::<usize>();
+    let mut flat = Vec::with_capacity(scalars);
+    flat.push(queries.len() as f64);
+    for q in queries {
+        flat.push(q.nnz() as f64);
+        flat.extend(q.idx.iter().map(|&i| i as f64));
+        flat.extend_from_slice(&q.val);
+    }
+    flat
+}
+
+/// Everything one serving simulation needs. `bounds` is the per-shard
+/// feature partition (`[lo, hi)` per shard, covering `[0, d)` in order) —
+/// take it from [`crate::sparse::partition::by_features`] to serve the
+/// training layout.
+pub struct ServeSpec<'a> {
+    pub w: &'a [f64],
+    pub bounds: Vec<(usize, usize)>,
+    pub model: NetModel,
+    pub wire: WireFmt,
+    pub policy: BatchPolicy,
+    pub queries: usize,
+    pub mode: ArrivalMode,
+    pub seed: u64,
+    pub source: QuerySource,
+    /// Keep every merged margin (issue order) — tests pin them against
+    /// [`reference_margins`]; off for load runs (O(total) memory).
+    pub collect_margins: bool,
+}
+
+/// What one simulation reports: the latency distribution, throughput, and
+/// enough configuration echo to be a self-describing JSON row.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub scenario: &'static str,
+    pub wire: &'static str,
+    pub q: usize,
+    pub max_batch: usize,
+    pub max_delay_us: f64,
+    pub mode: &'static str,
+    pub concurrency: usize,
+    pub rate: f64,
+    pub queries: usize,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub mean_us: f64,
+    pub qps: f64,
+    pub sim_time_s: f64,
+    pub wire_bytes: u64,
+    pub bytes_per_query: f64,
+    /// Σ of all merged margins in issue order — a one-number bit-stability
+    /// witness for the whole numeric path.
+    pub margin_checksum: f64,
+}
+
+impl ServeReport {
+    /// One hand-rolled JSON object (no trailing comma/newline) — shared
+    /// by `serve --out` and the `exp serving` report writer. Deliberately
+    /// separate from the golden-pinned
+    /// [`crate::metrics::json::run_result_to_json`] layout.
+    pub fn to_json_row(&self) -> String {
+        format!(
+            "{{\"scenario\": \"{}\", \"wire\": \"{}\", \"q\": {}, \
+             \"max_batch\": {}, \"max_delay_us\": {}, \"mode\": \"{}\", \
+             \"concurrency\": {}, \"rate\": {}, \"queries\": {}, \
+             \"batches\": {}, \"mean_batch\": {}, \"p50_us\": {}, \
+             \"p90_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
+             \"mean_us\": {}, \"qps\": {}, \"sim_time_s\": {}, \
+             \"wire_bytes\": {}, \"bytes_per_query\": {}, \
+             \"margin_checksum\": {}}}",
+            self.scenario,
+            self.wire,
+            self.q,
+            self.max_batch,
+            self.max_delay_us,
+            self.mode,
+            self.concurrency,
+            self.rate,
+            self.queries,
+            self.batches,
+            self.mean_batch,
+            self.p50_us,
+            self.p90_us,
+            self.p99_us,
+            self.max_us,
+            self.mean_us,
+            self.qps,
+            self.sim_time_s,
+            self.wire_bytes,
+            self.bytes_per_query,
+            self.margin_checksum,
+        )
+    }
+}
+
+/// A full simulation's outputs.
+pub struct ServeOutcome {
+    pub report: ServeReport,
+    /// Merged margins in issue order (only when
+    /// [`ServeSpec::collect_margins`]).
+    pub margins: Option<Vec<f64>>,
+}
+
+struct RouterOut {
+    hist: LatencyHistogram,
+    batches: u64,
+    last_done: f64,
+    checksum: f64,
+    margins: Option<Vec<f64>>,
+}
+
+/// Run one serving simulation: `q = bounds.len()` shard servers plus the
+/// router on `q+1` sim nodes under `spec.model`, driven by the seeded
+/// load generator until `spec.queries` have completed.
+pub fn simulate(spec: &ServeSpec) -> ServeOutcome {
+    let q = spec.bounds.len();
+    assert!(q > 0, "serve: need at least one shard");
+    assert!(spec.policy.max_batch > 0, "serve: max_batch must be ≥ 1");
+    assert!(spec.queries > 0, "serve: need at least one query");
+    let d = spec.bounds.last().unwrap().1;
+    let quantize = spec.wire == WireFmt::F32;
+    let run = run_cluster_model(q + 1, &spec.model, |mut ep| {
+        ep.set_modeled_time(true);
+        if ep.id() == ROUTER {
+            Some(run_router(&mut ep, spec, d))
+        } else {
+            let (lo, hi) = spec.bounds[ep.id() - 1];
+            run_shard(&mut ep, ShardServer::from_snapshot(spec.w, lo, hi, quantize), spec.wire);
+            None
+        }
+    });
+    let out = run
+        .results
+        .into_iter()
+        .flatten()
+        .next()
+        .expect("serve: router produced no report");
+    let wire_bytes = run.stats.total_bytes();
+    let (concurrency, rate) = match spec.mode {
+        ArrivalMode::Closed { concurrency } => (concurrency, 0.0),
+        ArrivalMode::Open { rate } => (0, rate),
+    };
+    let report = ServeReport {
+        scenario: spec.model.name(),
+        wire: spec.wire.name(),
+        q,
+        max_batch: spec.policy.max_batch,
+        max_delay_us: spec.policy.max_delay * 1e6,
+        mode: spec.mode.name(),
+        concurrency,
+        rate,
+        queries: spec.queries,
+        batches: out.batches,
+        mean_batch: spec.queries as f64 / out.batches.max(1) as f64,
+        p50_us: out.hist.quantile(0.50) * 1e6,
+        p90_us: out.hist.quantile(0.90) * 1e6,
+        p99_us: out.hist.quantile(0.99) * 1e6,
+        max_us: out.hist.max() * 1e6,
+        mean_us: out.hist.mean() * 1e6,
+        qps: spec.queries as f64 / out.last_done.max(1e-12),
+        sim_time_s: out.last_done,
+        wire_bytes,
+        bytes_per_query: wire_bytes as f64 / spec.queries as f64,
+        margin_checksum: out.checksum,
+    };
+    ServeOutcome { report, margins: out.margins }
+}
+
+/// The shard main loop: receive a batch, compute partials, charge the
+/// modeled cost, merge up the reduce tree. An empty batch (`nq = 0`) is
+/// the shutdown signal.
+fn run_shard(ep: &mut Endpoint, shard: ShardServer, wire: WireFmt) {
+    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+    let mut partial: Vec<f64> = Vec::new();
+    loop {
+        let msg = ep.recv_from(ROUTER, tags::QUERY);
+        let flat: &[f64] = match &msg.payload {
+            Payload::DenseF64(v) => v,
+            other => panic!("serve: query batches travel as exact f64, got {other:?}"),
+        };
+        if flat[0] == 0.0 {
+            break;
+        }
+        let nq = flat[0] as usize;
+        let scanned = shard.batch_partials(flat, &mut partial);
+        ep.charge_modeled(shard.batch_cost(nq, scanned));
+        drop(msg);
+        tree_reduce(ep, &group, &mut partial, wire);
+    }
+}
+
+/// The router main loop: admit seeded traffic, close batches under the
+/// policy, fan out, merge, record latency, and (closed mode) re-issue.
+fn run_router(ep: &mut Endpoint, spec: &ServeSpec, d: usize) -> RouterOut {
+    let q = spec.bounds.len();
+    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+    let total = spec.queries;
+    let mut gen = LoadGen::new(spec.seed, spec.source.clone());
+    let mut hist = LatencyHistogram::new();
+    let mut margins_out = spec.collect_margins.then(|| Vec::with_capacity(total));
+    let mut pending: VecDeque<(f64, Query)> = VecDeque::new();
+    let mut issued = 0usize;
+    let mut completed = 0usize;
+    let mut batches = 0u64;
+    let mut checksum = 0.0f64;
+    let mut last_done = 0.0f64;
+    // open-mode arrival horizon: simulated time of the next arrival that
+    // has not yet been admitted to `pending`
+    let mut next_arrival = 0.0f64;
+
+    let admit = |pending: &mut VecDeque<(f64, Query)>, gen: &mut LoadGen, t: f64| {
+        let query = gen.next_query();
+        if let Err(e) = query.validate(d) {
+            panic!("serve: load generator produced an invalid query: {e}");
+        }
+        pending.push_back((t, query));
+    };
+
+    match spec.mode {
+        ArrivalMode::Closed { concurrency } => {
+            for _ in 0..concurrency.max(1).min(total) {
+                admit(&mut pending, &mut gen, 0.0);
+                issued += 1;
+            }
+        }
+        ArrivalMode::Open { .. } => {}
+    }
+
+    while completed < total {
+        let t_free = ep.now();
+        // Open mode: admit everything that has arrived by the time the
+        // router went idle; if nothing is waiting, sleep to the next
+        // arrival.
+        if let ArrivalMode::Open { rate } = spec.mode {
+            while issued < total && next_arrival <= t_free {
+                admit(&mut pending, &mut gen, next_arrival);
+                issued += 1;
+                next_arrival += gen.exp_gap(rate);
+            }
+            if pending.is_empty() {
+                admit(&mut pending, &mut gen, next_arrival);
+                issued += 1;
+                let t = next_arrival;
+                next_arrival += gen.exp_gap(rate);
+                ep.advance_to(t);
+            }
+        }
+        debug_assert!(!pending.is_empty(), "closed-loop refill keeps the queue nonempty");
+        let t0 = pending.front().expect("nonempty").0;
+        let open_t = t_free.max(t0);
+        // Batch close: full at `open_t`, or wait the delay window (open
+        // mode admits what arrives inside it), or the window expires.
+        let close_t = if pending.len() >= spec.policy.max_batch {
+            open_t
+        } else {
+            let deadline = (t0 + spec.policy.max_delay).max(open_t);
+            let mut closed_at = deadline;
+            if let ArrivalMode::Open { rate } = spec.mode {
+                while pending.len() < spec.policy.max_batch
+                    && issued < total
+                    && next_arrival <= deadline
+                {
+                    let t = next_arrival;
+                    admit(&mut pending, &mut gen, t);
+                    issued += 1;
+                    next_arrival += gen.exp_gap(rate);
+                    if pending.len() == spec.policy.max_batch {
+                        closed_at = t.max(open_t);
+                    }
+                }
+            }
+            closed_at
+        };
+        let take = pending.len().min(spec.policy.max_batch);
+        let mut arrivals: Vec<f64> = Vec::with_capacity(take);
+        let mut batch: Vec<Query> = Vec::with_capacity(take);
+        for _ in 0..take {
+            let (t, query) = pending.pop_front().expect("sized above");
+            arrivals.push(t);
+            batch.push(query);
+        }
+        ep.advance_to(close_t);
+        ep.charge_modeled(cost::ROUTER_PER_BATCH + cost::ROUTER_PER_QUERY * take as f64);
+        // One encode, q Arc clones — the same zero-copy fan-out the
+        // training collectives use.
+        let payload = Payload::from(encode_batch(&batch));
+        for shard in 1..=q {
+            ep.send(shard, tags::QUERY, payload.clone());
+        }
+        // Merge: router contributes zeros, the sum lands here (rank 0).
+        let mut merged = vec![0.0f64; take];
+        tree_reduce(ep, &group, &mut merged, spec.wire);
+        let t_done = ep.now();
+        batches += 1;
+        last_done = t_done;
+        for (k, &t_arr) in arrivals.iter().enumerate() {
+            hist.record(t_done - t_arr);
+            checksum += merged[k];
+            if let Some(ms) = margins_out.as_mut() {
+                ms.push(merged[k]);
+            }
+        }
+        completed += take;
+        if let ArrivalMode::Closed { .. } = spec.mode {
+            for _ in 0..take {
+                if issued < total {
+                    admit(&mut pending, &mut gen, t_done);
+                    issued += 1;
+                }
+            }
+        }
+    }
+    // Shutdown: an empty batch to every shard.
+    let stop = Payload::from(vec![0.0f64]);
+    for shard in 1..=q {
+        ep.send(shard, tags::QUERY, stop.clone());
+    }
+    RouterOut { hist, batches, last_done, checksum, margins: margins_out }
+}
+
+/// Local (single-process, no network) replica of what the sharded plane
+/// computes for `queries` on the exact f64 path: per-shard partials as
+/// ascending-index chains, merged with the *same* binomial-tree
+/// association [`tree_reduce`] uses over the `q+1`-node serving group
+/// (rank 0 = router contributes zeros). Against this reference the f64
+/// sharded sim is bit-exact — the property the serving tests pin. At
+/// `q = 1` the merge degenerates to the plain serial chain, i.e. the
+/// unsharded dense predict.
+pub fn reference_margins(w: &[f64], bounds: &[(usize, usize)], queries: &[Query]) -> Vec<f64> {
+    let shards: Vec<ShardServer> = bounds
+        .iter()
+        .map(|&(lo, hi)| ShardServer::from_snapshot(w, lo, hi, false))
+        .collect();
+    queries
+        .iter()
+        .map(|query| {
+            // vals[rank] for the serving group: rank 0 is the router
+            let mut vals: Vec<f64> = std::iter::once(0.0)
+                .chain(shards.iter().map(|s| s.partial_margin(&query.idx, &query.val)))
+                .collect();
+            let n = vals.len();
+            let mut mask = 1usize;
+            while mask < n {
+                let mut r = 0usize;
+                while r + mask < n {
+                    // receiver ranks have all `mask`-low bits zero; each
+                    // absorbs its `r + mask` child exactly like
+                    // tree_reduce's add_into
+                    vals[r] += vals[r + mask];
+                    r += mask << 1;
+                }
+                mask <<= 1;
+            }
+            vals[0]
+        })
+        .collect()
+}
+
+/// All `n` margins `wᵀx_i` of a design matrix into a reused scratch
+/// buffer — the allocation-free batch-predict path (`predict --ckpt`):
+/// repeated calls reuse capacity instead of allocating per batch.
+pub fn dense_margins<'a>(x: &CscMatrix, w: &[f64], buf: &'a mut Vec<f64>) -> &'a [f64] {
+    let n = x.cols();
+    let out = crate::algs::Workspace::reset(buf, n);
+    for (i, m) in out.iter_mut().enumerate() {
+        *m = x.col_dot(i, w);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_batch_roundtrips_through_shard_decode() {
+        let queries = vec![
+            Query { idx: vec![0, 3, 7], val: vec![1.0, -2.0, 0.5] },
+            Query { idx: vec![], val: vec![] },
+            Query { idx: vec![2], val: vec![4.0] },
+        ];
+        let flat = encode_batch(&queries);
+        assert_eq!(flat[0], 3.0);
+        let w: Vec<f64> = (0..8).map(|i| i as f64 + 1.0).collect();
+        let shard = ShardServer::from_snapshot(&w, 0, 8, false);
+        let mut out = Vec::new();
+        let scanned = shard.batch_partials(&flat, &mut out);
+        assert_eq!(scanned, 4);
+        assert_eq!(out, vec![1.0 * 1.0 - 2.0 * 4.0 + 0.5 * 8.0, 0.0, 4.0 * 3.0]);
+    }
+
+    #[test]
+    fn partial_margins_respect_shard_bounds() {
+        let w: Vec<f64> = vec![1.0; 10];
+        let a = ShardServer::from_snapshot(&w, 0, 5, false);
+        let b = ShardServer::from_snapshot(&w, 5, 10, false);
+        let q = Query { idx: vec![1, 4, 5, 9], val: vec![1.0, 1.0, 1.0, 1.0] };
+        assert_eq!(a.partial_margin(&q.idx, &q.val), 2.0);
+        assert_eq!(b.partial_margin(&q.idx, &q.val), 2.0);
+    }
+
+    #[test]
+    fn reference_merge_is_plain_chain_at_q1() {
+        let w: Vec<f64> = vec![0.1, 0.2, 0.3, 0.4];
+        let q = Query { idx: vec![0, 1, 2, 3], val: vec![1.0, 2.0, 3.0, 4.0] };
+        let r = reference_margins(&w, &[(0, 4)], std::slice::from_ref(&q));
+        let mut chain = 0.0f64;
+        for (&i, &v) in q.idx.iter().zip(&q.val) {
+            chain += v * w[i as usize];
+        }
+        // rank0 starts at 0.0 and absorbs the single shard: 0.0 + chain
+        assert_eq!(r[0].to_bits(), (0.0 + chain).to_bits());
+    }
+
+    #[test]
+    fn quantized_snapshot_halves_bytes() {
+        let w = vec![0.1f64; 100];
+        let exact = ShardWeights::new(&w, 0, 100, false);
+        let quant = ShardWeights::new(&w, 0, 100, true);
+        assert_eq!(exact.bytes(), 800);
+        assert_eq!(quant.bytes(), 400);
+        assert!(quant.is_quantized());
+    }
+
+    #[test]
+    fn query_validation_rejects_bad_indices() {
+        assert!(Query { idx: vec![], val: vec![] }.validate(10).is_ok());
+        let dup = Query::from_pairs(vec![(3, 1.0), (3, 2.0)]);
+        let e = dup.validate(10).unwrap_err();
+        assert!(e.contains("duplicate") && e.contains('3'), "{e}");
+        let oob = Query { idx: vec![10], val: vec![1.0] };
+        let e = oob.validate(10).unwrap_err();
+        assert!(e.contains("out of range") && e.contains("d=10"), "{e}");
+        let desc = Query { idx: vec![5, 2], val: vec![1.0, 1.0] };
+        assert!(desc.validate(10).unwrap_err().contains("ascending"));
+        let mismatch = Query { idx: vec![1], val: vec![] };
+        assert!(mismatch.validate(10).unwrap_err().contains("mismatch"));
+    }
+}

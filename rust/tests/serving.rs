@@ -1,0 +1,285 @@
+//! Serving-plane contracts (see DESIGN.md "serving plane"):
+//!
+//! * sharded margin-merge ≡ the unsharded reference **bit-exactly** on the
+//!   f64 path, for every shard count — the merge replicates the reduce
+//!   tree's association, so this is an equality, not a tolerance;
+//! * the f32-quantized snapshot stays within a products-scaled tolerance
+//!   of the exact path;
+//! * adversarial queries fail validation with context (empty is fine,
+//!   duplicates and out-of-range indices are not);
+//! * reports are bit-stable across reruns (closed *and* open mode) —
+//!   everything downstream of the seed is modeled time;
+//! * batching wins throughput over batch=1 under the same traffic;
+//! * `load_newest` serves the newest *valid* snapshot of a rotating
+//!   checkpoint store, skipping corrupt files.
+
+use fdsvrg::checkpoint::{load_newest, Checkpoint, CheckpointStore, Loaded, SessionCheckpoint};
+use fdsvrg::config::ExperimentConfig;
+use fdsvrg::metrics::Trace;
+use fdsvrg::net::{NetModel, WireFmt};
+use fdsvrg::serve::{
+    reference_margins, simulate, ArrivalMode, BatchPolicy, Query, QuerySource, ServeSpec,
+};
+use fdsvrg::session::{ResumeState, SessionState};
+use fdsvrg::util::Pcg64;
+use std::sync::Arc;
+
+const D: usize = 37;
+
+fn uniform_model() -> NetModel {
+    let cfg = ExperimentConfig::default();
+    cfg.net_spec_for("uniform").unwrap().resolve(cfg.sim_params())
+}
+
+fn even_bounds(d: usize, q: usize) -> Vec<(usize, usize)> {
+    (0..q).map(|l| (l * d / q, (l + 1) * d / q)).collect()
+}
+
+fn seeded_w(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (0..d).map(|_| rng.normal()).collect()
+}
+
+/// A deterministic query mix: varying sparsity, negative values, and one
+/// deliberately empty query (empty is a valid query).
+fn fixture_queries(n: usize, d: usize, seed: u64) -> Vec<Query> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut all: Vec<u32> = (0..d as u32).collect();
+    (0..n)
+        .map(|k| {
+            if k == 3 {
+                return Query::from_pairs(Vec::new());
+            }
+            let nnz = 1 + rng.below(7);
+            rng.shuffle(&mut all);
+            let pairs = all[..nnz].iter().map(|&i| (i, rng.normal())).collect();
+            Query::from_pairs(pairs)
+        })
+        .collect()
+}
+
+fn spec_for<'a>(
+    w: &'a [f64],
+    queries: &Arc<Vec<Query>>,
+    q: usize,
+    wire: WireFmt,
+    max_batch: usize,
+) -> ServeSpec<'a> {
+    ServeSpec {
+        w,
+        bounds: even_bounds(w.len(), q),
+        model: uniform_model(),
+        wire,
+        policy: BatchPolicy { max_batch, max_delay: 200e-6 },
+        queries: queries.len(),
+        mode: ArrivalMode::Closed { concurrency: 16 },
+        seed: 7,
+        source: QuerySource::Fixed(Arc::clone(queries)),
+        collect_margins: true,
+    }
+}
+
+#[test]
+fn sharded_f64_margins_match_reference_bit_exactly() {
+    let w = seeded_w(D, 11);
+    let queries = Arc::new(fixture_queries(60, D, 22));
+    for q in [1usize, 2, 3, 5] {
+        let spec = spec_for(&w, &queries, q, WireFmt::F64, 8);
+        let got = simulate(&spec).margins.expect("collect_margins");
+        let want = reference_margins(&w, &spec.bounds, &queries);
+        assert_eq!(got.len(), want.len());
+        for (k, (g, r)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                r.to_bits(),
+                "q={q} query {k}: sharded {g:e} != reference {r:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_margins_stay_within_products_tolerance() {
+    let w = seeded_w(D, 33);
+    let queries = Arc::new(fixture_queries(60, D, 44));
+    for q in [2usize, 4] {
+        let exact = simulate(&spec_for(&w, &queries, q, WireFmt::F64, 8)).margins.unwrap();
+        let quant = simulate(&spec_for(&w, &queries, q, WireFmt::F32, 8)).margins.unwrap();
+        for (k, (m64, m32)) in exact.iter().zip(&quant).enumerate() {
+            let products: f64 = queries[k]
+                .idx
+                .iter()
+                .zip(&queries[k].val)
+                .map(|(&i, &v)| (v * w[i as usize]).abs())
+                .sum();
+            let tol = 1e-5 * (1.0 + products);
+            assert!(
+                (m64 - m32).abs() <= tol,
+                "q={q} query {k}: |{m64:e} - {m32:e}| > {tol:e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adversarial_queries_fail_validation_with_context() {
+    // empty is a valid query
+    assert!(Query::from_pairs(Vec::new()).validate(D).is_ok());
+    // duplicate feature index
+    let dup = Query::from_pairs(vec![(3, 1.0), (3, 2.0)]);
+    let e = dup.validate(D).unwrap_err();
+    assert!(e.contains("duplicate") && e.contains('3'), "unhelpful error: {e}");
+    // out-of-range index names both the index and the model dim
+    let oob = Query::from_pairs(vec![(D as u32, 1.0)]);
+    let e = oob.validate(D).unwrap_err();
+    assert!(
+        e.contains("out of range") && e.contains(&D.to_string()),
+        "unhelpful error: {e}"
+    );
+    // in-range boundary is fine
+    assert!(Query::from_pairs(vec![(D as u32 - 1, 1.0)]).validate(D).is_ok());
+}
+
+/// Everything in the report is downstream of the seed and the modeled
+/// clock, so a rerun must agree to the bit — including the latency
+/// quantiles, throughput, byte counters and the margin checksum.
+fn assert_reports_bit_equal(a: &fdsvrg::serve::ServeReport, b: &fdsvrg::serve::ServeReport) {
+    assert_eq!(a.batches, b.batches);
+    assert_eq!(a.wire_bytes, b.wire_bytes);
+    for (name, x, y) in [
+        ("p50_us", a.p50_us, b.p50_us),
+        ("p90_us", a.p90_us, b.p90_us),
+        ("p99_us", a.p99_us, b.p99_us),
+        ("max_us", a.max_us, b.max_us),
+        ("mean_us", a.mean_us, b.mean_us),
+        ("qps", a.qps, b.qps),
+        ("sim_time_s", a.sim_time_s, b.sim_time_s),
+        ("margin_checksum", a.margin_checksum, b.margin_checksum),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name} drifted across reruns: {x:e} vs {y:e}");
+    }
+}
+
+#[test]
+fn closed_mode_reports_are_bit_stable_across_reruns() {
+    let w = seeded_w(200, 55);
+    let source = QuerySource::Synthetic { d: 200, nnz: 6 };
+    let mk = || ServeSpec {
+        w: &w,
+        bounds: even_bounds(200, 4),
+        model: uniform_model(),
+        wire: WireFmt::F32,
+        policy: BatchPolicy { max_batch: 16, max_delay: 200e-6 },
+        queries: 800,
+        mode: ArrivalMode::Closed { concurrency: 32 },
+        seed: 99,
+        source: source.clone(),
+        collect_margins: false,
+    };
+    let a = simulate(&mk()).report;
+    let b = simulate(&mk()).report;
+    assert_reports_bit_equal(&a, &b);
+}
+
+#[test]
+fn open_mode_serves_everything_and_is_bit_stable() {
+    let w = seeded_w(200, 66);
+    let mk = || ServeSpec {
+        w: &w,
+        bounds: even_bounds(200, 3),
+        model: uniform_model(),
+        wire: WireFmt::F64,
+        policy: BatchPolicy { max_batch: 8, max_delay: 300e-6 },
+        queries: 500,
+        mode: ArrivalMode::Open { rate: 40_000.0 },
+        seed: 123,
+        source: QuerySource::Synthetic { d: 200, nnz: 5 },
+        collect_margins: false,
+    };
+    let a = simulate(&mk()).report;
+    assert_eq!(a.queries, 500);
+    assert!(a.batches > 0 && a.qps > 0.0 && a.sim_time_s > 0.0);
+    let b = simulate(&mk()).report;
+    assert_reports_bit_equal(&a, &b);
+}
+
+/// Amortizing the per-message overhead is the whole point of batching:
+/// under identical closed-loop traffic, batch≤32 must beat batch=1 on
+/// throughput in-sim.
+#[test]
+fn batched_serving_beats_single_query_throughput() {
+    let w = seeded_w(400, 77);
+    let mk = |max_batch: usize| ServeSpec {
+        w: &w,
+        bounds: even_bounds(400, 4),
+        model: uniform_model(),
+        wire: WireFmt::F64,
+        policy: BatchPolicy { max_batch, max_delay: 200e-6 },
+        queries: 2_000,
+        mode: ArrivalMode::Closed { concurrency: 64 },
+        seed: 5,
+        source: QuerySource::Synthetic { d: 400, nnz: 8 },
+        collect_margins: false,
+    };
+    let single = simulate(&mk(1)).report;
+    let batched = simulate(&mk(32)).report;
+    assert!(
+        batched.qps > single.qps,
+        "batch=32 ({:.0} qps) should beat batch=1 ({:.0} qps)",
+        batched.qps,
+        single.qps
+    );
+}
+
+fn snapshot(epoch: usize, fill: f64) -> SessionCheckpoint {
+    let mut resume = ResumeState::fresh(4, 2);
+    resume.epoch = epoch;
+    resume.w = Arc::new(vec![fill; 4]);
+    SessionCheckpoint::new(SessionState {
+        algorithm: "fdsvrg".into(),
+        dataset: "tiny".into(),
+        lambda: 1e-4,
+        wire: WireFmt::F64,
+        trace: Trace::default(),
+        resume,
+    })
+}
+
+#[test]
+fn load_newest_serves_newest_valid_snapshot_and_skips_corrupt() {
+    let dir = std::env::temp_dir().join("fdsvrg_serving_store_test");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = CheckpointStore::new(&dir, 8).unwrap();
+    store.save(&snapshot(1, 0.25)).unwrap();
+    let newest = store.save(&snapshot(3, 0.75)).unwrap();
+
+    // both valid ⇒ the newest wins
+    match load_newest(&dir).unwrap() {
+        Loaded::Session(sc) => assert_eq!(sc.state.resume.epoch, 3),
+        Loaded::Weights(_) => panic!("store snapshots are v2"),
+    }
+
+    // corrupt the newest ⇒ fall back to the older valid snapshot
+    std::fs::write(&newest, b"garbage, not a checkpoint").unwrap();
+    match load_newest(&dir).unwrap() {
+        Loaded::Session(sc) => {
+            assert_eq!(sc.state.resume.epoch, 1);
+            assert_eq!(*sc.state.resume.w, vec![0.25; 4]);
+        }
+        Loaded::Weights(_) => panic!("store snapshots are v2"),
+    }
+
+    // nothing valid ⇒ a contextful error, not a panic
+    std::fs::write(dir.join("ck-00000001.ckpt"), b"also garbage").unwrap();
+    let err = format!("{:#}", load_newest(&dir).unwrap_err());
+    assert!(err.contains("no valid checkpoint snapshot"), "unhelpful error: {err}");
+
+    // a plain file path still routes through load_any (v1 here)
+    let f = dir.join("weights.ckpt");
+    Checkpoint::new("fdsvrg", "tiny", 1e-4, vec![1.0, 2.0]).save(&f).unwrap();
+    match load_newest(&f).unwrap() {
+        Loaded::Weights(c) => assert_eq!(c.w, vec![1.0, 2.0]),
+        Loaded::Session(_) => panic!("v1 file must load as weights"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
