@@ -85,7 +85,9 @@ fn main() {
             seed: 5,
             source: source.clone(),
             collect_margins: false,
+            robust: Default::default(),
         })
+        .expect("serve sim")
         .report
     };
     let mut qps = (0.0f64, 0.0f64);

@@ -1,6 +1,12 @@
 //! Cluster runtime: spawns one OS thread per simulated node and wires the
 //! endpoints. Owns process topology and deterministic teardown; algorithms
 //! only see their [`Endpoint`] plus whatever state the launcher hands them.
+//!
+//! Node closures may *return early* (cooperative injected crashes in the
+//! robust serving plane — see [`crate::serve`]): a returned closure drops
+//! its endpoint, surviving peers observe the closed link as
+//! `Arrival::Gone`, and teardown still joins every thread, so a partial
+//! cluster winds down cleanly instead of deadlocking.
 
 use crate::net::{build, build_with_model, CommStats, Endpoint, NetModel, SimParams};
 use std::sync::{Arc, Condvar, Mutex};

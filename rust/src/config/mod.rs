@@ -253,6 +253,21 @@ pub struct ExperimentConfig {
     /// Serving plane, open mode: Poisson arrival rate, queries/second
     /// (`serve.rate`, CLI `--rate`).
     pub serve_rate: f64,
+    /// Serving plane: copies of each feature shard (`serve.replicas`, CLI
+    /// `--replicas`) — the cluster becomes `q·r + 1` nodes and the router
+    /// fails over between copies.
+    pub serve_replicas: usize,
+    /// Serving plane: per-batch service deadline, modeled seconds
+    /// (`serve.deadline`, CLI `--serve-deadline`); 0 disables. Missed
+    /// batches still answer but count `late`.
+    pub serve_deadline: f64,
+    /// Serving plane: hedge delay, modeled seconds (`serve.hedge`, CLI
+    /// `--hedge`) — each batch also races a second replica. Negative
+    /// (the default) disables hedging.
+    pub serve_hedge: f64,
+    /// Serving plane, open mode: admission-queue bound (`serve.queue_cap`,
+    /// CLI `--queue-cap`); arrivals past it are shed. 0 = unbounded.
+    pub serve_queue_cap: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -304,6 +319,10 @@ impl Default for ExperimentConfig {
             serve_concurrency: 64,
             serve_mode: "closed".into(),
             serve_rate: 50_000.0,
+            serve_replicas: 1,
+            serve_deadline: 0.0,
+            serve_hedge: -1.0,
+            serve_queue_cap: 0,
         }
     }
 }
@@ -374,6 +393,10 @@ impl ExperimentConfig {
             serve_concurrency: cfg.usize_or("serve.concurrency", d.serve_concurrency).max(1),
             serve_mode: cfg.str_or("serve.mode", &d.serve_mode).to_string(),
             serve_rate: cfg.f64_or("serve.rate", d.serve_rate),
+            serve_replicas: cfg.usize_or("serve.replicas", d.serve_replicas).max(1),
+            serve_deadline: cfg.f64_or("serve.deadline", d.serve_deadline),
+            serve_hedge: cfg.f64_or("serve.hedge", d.serve_hedge),
+            serve_queue_cap: cfg.usize_or("serve.queue_cap", d.serve_queue_cap),
         }
     }
 

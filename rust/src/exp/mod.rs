@@ -954,8 +954,9 @@ pub fn serving(ctx: &Ctx) -> Result<Vec<crate::serve::ServeReport>> {
                         seed: ctx.cfg.seed,
                         source: source.clone(),
                         collect_margins: false,
+                        robust: Default::default(),
                     };
-                    let r = simulate(&spec).report;
+                    let r = simulate(&spec).map_err(|e| anyhow::anyhow!(e))?.report;
                     table.row(vec![
                         format!("{q}"),
                         r.wire.to_string(),
@@ -982,8 +983,9 @@ pub fn serving(ctx: &Ctx) -> Result<Vec<crate::serve::ServeReport>> {
                 seed: ctx.cfg.seed,
                 source: source.clone(),
                 collect_margins: false,
+                robust: Default::default(),
             };
-            let r = simulate(&spec).report;
+            let r = simulate(&spec).map_err(|e| anyhow::anyhow!(e))?.report;
             table.row(vec![
                 format!("{q}"),
                 r.wire.to_string(),
@@ -1024,6 +1026,153 @@ fn write_serving_json(ctx: &Ctx, rows: &[crate::serve::ServeReport]) -> Result<(
     let path = ctx.out_dir.join("BENCH_serving.json");
     std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
     println!("serving report written to {}", path.display());
+    Ok(())
+}
+
+/// The robust-serving ablation (`exp serving-faults`): measure
+/// availability, tail latency, and goodput of the sharded inference plane
+/// under injected faults, across replication levels, against the
+/// failure-free baseline of the same (scenario, replicas) cell. Fault
+/// times are fractions of the measured failure-free sim time, so every
+/// scenario places its crash/partition at the same relative point in the
+/// run; all decisions are seeded, so the whole grid is bit-stable across
+/// reruns and `--threads`. Quick mode smokes the grid on the tiny
+/// profile; the full run measures news20-sim. Lands in
+/// `BENCH_serving_faults.json`.
+pub fn serving_faults(ctx: &Ctx) -> Result<Vec<String>> {
+    use crate::serve::{simulate, ArrivalMode, BatchPolicy, QuerySource, RobustSpec, ServeSpec};
+    use crate::util::Pcg64;
+    let quick = ctx.scale < 1.0;
+    let profile = if quick { "tiny" } else { "news20-sim" };
+    let queries = if quick { 1_200 } else { 50_000 };
+    let q = if quick { 4 } else { 8 };
+    let scenarios = ["uniform", "straggler"];
+    let ds = profiles::load(profile).context("profile")?;
+    let d = ds.d();
+    let bounds: Vec<(usize, usize)> = crate::sparse::partition::by_features(&ds.x, q)
+        .iter()
+        .map(|s| (s.row_lo, s.row_hi))
+        .collect();
+    let source = QuerySource::Columns(std::sync::Arc::new(ds.x));
+    // serving timing is independent of the weight values (same rule as
+    // `exp serving`): a seeded synthetic model, never the training path
+    let mut rng = Pcg64::seed_from_u64(ctx.cfg.seed ^ 0x7e57);
+    let inv = 1.0 / (d as f64).sqrt();
+    let w: Vec<f64> = (0..d).map(|_| rng.normal() * inv).collect();
+    let seed = ctx.cfg.seed;
+    let mut rows: Vec<String> = Vec::new();
+    for scenario in scenarios {
+        let model = ctx
+            .cfg
+            .net_spec_for(scenario)
+            .expect("built-in scenario kinds always parse")
+            .resolve(ctx.cfg.sim_params());
+        let mut table = TextTable::new(vec![
+            "replicas",
+            "faults",
+            "hedge (us)",
+            "avail %",
+            "p99 (us)",
+            "qps",
+            "goodput",
+            "failovers",
+            "degraded",
+        ]);
+        println!("== Serving faults :: {profile} / {scenario} ({queries} queries/run, q={q}) ==");
+        for replicas in [1usize, 2] {
+            let run = |fault_spec: &str, hedge: f64| -> Result<crate::serve::ServeReport> {
+                let spec = ServeSpec {
+                    w: &w,
+                    bounds: bounds.clone(),
+                    model: model.clone(),
+                    wire: crate::net::WireFmt::F64,
+                    policy: BatchPolicy { max_batch: 16, max_delay: ctx.cfg.serve_delay },
+                    queries,
+                    mode: ArrivalMode::Closed { concurrency: ctx.cfg.serve_concurrency },
+                    seed,
+                    source: source.clone(),
+                    collect_margins: false,
+                    robust: RobustSpec {
+                        replicas,
+                        deadline: 0.0,
+                        hedge,
+                        queue_cap: 0,
+                        faults: crate::net::fault::FaultPlan::parse(fault_spec, seed)
+                            .map_err(|e| anyhow::anyhow!(e))?,
+                    },
+                };
+                Ok(simulate(&spec).map_err(|e| anyhow::anyhow!(e))?.report)
+            };
+            // failure-free baseline for this (scenario, replicas) cell;
+            // fault times are fractions of its measured sim time
+            let base = run("none", -1.0)?;
+            let t = base.sim_time_s;
+            let crash = format!("crash:1@{:.6}", 0.35 * t);
+            let part = format!("partition:1@{:.6}-{:.6}", 0.30 * t, 0.50 * t);
+            let mut cell: Vec<(&str, String, f64)> = vec![
+                ("none", "none".to_string(), -1.0),
+                ("crash", crash.clone(), -1.0),
+                ("partition", part, -1.0),
+                ("drop2pct", "drop:0.02".to_string(), -1.0),
+            ];
+            if replicas >= 2 {
+                // one hedged row: mirror each dispatch to the second
+                // replica, hedge budget = one straggler-ish delay
+                cell.push(("crash+hedge", crash, 200e-6));
+            }
+            for (name, fault_spec, hedge) in cell.drain(..) {
+                let r = if name == "none" { base.clone() } else { run(&fault_spec, hedge)? };
+                table.row(vec![
+                    format!("{replicas}"),
+                    name.to_string(),
+                    if hedge >= 0.0 { format!("{:.0}", 1e6 * hedge) } else { "-".to_string() },
+                    format!("{:.2}", r.availability_pct),
+                    format!("{:.1}", r.p99_us),
+                    format!("{:.0}", r.qps),
+                    format!("{:.0}", r.goodput_qps),
+                    format!("{}", r.failovers),
+                    format!("{}", r.degraded),
+                ]);
+                // splice the grid label and this cell's baseline next to
+                // the report's own fields
+                let row = r.to_json_row();
+                rows.push(format!(
+                    "{{\"label\": \"{scenario}/r{replicas}/{name}\", \
+                     \"baseline_p99_us\": {:.3}, \"baseline_qps\": {:.3}, {}",
+                    base.p99_us,
+                    base.qps,
+                    row.trim_start().trim_start_matches('{').trim_start()
+                ));
+            }
+        }
+        println!("{}", table.render());
+    }
+    write_serving_faults_json(ctx, &rows)?;
+    Ok(rows)
+}
+
+/// Hand-rolled JSON for `BENCH_serving_faults.json` — one row per
+/// simulated (scenario × replicas × fault) cell, each a
+/// [`crate::serve::ServeReport::to_json_row`] object prefixed with the
+/// grid label and its cell's failure-free baseline.
+fn write_serving_faults_json(ctx: &Ctx, rows: &[String]) -> Result<()> {
+    let mut out = String::from("{\n  \"experiment\": \"serving-faults\",\n");
+    out.push_str(
+        "  \"note\": \"regenerate from the repo root with \
+         `cargo run --release -- exp serving-faults --out .` \
+         (add --quick for the CI-sized tiny-profile grid)\",\n",
+    );
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(r);
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let path = ctx.out_dir.join("BENCH_serving_faults.json");
+    std::fs::write(&path, &out).with_context(|| format!("write {}", path.display()))?;
+    println!("serving-faults report written to {}", path.display());
     Ok(())
 }
 

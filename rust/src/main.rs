@@ -6,7 +6,9 @@
 //!              [--config exp.toml] [--out results] [--star] [--transport sim|tcp]
 //! fdsvrg serve --ckpt file-or-dir --dataset news20-sim --q 8 [--serve-batch 32]
 //!              [--queries 10000] [--mode closed|open] [--wire f64|f32]
-//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|serving|all> [--out results] [--quick]
+//!              [--replicas 2] [--faults crash:1@0.002] [--hedge 200e-6]
+//!              [--serve-deadline 5e-3] [--queue-cap 64]
+//! fdsvrg exp   <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|serving|serving-faults|all> [--out results] [--quick]
 //! fdsvrg data  <stats|gen> [--profile news20-sim] [--out file.libsvm]
 //! fdsvrg check-engine      # smoke the blocked compute engine (alias: check-artifacts)
 //! ```
@@ -116,23 +118,32 @@ const USAGE: &str = "usage:
   fdsvrg serve --ckpt <file|dir> [--dataset profile|path.libsvm] [--q N]
                [--queries N] [--serve-batch B] [--serve-delay S]
                [--mode closed|open] [--concurrency C] [--rate R]
-               [--wire f64|f32|sparse] [--net uniform|hetero|straggler|jitter]
+               [--replicas R] [--serve-deadline S] [--hedge S] [--queue-cap K]
+               [--faults spec] [--wire f64|f32|sparse]
+               [--net uniform|hetero|straggler|jitter]
                [--seed S] [--out file.json]
                (sharded margin-merge serving: the checkpoint's weights are
                split over q feature shards — served from f32-quantized
                read slabs under --wire f32, exact f64 otherwise — and a
                router node batches seeded traffic drawn from the dataset's
                instances, fans each batch to the shards and merges the
-               partial margins over the reduce tree. closed mode keeps
+               partial margins shard-by-shard. closed mode keeps
                --concurrency clients in flight; open mode draws Poisson
                arrivals at --rate qps. Batches close when full
                (--serve-batch) or --serve-delay seconds after their oldest
-               query. Reports p50/p90/p99 latency, throughput and wire
-               bytes under the --net scenario; everything is simulated
-               time, so reports are bit-stable across reruns and
-               --threads. --ckpt accepts the same file-or-directory forms
-               as predict)
-  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|serving|all> [--out dir] [--quick]
+               query. --replicas r runs r copies of each shard (cluster is
+               q*r+1 nodes; the router fails over when a primary dies) and
+               composes with the same --faults grammar as train (node 0 is
+               the router and cannot be crashed). --serve-deadline marks
+               batches late, --hedge mirrors each shard request to a second
+               replica after that delay, and --queue-cap sheds open-mode
+               arrivals past the admission queue bound. Reports p50/p90/p99
+               latency, throughput, availability %, shed/failover/hedge
+               counters and wire bytes under the --net scenario; everything
+               is simulated time, so reports are bit-stable across reruns
+               and --threads. --ckpt accepts the same file-or-directory
+               forms as predict)
+  fdsvrg exp <fig6|fig7|fig8|fig9|table1|table2|table3|wire|netmodel|compress|calibrate|faults|serving|serving-faults|all> [--out dir] [--quick]
                (compress: gap vs wire bytes vs sim time for the top-k /
                threshold gradient sparsifiers across the distributed
                algorithms; calibrate: run the distributed algorithms under
@@ -144,7 +155,10 @@ const USAGE: &str = "usage:
                and sim-time overhead vs the failure-free baseline;
                serving: latency/throughput ablation of the sharded
                inference plane over batch size × wire format × network
-               scenario × shard count, written to BENCH_serving.json)
+               scenario × shard count, written to BENCH_serving.json;
+               serving-faults: availability/latency/goodput of the robust
+               serving plane across replication × fault scenarios vs the
+               failure-free baseline, written to BENCH_serving_faults.json)
   fdsvrg data <stats|gen> [--profile name] [--out file]
   fdsvrg check-engine [--dir artifacts] [--engine block|mixed|xla]
                (default: the build's own backend — xla when compiled in,
@@ -210,6 +224,10 @@ fn build_experiment_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.serve_mode = v.to_string();
     }
     cfg.serve_rate = args.get_or("rate", cfg.serve_rate);
+    cfg.serve_replicas = args.get_or("replicas", cfg.serve_replicas).max(1);
+    cfg.serve_deadline = args.get_or("serve-deadline", cfg.serve_deadline);
+    cfg.serve_hedge = args.get_or("hedge", cfg.serve_hedge);
+    cfg.serve_queue_cap = args.get_or("queue-cap", cfg.serve_queue_cap);
     // validate the arrival mode up front so the CLI error lists both modes
     cfg.serve_arrival_mode().map_err(|e| anyhow::anyhow!(e))?;
     // validate the scenario kind up front so the CLI error lists every
@@ -483,7 +501,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
 /// network scenario. Entirely simulated time — reports are bit-stable
 /// across reruns and `--threads`.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use fdsvrg::serve::{simulate, BatchPolicy, QuerySource, ServeSpec};
+    use fdsvrg::serve::{simulate, BatchPolicy, QuerySource, RobustSpec, ServeSpec};
     let cfg = build_experiment_config(args)?;
     let path = args.get("ckpt").context("serve needs --ckpt <file-or-dir>")?;
     let (version, algorithm, dataset, lambda, w) = load_weights(path)?;
@@ -513,13 +531,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: cfg.seed,
         source: QuerySource::Columns(std::sync::Arc::new(ds.x)),
         collect_margins: false,
+        robust: RobustSpec {
+            replicas: cfg.serve_replicas,
+            deadline: cfg.serve_deadline,
+            hedge: cfg.serve_hedge,
+            queue_cap: cfg.serve_queue_cap,
+            faults: fdsvrg::net::fault::FaultPlan::parse(&cfg.faults, cfg.seed)
+                .map_err(|e| anyhow::anyhow!(e))?,
+        },
     };
-    let r = simulate(&spec).report;
+    let r = simulate(&spec).map_err(|e| anyhow::anyhow!(e))?.report;
     println!(
         "serve {path} (v{version}, {algorithm} on {dataset}, λ={lambda:.0e}): \
-         q={}, wire={}, scenario={}, mode={}, batch≤{} \
+         q={}×{} replicas, wire={}, scenario={}, faults={}, mode={}, batch≤{} \
          ({} batches, mean {:.1} queries/batch)",
-        r.q, r.wire, r.scenario, r.mode, r.max_batch, r.batches, r.mean_batch
+        r.q, r.replicas, r.wire, r.scenario, r.faults, r.mode, r.max_batch, r.batches, r.mean_batch
     );
     println!(
         "  {} queries in {:.4}s sim: {:.0} qps, p50 {:.1}µs p90 {:.1}µs \
@@ -533,6 +559,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.max_us,
         r.wire_bytes,
         r.bytes_per_query
+    );
+    println!(
+        "  availability {:.2}% ({} ok / {} degraded / {} late / {} shed of {} offered), \
+         goodput {:.0} qps, {} failovers, {} retries, {} hedged ({} wins), {} crashes",
+        r.availability_pct,
+        r.ok,
+        r.degraded,
+        r.late,
+        r.shed,
+        r.answered + r.shed,
+        r.goodput_qps,
+        r.failovers,
+        r.retries,
+        r.hedged,
+        r.hedge_wins,
+        r.crashes
     );
     if let Some(out) = args.get("out") {
         std::fs::write(out, format!("{}\n", r.to_json_row()))
@@ -561,6 +603,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         Some("calibrate") => exp::calibrate(&ctx).map(|_| ()),
         Some("faults") => exp::faults(&ctx).map(|_| ()),
         Some("serving") => exp::serving(&ctx).map(|_| ()),
+        Some("serving-faults") => exp::serving_faults(&ctx).map(|_| ()),
         Some("all") | None => exp::all(&ctx),
         Some(other) => bail!("unknown experiment {other:?}"),
     }

@@ -93,9 +93,18 @@ pub mod tags {
     pub const PUSH: Tag = 5;
     pub const CTRL: Tag = 6;
     pub const RING: Tag = 7;
-    /// Serving plane: a batched query fan-out from the router to every
-    /// shard server (the merged margins ride [`REDUCE`] back up the tree).
+    /// Serving plane: a batched query fan-out from the router to one
+    /// replica per feature shard (responses ride [`SERVE_RESP`]).
     pub const QUERY: Tag = 8;
+    /// Serving plane: explicit shutdown control frame from the router to
+    /// a shard server. A dedicated tag — never a sentinel value inside a
+    /// query frame — so shutdown cannot be confused with a query batch
+    /// under faulty or reordered delivery.
+    pub const SERVE_CTRL: Tag = 9;
+    /// Serving plane: one shard replica's partial-margin response for a
+    /// query batch, sent straight back to the router (which merges the
+    /// per-shard responses in fixed shard order).
+    pub const SERVE_RESP: Tag = 10;
     pub const EVAL: Tag = 100;
     /// Session-layer state snapshots (evaluation plane, uncounted): each
     /// node ships its resumable state to the monitor at epoch boundaries.
@@ -355,6 +364,12 @@ pub struct Endpoint {
     /// [`Endpoint::charge_modeled`] costs. Training keeps the default
     /// (measured) charging.
     modeled_time: bool,
+    /// Cooperative crash mode (the serving plane): injected crashes are
+    /// *not* raised as panics inside send/recv; instead the node loop
+    /// polls [`Endpoint::take_injected_crash`] at its own protocol
+    /// boundaries and exits cleanly, so peers observe an orderly
+    /// [`Arrival::Gone`] rather than a whole-cluster unwind.
+    fault_cooperative: bool,
 }
 
 impl Endpoint {
@@ -380,6 +395,7 @@ impl Endpoint {
             stats,
             fault: None,
             modeled_time: false,
+            fault_cooperative: false,
         }
     }
 
@@ -388,6 +404,32 @@ impl Endpoint {
     /// without a hook stay on the failure-free fast path.
     pub fn install_faults(&mut self, hook: fault::LinkFaults) {
         self.fault = Some(hook);
+    }
+
+    /// Install a fault hook in **cooperative crash** mode (the serving
+    /// plane). Link faults (drop/dup/reorder/partition) behave exactly as
+    /// under [`Endpoint::install_faults`], but a scheduled crash no
+    /// longer panics the node from inside send/recv: the node loop polls
+    /// [`Endpoint::take_injected_crash`] at its own protocol boundaries
+    /// (e.g. between serving batches) and returns cleanly, dropping the
+    /// endpoint so peers observe [`Arrival::Gone`] and can fail over.
+    /// Crashes therefore latch at the *next polled boundary* after the
+    /// scheduled sim-time — deterministic, since the modeled clock is.
+    pub fn install_faults_cooperative(&mut self, hook: fault::LinkFaults) {
+        self.fault = Some(hook);
+        self.fault_cooperative = true;
+    }
+
+    /// Cooperative-mode crash poll: if this node's simulated clock has
+    /// crossed a scheduled (and still unfired) crash, latch it exactly
+    /// once (see [`fault::FaultPlan::crash_due`]) and return its
+    /// scheduled time. The caller is expected to stop using the endpoint
+    /// and return from its node closure.
+    pub fn take_injected_crash(&mut self) -> Option<f64> {
+        match self.fault.as_ref() {
+            Some(hook) => hook.crash_due(self.cs.clock),
+            None => None,
+        }
     }
 
     pub fn id(&self) -> NodeId {
@@ -567,6 +609,135 @@ impl Endpoint {
         }
     }
 
+    /// Best-effort counted send for planes that survive peer death (the
+    /// serving plane). Identical to [`Endpoint::send`] — counters, NIC
+    /// charging, fault-hook effects — except that a dead destination is
+    /// *not* a panic: the frame is charged as if transmitted (a real
+    /// router pays its NIC before learning the peer is gone) and silently
+    /// lost. Crucially the charge/count happens whether or not the peer's
+    /// endpoint has physically dropped yet, so the outcome is independent
+    /// of host scheduling; the truth about the peer is resolved by the
+    /// paired [`Endpoint::recv_from_failable`], which observes
+    /// [`Arrival::Gone`] deterministically.
+    pub fn send_lossy(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
+        self.tick();
+        self.check_injected_crash();
+        let payload = payload.into();
+        let bytes = payload.wire_bytes();
+        self.stats.record(self.id, payload.scalars(), bytes);
+        let (mut wire_time, mut jitter) = self.net.charge_send(&mut self.cs, to, bytes);
+        if let Some(hook) = self.fault.as_mut() {
+            let eff = hook.on_send(to, wire_time);
+            let link_latency = self.net.link(to).latency;
+            if eff.dropped {
+                let (wt2, j2) = self.net.charge_send(&mut self.cs, to, bytes);
+                wire_time = wt2 + 2.0 * link_latency;
+                jitter = j2;
+            }
+            if eff.duplicated {
+                let _ = self.net.charge_send(&mut self.cs, to, bytes);
+            }
+            if eff.reordered {
+                jitter += link_latency;
+            }
+            if let Some(heal) = eff.hold_until {
+                if heal > wire_time {
+                    jitter += heal - wire_time;
+                }
+            }
+        }
+        let msg = Msg { from: self.id, tag, payload, send_time: wire_time, jitter, counted: true };
+        // Best-effort delivery: a closed link loses the frame, it does
+        // not unwind the sender.
+        let _ = self.transport.send(to, msg);
+    }
+
+    /// Blocking selective receive that reports a dead peer as a value
+    /// instead of a panic: `Err(from)` when `from`'s link has closed and
+    /// nothing from it remains in the stash (per-link FIFO guarantees any
+    /// message it sent before dying was pulled into the stash before its
+    /// [`Arrival::Gone`] was observed). Other peers' deaths are recorded
+    /// and tolerated. The serving router's failover path is built on
+    /// this.
+    pub fn recv_from_failable(&mut self, from: NodeId, tag: Tag) -> Result<Msg, NodeId> {
+        self.tick();
+        self.check_injected_crash();
+        if let Some(pos) = self.stash.iter().position(|m| m.from == from && m.tag == tag) {
+            let msg = self.stash.remove(pos).unwrap();
+            self.deliver(&msg);
+            return Ok(msg);
+        }
+        if self.gone[from] {
+            return Err(from);
+        }
+        loop {
+            match self.transport.recv() {
+                // Every link closed at once means the run is tearing down
+                // (or every peer died): report the awaited peer as gone
+                // rather than unwinding the survivor.
+                None => return Err(from),
+                Some(Arrival::Gone(peer)) => {
+                    self.gone[peer] = true;
+                    if peer == from {
+                        return Err(from);
+                    }
+                }
+                Some(Arrival::Msg(msg)) => {
+                    if msg.from == from && msg.tag == tag {
+                        self.deliver(&msg);
+                        return Ok(msg);
+                    }
+                    self.stash.push_back(msg);
+                }
+            }
+        }
+    }
+
+    /// Blocking receive of the next message from `from` with **any** tag,
+    /// with the same dead-peer-as-value semantics as
+    /// [`Endpoint::recv_from_failable`]. Shard servers use this to wait
+    /// on the router (queries and control frames share one upstream link)
+    /// while tolerating sibling replicas' deaths.
+    pub fn recv_from_any_failable(&mut self, from: NodeId) -> Result<Msg, NodeId> {
+        self.tick();
+        self.check_injected_crash();
+        if let Some(pos) = self.stash.iter().position(|m| m.from == from) {
+            let msg = self.stash.remove(pos).unwrap();
+            self.deliver(&msg);
+            return Ok(msg);
+        }
+        if self.gone[from] {
+            return Err(from);
+        }
+        loop {
+            match self.transport.recv() {
+                None => return Err(from),
+                Some(Arrival::Gone(peer)) => {
+                    self.gone[peer] = true;
+                    if peer == from {
+                        return Err(from);
+                    }
+                }
+                Some(Arrival::Msg(msg)) => {
+                    if msg.from == from {
+                        self.deliver(&msg);
+                        return Ok(msg);
+                    }
+                    self.stash.push_back(msg);
+                }
+            }
+        }
+    }
+
+    /// Modeled wire-arrival time of a received message at this node:
+    /// sender's on-the-wire stamp + this link's latency + any seeded or
+    /// fault-injected extra latency the sender attached. Independent of
+    /// the order this node drained its mailbox in — the serving router
+    /// uses it to rank a hedged pair's answers deterministically.
+    pub fn wire_arrival(&self, msg: &Msg) -> f64 {
+        msg.send_time + self.net.link(msg.from).latency + msg.jitter
+    }
+
     /// Evaluation-plane send: not counted, no clock effect on either side.
     pub fn send_eval(&mut self, to: NodeId, tag: Tag, payload: impl Into<Payload>) {
         self.discard_cpu();
@@ -590,6 +761,11 @@ impl Endpoint {
     /// without parsing panic payloads.
     #[inline]
     fn check_injected_crash(&mut self) {
+        if self.fault_cooperative {
+            // Serving plane: crashes fire only at the node loop's own
+            // `take_injected_crash` polls, never from inside send/recv.
+            return;
+        }
         if let Some(hook) = self.fault.as_ref() {
             if let Some(t) = hook.crash_due(self.cs.clock) {
                 panic!(

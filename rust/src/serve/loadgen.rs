@@ -13,6 +13,13 @@
 //! side produces is a pure function of the seed and the simulated
 //! timeline, which is what makes the serving reports bit-stable across
 //! reruns (see the determinism contract in DESIGN.md).
+//!
+//! The robust router (see [`super::RobustSpec`]) leans on one extra
+//! property: the k-th query is drawn from the stream *before* any
+//! admission decision is made, so the identity of each arrival is
+//! invariant under the `--queue-cap` shed policy — capping the queue
+//! changes which queries are answered, never which query the k-th
+//! arrival *is*.
 
 use super::Query;
 use crate::sparse::CscMatrix;

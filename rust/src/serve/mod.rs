@@ -1,51 +1,81 @@
 //! Sharded inference plane: batched margin-merge serving over the
-//! feature-distributed layout.
+//! feature-distributed layout, with replication, failover, hedging, and
+//! load shedding under the injected fault plane.
 //!
 //! Training ends, the layout stays: a d-dimensional linear model trained
 //! feature-distributed is *served* feature-distributed. Node 0 is the
-//! [`Router`] front-end; nodes `1..=q` each hold one contiguous feature
-//! shard of the weight vector (the same nnz-balanced partition
+//! router front-end; shard `s` of `q` holds one contiguous feature range
+//! of the weight vector (the same nnz-balanced partition
 //! [`crate::sparse::partition::by_features`] gives the trainer) as a
-//! [`ShardServer`]. A query's margin factors over shards exactly like the
-//! trainer's partial products:
+//! [`ShardServer`]. Under `--replicas r` each shard runs `r` identical
+//! copies — replica `c` of shard `s` is node `1 + c·q + s`, so the
+//! replica-0 set is nodes `1..=q`, exactly the unreplicated layout — and
+//! the cluster is `q·r + 1` nodes. A query's margin factors over shards
+//! exactly like the trainer's partial products:
 //!
 //! ```text
 //!   wᵀx = Σ_l  w^(l)ᵀ x^(l)
 //! ```
 //!
-//! so serving one batch is: router fans the encoded batch to all shards
-//! ([`crate::net::tags::QUERY`]), each shard computes its partial margins
-//! against a read-optimized weight snapshot ([`ShardWeights`]: exact `f64`
-//! or an `f32`-quantized slab riding the `--wire f32` machinery), and the
-//! partials merge back with the Fig.-5 binomial
-//! [`crate::net::collectives::tree_reduce`] rooted at the router.
+//! so serving one batch is: the router fans the encoded batch to one
+//! live replica per shard ([`crate::net::tags::QUERY`]), each replica
+//! computes its partial margins against a read-optimized weight snapshot
+//! ([`ShardWeights`]: exact `f64` or an `f32`-quantized slab riding the
+//! `--wire f32` machinery), and the partials come straight back on
+//! [`crate::net::tags::SERVE_RESP`] — a star gather the router merges in
+//! ascending shard order (a plain left-to-right chain starting at 0.0,
+//! the association [`reference_margins`] replays). The star carries the
+//! same q messages of `take` scalars the old reduce tree did; it exists
+//! because failover needs a per-replica conversation, not a fixed tree.
 //!
 //! **Batching policy** ([`BatchPolicy`]): a batch closes when it reaches
 //! `max_batch` queries or `max_delay` seconds after its first admitted
 //! query, whichever comes first; the router dispatches one batch at a
 //! time. Batching is where the throughput comes from — the per-message
-//! overhead (`per_msg`, wire latency, one reduce round-trip) amortizes
+//! overhead (`per_msg`, wire latency, one gather round-trip) amortizes
 //! over the whole batch.
+//!
+//! **Robustness** ([`RobustSpec`]): the serving plane composes with the
+//! PR 8 fault plane (`--faults` crash/drop/dup/reorder/partition specs)
+//! in *cooperative crash* mode — a scheduled crash makes the replica's
+//! loop return cleanly at its next protocol boundary, so peers observe
+//! [`crate::net::Arrival::Gone`] instead of a torn-down cluster. The
+//! router reacts with the failover state machine documented on
+//! [`run_router`]: primaries per shard, bounded retry with linear
+//! backoff against the next live replica, optional hedged dispatch
+//! (`--hedge`), a per-batch service deadline (`--serve-deadline`), a
+//! bounded open-loop admission queue (`--queue-cap`), and degraded
+//! answers carrying a missing-shard bitmask when a feature range has no
+//! live replica left. Every query lands in exactly one of four buckets —
+//! `ok`, `degraded`, `late`, `shed` — and they sum to the offered count.
 //!
 //! **Determinism contract**: the simulation runs on
 //! [`Endpoint::set_modeled_time`] — the clock moves only on model charges
 //! (message occupancy, explicit [`cost`] constants via
 //! [`Endpoint::charge_modeled`]) — and all traffic comes from a seeded
-//! [`LoadGen`]. Every reported number (p50/p99/QPS/bytes/margin checksum)
-//! is therefore a pure function of `(spec, seed)`: bit-identical across
-//! reruns and `--threads K`.
+//! [`LoadGen`]. Failure handling preserves this: the router never
+//! branches on passively-observed death flags (sends are
+//! [`Endpoint::send_lossy`] — always charged, delivery failure ignored),
+//! and truth about a peer resolves only at the paired
+//! [`Endpoint::recv_from_failable`], whose outcome per-link FIFO makes
+//! host-race independent. Hedged answers are drained in a fixed order
+//! and ranked by their *modeled* arrival stamps, not by which host
+//! thread ran first. Every reported number (p50/p99/QPS/availability/
+//! margin checksum) is therefore a pure function of `(spec, seed)`:
+//! bit-identical across reruns and `--threads K`.
 
 mod loadgen;
 
 pub use loadgen::{ArrivalMode, LatencyHistogram, LoadGen, QuerySource};
 
 use crate::cluster::run_cluster_model;
-use crate::net::collectives::tree_reduce;
-use crate::net::{tags, Endpoint, NetModel, NodeId, Payload, WireFmt};
+use crate::net::fault::{FaultPlan, LinkFaults};
+use crate::net::{tags, Endpoint, Msg, NetModel, NodeId, Payload, WireFmt};
 use crate::sparse::CscMatrix;
 use std::collections::VecDeque;
+use std::sync::Arc;
 
-/// The front-end node id (shards are `1..=q`).
+/// The front-end node id (shard replicas are `1..=q·r`).
 pub const ROUTER: NodeId = 0;
 
 /// Deterministic modeled compute costs (seconds of serial work) charged
@@ -67,6 +97,9 @@ pub mod cost {
     pub const ROUTER_PER_QUERY: f64 = 120.0e-9;
     /// Router: per-batch overhead (close decision, fan-out setup).
     pub const ROUTER_PER_BATCH: f64 = 1.5e-6;
+    /// Router: base backoff before re-dispatching a batch to the next
+    /// replica after a failover (attempt `k` waits `k` times this).
+    pub const RETRY_BACKOFF: f64 = 100.0e-6;
 }
 
 /// One sparse query: feature indices (strictly ascending) and values.
@@ -133,6 +166,38 @@ pub struct BatchPolicy {
     pub max_delay: f64,
 }
 
+/// Robustness knobs for one serving run (the `--replicas` /
+/// `--serve-deadline` / `--hedge` / `--queue-cap` / `--faults` flags).
+/// The default is the failure-free PR 9 plane: one replica, no deadline,
+/// no hedging, unbounded queue, no faults.
+#[derive(Clone)]
+pub struct RobustSpec {
+    /// Copies of each shard (`r ≥ 1`); the cluster is `q·r + 1` nodes.
+    pub replicas: usize,
+    /// Per-batch service deadline in modeled seconds, measured from batch
+    /// close to merge completion; `0` disables. Missed batches still
+    /// answer, but every query in them counts `late` instead of `ok`.
+    pub deadline: f64,
+    /// Hedge delay in modeled seconds: each batch is also dispatched to a
+    /// second live replica, and the hedge's answer wins if its modeled
+    /// arrival plus this delay beats the primary's. Negative disables.
+    pub hedge: f64,
+    /// Open-mode admission queue bound; an arrival that finds the queue
+    /// full is shed (counted, never served). `0` = unbounded. Ignored in
+    /// closed mode (the concurrency cap already bounds admissions).
+    pub queue_cap: usize,
+    /// Seeded fault plan (crash/drop/dup/reorder/partition), installed in
+    /// cooperative-crash mode on every node. The router (node 0) is
+    /// uncrashable; a passive plan is a bit-exact identity.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for RobustSpec {
+    fn default() -> Self {
+        RobustSpec { replicas: 1, deadline: 0.0, hedge: -1.0, queue_cap: 0, faults: None }
+    }
+}
+
 /// A shard's read-optimized weight snapshot: the exact f64 reference, or
 /// the f32-quantized slab (the serving twin of the `--wire f32` codec and
 /// the trainer's `dense_slab_f32` mirrors — half the bytes, ~2× the scan
@@ -172,6 +237,8 @@ impl ShardWeights {
 }
 
 /// One shard server: feature range `[lo, hi)` plus its weight snapshot.
+/// Replicas of the same shard are bit-identical, so any live replica's
+/// answer is interchangeable — the property failover and hedging rest on.
 pub struct ShardServer {
     pub lo: usize,
     pub hi: usize,
@@ -208,16 +275,17 @@ impl ShardServer {
         acc
     }
 
-    /// Decode a flat query batch (see [`encode_batch`]) and write one
-    /// partial margin per query into `out`. Returns the number of
-    /// in-range nonzeros actually multiplied (the modeled-cost driver).
+    /// Decode a flat query batch (see [`encode_batch`]; `flat[0]` is the
+    /// batch id, skipped here) and write one partial margin per query
+    /// into `out`. Returns the number of in-range nonzeros actually
+    /// multiplied (the modeled-cost driver).
     pub fn batch_partials(&self, flat: &[f64], out: &mut Vec<f64>) -> usize {
-        let nq = flat[0] as usize;
+        let nq = flat[1] as usize;
         out.clear();
         out.reserve(nq);
         let (lo, hi) = (self.lo as u32, self.hi as u32);
         let mut scanned = 0usize;
-        let mut pos = 1usize;
+        let mut pos = 2usize;
         for _ in 0..nq {
             let nnz = flat[pos] as usize;
             let idx = &flat[pos + 1..pos + 1 + nnz];
@@ -259,11 +327,14 @@ impl ShardServer {
 
 /// Flat wire layout of a query batch (always exact f64 — quantizing
 /// *queries* would corrupt indices):
-/// `[nq, nnz_1, idx_1.., val_1.., nnz_2, ...]` — u32 indices are exact
-/// as f64.
-pub fn encode_batch(queries: &[Query]) -> Vec<f64> {
-    let scalars = 1 + queries.iter().map(|q| 1 + 2 * q.nnz()).sum::<usize>();
+/// `[bid, nq, nnz_1, idx_1.., val_1.., nnz_2, ...]` — u32 indices and the
+/// batch id are exact as f64. The leading batch id lets retried and
+/// hedged dispatches be matched to their answers by value instead of by
+/// arrival order.
+pub fn encode_batch(bid: u64, queries: &[Query]) -> Vec<f64> {
+    let scalars = 2 + queries.iter().map(|q| 1 + 2 * q.nnz()).sum::<usize>();
     let mut flat = Vec::with_capacity(scalars);
+    flat.push(bid as f64);
     flat.push(queries.len() as f64);
     for q in queries {
         flat.push(q.nnz() as f64);
@@ -287,24 +358,51 @@ pub struct ServeSpec<'a> {
     pub mode: ArrivalMode,
     pub seed: u64,
     pub source: QuerySource,
-    /// Keep every merged margin (issue order) — tests pin them against
-    /// [`reference_margins`]; off for load runs (O(total) memory).
+    /// Keep every merged margin (+ missing-shard mask) in issue order —
+    /// tests pin them against [`reference_margins`]; off for load runs
+    /// (O(total) memory).
     pub collect_margins: bool,
+    /// Replication/failover/hedging/shedding knobs (default: the
+    /// failure-free single-replica plane).
+    pub robust: RobustSpec,
 }
 
-/// What one simulation reports: the latency distribution, throughput, and
-/// enough configuration echo to be a self-describing JSON row.
+/// What one simulation reports: the latency distribution, throughput,
+/// availability accounting, and enough configuration echo to be a
+/// self-describing JSON row. The accounting invariant (pinned by tests):
+/// `queries = ok + degraded + late + shed`, with per-query precedence
+/// late > degraded > ok.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub scenario: &'static str,
     pub wire: &'static str,
     pub q: usize,
+    pub replicas: usize,
     pub max_batch: usize,
     pub max_delay_us: f64,
+    pub deadline_us: f64,
+    /// Hedge delay in µs; `-1` when hedging is off.
+    pub hedge_us: f64,
+    pub queue_cap: usize,
+    /// Canonical `--faults` spec, `"none"` without a plan.
+    pub faults: String,
     pub mode: &'static str,
     pub concurrency: usize,
     pub rate: f64,
+    /// Offered queries (the full seeded stream).
     pub queries: usize,
+    /// Queries that got an answer (`ok + degraded + late`).
+    pub answered: usize,
+    /// Answered in time with every shard contributing.
+    pub ok: usize,
+    /// Answered with at least one shard's range missing (no live replica).
+    pub degraded: usize,
+    /// Answered after the per-batch service deadline.
+    pub late: usize,
+    /// Rejected at admission (open-mode queue cap).
+    pub shed: usize,
+    /// `100 · ok / queries`.
+    pub availability_pct: f64,
     pub batches: u64,
     pub mean_batch: f64,
     pub p50_us: f64,
@@ -312,10 +410,26 @@ pub struct ServeReport {
     pub p99_us: f64,
     pub max_us: f64,
     pub mean_us: f64,
+    /// Answered queries per simulated second.
     pub qps: f64,
+    /// `ok` queries per simulated second — throughput that met the SLO.
+    pub goodput_qps: f64,
     pub sim_time_s: f64,
     pub wire_bytes: u64,
     pub bytes_per_query: f64,
+    /// Primary replicas observed dead by the router (each moves the
+    /// shard's primary to the next live replica).
+    pub failovers: u64,
+    /// Re-dispatches after a failover (each charged a linear backoff).
+    pub retries: u64,
+    /// Hedge copies dispatched.
+    pub hedged: u64,
+    /// Batches where the hedge's answer won (faster modeled arrival or
+    /// the primary died).
+    pub hedge_wins: u64,
+    /// Scheduled crashes that actually fired (an idle replica whose
+    /// clock never reaches its crash time dies only at shutdown).
+    pub crashes: u64,
     /// Σ of all merged margins in issue order — a one-number bit-stability
     /// witness for the whole numeric path.
     pub margin_checksum: f64,
@@ -323,28 +437,45 @@ pub struct ServeReport {
 
 impl ServeReport {
     /// One hand-rolled JSON object (no trailing comma/newline) — shared
-    /// by `serve --out` and the `exp serving` report writer. Deliberately
-    /// separate from the golden-pinned
+    /// by `serve --out` and the `exp serving`/`exp serving-faults` report
+    /// writers. Deliberately separate from the golden-pinned
     /// [`crate::metrics::json::run_result_to_json`] layout.
     pub fn to_json_row(&self) -> String {
         format!(
             "{{\"scenario\": \"{}\", \"wire\": \"{}\", \"q\": {}, \
-             \"max_batch\": {}, \"max_delay_us\": {}, \"mode\": \"{}\", \
+             \"replicas\": {}, \"max_batch\": {}, \"max_delay_us\": {}, \
+             \"deadline_us\": {}, \"hedge_us\": {}, \"queue_cap\": {}, \
+             \"faults\": \"{}\", \"mode\": \"{}\", \
              \"concurrency\": {}, \"rate\": {}, \"queries\": {}, \
+             \"answered\": {}, \"ok\": {}, \"degraded\": {}, \
+             \"late\": {}, \"shed\": {}, \"availability_pct\": {}, \
              \"batches\": {}, \"mean_batch\": {}, \"p50_us\": {}, \
              \"p90_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
-             \"mean_us\": {}, \"qps\": {}, \"sim_time_s\": {}, \
-             \"wire_bytes\": {}, \"bytes_per_query\": {}, \
+             \"mean_us\": {}, \"qps\": {}, \"goodput_qps\": {}, \
+             \"sim_time_s\": {}, \"wire_bytes\": {}, \
+             \"bytes_per_query\": {}, \"failovers\": {}, \"retries\": {}, \
+             \"hedged\": {}, \"hedge_wins\": {}, \"crashes\": {}, \
              \"margin_checksum\": {}}}",
             self.scenario,
             self.wire,
             self.q,
+            self.replicas,
             self.max_batch,
             self.max_delay_us,
+            self.deadline_us,
+            self.hedge_us,
+            self.queue_cap,
+            self.faults,
             self.mode,
             self.concurrency,
             self.rate,
             self.queries,
+            self.answered,
+            self.ok,
+            self.degraded,
+            self.late,
+            self.shed,
+            self.availability_pct,
             self.batches,
             self.mean_batch,
             self.p50_us,
@@ -353,9 +484,15 @@ impl ServeReport {
             self.max_us,
             self.mean_us,
             self.qps,
+            self.goodput_qps,
             self.sim_time_s,
             self.wire_bytes,
             self.bytes_per_query,
+            self.failovers,
+            self.retries,
+            self.hedged,
+            self.hedge_wins,
+            self.crashes,
             self.margin_checksum,
         )
     }
@@ -367,6 +504,67 @@ pub struct ServeOutcome {
     /// Merged margins in issue order (only when
     /// [`ServeSpec::collect_margins`]).
     pub margins: Option<Vec<f64>>,
+    /// Missing-shard bitmask per answered query, parallel to `margins`
+    /// (bit `s` set ⇔ shard `s` had no live replica when that query's
+    /// batch was merged). All-zero on failure-free runs.
+    pub masks: Option<Vec<u64>>,
+}
+
+/// Router-side replica bookkeeping. Replica `c` of shard `s` is node
+/// `1 + c·q + s`; `alive` is the router's *observed* view (a replica is
+/// marked dead only on a failed receive — never revived), and `primary`
+/// is the replica currently fielding each shard's traffic.
+struct Fleet {
+    q: usize,
+    r: usize,
+    alive: Vec<bool>,
+    primary: Vec<usize>,
+}
+
+impl Fleet {
+    fn new(q: usize, r: usize) -> Fleet {
+        Fleet { q, r, alive: vec![true; q * r], primary: vec![0; q] }
+    }
+
+    fn node(&self, s: usize, c: usize) -> NodeId {
+        1 + c * self.q + s
+    }
+
+    fn is_alive(&self, s: usize, c: usize) -> bool {
+        self.alive[s * self.r + c]
+    }
+
+    fn kill(&mut self, s: usize, c: usize) {
+        self.alive[s * self.r + c] = false;
+    }
+
+    /// The shard's primary if still believed alive, else fail over to the
+    /// lowest live replica (sticky: the choice persists across batches).
+    fn pick_primary(&mut self, s: usize) -> Option<usize> {
+        if self.is_alive(s, self.primary[s]) {
+            return Some(self.primary[s]);
+        }
+        for c in 0..self.r {
+            if self.is_alive(s, c) {
+                self.primary[s] = c;
+                return Some(c);
+            }
+        }
+        None
+    }
+
+    /// Lowest live replica other than `not` — the hedge target.
+    fn other_alive(&self, s: usize, not: usize) -> Option<usize> {
+        (0..self.r).find(|&c| c != not && self.is_alive(s, c))
+    }
+}
+
+#[derive(Default)]
+struct RobustCounters {
+    failovers: u64,
+    retries: u64,
+    hedged: u64,
+    hedge_wins: u64,
 }
 
 struct RouterOut {
@@ -375,24 +573,72 @@ struct RouterOut {
     last_done: f64,
     checksum: f64,
     margins: Option<Vec<f64>>,
+    masks: Option<Vec<u64>>,
+    answered: usize,
+    ok: usize,
+    degraded: usize,
+    late: usize,
+    shed: usize,
+    counters: RobustCounters,
 }
 
-/// Run one serving simulation: `q = bounds.len()` shard servers plus the
-/// router on `q+1` sim nodes under `spec.model`, driven by the seeded
-/// load generator until `spec.queries` have completed.
-pub fn simulate(spec: &ServeSpec) -> ServeOutcome {
+/// Run one serving simulation: `q = bounds.len()` shards × `r` replicas
+/// plus the router on `q·r + 1` sim nodes under `spec.model`, driven by
+/// the seeded load generator until every offered query is answered or
+/// shed. Entry errors (bad shapes, incompatible robustness knobs, fault
+/// plans targeting the router) surface as `Err` with context instead of
+/// panics.
+pub fn simulate(spec: &ServeSpec) -> Result<ServeOutcome, String> {
     let q = spec.bounds.len();
-    assert!(q > 0, "serve: need at least one shard");
-    assert!(spec.policy.max_batch > 0, "serve: max_batch must be ≥ 1");
-    assert!(spec.queries > 0, "serve: need at least one query");
+    let rs = &spec.robust;
+    if q == 0 {
+        return Err("serve: need at least one shard (empty feature partition)".to_string());
+    }
+    if spec.policy.max_batch == 0 {
+        return Err("serve: max_batch must be ≥ 1".to_string());
+    }
+    if spec.queries == 0 {
+        return Err("serve: need at least one query".to_string());
+    }
+    if rs.replicas == 0 {
+        return Err("serve: --replicas must be ≥ 1".to_string());
+    }
+    if rs.hedge >= 0.0 && rs.replicas < 2 {
+        return Err(
+            "serve: --hedge races a second replica per shard; it needs --replicas ≥ 2"
+                .to_string(),
+        );
+    }
+    let n_nodes = 1 + q * rs.replicas;
+    if let Some(plan) = &rs.faults {
+        plan.validate(n_nodes).map_err(|e| format!("serve: {e}"))?;
+        if plan.crashes().iter().any(|c| c.node == ROUTER) {
+            return Err(format!(
+                "serve: the router (node 0) is uncrashable — schedule crashes on shard \
+                 nodes 1..={}",
+                n_nodes - 1
+            ));
+        }
+        if q > 64 {
+            return Err(format!(
+                "serve: degraded-answer masks track at most 64 shards under --faults \
+                 (got q={q})"
+            ));
+        }
+    }
     let d = spec.bounds.last().unwrap().1;
     let quantize = spec.wire == WireFmt::F32;
-    let run = run_cluster_model(q + 1, &spec.model, |mut ep| {
+    let run = run_cluster_model(n_nodes, &spec.model, |mut ep| {
         ep.set_modeled_time(true);
+        if let Some(plan) = &rs.faults {
+            ep.install_faults_cooperative(LinkFaults::new(plan.clone(), ep.id()));
+        }
         if ep.id() == ROUTER {
             Some(run_router(&mut ep, spec, d))
         } else {
-            let (lo, hi) = spec.bounds[ep.id() - 1];
+            // Replica c of shard s is node 1 + c·q + s.
+            let s = (ep.id() - 1) % q;
+            let (lo, hi) = spec.bounds[s];
             run_shard(&mut ep, ShardServer::from_snapshot(spec.w, lo, hi, quantize), spec.wire);
             None
         }
@@ -402,73 +648,320 @@ pub fn simulate(spec: &ServeSpec) -> ServeOutcome {
         .into_iter()
         .flatten()
         .next()
-        .expect("serve: router produced no report");
+        .ok_or_else(|| "serve: router produced no report".to_string())?;
     let wire_bytes = run.stats.total_bytes();
     let (concurrency, rate) = match spec.mode {
         ArrivalMode::Closed { concurrency } => (concurrency, 0.0),
         ArrivalMode::Open { rate } => (0, rate),
     };
+    let offered = spec.queries;
+    debug_assert_eq!(out.ok + out.degraded + out.late, out.answered);
+    debug_assert_eq!(out.answered + out.shed, offered);
     let report = ServeReport {
         scenario: spec.model.name(),
         wire: spec.wire.name(),
         q,
+        replicas: rs.replicas,
         max_batch: spec.policy.max_batch,
         max_delay_us: spec.policy.max_delay * 1e6,
+        deadline_us: rs.deadline * 1e6,
+        hedge_us: if rs.hedge >= 0.0 { rs.hedge * 1e6 } else { -1.0 },
+        queue_cap: rs.queue_cap,
+        faults: rs.faults.as_ref().map_or_else(|| "none".to_string(), |p| p.spec().to_string()),
         mode: spec.mode.name(),
         concurrency,
         rate,
-        queries: spec.queries,
+        queries: offered,
+        answered: out.answered,
+        ok: out.ok,
+        degraded: out.degraded,
+        late: out.late,
+        shed: out.shed,
+        availability_pct: 100.0 * out.ok as f64 / offered as f64,
         batches: out.batches,
-        mean_batch: spec.queries as f64 / out.batches.max(1) as f64,
+        mean_batch: out.answered as f64 / out.batches.max(1) as f64,
         p50_us: out.hist.quantile(0.50) * 1e6,
         p90_us: out.hist.quantile(0.90) * 1e6,
         p99_us: out.hist.quantile(0.99) * 1e6,
         max_us: out.hist.max() * 1e6,
         mean_us: out.hist.mean() * 1e6,
-        qps: spec.queries as f64 / out.last_done.max(1e-12),
+        qps: out.answered as f64 / out.last_done.max(1e-12),
+        goodput_qps: out.ok as f64 / out.last_done.max(1e-12),
         sim_time_s: out.last_done,
         wire_bytes,
-        bytes_per_query: wire_bytes as f64 / spec.queries as f64,
+        bytes_per_query: wire_bytes as f64 / out.answered.max(1) as f64,
+        failovers: out.counters.failovers,
+        retries: out.counters.retries,
+        hedged: out.counters.hedged,
+        hedge_wins: out.counters.hedge_wins,
+        crashes: rs.faults.as_ref().map_or(0, |p| p.stats().crashes),
         margin_checksum: out.checksum,
     };
-    ServeOutcome { report, margins: out.margins }
+    Ok(ServeOutcome { report, margins: out.margins, masks: out.masks })
 }
 
-/// The shard main loop: receive a batch, compute partials, charge the
-/// modeled cost, merge up the reduce tree. An empty batch (`nq = 0`) is
-/// the shutdown signal.
+/// The shard main loop: receive a frame from the router, compute
+/// partials, charge the modeled cost, send them straight back on
+/// [`tags::SERVE_RESP`]. Shutdown is an explicit [`tags::SERVE_CTRL`]
+/// frame — never a magic query payload, so faulty/reordered delivery
+/// can't fake it. Scheduled crashes are polled cooperatively at the loop
+/// top and again between compute and reply, so a replica can die holding
+/// a batch (the case the router's failover path exists for). A dead
+/// router means no one is left to serve: log it loudly and shut down.
 fn run_shard(ep: &mut Endpoint, shard: ShardServer, wire: WireFmt) {
-    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
     let mut partial: Vec<f64> = Vec::new();
     loop {
-        let msg = ep.recv_from(ROUTER, tags::QUERY);
+        if let Some(at) = ep.take_injected_crash() {
+            crate::warn_!(
+                "serve: shard node {} crashing on schedule (t={at:.6}s)",
+                ep.id()
+            );
+            return;
+        }
+        let msg = match ep.recv_from_any_failable(ROUTER) {
+            Ok(m) => m,
+            Err(dead) => {
+                crate::warn_!(
+                    "serve: shard node {} lost the router (node {dead} disconnected); \
+                     shutting down",
+                    ep.id()
+                );
+                return;
+            }
+        };
+        match msg.tag {
+            tags::SERVE_CTRL => return,
+            tags::QUERY => {}
+            other => panic!(
+                "serve: shard node {} got unexpected tag {other} from the router",
+                ep.id()
+            ),
+        }
         let flat: &[f64] = match &msg.payload {
             Payload::DenseF64(v) => v,
             other => panic!("serve: query batches travel as exact f64, got {other:?}"),
         };
-        if flat[0] == 0.0 {
-            break;
-        }
-        let nq = flat[0] as usize;
+        let bid = flat[0];
+        let nq = flat[1] as usize;
         let scanned = shard.batch_partials(flat, &mut partial);
         ep.charge_modeled(shard.batch_cost(nq, scanned));
         drop(msg);
-        tree_reduce(ep, &group, &mut partial, wire);
+        // A crash scheduled during the compute fires *before* the reply:
+        // the router observes the death while the batch is outstanding
+        // and fails over.
+        if let Some(at) = ep.take_injected_crash() {
+            crate::warn_!(
+                "serve: shard node {} crashing on schedule (t={at:.6}s) with a batch in hand",
+                ep.id()
+            );
+            return;
+        }
+        let mut resp = Vec::with_capacity(1 + partial.len());
+        resp.push(bid);
+        resp.extend_from_slice(&partial);
+        ep.send_lossy(ROUTER, tags::SERVE_RESP, wire.encode(&resp));
     }
 }
 
-/// The router main loop: admit seeded traffic, close batches under the
-/// policy, fan out, merge, record latency, and (closed mode) re-issue.
+/// Admit one generated query at time `t`. The query is always drawn (and
+/// the seeded stream advanced) *before* the cap check, so the k-th
+/// arrival is the same query at any `--queue-cap` — shedding changes who
+/// gets served, never who asks. `cap = 0` disables shedding.
+fn admit_query(
+    pending: &mut VecDeque<(f64, Query)>,
+    gen: &mut LoadGen,
+    d: usize,
+    cap: usize,
+    t: f64,
+    shed: &mut usize,
+) {
+    let query = gen.next_query();
+    if let Err(e) = query.validate(d) {
+        panic!("serve: load generator produced an invalid query: {e}");
+    }
+    if cap > 0 && pending.len() >= cap {
+        *shed += 1;
+    } else {
+        pending.push_back((t, query));
+    }
+}
+
+/// Decode one shard response (`[bid, partial_0..partial_{take-1}]`) and
+/// check its batch id — per-replica request/response is strictly
+/// sequential, so a mismatch is an internal invariant violation, not a
+/// network condition.
+fn decode_resp(msg: &Msg, bid: u64, take: usize) -> Vec<f64> {
+    let flat = msg.to_vec(take + 1);
+    assert!(
+        flat[0] == bid as f64,
+        "serve: internal error: node {} answered batch {} while the router awaited batch {bid}",
+        msg.from,
+        flat[0]
+    );
+    flat[1..].to_vec()
+}
+
+/// Dispatch one encoded batch to one live replica per shard (plus an
+/// optional hedge copy) and merge the answers in ascending shard order.
+/// Returns the merged margins and the missing-shard bitmask (bit `s` set
+/// ⇔ shard `s` had no live replica left).
+///
+/// The failover state machine, per shard: send to the primary (and the
+/// hedge target when enabled); drain the primary's answer, then the
+/// hedge's, in that fixed order — a failed receive kills the replica in
+/// the router's view. If neither answered, retry against the next live
+/// replica with a linear backoff (`cost::RETRY_BACKOFF · attempt`) until
+/// one answers or the shard is out of replicas. Hedge wins are decided
+/// by *modeled* arrival stamps (`Endpoint::wire_arrival` + the hedge
+/// delay), so the count is deterministic; the drain itself still waits
+/// on a slow-but-alive primary — in this blocking modeled-time design
+/// hedging pays off against dead or partitioned replicas, not pure
+/// stragglers (see DESIGN.md).
+fn collect_batch(
+    ep: &mut Endpoint,
+    fleet: &mut Fleet,
+    spec: &ServeSpec,
+    payload: &Payload,
+    bid: u64,
+    take: usize,
+    counters: &mut RobustCounters,
+) -> (Vec<f64>, u64) {
+    let q = fleet.q;
+    let rs = &spec.robust;
+    // Dispatch: one copy to each shard's primary, plus a hedge copy when
+    // enabled and a second live replica exists. Sends are lossy-on-dead
+    // and always charged — the router's counters and clock never depend
+    // on the host race between a replica's death and this send.
+    let mut primary_c: Vec<Option<usize>> = Vec::with_capacity(q);
+    let mut hedge_c: Vec<Option<usize>> = vec![None; q];
+    for s in 0..q {
+        let c = fleet.pick_primary(s);
+        if let Some(c) = c {
+            ep.send_lossy(fleet.node(s, c), tags::QUERY, payload.clone());
+            if rs.hedge >= 0.0 {
+                if let Some(h) = fleet.other_alive(s, c) {
+                    ep.send_lossy(fleet.node(s, h), tags::QUERY, payload.clone());
+                    hedge_c[s] = Some(h);
+                    counters.hedged += 1;
+                }
+            }
+        }
+        primary_c.push(c);
+    }
+    // Collect in ascending shard order — the deterministic drain that
+    // fixes both the merge association and the clock trajectory.
+    let mut merged = vec![0.0f64; take];
+    let mut mask = 0u64;
+    for s in 0..q {
+        // (partials, modeled arrival) of the best answer so far.
+        let mut winner: Option<(Vec<f64>, f64)> = None;
+        if let Some(c0) = primary_c[s] {
+            match ep.recv_from_failable(fleet.node(s, c0), tags::SERVE_RESP) {
+                Ok(msg) => {
+                    let arr = ep.wire_arrival(&msg);
+                    winner = Some((decode_resp(&msg, bid, take), arr));
+                }
+                Err(dead) => {
+                    fleet.kill(s, c0);
+                    counters.failovers += 1;
+                    crate::warn_!(
+                        "serve: shard {s} primary (node {dead}) died; failing over"
+                    );
+                }
+            }
+        }
+        // The hedge copy is always drained when sent — the mailbox must
+        // not leak answers into the next batch.
+        if let Some(h) = hedge_c[s] {
+            match ep.recv_from_failable(fleet.node(s, h), tags::SERVE_RESP) {
+                Ok(msg) => {
+                    let arr = ep.wire_arrival(&msg) + rs.hedge;
+                    let wins = match &winner {
+                        Some((_, primary_arr)) => arr < *primary_arr,
+                        // Primary dead: the hedge covered the batch — a
+                        // real latency win (no resend round-trip).
+                        None => true,
+                    };
+                    if wins {
+                        counters.hedge_wins += 1;
+                        winner = Some((decode_resp(&msg, bid, take), arr));
+                    }
+                }
+                Err(dead) => {
+                    fleet.kill(s, h);
+                    crate::warn_!("serve: shard {s} hedge replica (node {dead}) died");
+                }
+            }
+        }
+        // Bounded retry: re-dispatch to the next live replica with a
+        // linear backoff until one answers or the shard is exhausted.
+        let mut attempt = 0u64;
+        while winner.is_none() {
+            let Some(c) = fleet.pick_primary(s) else { break };
+            attempt += 1;
+            counters.retries += 1;
+            ep.charge_modeled(cost::RETRY_BACKOFF * attempt as f64);
+            ep.send_lossy(fleet.node(s, c), tags::QUERY, payload.clone());
+            match ep.recv_from_failable(fleet.node(s, c), tags::SERVE_RESP) {
+                Ok(msg) => {
+                    let arr = ep.wire_arrival(&msg);
+                    winner = Some((decode_resp(&msg, bid, take), arr));
+                }
+                Err(dead) => {
+                    fleet.kill(s, c);
+                    counters.failovers += 1;
+                    crate::warn_!(
+                        "serve: shard {s} replica (node {dead}) died on retry {attempt}"
+                    );
+                }
+            }
+        }
+        match winner {
+            Some((partials, _)) => {
+                for k in 0..take {
+                    merged[k] += partials[k];
+                }
+            }
+            None => {
+                mask |= 1u64 << s;
+                let (lo, hi) = spec.bounds[s];
+                crate::warn_!(
+                    "serve: shard {s} has no live replica; answers degrade over \
+                     features [{lo}, {hi})"
+                );
+            }
+        }
+    }
+    (merged, mask)
+}
+
+/// The router main loop: admit seeded traffic (shedding past the queue
+/// cap in open mode), close batches under the policy, dispatch through
+/// [`collect_batch`]'s failover machinery, classify each answer
+/// (late > degraded > ok), record latency, and (closed mode) re-issue.
+/// Shutdown is an explicit [`tags::SERVE_CTRL`] to every replica still
+/// believed alive.
 fn run_router(ep: &mut Endpoint, spec: &ServeSpec, d: usize) -> RouterOut {
     let q = spec.bounds.len();
-    let group: Vec<NodeId> = (0..ep.n_nodes()).collect();
+    let rs = &spec.robust;
     let total = spec.queries;
+    let cap = match spec.mode {
+        ArrivalMode::Open { .. } => rs.queue_cap,
+        ArrivalMode::Closed { .. } => 0,
+    };
+    let mut fleet = Fleet::new(q, rs.replicas);
+    let mut counters = RobustCounters::default();
     let mut gen = LoadGen::new(spec.seed, spec.source.clone());
     let mut hist = LatencyHistogram::new();
     let mut margins_out = spec.collect_margins.then(|| Vec::with_capacity(total));
+    let mut masks_out = spec.collect_margins.then(|| Vec::with_capacity(total));
     let mut pending: VecDeque<(f64, Query)> = VecDeque::new();
     let mut issued = 0usize;
-    let mut completed = 0usize;
+    let mut answered = 0usize;
+    let mut ok = 0usize;
+    let mut degraded = 0usize;
+    let mut late = 0usize;
+    let mut shed = 0usize;
     let mut batches = 0u64;
     let mut checksum = 0.0f64;
     let mut last_done = 0.0f64;
@@ -476,37 +969,35 @@ fn run_router(ep: &mut Endpoint, spec: &ServeSpec, d: usize) -> RouterOut {
     // has not yet been admitted to `pending`
     let mut next_arrival = 0.0f64;
 
-    let admit = |pending: &mut VecDeque<(f64, Query)>, gen: &mut LoadGen, t: f64| {
-        let query = gen.next_query();
-        if let Err(e) = query.validate(d) {
-            panic!("serve: load generator produced an invalid query: {e}");
-        }
-        pending.push_back((t, query));
-    };
-
     match spec.mode {
         ArrivalMode::Closed { concurrency } => {
             for _ in 0..concurrency.max(1).min(total) {
-                admit(&mut pending, &mut gen, 0.0);
+                admit_query(&mut pending, &mut gen, d, cap, 0.0, &mut shed);
                 issued += 1;
             }
         }
         ArrivalMode::Open { .. } => {}
     }
 
-    while completed < total {
+    while answered + shed < total {
         let t_free = ep.now();
         // Open mode: admit everything that has arrived by the time the
-        // router went idle; if nothing is waiting, sleep to the next
-        // arrival.
+        // router went idle; if nothing survived admission, sleep to the
+        // next arrival.
         if let ArrivalMode::Open { rate } = spec.mode {
             while issued < total && next_arrival <= t_free {
-                admit(&mut pending, &mut gen, next_arrival);
+                admit_query(&mut pending, &mut gen, d, cap, next_arrival, &mut shed);
                 issued += 1;
                 next_arrival += gen.exp_gap(rate);
             }
+            if answered + shed >= total {
+                // The tail of the offered stream was shed at admission.
+                break;
+            }
             if pending.is_empty() {
-                admit(&mut pending, &mut gen, next_arrival);
+                // issued == answered + shed < total here, and the cap
+                // can't trigger on an empty queue.
+                admit_query(&mut pending, &mut gen, d, cap, next_arrival, &mut shed);
                 issued += 1;
                 let t = next_arrival;
                 next_arrival += gen.exp_gap(rate);
@@ -529,7 +1020,7 @@ fn run_router(ep: &mut Endpoint, spec: &ServeSpec, d: usize) -> RouterOut {
                     && next_arrival <= deadline
                 {
                     let t = next_arrival;
-                    admit(&mut pending, &mut gen, t);
+                    admit_query(&mut pending, &mut gen, d, cap, t, &mut shed);
                     issued += 1;
                     next_arrival += gen.exp_gap(rate);
                     if pending.len() == spec.policy.max_batch {
@@ -549,51 +1040,81 @@ fn run_router(ep: &mut Endpoint, spec: &ServeSpec, d: usize) -> RouterOut {
         }
         ep.advance_to(close_t);
         ep.charge_modeled(cost::ROUTER_PER_BATCH + cost::ROUTER_PER_QUERY * take as f64);
-        // One encode, q Arc clones — the same zero-copy fan-out the
-        // training collectives use.
-        let payload = Payload::from(encode_batch(&batch));
-        for shard in 1..=q {
-            ep.send(shard, tags::QUERY, payload.clone());
-        }
-        // Merge: router contributes zeros, the sum lands here (rank 0).
-        let mut merged = vec![0.0f64; take];
-        tree_reduce(ep, &group, &mut merged, spec.wire);
+        // One encode, one Arc clone per copy sent — the same zero-copy
+        // fan-out the training collectives use.
+        let bid = batches;
+        let payload = Payload::from(encode_batch(bid, &batch));
+        let (merged, mask) =
+            collect_batch(ep, &mut fleet, spec, &payload, bid, take, &mut counters);
         let t_done = ep.now();
         batches += 1;
         last_done = t_done;
+        // Service deadline, post hoc: a batch that merged after
+        // `close_t + deadline` still answers, but every query in it
+        // counts `late` (precedence: late > degraded > ok).
+        let batch_late = rs.deadline > 0.0 && t_done - close_t > rs.deadline;
         for (k, &t_arr) in arrivals.iter().enumerate() {
             hist.record(t_done - t_arr);
             checksum += merged[k];
             if let Some(ms) = margins_out.as_mut() {
                 ms.push(merged[k]);
             }
+            if let Some(mk) = masks_out.as_mut() {
+                mk.push(mask);
+            }
+            if batch_late {
+                late += 1;
+            } else if mask != 0 {
+                degraded += 1;
+            } else {
+                ok += 1;
+            }
         }
-        completed += take;
+        answered += take;
         if let ArrivalMode::Closed { .. } = spec.mode {
             for _ in 0..take {
                 if issued < total {
-                    admit(&mut pending, &mut gen, t_done);
+                    admit_query(&mut pending, &mut gen, d, cap, t_done, &mut shed);
                     issued += 1;
                 }
             }
         }
     }
-    // Shutdown: an empty batch to every shard.
-    let stop = Payload::from(vec![0.0f64]);
-    for shard in 1..=q {
-        ep.send(shard, tags::QUERY, stop.clone());
+    // Shutdown: an explicit control frame to every replica still believed
+    // alive. Lossy on purpose — a replica that crashed after its last
+    // reply is already gone, and that must not unwind the router.
+    for s in 0..q {
+        for c in 0..rs.replicas {
+            if fleet.is_alive(s, c) {
+                ep.send_lossy(fleet.node(s, c), tags::SERVE_CTRL, vec![0.0f64]);
+            }
+        }
     }
-    RouterOut { hist, batches, last_done, checksum, margins: margins_out }
+    RouterOut {
+        hist,
+        batches,
+        last_done,
+        checksum,
+        margins: margins_out,
+        masks: masks_out,
+        answered,
+        ok,
+        degraded,
+        late,
+        shed,
+        counters,
+    }
 }
 
 /// Local (single-process, no network) replica of what the sharded plane
 /// computes for `queries` on the exact f64 path: per-shard partials as
-/// ascending-index chains, merged with the *same* binomial-tree
-/// association [`tree_reduce`] uses over the `q+1`-node serving group
-/// (rank 0 = router contributes zeros). Against this reference the f64
-/// sharded sim is bit-exact — the property the serving tests pin. At
-/// `q = 1` the merge degenerates to the plain serial chain, i.e. the
-/// unsharded dense predict.
+/// ascending-index chains, merged with the *same* plain left-to-right
+/// chain (starting at the router's 0.0) that [`run_router`]'s
+/// ascending-shard star gather uses. Against this reference the f64
+/// sharded sim is bit-exact — including across failovers and hedging,
+/// because replicas of a shard hold bit-identical snapshots. At `q = 1`
+/// the merge degenerates to the plain serial chain, i.e. the unsharded
+/// dense predict.
 pub fn reference_margins(w: &[f64], bounds: &[(usize, usize)], queries: &[Query]) -> Vec<f64> {
     let shards: Vec<ShardServer> = bounds
         .iter()
@@ -602,24 +1123,11 @@ pub fn reference_margins(w: &[f64], bounds: &[(usize, usize)], queries: &[Query]
     queries
         .iter()
         .map(|query| {
-            // vals[rank] for the serving group: rank 0 is the router
-            let mut vals: Vec<f64> = std::iter::once(0.0)
-                .chain(shards.iter().map(|s| s.partial_margin(&query.idx, &query.val)))
-                .collect();
-            let n = vals.len();
-            let mut mask = 1usize;
-            while mask < n {
-                let mut r = 0usize;
-                while r + mask < n {
-                    // receiver ranks have all `mask`-low bits zero; each
-                    // absorbs its `r + mask` child exactly like
-                    // tree_reduce's add_into
-                    vals[r] += vals[r + mask];
-                    r += mask << 1;
-                }
-                mask <<= 1;
+            let mut acc = 0.0f64;
+            for s in &shards {
+                acc += s.partial_margin(&query.idx, &query.val);
             }
-            vals[0]
+            acc
         })
         .collect()
 }
@@ -647,8 +1155,9 @@ mod tests {
             Query { idx: vec![], val: vec![] },
             Query { idx: vec![2], val: vec![4.0] },
         ];
-        let flat = encode_batch(&queries);
-        assert_eq!(flat[0], 3.0);
+        let flat = encode_batch(42, &queries);
+        assert_eq!(flat[0], 42.0);
+        assert_eq!(flat[1], 3.0);
         let w: Vec<f64> = (0..8).map(|i| i as f64 + 1.0).collect();
         let shard = ShardServer::from_snapshot(&w, 0, 8, false);
         let mut out = Vec::new();
@@ -676,8 +1185,28 @@ mod tests {
         for (&i, &v) in q.idx.iter().zip(&q.val) {
             chain += v * w[i as usize];
         }
-        // rank0 starts at 0.0 and absorbs the single shard: 0.0 + chain
+        // the router starts at 0.0 and absorbs the single shard
         assert_eq!(r[0].to_bits(), (0.0 + chain).to_bits());
+    }
+
+    #[test]
+    fn fleet_maps_replicas_to_the_documented_nodes() {
+        // q=3, r=2: replica-0 set is nodes 1..=3 (the unreplicated
+        // layout), replica-1 set is nodes 4..=6.
+        let mut fleet = Fleet::new(3, 2);
+        assert_eq!(fleet.node(0, 0), 1);
+        assert_eq!(fleet.node(2, 0), 3);
+        assert_eq!(fleet.node(0, 1), 4);
+        assert_eq!(fleet.node(2, 1), 6);
+        assert_eq!(fleet.pick_primary(1), Some(0));
+        fleet.kill(1, 0);
+        assert_eq!(fleet.pick_primary(1), Some(1), "failover to the next live replica");
+        assert_eq!(fleet.other_alive(1, 1), None, "no second live replica left");
+        fleet.kill(1, 1);
+        assert_eq!(fleet.pick_primary(1), None, "shard exhausted");
+        // untouched shard keeps its primary
+        assert_eq!(fleet.pick_primary(2), Some(0));
+        assert_eq!(fleet.other_alive(2, 0), Some(1));
     }
 
     #[test]
@@ -703,5 +1232,41 @@ mod tests {
         assert!(desc.validate(10).unwrap_err().contains("ascending"));
         let mismatch = Query { idx: vec![1], val: vec![] };
         assert!(mismatch.validate(10).unwrap_err().contains("mismatch"));
+    }
+
+    #[test]
+    fn simulate_rejects_bad_entry_shapes_with_context() {
+        let w = vec![1.0f64; 4];
+        let base = |bounds: Vec<(usize, usize)>, queries: usize, robust: RobustSpec| ServeSpec {
+            w: &w,
+            bounds,
+            model: NetModel::Uniform(crate::net::SimParams::default()),
+            wire: WireFmt::F64,
+            policy: BatchPolicy { max_batch: 4, max_delay: 1e-4 },
+            queries,
+            mode: ArrivalMode::Closed { concurrency: 2 },
+            seed: 1,
+            source: QuerySource::Synthetic { d: 4, nnz: 2 },
+            collect_margins: false,
+            robust,
+        };
+        let e = simulate(&base(vec![], 10, RobustSpec::default())).unwrap_err();
+        assert!(e.contains("at least one shard"), "{e}");
+        let e = simulate(&base(vec![(0, 4)], 0, RobustSpec::default())).unwrap_err();
+        assert!(e.contains("at least one query"), "{e}");
+        let e = simulate(&base(
+            vec![(0, 4)],
+            10,
+            RobustSpec { replicas: 0, ..Default::default() },
+        ))
+        .unwrap_err();
+        assert!(e.contains("--replicas"), "{e}");
+        let e = simulate(&base(
+            vec![(0, 4)],
+            10,
+            RobustSpec { hedge: 1e-4, ..Default::default() },
+        ))
+        .unwrap_err();
+        assert!(e.contains("--hedge") && e.contains("--replicas"), "{e}");
     }
 }

@@ -1,8 +1,10 @@
 //! Serving-plane contracts (see DESIGN.md "serving plane"):
 //!
 //! * sharded margin-merge ≡ the unsharded reference **bit-exactly** on the
-//!   f64 path, for every shard count — the merge replicates the reduce
-//!   tree's association, so this is an equality, not a tolerance;
+//!   f64 path, for every shard count — the router merges the star-gathered
+//!   partials in ascending shard order (a plain left-to-right chain), and
+//!   the reference replays exactly that association, so this is an
+//!   equality, not a tolerance;
 //! * the f32-quantized snapshot stays within a products-scaled tolerance
 //!   of the exact path;
 //! * adversarial queries fail validation with context (empty is fine,
@@ -76,6 +78,7 @@ fn spec_for<'a>(
         seed: 7,
         source: QuerySource::Fixed(Arc::clone(queries)),
         collect_margins: true,
+        robust: Default::default(),
     }
 }
 
@@ -85,7 +88,7 @@ fn sharded_f64_margins_match_reference_bit_exactly() {
     let queries = Arc::new(fixture_queries(60, D, 22));
     for q in [1usize, 2, 3, 5] {
         let spec = spec_for(&w, &queries, q, WireFmt::F64, 8);
-        let got = simulate(&spec).margins.expect("collect_margins");
+        let got = simulate(&spec).expect("serve sim").margins.expect("collect_margins");
         let want = reference_margins(&w, &spec.bounds, &queries);
         assert_eq!(got.len(), want.len());
         for (k, (g, r)) in got.iter().zip(&want).enumerate() {
@@ -103,8 +106,10 @@ fn quantized_margins_stay_within_products_tolerance() {
     let w = seeded_w(D, 33);
     let queries = Arc::new(fixture_queries(60, D, 44));
     for q in [2usize, 4] {
-        let exact = simulate(&spec_for(&w, &queries, q, WireFmt::F64, 8)).margins.unwrap();
-        let quant = simulate(&spec_for(&w, &queries, q, WireFmt::F32, 8)).margins.unwrap();
+        let exact =
+            simulate(&spec_for(&w, &queries, q, WireFmt::F64, 8)).unwrap().margins.unwrap();
+        let quant =
+            simulate(&spec_for(&w, &queries, q, WireFmt::F32, 8)).unwrap().margins.unwrap();
         for (k, (m64, m32)) in exact.iter().zip(&quant).enumerate() {
             let products: f64 = queries[k]
                 .idx
@@ -146,6 +151,16 @@ fn adversarial_queries_fail_validation_with_context() {
 fn assert_reports_bit_equal(a: &fdsvrg::serve::ServeReport, b: &fdsvrg::serve::ServeReport) {
     assert_eq!(a.batches, b.batches);
     assert_eq!(a.wire_bytes, b.wire_bytes);
+    assert_eq!(
+        (a.answered, a.ok, a.degraded, a.late, a.shed),
+        (b.answered, b.ok, b.degraded, b.late, b.shed),
+        "availability accounting drifted across reruns"
+    );
+    assert_eq!(
+        (a.failovers, a.retries, a.hedged, a.hedge_wins, a.crashes),
+        (b.failovers, b.retries, b.hedged, b.hedge_wins, b.crashes),
+        "robustness counters drifted across reruns"
+    );
     for (name, x, y) in [
         ("p50_us", a.p50_us, b.p50_us),
         ("p90_us", a.p90_us, b.p90_us),
@@ -153,6 +168,8 @@ fn assert_reports_bit_equal(a: &fdsvrg::serve::ServeReport, b: &fdsvrg::serve::S
         ("max_us", a.max_us, b.max_us),
         ("mean_us", a.mean_us, b.mean_us),
         ("qps", a.qps, b.qps),
+        ("goodput_qps", a.goodput_qps, b.goodput_qps),
+        ("availability_pct", a.availability_pct, b.availability_pct),
         ("sim_time_s", a.sim_time_s, b.sim_time_s),
         ("margin_checksum", a.margin_checksum, b.margin_checksum),
     ] {
@@ -175,9 +192,10 @@ fn closed_mode_reports_are_bit_stable_across_reruns() {
         seed: 99,
         source: source.clone(),
         collect_margins: false,
+        robust: Default::default(),
     };
-    let a = simulate(&mk()).report;
-    let b = simulate(&mk()).report;
+    let a = simulate(&mk()).unwrap().report;
+    let b = simulate(&mk()).unwrap().report;
     assert_reports_bit_equal(&a, &b);
 }
 
@@ -195,11 +213,14 @@ fn open_mode_serves_everything_and_is_bit_stable() {
         seed: 123,
         source: QuerySource::Synthetic { d: 200, nnz: 5 },
         collect_margins: false,
+        robust: Default::default(),
     };
-    let a = simulate(&mk()).report;
+    let a = simulate(&mk()).unwrap().report;
     assert_eq!(a.queries, 500);
+    assert_eq!(a.answered, 500, "no cap, no faults: everything answers");
+    assert_eq!((a.ok, a.shed), (500, 0));
     assert!(a.batches > 0 && a.qps > 0.0 && a.sim_time_s > 0.0);
-    let b = simulate(&mk()).report;
+    let b = simulate(&mk()).unwrap().report;
     assert_reports_bit_equal(&a, &b);
 }
 
@@ -220,9 +241,10 @@ fn batched_serving_beats_single_query_throughput() {
         seed: 5,
         source: QuerySource::Synthetic { d: 400, nnz: 8 },
         collect_margins: false,
+        robust: Default::default(),
     };
-    let single = simulate(&mk(1)).report;
-    let batched = simulate(&mk(32)).report;
+    let single = simulate(&mk(1)).unwrap().report;
+    let batched = simulate(&mk(32)).unwrap().report;
     assert!(
         batched.qps > single.qps,
         "batch=32 ({:.0} qps) should beat batch=1 ({:.0} qps)",

@@ -1,0 +1,264 @@
+//! Robust-serving contracts (DESIGN.md "robust serving"): the serving
+//! plane composed with the injected fault plane stays deterministic and
+//! accounts for every offered query.
+//!
+//! 1. **Failover determinism** — with `--replicas 2` and a scheduled
+//!    primary crash, the run completes every query (availability 100%),
+//!    the merged margins match the local reference bit-exactly (replicas
+//!    hold bit-identical snapshots), and reruns agree to the bit.
+//! 2. **Accounting invariant** — `ok + degraded + late + shed` equals the
+//!    offered query count, under queue-cap shedding and under a service
+//!    deadline that marks everything late.
+//! 3. **Degraded answers** — with `--replicas 1`, killing one shard
+//!    degrades (missing-shard mask names exactly the dead shard, margins
+//!    drop exactly its feature range) instead of hanging or panicking.
+//! 4. **Passive-plan identity** — a fault plan whose clauses never fire
+//!    leaves every report number bit-identical to the no-faults run.
+
+use fdsvrg::config::ExperimentConfig;
+use fdsvrg::net::fault::FaultPlan;
+use fdsvrg::net::{NetModel, WireFmt};
+use fdsvrg::serve::{
+    reference_margins, simulate, ArrivalMode, BatchPolicy, Query, QuerySource, RobustSpec,
+    ServeReport, ServeSpec, ShardServer,
+};
+use fdsvrg::util::Pcg64;
+use std::sync::Arc;
+
+const D: usize = 48;
+
+fn uniform_model() -> NetModel {
+    let cfg = ExperimentConfig::default();
+    cfg.net_spec_for("uniform").unwrap().resolve(cfg.sim_params())
+}
+
+fn even_bounds(d: usize, q: usize) -> Vec<(usize, usize)> {
+    (0..q).map(|l| (l * d / q, (l + 1) * d / q)).collect()
+}
+
+fn seeded_w(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (0..d).map(|_| rng.normal()).collect()
+}
+
+fn fixture_queries(n: usize, d: usize, seed: u64) -> Vec<Query> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut all: Vec<u32> = (0..d as u32).collect();
+    (0..n)
+        .map(|_| {
+            let nnz = 1 + rng.below(6);
+            rng.shuffle(&mut all);
+            let pairs = all[..nnz].iter().map(|&i| (i, rng.normal())).collect();
+            Query::from_pairs(pairs)
+        })
+        .collect()
+}
+
+fn faults(spec: &str, seed: u64) -> RobustSpec {
+    RobustSpec {
+        faults: FaultPlan::parse(spec, seed).expect("fault spec"),
+        ..Default::default()
+    }
+}
+
+/// Every number in the report is downstream of the seed and the modeled
+/// clock — reruns must agree to the bit, counters included.
+fn assert_reports_bit_equal(a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.batches, b.batches, "batches drifted");
+    assert_eq!(a.wire_bytes, b.wire_bytes, "wire_bytes drifted");
+    assert_eq!(
+        (a.answered, a.ok, a.degraded, a.late, a.shed),
+        (b.answered, b.ok, b.degraded, b.late, b.shed),
+        "availability accounting drifted"
+    );
+    assert_eq!(
+        (a.failovers, a.retries, a.hedged, a.hedge_wins, a.crashes),
+        (b.failovers, b.retries, b.hedged, b.hedge_wins, b.crashes),
+        "robustness counters drifted"
+    );
+    for (name, x, y) in [
+        ("p50_us", a.p50_us, b.p50_us),
+        ("p99_us", a.p99_us, b.p99_us),
+        ("max_us", a.max_us, b.max_us),
+        ("mean_us", a.mean_us, b.mean_us),
+        ("qps", a.qps, b.qps),
+        ("goodput_qps", a.goodput_qps, b.goodput_qps),
+        ("availability_pct", a.availability_pct, b.availability_pct),
+        ("sim_time_s", a.sim_time_s, b.sim_time_s),
+        ("margin_checksum", a.margin_checksum, b.margin_checksum),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name} drifted: {x:e} vs {y:e}");
+    }
+}
+
+/// The merge the router performs for one query when the shards in `mask`
+/// are missing: a plain left-to-right chain over the surviving shards,
+/// starting at 0.0 — the exact association `collect_batch` uses.
+fn chain_margin(w: &[f64], bounds: &[(usize, usize)], mask: u64, q: &Query) -> f64 {
+    let mut acc = 0.0f64;
+    for (s, &(lo, hi)) in bounds.iter().enumerate() {
+        if mask & (1u64 << s) != 0 {
+            continue;
+        }
+        let shard = ShardServer::from_snapshot(w, lo, hi, false);
+        acc += shard.partial_margin(&q.idx, &q.val);
+    }
+    acc
+}
+
+#[test]
+fn failover_with_replicas_keeps_availability_at_100_bit_stably() {
+    let w = seeded_w(D, 11);
+    let queries = Arc::new(fixture_queries(600, D, 22));
+    // Node 1 is shard 0's primary (replica-0 set = nodes 1..=q); it
+    // crashes 2 ms into a run that lasts well past that.
+    let mk = || ServeSpec {
+        w: &w,
+        bounds: even_bounds(D, 4),
+        model: uniform_model(),
+        wire: WireFmt::F64,
+        policy: BatchPolicy { max_batch: 8, max_delay: 200e-6 },
+        queries: queries.len(),
+        mode: ArrivalMode::Closed { concurrency: 16 },
+        seed: 7,
+        source: QuerySource::Fixed(Arc::clone(&queries)),
+        collect_margins: true,
+        robust: RobustSpec { replicas: 2, ..faults("crash:1@0.002", 7) },
+    };
+    let a = simulate(&mk()).expect("serve sim");
+    assert_eq!(a.report.crashes, 1, "the scheduled crash must fire");
+    assert!(a.report.failovers >= 1, "the router must observe the death");
+    assert!(a.report.retries >= 1, "the batch in flight re-dispatches");
+    assert_eq!(a.report.answered, queries.len());
+    assert_eq!(a.report.ok, queries.len(), "replica 1 covers shard 0");
+    assert_eq!((a.report.degraded, a.report.late, a.report.shed), (0, 0, 0));
+    assert_eq!(a.report.availability_pct.to_bits(), 100.0f64.to_bits());
+    let masks = a.masks.expect("collect_margins");
+    assert!(masks.iter().all(|&m| m == 0), "no shard range went missing");
+    // Failover is value-invisible: replicas hold bit-identical snapshots,
+    // so the margins still equal the local reference bit-exactly.
+    let got = a.margins.expect("collect_margins");
+    let want = reference_margins(&w, &even_bounds(D, 4), &queries);
+    for (k, (g, r)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), r.to_bits(), "query {k}: {g:e} != reference {r:e}");
+    }
+    // And the whole report reruns to the bit.
+    let b = simulate(&mk()).expect("serve sim");
+    assert_reports_bit_equal(&a.report, &b.report);
+}
+
+#[test]
+fn availability_accounting_sums_to_offered_queries() {
+    let w = seeded_w(D, 33);
+    // Open-loop overload: offered rate far above the plane's modeled
+    // capacity, with a tiny admission queue — most arrivals shed.
+    let mk = |queue_cap: usize, deadline: f64| ServeSpec {
+        w: &w,
+        bounds: even_bounds(D, 3),
+        model: uniform_model(),
+        wire: WireFmt::F64,
+        policy: BatchPolicy { max_batch: 8, max_delay: 100e-6 },
+        queries: 400,
+        mode: ArrivalMode::Open { rate: 500_000.0 },
+        seed: 99,
+        source: QuerySource::Synthetic { d: D, nnz: 5 },
+        collect_margins: false,
+        robust: RobustSpec { queue_cap, deadline, ..Default::default() },
+    };
+    let shed_run = simulate(&mk(4, 0.0)).expect("serve sim").report;
+    assert_eq!(
+        shed_run.ok + shed_run.degraded + shed_run.late + shed_run.shed,
+        shed_run.queries,
+        "every offered query lands in exactly one bucket"
+    );
+    assert_eq!(shed_run.answered, shed_run.ok + shed_run.degraded + shed_run.late);
+    assert!(shed_run.shed > 0, "10x overload against a 4-deep queue must shed");
+    assert!(shed_run.availability_pct < 100.0);
+    assert!(shed_run.goodput_qps <= shed_run.qps);
+    let rerun = simulate(&mk(4, 0.0)).expect("serve sim").report;
+    assert_reports_bit_equal(&shed_run, &rerun);
+
+    // A 1 ns service deadline marks every answered batch late: answers
+    // still merge (late > degraded > ok precedence), goodput hits zero.
+    let late_run = simulate(&mk(0, 1e-9)).expect("serve sim").report;
+    assert_eq!(late_run.shed, 0, "unbounded queue sheds nothing");
+    assert_eq!(late_run.late, late_run.answered);
+    assert_eq!(late_run.ok, 0);
+    assert_eq!(late_run.answered, late_run.queries);
+    assert_eq!(late_run.availability_pct.to_bits(), 0.0f64.to_bits());
+    assert_eq!(late_run.goodput_qps.to_bits(), 0.0f64.to_bits());
+}
+
+#[test]
+fn unreplicated_crash_degrades_with_the_dead_shards_mask() {
+    let w = seeded_w(D, 55);
+    let n = 400;
+    let queries = Arc::new(fixture_queries(n, D, 66));
+    let bounds = even_bounds(D, 4);
+    // Node 2 is shard 1 at --replicas 1. After it crashes the plane keeps
+    // answering: margins lose exactly features [lo1, hi1), nothing hangs.
+    let spec = ServeSpec {
+        w: &w,
+        bounds: bounds.clone(),
+        model: uniform_model(),
+        wire: WireFmt::F64,
+        policy: BatchPolicy { max_batch: 8, max_delay: 200e-6 },
+        queries: n,
+        mode: ArrivalMode::Closed { concurrency: 16 },
+        seed: 13,
+        source: QuerySource::Fixed(Arc::clone(&queries)),
+        collect_margins: true,
+        robust: faults("crash:2@0.002", 13),
+    };
+    let out = simulate(&spec).expect("serve sim");
+    assert_eq!(out.report.crashes, 1);
+    assert_eq!(out.report.answered, n, "degrading, not hanging");
+    assert!(out.report.degraded > 0, "post-crash queries are degraded");
+    assert!(out.report.ok > 0, "pre-crash queries are clean");
+    assert_eq!(out.report.late, 0);
+    assert!(out.report.availability_pct < 100.0);
+    let masks = out.masks.expect("collect_margins");
+    let margins = out.margins.expect("collect_margins");
+    assert_eq!(masks.len(), n);
+    let dead = 1u64 << 1;
+    assert!(masks.iter().any(|&m| m == 0) && masks.iter().any(|&m| m == dead));
+    // Masks are monotone: once shard 1 is gone it never comes back.
+    let first_bad = masks.iter().position(|&m| m != 0).unwrap();
+    for (k, &m) in masks.iter().enumerate() {
+        let want = if k < first_bad { 0 } else { dead };
+        assert_eq!(m, want, "query {k}: mask must name exactly the dead shard");
+        // Each answer is the plain chain over the surviving shards.
+        let expect = chain_margin(&w, &bounds, m, &queries[k]);
+        assert_eq!(
+            margins[k].to_bits(),
+            expect.to_bits(),
+            "query {k}: margin must drop exactly shard 1's range"
+        );
+    }
+    assert_eq!(out.report.degraded, n - first_bad);
+    assert_eq!(out.report.ok, first_bad);
+}
+
+#[test]
+fn passive_fault_plan_is_a_bit_exact_identity() {
+    let w = seeded_w(D, 77);
+    let mk = |robust: RobustSpec| ServeSpec {
+        w: &w,
+        bounds: even_bounds(D, 4),
+        model: uniform_model(),
+        wire: WireFmt::F32,
+        policy: BatchPolicy { max_batch: 16, max_delay: 200e-6 },
+        queries: 500,
+        mode: ArrivalMode::Closed { concurrency: 32 },
+        seed: 42,
+        source: QuerySource::Synthetic { d: D, nnz: 6 },
+        collect_margins: false,
+        robust,
+    };
+    let clean = simulate(&mk(RobustSpec::default())).expect("serve sim").report;
+    // A crash scheduled far beyond the run's horizon never fires and
+    // draws nothing: installing the hook must change no number.
+    let passive = simulate(&mk(faults("crash:1@100000", 42))).expect("serve sim").report;
+    assert_eq!(passive.crashes, 0, "the far-future crash must not fire");
+    assert_reports_bit_equal(&clean, &passive);
+}
